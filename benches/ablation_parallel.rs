@@ -1,0 +1,34 @@
+//! Ablation A2: the parallel session executor (paper §II design
+//! principle "Parallelism"). Sweeps the worker count over the III-B
+//! campaign and reports wall-time scaling.
+
+mod common;
+
+use common::{bench, bench_env, PAPER_MODELS};
+use mlonmcu::session::{RunMatrix, Session};
+
+fn main() {
+    let env = bench_env();
+    let matrix = RunMatrix::new()
+        .models(PAPER_MODELS)
+        .backends(["tflmi", "tvmaot"])
+        .targets(["etiss"]);
+    println!("== Ablation: session parallelism (8-run campaign) ==");
+    let mut base = None;
+    for workers in [1usize, 2, 4, 8] {
+        let stats = bench(0, 3, || {
+            let s = Session::new(&env).expect("session");
+            s.run_matrix(&matrix, workers).expect("matrix");
+        });
+        let speedup = base.map(|b: f64| b / stats.mean_s).unwrap_or(1.0);
+        if base.is_none() {
+            base = Some(stats.mean_s);
+        }
+        println!(
+            "workers={workers:<2} {}  speedup x{speedup:.2}",
+            stats.fmt()
+        );
+    }
+    println!("\n(single-core host: speedups bounded by available CPUs; \
+             the executor must at least not slow down)");
+}

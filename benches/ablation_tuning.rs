@@ -1,0 +1,38 @@
+//! Ablation A3: AutoTVM trial budget vs achieved latency (paper
+//! §III-C: "at least 600 iterations"; "more improvements can likely be
+//! achieved by increasing the number of tuning iterations").
+
+mod common;
+
+use common::{bench_env, load_or_exit};
+use mlonmcu::backends;
+use mlonmcu::schedules::Schedule;
+use mlonmcu::targets;
+use mlonmcu::tuner::{tune, TuneOpts};
+
+fn main() {
+    let env = bench_env();
+    let graph = load_or_exit(&env, "aww");
+    let backend = backends::by_name("tvmaot").unwrap();
+    let target = targets::by_name("esp32c3").unwrap();
+    let base = Schedule::parse("default-nchw").unwrap();
+    println!("== Ablation: tuning trials (aww / default-nchw / esp32c3) ==");
+    println!("{:>7} {:>12} {:>10}", "trials", "best (s)", "gain");
+    let mut prev_best = f64::MAX;
+    for trials in [0usize, 10, 50, 150, 600] {
+        let r = tune(
+            &*backend, &graph, &*target, base,
+            TuneOpts { trials: trials.max(1), seed: 42 },
+        )
+        .expect("tune");
+        let best = if trials == 0 { r.baseline_seconds } else { r.best_seconds };
+        let gain = (1.0 - best / r.baseline_seconds) * 100.0;
+        println!("{trials:>7} {best:>12.4} {gain:>9.1}%");
+        assert!(
+            best <= prev_best * 1.0001,
+            "more trials must never do worse (monotone best-so-far)"
+        );
+        prev_best = best;
+    }
+    println!("\ntuning-budget monotonicity PASSED");
+}

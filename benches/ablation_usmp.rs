@@ -1,0 +1,37 @@
+//! Ablation A1: the Unified Static Memory Planner (tvmaot+ vs tvmaot)
+//! RAM savings per model — the paper reports −9…−28 % for three of the
+//! four models (§III-B).
+
+mod common;
+
+use common::{bench_env, load_or_exit, PAPER_MODELS};
+use mlonmcu::backends::{by_name, BackendConfig};
+
+fn main() {
+    let env = bench_env();
+    println!("== Ablation: USMP (tvmaot+ vs tvmaot) ==");
+    println!(
+        "{:<8} {:>12} {:>12} {:>8}   paper",
+        "model", "aot RAM", "aot+ RAM", "delta"
+    );
+    let paper = [("aww", -28.3), ("vww", -0.2), ("resnet", -13.6), ("toycar", -8.9)];
+    for model in PAPER_MODELS {
+        let g = load_or_exit(&env, model);
+        let cfg = BackendConfig::default();
+        let aot = by_name("tvmaot").unwrap().build(&g, &cfg).unwrap();
+        let plus = by_name("tvmaot+").unwrap().build(&g, &cfg).unwrap();
+        let a = aot.metrics.ram_total() as f64;
+        let p = plus.metrics.ram_total() as f64;
+        let delta = (p / a - 1.0) * 100.0;
+        let paper_d = paper.iter().find(|(m, _)| *m == model).unwrap().1;
+        println!(
+            "{:<8} {:>10.1}kB {:>10.1}kB {:>7.1}%   {paper_d:+.1}%",
+            model,
+            a / 1e3,
+            p / 1e3,
+            delta
+        );
+        assert!(p <= a, "{model}: USMP must never increase RAM");
+    }
+    println!("\nUSMP ablation check PASSED (tvmaot+ <= tvmaot everywhere)");
+}

@@ -1,0 +1,80 @@
+//! Shared bench harness (criterion is not reachable offline): warmup +
+//! timed iterations with mean/min/stddev, plus helpers shared by the
+//! paper-table benches.
+
+use std::time::Instant;
+
+use mlonmcu::config::Environment;
+use mlonmcu::frontends;
+use mlonmcu::graph::Graph;
+
+pub const PAPER_MODELS: [&str; 4] = ["aww", "vww", "resnet", "toycar"];
+
+/// Measured statistics of a benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchStats {
+    pub fn fmt(&self) -> String {
+        format!(
+            "mean {:>10.4} ms  min {:>10.4} ms  sd {:>8.4} ms  (n={})",
+            self.mean_s * 1e3,
+            self.min_s * 1e3,
+            self.stddev_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with warmup; iteration count adapts to the workload.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().copied().fold(f64::MAX, f64::min);
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+        / samples.len() as f64;
+    BenchStats {
+        iters,
+        mean_s: mean,
+        min_s: min,
+        stddev_s: var.sqrt(),
+    }
+}
+
+/// Load a zoo model or exit with a friendly message.
+pub fn load_or_exit(env: &Environment, name: &str) -> Graph {
+    match frontends::load_model(name, &env.model_dirs()) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("cannot load model '{name}': {e}");
+            eprintln!("run `make artifacts` before `cargo bench`");
+            std::process::exit(0); // don't fail CI for missing artifacts
+        }
+    }
+}
+
+/// Environment rooted at the repo (artifacts/ beside Cargo.toml).
+pub fn bench_env() -> Environment {
+    Environment::discover().expect("environment")
+}
+
+/// Render a ratio vs the paper's value.
+pub fn vs_paper(ours: f64, paper: f64) -> String {
+    if paper == 0.0 {
+        return "-".into();
+    }
+    format!("{:+.0}%", (ours / paper - 1.0) * 100.0)
+}

@@ -1,0 +1,46 @@
+//! Hot-path microbenchmarks for the perf pass (§Perf): the TinyIR
+//! executor's conv/dense inner loops, the end-to-end single-run
+//! latency per model, and the cost-only (tuner measure loop) path.
+//! Records ns/MAC — the number the EXPERIMENTS.md §Perf log tracks.
+
+mod common;
+
+use common::{bench, bench_env, load_or_exit, PAPER_MODELS};
+use mlonmcu::backends::{by_name, BackendConfig};
+use mlonmcu::targets;
+
+fn main() {
+    let env = bench_env();
+    let etiss = targets::by_name("etiss").unwrap();
+    println!("== hotpath: executor performance (host) ==");
+    println!(
+        "{:<8} {:>10} {:>14} {:>12} {:>14}",
+        "model", "MACs (M)", "full run", "ns/MAC", "cost-only"
+    );
+    for model in PAPER_MODELS {
+        let graph = load_or_exit(&env, model);
+        let build = by_name("tvmaot")
+            .unwrap()
+            .build(&graph, &BackendConfig::default())
+            .unwrap();
+        let dep = etiss.deploy(&build, "tvm").unwrap();
+        let input = vec![1i8; graph.tensor(graph.inputs[0]).numel()];
+        let macs = graph.macs() as f64;
+        let iters = if macs > 5e6 { 3 } else { 10 };
+        let full = bench(1, iters, || {
+            etiss.run(&build, &dep, &input, true).unwrap();
+        });
+        let dry = bench(1, 50, || {
+            etiss.run(&build, &dep, &input, false).unwrap();
+        });
+        println!(
+            "{:<8} {:>10.2} {:>12.2}ms {:>12.2} {:>12.4}ms",
+            model,
+            macs / 1e6,
+            full.min_s * 1e3,
+            full.min_s * 1e9 / macs,
+            dry.min_s * 1e3,
+        );
+    }
+    println!("\n(cost-only is the tuner measure loop — must stay <1ms)");
+}

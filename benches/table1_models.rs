@@ -1,0 +1,48 @@
+//! Table I reproduction: the MLPerf-Tiny model inventory — use case,
+//! quantized size (ours vs paper), parameters and MACs.
+
+mod common;
+
+use common::{bench_env, load_or_exit, vs_paper, PAPER_MODELS};
+
+const PAPER_KB: [(&str, &str, f64); 4] = [
+    ("aww", "Keyword Spotting", 58.3),
+    ("vww", "Visual Wake Words", 325.0),
+    ("resnet", "Image Classification", 96.2),
+    ("toycar", "Anomaly Detection", 270.0),
+];
+
+fn main() {
+    let env = bench_env();
+    println!("== Table I: MLPerf Tiny benchmark models ==");
+    println!(
+        "{:<8} {:<22} {:>12} {:>12} {:>10} {:>10}",
+        "name", "use case", "size (kB)", "paper (kB)", "params", "MACs (M)"
+    );
+    let mut sizes = Vec::new();
+    for model in PAPER_MODELS {
+        let g = load_or_exit(&env, model);
+        let (_, usecase, paper) =
+            PAPER_KB.iter().find(|(m, _, _)| *m == model).unwrap();
+        let kb = g.weight_bytes() as f64 / 1e3;
+        println!(
+            "{:<8} {:<22} {:>12.1} {:>12.1} {:>10} {:>10.2}  ({})",
+            model,
+            usecase,
+            kb,
+            paper,
+            g.param_count(),
+            g.macs() as f64 / 1e6,
+            vs_paper(kb, *paper)
+        );
+        sizes.push((model, kb));
+    }
+    // shape: size ordering matches the paper's (aww < resnet < toycar < vww)
+    let kb = |m: &str| sizes.iter().find(|(n, _)| *n == m).unwrap().1;
+    assert!(
+        kb("aww") < kb("resnet") && kb("resnet") < kb("toycar")
+            && kb("toycar") < kb("vww"),
+        "Table I size ordering violated"
+    );
+    println!("\nTable I ordering check PASSED (aww < resnet < toycar < vww)");
+}

@@ -1,0 +1,116 @@
+//! Table IV reproduction: backend comparison on the ETISS target.
+//!
+//! For each MLPerf-Tiny model × {tflmi, tflmc, tvmaot, tvmaot+, tvmrt}
+//! prints #Instr (Setup), #Instr (Invoke), ROM, RAM — the exact rows
+//! of the paper's Table IV — plus the paper-shape checks (who wins,
+//! by what factor).
+
+mod common;
+
+use common::{bench_env, load_or_exit, PAPER_MODELS};
+use mlonmcu::backends::{self, BackendConfig};
+use mlonmcu::targets;
+
+/// Paper Table IV values for shape comparison:
+/// (model, backend) -> (setup ×10³, invoke ×10⁶, rom kB, ram kB).
+const PAPER: &[(&str, &str, f64, f64, f64, f64)] = &[
+    ("aww", "tflmi", 264.0, 153.144, 143.0, 37.0),
+    ("aww", "tflmc", 62.0, 153.143, 107.0, 28.0),
+    ("aww", "tvmaot", 0.0, 29.819, 126.0, 174.0),
+    ("aww", "tvmaot+", 0.0, 30.671, 122.0, 125.0),
+    ("aww", "tvmrt", 2988.0, 33.660, 164.0, 1056.0),
+    ("vww", "tflmi", 1025.0, 432.031, 416.0, 337.0),
+    ("vww", "tflmc", 274.0, 432.028, 342.0, 274.0),
+    ("vww", "tvmaot", 0.0, 89.672, 579.0, 496.0),
+    ("vww", "tvmaot+", 0.0, 87.460, 571.0, 495.0),
+    ("vww", "tvmrt", 10688.0, 91.885, 655.0, 4229.0),
+    ("resnet", "tflmi", 217.0, 687.462, 183.0, 69.0),
+    ("resnet", "tflmc", 41.0, 687.45, 160.0, 58.0),
+    ("resnet", "tvmaot", 0.0, 114.802, 228.0, 125.0),
+    ("resnet", "tvmaot+", 0.0, 116.115, 224.0, 108.0),
+    ("resnet", "tvmrt", 3970.0, 115.671, 274.0, 1055.0),
+    ("toycar", "tflmi", 71.0, 3.001, 345.0, 21.0),
+    ("toycar", "tflmc", 5.0, 2.996, 330.0, 7.0),
+    ("toycar", "tvmaot", 0.0, 2.441, 594.0, 8.0),
+    ("toycar", "tvmaot+", 0.0, 2.457, 592.0, 7.0),
+    ("toycar", "tvmrt", 5014.0, 2.442, 631.0, 1057.0),
+];
+
+fn paper_row(model: &str, backend: &str) -> Option<&'static (&'static str, &'static str, f64, f64, f64, f64)> {
+    PAPER.iter().find(|r| r.0 == model && r.1 == backend)
+}
+
+fn main() {
+    let env = bench_env();
+    let etiss = targets::by_name("etiss").unwrap();
+    println!("== Table IV: backend comparisons (target: etiss RV32GC) ==");
+    println!(
+        "{:<8} {:<8} {:>14} {:>14} {:>10} {:>10}   {:>22}",
+        "model", "backend", "setup(x10^3)", "invoke(x10^6)", "ROM kB", "RAM kB",
+        "vs paper (invoke,rom)"
+    );
+    let mut shape_failures = Vec::new();
+    for model in PAPER_MODELS {
+        let graph = load_or_exit(&env, model);
+        let mut per_backend = std::collections::BTreeMap::new();
+        for bname in backends::all_backend_names() {
+            let backend = backends::by_name(bname).unwrap();
+            let build = backend.build(&graph, &BackendConfig::default()).unwrap();
+            let dep = etiss.deploy(&build, backend.framework()).unwrap();
+            let input = vec![0i8; graph.tensor(graph.inputs[0]).numel()];
+            let out = etiss.run(&build, &dep, &input, false).unwrap();
+            let setup_k = out.setup_instructions as f64 / 1e3;
+            let invoke_m = out.invoke_instructions as f64 / 1e6;
+            let rom_kb = build.metrics.rom_total() as f64 / 1e3;
+            let ram_kb = build.metrics.ram_total() as f64 / 1e3;
+            let vs = paper_row(model, bname)
+                .map(|p| {
+                    format!(
+                        "{} / {}",
+                        common::vs_paper(invoke_m, p.3),
+                        common::vs_paper(rom_kb, p.4)
+                    )
+                })
+                .unwrap_or_default();
+            println!(
+                "{:<8} {:<8} {:>14.0} {:>14.3} {:>10.0} {:>10.0}   {:>22}",
+                model, bname, setup_k, invoke_m, rom_kb, ram_kb, vs
+            );
+            per_backend.insert(bname, (setup_k, invoke_m, rom_kb, ram_kb));
+        }
+        // -- paper-shape assertions per model ---------------------------
+        let g = |b: &str| per_backend[b];
+        let (s_i, i_i, rom_i, ram_i) = g("tflmi");
+        let (s_c, i_c, rom_c, ram_c) = g("tflmc");
+        let (s_a, i_a, _rom_a, ram_a) = g("tvmaot");
+        let (_s_p, _i_p, _rom_p, ram_p) = g("tvmaot+");
+        let (s_r, _i_r, _rom_r, ram_r) = g("tvmrt");
+        let mut check = |cond: bool, what: &str| {
+            if !cond {
+                shape_failures.push(format!("{model}: {what}"));
+            }
+        };
+        check((i_i - i_c).abs() / i_i < 0.01, "tflmi==tflmc invoke");
+        check(rom_c < rom_i, "tflmc ROM < tflmi ROM");
+        check(ram_c < ram_i, "tflmc RAM < tflmi RAM");
+        check(s_c < 0.3 * s_i, "tflmc setup -70%+");
+        check(s_a < 1.0, "tvmaot setup ~0");
+        check(i_a < i_i, "tvm invoke < tflm invoke");
+        check(s_r > 1000.0, "tvmrt setup > 1M instr");
+        check(ram_r > 1000.0, "tvmrt RAM > 1MB");
+        check(ram_p <= ram_a, "usmp RAM <= aot RAM");
+        if model != "toycar" {
+            check(i_i / i_a > 2.0, "tvm speedup > 2x on CNNs");
+            check(ram_i < ram_a, "tflm RAM < tvm RAM on CNNs");
+        }
+    }
+    if shape_failures.is_empty() {
+        println!("\nall Table IV shape checks PASSED");
+    } else {
+        println!("\nshape check FAILURES:");
+        for f in &shape_failures {
+            println!("  {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,199 @@
+//! Table V reproduction: TVM schedules on microcontroller hardware.
+//!
+//! 4 models × {Default,ARM}×{NHWC,NCHW} × 4 targets × {untuned, tuned}
+//! — inference seconds, with "—" for memory/tuning failures, plus the
+//! paper-shape checks (NCHW beats NHWC on CNNs, catastrophic NHWC on
+//! SPI-flash targets, ARM dense 2× on toycar, esp32 tuned column all
+//! "—", vww failures on small targets).
+
+mod common;
+
+use common::{bench_env, load_or_exit, PAPER_MODELS};
+use mlonmcu::backends::{self, BackendConfig};
+use mlonmcu::schedules::Schedule;
+use mlonmcu::targets::{self, table5_targets};
+use mlonmcu::tuner;
+
+const SCHEDULES: [&str; 4] =
+    ["default-nhwc", "default-nchw", "arm-nhwc", "arm-nchw"];
+
+/// Bench-time tuning budget (paper used >=600; shape converges long
+/// before — ablation_tuning sweeps this axis).
+const TRIALS: usize = 150;
+
+fn main() {
+    let env = bench_env();
+    println!("== Table II: hardware targets ==");
+    for t in table5_targets() {
+        let spec = targets::by_name(t).unwrap();
+        let s = spec.spec();
+        println!(
+            "  {:<8} {:<11} {:>4} MHz  flash {:>9}  ram {:>8}",
+            t, s.isa.name, s.clock_mhz, s.flash_total, s.ram_total
+        );
+    }
+    println!("\n== Table V: TVM schedules on hardware (seconds; — = failed) ==");
+    println!(
+        "{:<8} {:<14} {:>21} {:>21} {:>21} {:>21}",
+        "model", "schedule", "esp32c3 (no/yes)", "stm32f4 (no/yes)",
+        "stm32f7 (no/yes)", "esp32 (no/yes)"
+    );
+    // results[model][schedule][target] = (untuned, tuned)
+    let mut results: Vec<(String, String, Vec<(Option<f64>, Option<f64>)>)> =
+        Vec::new();
+    let backend = backends::by_name("tvmaot").unwrap();
+    for model in PAPER_MODELS {
+        let graph = load_or_exit(&env, model);
+        for sched in SCHEDULES {
+            let schedule = Schedule::parse(sched).unwrap();
+            let mut row = Vec::new();
+            for tname in table5_targets() {
+                let target = targets::by_name(tname).unwrap();
+                let untuned = run_once(&*backend, &graph, &*target, schedule);
+                let tuned = if target.supports_tuning() {
+                    tuner::tune(
+                        &*backend, &graph, &*target, schedule,
+                        tuner::TuneOpts { trials: TRIALS, seed: 99 },
+                    )
+                    .ok()
+                    .map(|t| t.best_seconds)
+                } else {
+                    None // esp32: MicroTVM cannot tune (paper "—")
+                };
+                row.push((untuned, tuned));
+            }
+            print_row(model, sched, &row);
+            results.push((model.to_string(), sched.to_string(), row));
+        }
+    }
+
+    // ---------------------------- paper-shape checks --------------------
+    let cell = |m: &str, s: &str, t: usize| -> (Option<f64>, Option<f64>) {
+        results
+            .iter()
+            .find(|(rm, rs, _)| rm == m && rs == s)
+            .map(|(_, _, row)| row[t])
+            .unwrap()
+    };
+    let mut failures = Vec::new();
+    let mut check = |cond: bool, what: &str| {
+        if !cond {
+            failures.push(what.to_string());
+        }
+    };
+    // esp32 tuned column entirely "—"
+    check(
+        results.iter().all(|(_, _, row)| row[3].1.is_none()),
+        "esp32 tuned column all —",
+    );
+    // NCHW < NHWC untuned for CNNs on every target where both ran
+    for m in ["aww", "vww", "resnet"] {
+        for t in 0..4 {
+            if let (Some(nhwc), Some(nchw)) =
+                (cell(m, "default-nhwc", t).0, cell(m, "default-nchw", t).0)
+            {
+                check(nchw < nhwc, &format!("{m} NCHW<NHWC on target {t}"));
+            }
+        }
+    }
+    // catastrophic NHWC on SPI-flash targets for large-conv models
+    // (paper: 26-62x; our analytic flash-thrash model reproduces the
+    // blowup directionally at >4x — see EXPERIMENTS.md)
+    for m in ["vww", "resnet"] {
+        if let (Some(nhwc), Some(nchw)) =
+            (cell(m, "default-nhwc", 0).0, cell(m, "default-nchw", 0).0)
+        {
+            check(
+                nhwc / nchw > 4.0,
+                &format!("{m} esp32c3 NHWC blowup >4x (got {:.1}x)", nhwc / nchw),
+            );
+        }
+    }
+    // ...but mild (<6x) on internal-flash stm32f7
+    for m in ["vww", "resnet"] {
+        if let (Some(nhwc), Some(nchw)) =
+            (cell(m, "default-nhwc", 2).0, cell(m, "default-nchw", 2).0)
+        {
+            check(
+                nhwc / nchw < 6.0,
+                &format!("{m} stm32f7 NHWC mild (got {:.1}x)", nhwc / nchw),
+            );
+        }
+    }
+    // aww (small weight windows, all cache-resident): gap stays mild
+    if let (Some(nhwc), Some(nchw)) =
+        (cell("aww", "default-nhwc", 0).0, cell("aww", "default-nchw", 0).0)
+    {
+        check(
+            (1.2..3.5).contains(&(nhwc / nchw)),
+            &format!("aww esp32c3 NHWC mild x1.5-2 (got {:.2}x)", nhwc / nchw),
+        );
+    }
+    // ARM dense ~2x better on toycar
+    for t in 0..3 {
+        if let (Some(def), Some(arm)) =
+            (cell("toycar", "default-nhwc", t).0, cell("toycar", "arm-nhwc", t).0)
+        {
+            check(
+                def / arm > 1.5,
+                &format!("toycar ARM 2x on target {t} (got {:.2}x)", def / arm),
+            );
+        }
+    }
+    // vww must fail on esp32 (flash) for all schedules
+    check(
+        (0..1).all(|_| SCHEDULES.iter().all(|s| cell("vww", s, 3).0.is_none())),
+        "vww fails on esp32",
+    );
+    // vww default-NHWC fails on stm32f4 (arena + im2col workspace),
+    // while NCHW runs there (paper Table V: "—" vs 0.395 s)
+    check(cell("vww", "default-nhwc", 1).0.is_none(), "vww NHWC fails on stm32f4");
+    check(cell("vww", "default-nchw", 1).0.is_some(), "vww NCHW runs on stm32f4");
+    // tuning never hurts; x86-nhwc conv-only rows see ~no gain
+    for (m, s, row) in &results {
+        for (unt, tun) in row {
+            if let (Some(u), Some(t)) = (unt, tun) {
+                check(
+                    *t <= *u * 1.0001,
+                    &format!("{m}/{s} tuned <= untuned"),
+                );
+            }
+        }
+    }
+    if failures.is_empty() {
+        println!("\nall Table V shape checks PASSED");
+    } else {
+        println!("\nshape check FAILURES:");
+        for f in &failures {
+            println!("  {f}");
+        }
+        std::process::exit(1);
+    }
+}
+
+fn run_once(
+    backend: &dyn backends::Backend,
+    graph: &mlonmcu::graph::Graph,
+    target: &dyn targets::Target,
+    schedule: Schedule,
+) -> Option<f64> {
+    let mut cfg = BackendConfig::default();
+    cfg.schedule = Some(schedule);
+    let build = backend.build(graph, &cfg).ok()?;
+    let dep = target.deploy(&build, backend.framework()).ok()?;
+    let input = vec![0i8; graph.tensor(graph.inputs[0]).numel()];
+    let out = target.run(&build, &dep, &input, false).ok()?;
+    Some(out.invoke_seconds)
+}
+
+fn print_row(model: &str, sched: &str, row: &[(Option<f64>, Option<f64>)]) {
+    let fmt = |v: Option<f64>| match v {
+        Some(s) => format!("{s:.3}"),
+        None => "—".to_string(),
+    };
+    print!("{model:<8} {sched:<14}");
+    for (u, t) in row {
+        print!(" {:>10}/{:<10}", fmt(*u), fmt(*t));
+    }
+    println!();
+}

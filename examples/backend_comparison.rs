@@ -1,0 +1,61 @@
+//! Backend comparison (paper §III-B): all five deployment backends on
+//! the ETISS instruction-set simulator for every MLPerf-Tiny model —
+//! a user-facing version of the Table IV campaign built on the public
+//! session API, with a filtered + sorted report and a bar chart
+//! artifact via postprocesses.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example backend_comparison
+//! ```
+
+use mlonmcu::postprocess;
+use mlonmcu::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let env = Environment::discover()?;
+    let session = Session::new(&env)?;
+    let matrix = RunMatrix::new()
+        .models(["aww", "vww", "resnet", "toycar"])
+        .backends(["tflmi", "tflmc", "tvmaot", "tvmaot+", "tvmrt"])
+        .targets(["etiss"])
+        .features(["validate"]);
+
+    let mut report = session.run_matrix(&matrix, 2)?;
+
+    // postprocess pipeline: trim to the Table IV columns, sort by
+    // invoke cost, and emit an ASCII chart artifact
+    let artifacts = postprocess::apply_all(
+        &[
+            "filter_cols:model,backend,setup_instr,invoke_instr,rom_b,ram_b,validate"
+                .into(),
+            "sort_by:invoke_instr".into(),
+            "visualize:invoke_instr".into(),
+        ],
+        &mut report,
+    )?;
+    for (name, text) in &artifacts {
+        std::fs::write(session.dir.join(name), text)?;
+        println!("wrote {}", session.dir.join(name).display());
+    }
+    println!("{}", report.to_text());
+
+    // the paper's headline: TVM wins invoke latency, TFLM wins memory
+    let ok = report
+        .rows
+        .iter()
+        .filter(|r| r["model"].render() == "resnet")
+        .collect::<Vec<_>>();
+    let get = |backend: &str, col: &str| -> f64 {
+        ok.iter()
+            .find(|r| r["backend"].render() == backend)
+            .and_then(|r| r[col].as_f64())
+            .unwrap_or(f64::NAN)
+    };
+    println!(
+        "resnet: TFLM/TVM invoke ratio = {:.1}x (paper: ~6x), \
+         TVM/TFLM RAM ratio = {:.1}x (paper: ~2x)",
+        get("tflmi", "invoke_instr") / get("tvmaot", "invoke_instr"),
+        get("tvmaot", "ram_b") / get("tflmi", "ram_b"),
+    );
+    Ok(())
+}

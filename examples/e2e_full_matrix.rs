@@ -1,0 +1,104 @@
+//! END-TO-END driver (DESIGN.md experiment V1 + the paper's headline
+//! claim): regenerate the full 118-comparison campaign — 20
+//! backend-comparison runs on the ISS (§III-B) plus the ~98-result
+//! schedule study on four virtual boards (§III-C) — through the
+//! complete three-layer stack:
+//!
+//!   * models come from the python zoo (.tmodel artifacts),
+//!   * every ISS run is validated against the JAX/Pallas golden path
+//!     executed via PJRT (the `validate` feature),
+//!   * hardware runs execute numerically on the virtual MCUs through
+//!     the Zephyr-sim platform and MLIF serial protocol.
+//!
+//! Prints the paper-vs-ours summary and writes both session reports.
+//! Results are recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_full_matrix
+//! ```
+
+use mlonmcu::prelude::*;
+use mlonmcu::util::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let env = Environment::discover()?
+        .with_overrides(&["tune.trials=150".into()])?;
+    let watch = Stopwatch::start();
+
+    // ---- campaign III-B: 20 backend runs on etiss, validated -------
+    let session_b = Session::new(&env)?;
+    let matrix_b = RunMatrix::new()
+        .models(["aww", "vww", "resnet", "toycar"])
+        .backends(["tflmi", "tflmc", "tvmaot", "tvmaot+", "tvmrt"])
+        .targets(["etiss"])
+        .features(["validate"]);
+    let report_b = session_b.run_matrix(&matrix_b, 2)?;
+    let timing_b = *session_b.last_timing.lock().unwrap();
+
+    let ok_b = count(&report_b, |s| s == "ok");
+    let validated = report_b
+        .rows
+        .iter()
+        .filter(|r| r["validate"].render().starts_with("pass"))
+        .count();
+    println!(
+        "III-B: {}/{} runs ok, {}/{} outputs validated against the \
+         JAX/Pallas golden path (PJRT)",
+        ok_b,
+        report_b.len(),
+        validated,
+        report_b.len()
+    );
+    assert_eq!(ok_b, 20, "all III-B runs must succeed");
+    assert_eq!(validated, 20, "all III-B outputs must match golden");
+
+    // ---- campaign III-C: schedules × targets × tuning --------------
+    let session_c = Session::new(&env)?;
+    let matrix_c = RunMatrix::new()
+        .models(["aww", "vww", "resnet", "toycar"])
+        .backends(["tvmaot"])
+        .targets(["esp32c3", "stm32f4", "stm32f7", "esp32"])
+        .schedules(["default-nhwc", "default-nchw", "arm-nhwc", "arm-nchw"])
+        .with_tuning_sweep();
+    let report_c = session_c.run_matrix(&matrix_c, 2)?;
+    let timing_c = *session_c.last_timing.lock().unwrap();
+
+    let ok_c = count(&report_c, |s| s == "ok");
+    println!(
+        "III-C: {}/{} run attempts ok ({} '—' cells from memory gates \
+         and the esp32 tuning limitation; paper reports ~98 results of 128 cells)",
+        ok_c,
+        report_c.len(),
+        report_c.len() - ok_c
+    );
+    assert!(report_c.len() == 128, "Table V grid is 4x4x4x2");
+    assert!(
+        (80..=110).contains(&ok_c),
+        "successful Table V cells should be ~98, got {ok_c}"
+    );
+
+    // ---- headline -----------------------------------------------------
+    let total = ok_b + ok_c;
+    println!(
+        "\n=== {} end-to-end comparisons in {:.1} s wall (paper: 118 \
+         comparisons in <60 min on real boards; our devices are simulated \
+         — {:.0} s of simulated device time) ===",
+        total,
+        watch.elapsed_s(),
+        timing_b.sim_s + timing_c.sim_s,
+    );
+    println!(
+        "reports: {} and {}",
+        session_b.dir.join("report.md").display(),
+        session_c.dir.join("report.md").display()
+    );
+    Ok(())
+}
+
+fn count(report: &Report, pred: impl Fn(&str) -> bool) -> usize {
+    report
+        .rows
+        .iter()
+        .filter(|r| pred(&r["status"].render()))
+        .count()
+}

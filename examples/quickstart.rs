@@ -1,0 +1,37 @@
+//! Quickstart: benchmark one model with one backend on one target and
+//! print the report — the "single benchmark" flow of paper §II-A2.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use mlonmcu::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. resolve the active environment (MLONMCU_HOME / cwd / default)
+    let env = Environment::discover()?;
+
+    // 2. create an isolated session (artifacts under
+    //    artifacts/sessions/<id>/)
+    let session = Session::new(&env)?;
+
+    // 3. define the benchmark: keyword spotting, TVM AoT, RISC-V ISS,
+    //    with golden-output validation through PJRT
+    let matrix = RunMatrix::new()
+        .models(["aww"])
+        .backends(["tvmaot"])
+        .targets(["etiss"])
+        .features(["validate"]);
+
+    // 4. run and print
+    let report = session.run_matrix(&matrix, 1)?;
+    println!("{}", report.to_text());
+
+    let t = *session.last_timing.lock().unwrap();
+    println!(
+        "1 run in {:.2}s — artifacts in {}",
+        t.wall_s,
+        session.dir.display()
+    );
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Schedule exploration (paper §III-C): sweep TVM schedules and
+//! layouts for one model across all four hardware targets, with
+//! AutoTVM tuning — the Table V flow on the public API, including the
+//! failure cells ("—") produced by memory gates and the esp32's
+//! missing tuning support.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example schedule_explorer -- resnet
+//! ```
+
+use mlonmcu::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "resnet".into());
+    let env = Environment::discover()?;
+    let session = Session::new(&env)?;
+
+    let matrix = RunMatrix::new()
+        .models([model.as_str()])
+        .backends(["tvmaot"])
+        .targets(["esp32c3", "stm32f4", "stm32f7", "esp32"])
+        .schedules(["default-nhwc", "default-nchw", "arm-nhwc", "arm-nchw"])
+        .with_tuning_sweep();
+
+    // fewer trials than the paper's 600 for an interactive example
+    let env = env.with_overrides(&["tune.trials=100".into()])?;
+    let session_env = Session::new(&env)?;
+    let _ = session; // keep the first session dir for comparison runs
+
+    let report = session_env.run_matrix(&matrix, 2)?;
+    let view = report.select(&[
+        "model", "target", "schedule", "tuned", "status", "time_s", "tune_gain",
+    ]);
+    println!("{}", view.to_text());
+
+    let failed = report
+        .rows
+        .iter()
+        .filter(|r| r["status"].render() != "ok")
+        .count();
+    println!(
+        "{} runs, {} failed (memory gates / esp32 tuning) — the paper's \
+         Table V '—' cells",
+        report.len(),
+        failed
+    );
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""AOT bridge: lower every zoo model's JAX function (which runs the L1
+Pallas kernels) to HLO **text** and dump golden I/O vectors.
+
+HLO text — not `lowered.compiler_ir("hlo").serialize()` — is the
+interchange format: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids that the rust side's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (all under artifacts/, gitignored, rebuilt by `make artifacts`):
+    models/<name>.tmodel       — quantized model (zoo.py)
+    <name>.hlo.txt             — golden int8 inference, input -> (output,)
+    golden/<name>.json         — deterministic input/output vectors
+
+Python runs ONCE here; the rust coordinator never imports it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from . import zoo
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe path).
+
+    print_large_constants=True is load-bearing: the default printer
+    elides big weight arrays as `constant({...})`, which the rust
+    side's HLO text parser silently accepts as uninitialized data —
+    the model would "run" with garbage weights.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(m, layout: str = "nhwc", use_pallas: bool = False) -> str:
+    """Lower one model to HLO text.
+
+    The *exported* golden path uses the pure-jnp reference kernels
+    (`use_pallas=False`): the rust side's xla_extension 0.5.1 runtime
+    miscompiles the `while`-loop programs that Pallas interpret-mode
+    grids lower to (outputs come back with corrupted element striding
+    for both s8 and s32 tuples). The Pallas kernels are the same
+    function — python/tests/test_models.py::test_pallas_path_matches_
+    ref_path proves bit-equality on whole models, and test_kernels.py
+    sweeps them against ref.py with hypothesis — so the exported HLO
+    is the L1 kernels' semantics, lowered via the runtime-compatible
+    path. (On a real TPU PJRT plugin, `use_pallas=True` exports the
+    Mosaic kernels directly.)
+    """
+    fn = model_mod.make_model_fn(m, layout=layout, use_pallas=use_pallas)
+    spec = jax.ShapeDtypeStruct(m.tensor(m.inputs[0]).shape, jnp.int8)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts",
+                   help="artifacts directory")
+    p.add_argument("--models", nargs="*", default=list(zoo.MODEL_NAMES))
+    p.add_argument("--skip-golden", action="store_true")
+    args = p.parse_args()
+
+    out = args.out
+    os.makedirs(os.path.join(out, "models"), exist_ok=True)
+    os.makedirs(os.path.join(out, "golden"), exist_ok=True)
+
+    for name in args.models:
+        m = zoo.build(name)
+        m.save(os.path.join(out, "models", f"{name}.tmodel"))
+        hlo = lower_model(m)
+        hlo_path = os.path.join(out, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(hlo)
+        print(f"{name}: wrote {len(hlo)} chars of HLO -> {hlo_path}")
+        if not args.skip_golden:
+            x, y = model_mod.golden_io(m)
+            gpath = os.path.join(out, "golden", f"{name}.json")
+            with open(gpath, "w") as f:
+                json.dump(
+                    {
+                        "model": name,
+                        "input_shape": list(x.shape),
+                        "input": x.flatten().tolist(),
+                        "output_shape": list(y.shape),
+                        "output": y.flatten().tolist(),
+                    },
+                    f,
+                )
+            print(f"{name}: golden {x.shape} -> {y.shape} ({gpath})")
+
+
+if __name__ == "__main__":
+    main()

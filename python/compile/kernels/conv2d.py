@@ -1,0 +1,173 @@
+"""L1 Pallas convolution kernels (int8), NHWC and NCHW variants.
+
+CONV_2D is lowered to im2col + the Pallas matmul kernel — the same
+GEMM-ification the paper's frameworks use on MCUs (CMSIS-NN, TVM's
+conv2d_nhwc / conv2d_nchw schedules). Two entry points mirror the
+paper's layout study (Table V):
+
+  conv2d_int8_nhwc — patches gathered channels-last (TFLite default)
+  conv2d_int8_nchw — patches gathered channels-first (TVM default);
+      numerically identical, but the weight matrix is packed OIHW-io
+      block-contiguous, the analogue of TVM's NCHWc transform.
+
+The depthwise kernel operates directly on channel blocks in VMEM.
+All kernels are exact-integer and are checked against ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import matmul_int8
+from .ref import pad_nhwc, requantize
+
+
+def _im2col_nhwc(xp, kh, kw, sh, sw, oh, ow):
+    """[1,Hp,Wp,C] -> [OH*OW, kh*kw*C] patch matrix (channels-last)."""
+    _, hp, wp, c = xp.shape
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = jax.lax.slice(
+                xp, (0, i, j, 0),
+                (1, i + sh * (oh - 1) + 1, j + sw * (ow - 1) + 1, c),
+                (1, sh, sw, 1),
+            )
+            cols.append(sl.reshape(oh * ow, c))
+    return jnp.concatenate(cols, axis=1)
+
+
+def _im2col_nchw(xp, kh, kw, sh, sw, oh, ow):
+    """Channels-first patch matrix: [OH*OW, C*kh*kw] ordered (c, i, j)."""
+    _, hp, wp, c = xp.shape
+    xc = jnp.transpose(xp, (0, 3, 1, 2))  # NCHW
+    # gather per (c-major, kh, kw): slice once per (i, j), then interleave
+    per_ij = []
+    for i in range(kh):
+        for j in range(kw):
+            sl = jax.lax.slice(
+                xc, (0, 0, i, j),
+                (1, c, i + sh * (oh - 1) + 1, j + sw * (ow - 1) + 1),
+                (1, 1, sh, sw),
+            )  # [1, C, OH, OW]
+            per_ij.append(sl.reshape(c, oh * ow))
+    # stack -> [kh*kw, C, OH*OW] -> want column order (c, i, j)
+    stk = jnp.stack(per_ij, axis=0)
+    stk = jnp.transpose(stk, (2, 1, 0))  # [OH*OW, C, kh*kw]
+    return stk.reshape(oh * ow, c * kh * kw)
+
+
+def _out_hw(h, w, kh, kw, sh, sw, padding):
+    if padding == 0:  # SAME
+        return -(-h // sh), -(-w // sw)
+    return (h - kh) // sh + 1, (w - kw) // sw + 1
+
+
+def conv2d_int8_nhwc(x, w, bias, zp_in, multiplier, zp_out,
+                     stride=(1, 1), padding=0, act=0):
+    """Quantized CONV_2D, NHWC im2col + Pallas matmul. w is OHWI."""
+    sh, sw = stride
+    oc, kh, kw, ic = w.shape
+    _, h, wd, _ = x.shape
+    oh, ow = _out_hw(h, wd, kh, kw, sh, sw, padding)
+    xp = pad_nhwc(x, kh, kw, sh, sw, padding, zp_in)
+    patches = _im2col_nhwc(xp, kh, kw, sh, sw, oh, ow)  # [M, khkwC]
+    # weight matrix [khkwC, OC], rows ordered (i, j, c) to match patches
+    wm = jnp.transpose(w, (1, 2, 3, 0)).reshape(kh * kw * ic, oc)
+    acc = matmul_int8(patches, wm)
+    # zero-point correction: acc -= zp_in * colsum(wm)
+    colsum = jnp.sum(wm.astype(jnp.int32), axis=0)
+    acc = acc - jnp.int32(zp_in) * colsum[None, :]
+    acc = acc + bias.astype(jnp.int32)[None, :]
+    y = requantize(acc, multiplier, zp_out, act)
+    return y.reshape(1, oh, ow, oc)
+
+
+def conv2d_int8_nchw(x, w, bias, zp_in, multiplier, zp_out,
+                     stride=(1, 1), padding=0, act=0):
+    """Same conv, channels-first patch/weight packing (TVM-default
+    analogue). Numerically identical to the NHWC variant."""
+    sh, sw = stride
+    oc, kh, kw, ic = w.shape
+    _, h, wd, _ = x.shape
+    oh, ow = _out_hw(h, wd, kh, kw, sh, sw, padding)
+    xp = pad_nhwc(x, kh, kw, sh, sw, padding, zp_in)
+    patches = _im2col_nchw(xp, kh, kw, sh, sw, oh, ow)  # [M, C*khkw]
+    # weight matrix rows ordered (c, i, j): OHWI -> OIHW -> [C*khkw, OC]
+    wm = jnp.transpose(w, (3, 1, 2, 0)).reshape(ic * kh * kw, oc)
+    acc = matmul_int8(patches, wm)
+    colsum = jnp.sum(wm.astype(jnp.int32), axis=0)
+    acc = acc - jnp.int32(zp_in) * colsum[None, :]
+    acc = acc + bias.astype(jnp.int32)[None, :]
+    y = requantize(acc, multiplier, zp_out, act)
+    return y.reshape(1, oh, ow, oc)
+
+
+def _dwconv_kernel(x_ref, w_ref, o_ref, *, kh, kw, sh, sw, oh, ow):
+    """Depthwise conv over one VMEM channel block.
+
+    x_ref: [Hp, Wp, cb] int8 (pre-padded; cast per-tap to keep the
+    VMEM block int8). w_ref: [kh, kw, cb] int8. o_ref: int32.
+    """
+    xb = x_ref[...]
+    acc = jnp.zeros((oh, ow, xb.shape[-1]), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            tap = jax.lax.slice(
+                xb, (i, j, 0),
+                (i + sh * (oh - 1) + 1, j + sw * (ow - 1) + 1, xb.shape[-1]),
+                (sh, sw, 1),
+            ).astype(jnp.int32)
+            acc = acc + tap * w_ref[i, j, :].astype(jnp.int32)
+    o_ref[...] = acc
+
+
+def dwconv2d_int8(x, w, bias, zp_in, multiplier, zp_out,
+                  stride=(1, 1), padding=0, act=0, cb: int = 32):
+    """Quantized DEPTHWISE_CONV_2D as a channel-blocked Pallas kernel.
+
+    w is 1HWC. The zero-point correction is folded per-channel:
+    acc_c -= zp_in * sum_ij(w[i,j,c]).
+    """
+    sh, sw = stride
+    _, kh, kw, c = w.shape
+    _, h, wd, _ = x.shape
+    oh, ow = _out_hw(h, wd, kh, kw, sh, sw, padding)
+    xp = pad_nhwc(x, kh, kw, sh, sw, padding, zp_in)[0]  # [Hp,Wp,C]
+    wk = w[0]  # [kh,kw,C]
+    while c % cb != 0:
+        cb -= 1
+    grid = (c // cb,)
+    kern = functools.partial(
+        _dwconv_kernel, kh=kh, kw=kw, sh=sh, sw=sw, oh=oh, ow=ow
+    )
+    acc = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((xp.shape[0], xp.shape[1], cb), lambda i: (0, 0, i)),
+            pl.BlockSpec((kh, kw, cb), lambda i: (0, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((oh, ow, cb), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c), jnp.int32),
+        interpret=True,
+    )(xp, wk)
+    tapsum = jnp.sum(wk.astype(jnp.int32), axis=(0, 1))  # [C]
+    acc = acc - jnp.int32(zp_in) * tapsum[None, None, :]
+    acc = acc + bias.astype(jnp.int32)[None, None, :]
+    y = requantize(acc, multiplier, zp_out, act)
+    return y.reshape(1, oh, ow, c)
+
+
+def dense_int8(x, w, bias, zp_in, multiplier, zp_out, act=0):
+    """Quantized FULLY_CONNECTED via the Pallas matmul. w is [out,in]."""
+    wm = w.astype(jnp.int8).T  # [in, out]
+    acc = matmul_int8(x, wm)
+    colsum = jnp.sum(wm.astype(jnp.int32), axis=0)
+    acc = acc - jnp.int32(zp_in) * colsum[None, :]
+    acc = acc + bias.astype(jnp.int32)[None, :]
+    return requantize(acc, multiplier, zp_out, act)

@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: blocked int8×int8→int32 matmul.
+
+This is the compute hot-spot of every model in the zoo: CONV_2D is
+lowered to im2col + matmul (exactly what CMSIS-NN/TVM do on Cortex-M) and
+FULLY_CONNECTED is a [B,K]×[K,N] matmul. The kernel is tiled for VMEM via
+BlockSpec — the TPU analogue of the paper's NCHWc spatial-locality layout
+(DESIGN.md §Hardware-Adaptation):
+
+  grid = (M/bm, N/bn); each program stages an int8 [bm,K] LHS block and
+  an int8 [K,bn] RHS block in VMEM and issues one int8→int32 MXU matmul.
+
+interpret=True throughout: the CPU PJRT plugin cannot run Mosaic
+custom-calls; correctness is validated against ref.py and real-TPU
+efficiency is estimated from the VMEM footprint in DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile: int8 blocks -> int32 accumulate."""
+    x = x_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    o_ref[...] = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (keeps the grid exact
+    without masking; model dims in the zoo are multiples of 8)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def matmul_int8(x, w, bm: int = 128, bn: int = 128):
+    """[M,K] i8 × [K,N] i8 -> [M,N] i32, Pallas-blocked over (M, N).
+
+    K is kept whole per block: for the zoo's shapes (K ≤ 2.8k) an
+    int8 [bm,K] + [K,bn] staging plus the int32 [bm,bn] tile is ≤ 1 MiB
+    of VMEM — comfortably under the 16 MiB/core budget.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(x, w)
+
+
+def vmem_bytes(m: int, k: int, n: int, bm: int = 128, bn: int = 128) -> int:
+    """Estimated per-program VMEM footprint of matmul_int8 (perf pass)."""
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    return bm * k + k * bn + 4 * bm * bn

@@ -1,0 +1,139 @@
+"""Pure-jnp int8 inference oracles — the L1 correctness reference.
+
+Every Pallas kernel in this package is checked against these functions
+(exact integer equality) by python/tests/test_kernels.py, and the rust
+virtual-MCU executor implements the same arithmetic (validated end-to-end
+by the `validate` feature through PJRT).
+
+Conventions (see tmodel.py):
+  activations NHWC int8 · conv weights OHWI · dwconv weights 1HWC ·
+  dense weights [out, in] · biases int32 · weights symmetric (zp = 0).
+
+Requantization: float64 multiplier + round-half-even (see quant.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+jax.config.update("jax_enable_x64", True)
+
+QMIN = -128
+QMAX = 127
+
+
+def same_pads(size: int, k: int, s: int) -> tuple:
+    """TFLite/TF SAME padding for one spatial dim."""
+    out = -(-size // s)  # ceil
+    total = max((out - 1) * s + k - size, 0)
+    before = total // 2
+    return before, total - before
+
+
+def pad_nhwc(x, kh, kw, sh, sw, padding: int, value: int):
+    """Pad an NHWC tensor for SAME padding with the input zero-point."""
+    if padding == 1:  # VALID
+        return x
+    _, h, w, _ = x.shape
+    ph = same_pads(h, kh, sh)
+    pw = same_pads(w, kw, sw)
+    return jnp.pad(
+        x, ((0, 0), ph, pw, (0, 0)), constant_values=value
+    )
+
+
+def requantize(acc, multiplier: float, zero_point: int, act: int = 0):
+    """int32 accumulator -> int8 (round-half-even, fused-ReLU clamp)."""
+    y = jnp.round(acc.astype(jnp.float64) * jnp.float64(multiplier))
+    y = y + zero_point
+    lo = zero_point if act == 1 else QMIN
+    return jnp.clip(y, lo, QMAX).astype(jnp.int8)
+
+
+def conv2d_int8(x, w, bias, zp_in, multiplier, zp_out,
+                stride=(1, 1), padding=0, act=0):
+    """Quantized CONV_2D. x NHWC i8, w OHWI i8, bias i32 -> NHWC i8."""
+    sh, sw = stride
+    oc, kh, kw, ic = w.shape
+    xp = pad_nhwc(x, kh, kw, sh, sw, padding, zp_in)
+    lhs = xp.astype(jnp.int32) - jnp.int32(zp_in)
+    rhs = jnp.transpose(w, (1, 2, 3, 0)).astype(jnp.int32)  # HWIO
+    acc = lax.conv_general_dilated(
+        lhs, rhs, window_strides=(sh, sw), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32,
+    )
+    acc = acc + bias.astype(jnp.int32)[None, None, None, :]
+    return requantize(acc, multiplier, zp_out, act)
+
+
+def dwconv2d_int8(x, w, bias, zp_in, multiplier, zp_out,
+                  stride=(1, 1), padding=0, act=0):
+    """Quantized DEPTHWISE_CONV_2D. w is 1HWC i8."""
+    sh, sw = stride
+    _, kh, kw, c = w.shape
+    xp = pad_nhwc(x, kh, kw, sh, sw, padding, zp_in)
+    lhs = xp.astype(jnp.int32) - jnp.int32(zp_in)
+    rhs = jnp.transpose(w, (1, 2, 0, 3)).astype(jnp.int32)  # [kh,kw,1,C]
+    acc = lax.conv_general_dilated(
+        lhs, rhs, window_strides=(sh, sw), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+        preferred_element_type=jnp.int32,
+    )
+    acc = acc + bias.astype(jnp.int32)[None, None, None, :]
+    return requantize(acc, multiplier, zp_out, act)
+
+
+def dense_int8(x, w, bias, zp_in, multiplier, zp_out, act=0):
+    """Quantized FULLY_CONNECTED. x [B, in] i8, w [out, in] i8."""
+    lhs = x.astype(jnp.int32) - jnp.int32(zp_in)
+    acc = lhs @ w.astype(jnp.int32).T + bias.astype(jnp.int32)[None, :]
+    return requantize(acc, multiplier, zp_out, act)
+
+
+def avgpool_int8(x, filter_hw, stride=(1, 1), padding=1):
+    """Quantized AVG_POOL_2D (scale/zp preserved, round-half-even)."""
+    fh, fw = filter_hw
+    sh, sw = stride
+    # SAME avg-pool divides by the true window size; we only use VALID
+    # (global) pooling in the zoo, so padding must be VALID here.
+    assert padding == 1, "avg pool: only VALID padding is supported"
+    acc = lax.reduce_window(
+        x.astype(jnp.int32), 0, lax.add,
+        (1, fh, fw, 1), (1, sh, sw, 1), "VALID",
+    )
+    y = jnp.round(acc.astype(jnp.float64) / (fh * fw))
+    return jnp.clip(y, QMIN, QMAX).astype(jnp.int8)
+
+
+def maxpool_int8(x, filter_hw, stride=(1, 1), padding=1):
+    fh, fw = filter_hw
+    sh, sw = stride
+    assert padding == 1, "max pool: only VALID padding is supported"
+    return lax.reduce_window(
+        x, jnp.int8(QMIN), lax.max, (1, fh, fw, 1), (1, sh, sw, 1), "VALID"
+    )
+
+
+def add_int8(a, b, sa, zpa, sb, zpb, so, zpo, act=0):
+    """Quantized ADD: rescale both operands into the output scale."""
+    fa = (a.astype(jnp.float64) - zpa) * (sa / so)
+    fb = (b.astype(jnp.float64) - zpb) * (sb / so)
+    y = jnp.round(fa + fb) + zpo
+    lo = zpo if act == 1 else QMIN
+    return jnp.clip(y, lo, QMAX).astype(jnp.int8)
+
+
+def softmax_int8(x, s_in, zp_in):
+    """Quantized SOFTMAX with the TFLite output convention
+    (scale = 1/256, zero_point = -128). Uses f32 exp; the validate
+    feature allows ±1 quantum on softmax outputs (DESIGN.md §1)."""
+    f = (x.astype(jnp.float32) - zp_in) * jnp.float32(s_in)
+    f = f - jnp.max(f, axis=-1, keepdims=True)
+    e = jnp.exp(f)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    y = jnp.round(p.astype(jnp.float64) * 256.0) - 128
+    return jnp.clip(y, QMIN, QMAX).astype(jnp.int8)

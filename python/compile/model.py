@@ -1,0 +1,118 @@
+"""L2: the JAX compute graph — quantized int8 inference for a TModel.
+
+`make_model_fn` turns a TModel into a jittable int8→int8 function whose
+CONV_2D / DEPTHWISE_CONV_2D / FULLY_CONNECTED ops run through the L1
+Pallas kernels (kernels/conv2d.py); the remaining ops are plain jnp.
+aot.py lowers exactly this function to the HLO text the rust runtime
+executes, so the golden path is Pallas-kernel-for-real, end to end.
+
+Weights are folded in as constants at trace time: the lowered HLO takes
+only the int8 input tensor. Layout (nhwc | nchw) selects the conv patch
+packing, mirroring the paper's Table V layout study.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tmodel as tm
+from .kernels import conv2d as pk
+from .kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _quant_triple(m: tm.TModel, op: tm.Op):
+    """(zp_in, requant multiplier, zp_out) for a conv/dense op."""
+    xin = m.tensor(op.inputs[0])
+    w = m.tensor(op.inputs[1])
+    out = m.tensor(op.outputs[0])
+    mult = float(
+        np.float64(xin.scale) * np.float64(w.scale) / np.float64(out.scale)
+    )
+    return xin.zero_point, mult, out.zero_point
+
+
+def make_model_fn(m: tm.TModel, layout: str = "nhwc", use_pallas: bool = True):
+    """Build fn(input_q: int8) -> output_q: int8 for one TModel."""
+    conv_fn = {
+        ("nhwc", True): pk.conv2d_int8_nhwc,
+        ("nchw", True): pk.conv2d_int8_nchw,
+        ("nhwc", False): ref.conv2d_int8,
+        ("nchw", False): ref.conv2d_int8,
+    }[(layout, use_pallas)]
+    dw_fn = pk.dwconv2d_int8 if use_pallas else ref.dwconv2d_int8
+    dense_fn = pk.dense_int8 if use_pallas else ref.dense_int8
+
+    def fn(x):
+        vals = {m.inputs[0]: x}
+        for op in m.ops:
+            if op.opcode in (tm.OP_CONV_2D, tm.OP_DEPTHWISE_CONV_2D):
+                zp_in, mult, zp_out = _quant_triple(m, op)
+                w = jnp.asarray(m.tensor(op.inputs[1]).data)
+                b = jnp.asarray(m.tensor(op.inputs[2]).data)
+                f = conv_fn if op.opcode == tm.OP_CONV_2D else dw_fn
+                vals[op.outputs[0]] = f(
+                    vals[op.inputs[0]], w, b, zp_in, mult, zp_out,
+                    stride=(op.attr("stride_h"), op.attr("stride_w")),
+                    padding=op.attr("padding"),
+                    act=op.attr("fused_act"),
+                )
+            elif op.opcode == tm.OP_FULLY_CONNECTED:
+                zp_in, mult, zp_out = _quant_triple(m, op)
+                w = jnp.asarray(m.tensor(op.inputs[1]).data)
+                b = jnp.asarray(m.tensor(op.inputs[2]).data)
+                vals[op.outputs[0]] = dense_fn(
+                    vals[op.inputs[0]], w, b, zp_in, mult, zp_out,
+                    act=op.attr("fused_act"),
+                )
+            elif op.opcode == tm.OP_AVG_POOL_2D:
+                vals[op.outputs[0]] = ref.avgpool_int8(
+                    vals[op.inputs[0]],
+                    (op.attr("filter_h"), op.attr("filter_w")),
+                    (op.attr("stride_h"), op.attr("stride_w")),
+                    op.attr("padding"),
+                )
+            elif op.opcode == tm.OP_MAX_POOL_2D:
+                vals[op.outputs[0]] = ref.maxpool_int8(
+                    vals[op.inputs[0]],
+                    (op.attr("filter_h"), op.attr("filter_w")),
+                    (op.attr("stride_h"), op.attr("stride_w")),
+                    op.attr("padding"),
+                )
+            elif op.opcode == tm.OP_ADD:
+                ta = m.tensor(op.inputs[0])
+                tb = m.tensor(op.inputs[1])
+                to = m.tensor(op.outputs[0])
+                vals[op.outputs[0]] = ref.add_int8(
+                    vals[op.inputs[0]], vals[op.inputs[1]],
+                    ta.scale, ta.zero_point, tb.scale, tb.zero_point,
+                    to.scale, to.zero_point, op.attr("fused_act", 0),
+                )
+            elif op.opcode == tm.OP_RESHAPE:
+                to = m.tensor(op.outputs[0])
+                vals[op.outputs[0]] = vals[op.inputs[0]].reshape(to.shape)
+            elif op.opcode == tm.OP_SOFTMAX:
+                ta = m.tensor(op.inputs[0])
+                vals[op.outputs[0]] = ref.softmax_int8(
+                    vals[op.inputs[0]], ta.scale, ta.zero_point
+                )
+            else:
+                raise NotImplementedError(
+                    f"opcode {op.opcode} ({tm.OP_NAMES.get(op.opcode)})"
+                )
+        return (vals[m.outputs[0]],)
+
+    return fn
+
+
+def golden_io(m: tm.TModel, seed: int = 7, layout: str = "nhwc"):
+    """Deterministic (input, output) pair for the validate feature."""
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, size=m.tensor(m.inputs[0]).shape).astype(
+        np.int8
+    )
+    y = np.asarray(make_model_fn(m, layout=layout)(jnp.asarray(x))[0])
+    return x, y

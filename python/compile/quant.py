@@ -1,0 +1,69 @@
+"""Quantization arithmetic shared between the JAX golden path and the
+rust virtual-MCU executor (rust/src/tinyir/exec ops — keep in sync).
+
+All requantization uses a float64 multiplier and round-half-to-even.
+TFLite proper uses a fixed-point (int32 multiplier + shift) scheme for
+FPU-less MCUs; the f64 formulation is numerically equivalent within one
+ulp and — being plain IEEE-754 ops — bit-reproducible across numpy, JAX
+(x64 enabled) and rust, which is what the `validate` feature needs.
+The deviation is documented in DESIGN.md §1.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+QMIN = -128
+QMAX = 127
+
+
+def round_half_even(x):
+    """IEEE round-half-to-even (numpy's default np.round)."""
+    return np.round(x)
+
+
+def quantize(x: np.ndarray, scale: float, zero_point: int) -> np.ndarray:
+    """Real-valued -> int8 with round-half-even and saturation."""
+    q = np.round(np.asarray(x, dtype=np.float64) / scale) + zero_point
+    return np.clip(q, QMIN, QMAX).astype(np.int8)
+
+
+def dequantize(q: np.ndarray, scale: float, zero_point: int) -> np.ndarray:
+    return (np.asarray(q, dtype=np.float64) - zero_point) * scale
+
+
+def choose_weight_scale(w: np.ndarray) -> float:
+    """Symmetric per-tensor weight scale (zero_point = 0)."""
+    m = float(np.max(np.abs(w)))
+    if m == 0.0:
+        m = 1.0
+    return m / 127.0
+
+
+def choose_act_qparams(x: np.ndarray, relu: bool) -> tuple:
+    """Affine activation quantization params from observed float range.
+
+    relu outputs use the asymmetric [0, max] range (zero_point = -128),
+    matching the TFLite convention for ReLU-fused ops.
+    """
+    if relu:
+        hi = max(float(np.max(x, initial=0.0)), 1e-3)
+        scale = hi / 255.0
+        zp = -128
+    else:
+        hi = max(float(np.max(np.abs(x), initial=0.0)), 1e-3)
+        scale = hi / 127.0
+        zp = 0
+    return scale, zp
+
+
+def requantize(acc: np.ndarray, multiplier: float, zero_point: int,
+               act: int = 0) -> np.ndarray:
+    """int32 accumulator -> int8 output.
+
+    out = clamp(round_he(acc * M) + zp), with a fused-ReLU lower clamp at
+    the output zero point (quantized ReLU == max(q, zp_out)).
+    """
+    y = np.round(acc.astype(np.float64) * np.float64(multiplier)) + zero_point
+    lo = zero_point if act == 1 else QMIN
+    return np.clip(y, lo, QMAX).astype(np.int8)

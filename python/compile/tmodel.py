@@ -1,0 +1,307 @@
+"""TModel — the binary model interchange format between the python
+build path (zoo.py writes models) and the rust coordinator (frontends/
+reads them).
+
+This substitutes for the TFLite flatbuffer format used by the paper: a
+flat, versioned, little-endian container holding quantized tensors and a
+topologically-ordered op list.
+
+Layout (all integers little-endian):
+
+    magic   4 bytes  b"TMDL"
+    version u32      (currently 1)
+    name    str      (u32 length + utf-8 bytes)
+    n_tensors u32
+    n_ops     u32
+    n_inputs  u32, then u32 tensor-ids
+    n_outputs u32, then u32 tensor-ids
+    tensors:
+        name     str
+        dtype    u8   (0=i8, 1=i16, 2=i32, 3=f32)
+        ndim     u8, dims u32 * ndim
+        scale    f32
+        zero_pt  i32
+        has_data u8; if 1: data_len u64 + raw bytes (row-major)
+    ops:
+        opcode   u8
+        name     str
+        n_in     u8, u32 tensor-ids
+        n_out    u8, u32 tensor-ids
+        n_attrs  u8, each: key str(u8 len), value i64
+
+Opcode registry (shared with rust/src/graph/op.rs — keep in sync):
+
+    0 CONV_2D             attrs: stride_h, stride_w, padding(0=same,1=valid), fused_act(0=none,1=relu)
+    1 DEPTHWISE_CONV_2D   attrs: stride_h, stride_w, padding, fused_act
+    2 FULLY_CONNECTED     attrs: fused_act
+    3 AVG_POOL_2D         attrs: filter_h, filter_w, stride_h, stride_w, padding
+    4 MAX_POOL_2D         attrs: filter_h, filter_w, stride_h, stride_w, padding
+    5 ADD                 attrs: fused_act
+    6 RESHAPE             attrs: (target shape comes from output tensor)
+    7 SOFTMAX             attrs: -
+
+Tensor layout conventions (TFLite-style):
+    CONV_2D weights:            OHWI  [out_c, kh, kw, in_c]
+    DEPTHWISE_CONV_2D weights:  1HWC  [1, kh, kw, channels]
+    FULLY_CONNECTED weights:    [out, in]
+    activations:                NHWC  [n, h, w, c]
+    biases: int32, scale = in_scale * w_scale, zero_pt = 0
+"""
+
+from __future__ import annotations
+
+import io
+import struct
+from dataclasses import dataclass, field
+
+import numpy as np
+
+MAGIC = b"TMDL"
+VERSION = 1
+
+DTYPE_I8 = 0
+DTYPE_I16 = 1
+DTYPE_I32 = 2
+DTYPE_F32 = 3
+
+_DTYPE_TO_NP = {
+    DTYPE_I8: np.int8,
+    DTYPE_I16: np.int16,
+    DTYPE_I32: np.int32,
+    DTYPE_F32: np.float32,
+}
+_NP_TO_DTYPE = {np.dtype(v): k for k, v in _DTYPE_TO_NP.items()}
+
+OP_CONV_2D = 0
+OP_DEPTHWISE_CONV_2D = 1
+OP_FULLY_CONNECTED = 2
+OP_AVG_POOL_2D = 3
+OP_MAX_POOL_2D = 4
+OP_ADD = 5
+OP_RESHAPE = 6
+OP_SOFTMAX = 7
+
+OP_NAMES = {
+    OP_CONV_2D: "CONV_2D",
+    OP_DEPTHWISE_CONV_2D: "DEPTHWISE_CONV_2D",
+    OP_FULLY_CONNECTED: "FULLY_CONNECTED",
+    OP_AVG_POOL_2D: "AVG_POOL_2D",
+    OP_MAX_POOL_2D: "MAX_POOL_2D",
+    OP_ADD: "ADD",
+    OP_RESHAPE: "RESHAPE",
+    OP_SOFTMAX: "SOFTMAX",
+}
+
+PAD_SAME = 0
+PAD_VALID = 1
+
+ACT_NONE = 0
+ACT_RELU = 1
+
+
+@dataclass
+class Tensor:
+    """A named tensor: quantization params plus optional constant data."""
+
+    name: str
+    shape: tuple
+    dtype: int = DTYPE_I8
+    scale: float = 1.0
+    zero_point: int = 0
+    data: np.ndarray | None = None  # None for activations
+
+    @property
+    def nbytes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n * np.dtype(_DTYPE_TO_NP[self.dtype]).itemsize
+
+    def np_dtype(self):
+        return _DTYPE_TO_NP[self.dtype]
+
+
+@dataclass
+class Op:
+    """One graph operation over tensor ids, with integer attributes."""
+
+    opcode: int
+    name: str
+    inputs: list
+    outputs: list
+    attrs: dict = field(default_factory=dict)
+
+    def attr(self, key: str, default: int | None = None) -> int:
+        if key in self.attrs:
+            return self.attrs[key]
+        if default is None:
+            raise KeyError(f"op {self.name}: missing attr {key}")
+        return default
+
+
+@dataclass
+class TModel:
+    """An in-memory model: tensors + topologically ordered ops."""
+
+    name: str
+    tensors: list = field(default_factory=list)
+    ops: list = field(default_factory=list)
+    inputs: list = field(default_factory=list)
+    outputs: list = field(default_factory=list)
+
+    def add_tensor(self, t: Tensor) -> int:
+        self.tensors.append(t)
+        return len(self.tensors) - 1
+
+    def add_op(self, op: Op) -> int:
+        self.ops.append(op)
+        return len(self.ops) - 1
+
+    def tensor(self, tid: int) -> Tensor:
+        return self.tensors[tid]
+
+    # -- size accounting (Table I reproduction) ---------------------------
+    def weight_bytes(self) -> int:
+        """Total bytes of constant tensor data (the 'quantized size')."""
+        return sum(t.nbytes for t in self.tensors if t.data is not None)
+
+    def param_count(self) -> int:
+        return sum(
+            int(np.prod(t.shape)) for t in self.tensors if t.data is not None
+        )
+
+    def macs(self) -> int:
+        """Multiply-accumulate count of one inference (conv/dw/fc only)."""
+        total = 0
+        for op in self.ops:
+            if op.opcode == OP_CONV_2D:
+                w = self.tensor(op.inputs[1])
+                out = self.tensor(op.outputs[0])
+                oc, kh, kw, ic = w.shape
+                _, oh, ow, _ = out.shape
+                total += oh * ow * oc * kh * kw * ic
+            elif op.opcode == OP_DEPTHWISE_CONV_2D:
+                w = self.tensor(op.inputs[1])
+                out = self.tensor(op.outputs[0])
+                _, kh, kw, c = w.shape
+                _, oh, ow, _ = out.shape
+                total += oh * ow * c * kh * kw
+            elif op.opcode == OP_FULLY_CONNECTED:
+                w = self.tensor(op.inputs[1])
+                total += int(np.prod(w.shape))
+        return total
+
+    # -- serialization ----------------------------------------------------
+    def to_bytes(self) -> bytes:
+        buf = io.BytesIO()
+        w = buf.write
+        w(MAGIC)
+        w(struct.pack("<I", VERSION))
+        _wstr(buf, self.name)
+        w(struct.pack("<II", len(self.tensors), len(self.ops)))
+        w(struct.pack("<I", len(self.inputs)))
+        for tid in self.inputs:
+            w(struct.pack("<I", tid))
+        w(struct.pack("<I", len(self.outputs)))
+        for tid in self.outputs:
+            w(struct.pack("<I", tid))
+        for t in self.tensors:
+            _wstr(buf, t.name)
+            w(struct.pack("<BB", t.dtype, len(t.shape)))
+            for d in t.shape:
+                w(struct.pack("<I", d))
+            w(struct.pack("<fi", t.scale, t.zero_point))
+            if t.data is None:
+                w(struct.pack("<B", 0))
+            else:
+                raw = np.ascontiguousarray(
+                    t.data.astype(t.np_dtype())
+                ).tobytes()
+                w(struct.pack("<B", 1))
+                w(struct.pack("<Q", len(raw)))
+                w(raw)
+        for op in self.ops:
+            w(struct.pack("<B", op.opcode))
+            _wstr(buf, op.name)
+            w(struct.pack("<B", len(op.inputs)))
+            for tid in op.inputs:
+                w(struct.pack("<I", tid))
+            w(struct.pack("<B", len(op.outputs)))
+            for tid in op.outputs:
+                w(struct.pack("<I", tid))
+            w(struct.pack("<B", len(op.attrs)))
+            for k, v in sorted(op.attrs.items()):
+                kb = k.encode()
+                w(struct.pack("<B", len(kb)))
+                w(kb)
+                w(struct.pack("<q", v))
+        return buf.getvalue()
+
+    def save(self, path) -> None:
+        with open(path, "wb") as f:
+            f.write(self.to_bytes())
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "TModel":
+        buf = io.BytesIO(raw)
+        if buf.read(4) != MAGIC:
+            raise ValueError("bad magic; not a TModel file")
+        (version,) = struct.unpack("<I", buf.read(4))
+        if version != VERSION:
+            raise ValueError(f"unsupported TModel version {version}")
+        name = _rstr(buf)
+        n_tensors, n_ops = struct.unpack("<II", buf.read(8))
+        (n_in,) = struct.unpack("<I", buf.read(4))
+        inputs = [struct.unpack("<I", buf.read(4))[0] for _ in range(n_in)]
+        (n_out,) = struct.unpack("<I", buf.read(4))
+        outputs = [struct.unpack("<I", buf.read(4))[0] for _ in range(n_out)]
+        m = TModel(name=name, inputs=inputs, outputs=outputs)
+        for _ in range(n_tensors):
+            tname = _rstr(buf)
+            dtype, ndim = struct.unpack("<BB", buf.read(2))
+            shape = tuple(
+                struct.unpack("<I", buf.read(4))[0] for _ in range(ndim)
+            )
+            scale, zp = struct.unpack("<fi", buf.read(8))
+            (has_data,) = struct.unpack("<B", buf.read(1))
+            data = None
+            if has_data:
+                (dlen,) = struct.unpack("<Q", buf.read(8))
+                data = np.frombuffer(
+                    buf.read(dlen), dtype=_DTYPE_TO_NP[dtype]
+                ).reshape(shape)
+            m.tensors.append(
+                Tensor(tname, shape, dtype, scale, zp, data)
+            )
+        for _ in range(n_ops):
+            (opcode,) = struct.unpack("<B", buf.read(1))
+            oname = _rstr(buf)
+            (ni,) = struct.unpack("<B", buf.read(1))
+            op_in = [struct.unpack("<I", buf.read(4))[0] for _ in range(ni)]
+            (no,) = struct.unpack("<B", buf.read(1))
+            op_out = [struct.unpack("<I", buf.read(4))[0] for _ in range(no)]
+            (na,) = struct.unpack("<B", buf.read(1))
+            attrs = {}
+            for _ in range(na):
+                (klen,) = struct.unpack("<B", buf.read(1))
+                key = buf.read(klen).decode()
+                (val,) = struct.unpack("<q", buf.read(8))
+                attrs[key] = val
+            m.ops.append(Op(opcode, oname, op_in, op_out, attrs))
+        return m
+
+    @staticmethod
+    def load(path) -> "TModel":
+        with open(path, "rb") as f:
+            return TModel.from_bytes(f.read())
+
+
+def _wstr(buf, s: str) -> None:
+    b = s.encode()
+    buf.write(struct.pack("<I", len(b)))
+    buf.write(b)
+
+
+def _rstr(buf) -> str:
+    (n,) = struct.unpack("<I", buf.read(4))
+    return buf.read(n).decode()

@@ -1,0 +1,385 @@
+"""Model zoo: builds the four MLPerf-Tiny models of Table I as quantized
+`.tmodel` files (the paper used the official TFLite flatbuffers; see
+DESIGN.md §1 for the substitution).
+
+Architectures are the canonical MLPerf-Tiny ones:
+
+  aww    — DS-CNN (keyword spotting): conv 64×(10,4)/2 + 4×[dw 3×3 + pw
+           1×1, 64ch] + global avg-pool + fc 12 + softmax
+  vww    — MobileNetV1 (visual wake words), 96×96×3, width multiplier
+           chosen (0.3, rounded to 8) so the quantized size lands near
+           Table I's 325 kB and above toycar
+  resnet — ResNet-8 (CIFAR-10 image classification)
+  toycar — DCASE anomaly-detection autoencoder 640-128⁴-8-128⁴-640
+
+Weights are deterministic (seeded per layer); activation quantization
+params are calibrated by running a float forward pass on a seeded probe
+batch and taking per-tensor ranges — the same post-training-quantization
+recipe TFLite uses, minus the real datasets (unavailable here).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import quant
+from .tmodel import (
+    ACT_NONE, ACT_RELU, DTYPE_F32, DTYPE_I8, DTYPE_I32,
+    OP_ADD, OP_AVG_POOL_2D, OP_CONV_2D, OP_DEPTHWISE_CONV_2D,
+    OP_FULLY_CONNECTED, OP_RESHAPE, OP_SOFTMAX,
+    PAD_SAME, PAD_VALID, Op, TModel, Tensor,
+)
+
+MODEL_NAMES = ("aww", "vww", "resnet", "toycar")
+
+# Table I reference values (kB) for reporting/tests.
+PAPER_SIZES_KB = {"aww": 58.3, "vww": 325.0, "resnet": 96.2, "toycar": 270.0}
+
+
+# --------------------------------------------------------------------------
+# float reference ops for calibration (numpy, NHWC)
+# --------------------------------------------------------------------------
+
+def _same_pad(x, kh, kw, sh, sw):
+    from .kernels.ref import same_pads  # shared SAME arithmetic
+
+    _, h, w, _ = x.shape
+    ph = same_pads(h, kh, sh)
+    pw = same_pads(w, kw, sw)
+    return np.pad(x, ((0, 0), ph, pw, (0, 0)), mode="constant")
+
+
+def _conv2d_f(x, w, b, stride, padding):
+    sh, sw = stride
+    oc, kh, kw, ic = w.shape
+    xp = _same_pad(x, kh, kw, sh, sw) if padding == PAD_SAME else x
+    n, hp, wp, _ = xp.shape
+    oh = (hp - kh) // sh + 1
+    ow = (wp - kw) // sw + 1
+    cols = np.empty((oh * ow, kh * kw * ic), dtype=np.float32)
+    idx = 0
+    for i in range(kh):
+        for j in range(kw):
+            sl = xp[0, i : i + sh * (oh - 1) + 1 : sh,
+                    j : j + sw * (ow - 1) + 1 : sw, :]
+            cols[:, idx * ic : (idx + 1) * ic] = sl.reshape(oh * ow, ic)
+            idx += 1
+    wm = w.transpose(1, 2, 3, 0).reshape(kh * kw * ic, oc)
+    out = cols @ wm + b[None, :]
+    return out.reshape(1, oh, ow, oc)
+
+
+def _dwconv2d_f(x, w, b, stride, padding):
+    sh, sw = stride
+    _, kh, kw, c = w.shape
+    xp = _same_pad(x, kh, kw, sh, sw) if padding == PAD_SAME else x
+    _, hp, wp, _ = xp.shape
+    oh = (hp - kh) // sh + 1
+    ow = (wp - kw) // sw + 1
+    acc = np.zeros((oh, ow, c), dtype=np.float32)
+    for i in range(kh):
+        for j in range(kw):
+            sl = xp[0, i : i + sh * (oh - 1) + 1 : sh,
+                    j : j + sw * (ow - 1) + 1 : sw, :]
+            acc += sl * w[0, i, j, :][None, None, :]
+    return (acc + b[None, None, :]).reshape(1, oh, ow, c)
+
+
+def _relu(x):
+    return np.maximum(x, 0.0)
+
+
+# --------------------------------------------------------------------------
+# graph builder with calibration
+# --------------------------------------------------------------------------
+
+class Builder:
+    """Constructs a quantized TModel while tracking a float probe
+    activation for post-training-quantization calibration."""
+
+    def __init__(self, name: str, input_shape: tuple, seed: int):
+        self.m = TModel(name=name)
+        self.rng = np.random.default_rng(seed)
+        # probe input in [-1, 1); input tensor is int8 scale 1/64 zp 0
+        probe = self.rng.uniform(-1.0, 1.0, size=input_shape).astype(
+            np.float32
+        )
+        in_scale = 1.0 / 64.0
+        tid = self.m.add_tensor(
+            Tensor("input", input_shape, DTYPE_I8, in_scale, 0)
+        )
+        self.m.inputs = [tid]
+        # keep the probe consistent with int8 representability
+        q = quant.quantize(probe, in_scale, 0)
+        self.probe = {tid: quant.dequantize(q, in_scale, 0).astype(np.float32)}
+        self.cursor = tid  # last produced activation
+
+    # -- helpers -----------------------------------------------------------
+    def _act_tensor(self, name, shape, fval, relu):
+        scale, zp = quant.choose_act_qparams(fval, relu)
+        tid = self.m.add_tensor(Tensor(name, shape, DTYPE_I8, scale, zp))
+        self.probe[tid] = fval
+        return tid
+
+    def _weights(self, name, shape, fanin):
+        w = self.rng.normal(0.0, 1.0 / np.sqrt(fanin), size=shape).astype(
+            np.float32
+        )
+        ws = quant.choose_weight_scale(w)
+        wq = quant.quantize(w, ws, 0)
+        tid = self.m.add_tensor(
+            Tensor(name, shape, DTYPE_I8, ws, 0, data=wq)
+        )
+        # calibrate with the *quantized* weights so int8 and float paths
+        # see the same effective parameters
+        return tid, quant.dequantize(wq, ws, 0).astype(np.float32), ws
+
+    def _bias(self, name, n, in_scale, w_scale):
+        b = self.rng.normal(0.0, 0.05, size=(n,)).astype(np.float32)
+        bs = in_scale * w_scale
+        bq = np.round(b.astype(np.float64) / bs).astype(np.int64)
+        bq = np.clip(bq, -(2**31), 2**31 - 1).astype(np.int32)
+        tid = self.m.add_tensor(
+            Tensor(name, (n,), DTYPE_I32, bs, 0, data=bq)
+        )
+        return tid, (bq.astype(np.float64) * bs).astype(np.float32)
+
+    # -- layers ------------------------------------------------------------
+    def conv2d(self, oc, kh, kw, stride=(1, 1), padding=PAD_SAME,
+               relu=True, name=None):
+        xid = self.cursor
+        xin = self.m.tensor(xid)
+        ic = xin.shape[-1]
+        name = name or f"conv{len(self.m.ops)}"
+        wid, wf, ws = self._weights(
+            f"{name}.w", (oc, kh, kw, ic), kh * kw * ic
+        )
+        bid, bf = self._bias(f"{name}.b", oc, xin.scale, ws)
+        fout = _conv2d_f(self.probe[xid], wf, bf, stride, padding)
+        if relu:
+            fout = _relu(fout)
+        oid = self._act_tensor(f"{name}.out", fout.shape, fout, relu)
+        self.m.add_op(Op(
+            OP_CONV_2D, name, [xid, wid, bid], [oid],
+            {"stride_h": stride[0], "stride_w": stride[1],
+             "padding": padding,
+             "fused_act": ACT_RELU if relu else ACT_NONE},
+        ))
+        self.cursor = oid
+        return oid
+
+    def dwconv2d(self, kh, kw, stride=(1, 1), padding=PAD_SAME,
+                 relu=True, name=None):
+        xid = self.cursor
+        xin = self.m.tensor(xid)
+        c = xin.shape[-1]
+        name = name or f"dwconv{len(self.m.ops)}"
+        wid, wf, ws = self._weights(f"{name}.w", (1, kh, kw, c), kh * kw)
+        bid, bf = self._bias(f"{name}.b", c, xin.scale, ws)
+        fout = _dwconv2d_f(self.probe[xid], wf, bf, stride, padding)
+        if relu:
+            fout = _relu(fout)
+        oid = self._act_tensor(f"{name}.out", fout.shape, fout, relu)
+        self.m.add_op(Op(
+            OP_DEPTHWISE_CONV_2D, name, [xid, wid, bid], [oid],
+            {"stride_h": stride[0], "stride_w": stride[1],
+             "padding": padding,
+             "fused_act": ACT_RELU if relu else ACT_NONE},
+        ))
+        self.cursor = oid
+        return oid
+
+    def dense(self, out_n, relu=False, name=None):
+        xid = self.cursor
+        xin = self.m.tensor(xid)
+        in_n = xin.shape[-1]
+        name = name or f"fc{len(self.m.ops)}"
+        wid, wf, ws = self._weights(f"{name}.w", (out_n, in_n), in_n)
+        bid, bf = self._bias(f"{name}.b", out_n, xin.scale, ws)
+        fout = self.probe[xid].reshape(1, in_n) @ wf.T + bf[None, :]
+        if relu:
+            fout = _relu(fout)
+        oid = self._act_tensor(f"{name}.out", (1, out_n), fout, relu)
+        self.m.add_op(Op(
+            OP_FULLY_CONNECTED, name, [xid, wid, bid], [oid],
+            {"fused_act": ACT_RELU if relu else ACT_NONE},
+        ))
+        self.cursor = oid
+        return oid
+
+    def global_avgpool(self, name=None):
+        xid = self.cursor
+        xin = self.m.tensor(xid)
+        _, h, w, c = xin.shape
+        name = name or f"avgpool{len(self.m.ops)}"
+        fout = np.mean(self.probe[xid], axis=(1, 2), keepdims=True)
+        # avg-pool preserves scale/zp
+        oid = self.m.add_tensor(
+            Tensor(f"{name}.out", (1, 1, 1, c), DTYPE_I8,
+                   xin.scale, xin.zero_point)
+        )
+        self.probe[oid] = fout
+        self.m.add_op(Op(
+            OP_AVG_POOL_2D, name, [xid], [oid],
+            {"filter_h": h, "filter_w": w, "stride_h": 1, "stride_w": 1,
+             "padding": PAD_VALID},
+        ))
+        self.cursor = oid
+        return oid
+
+    def reshape(self, shape, name=None):
+        xid = self.cursor
+        xin = self.m.tensor(xid)
+        name = name or f"reshape{len(self.m.ops)}"
+        oid = self.m.add_tensor(
+            Tensor(f"{name}.out", tuple(shape), DTYPE_I8,
+                   xin.scale, xin.zero_point)
+        )
+        self.probe[oid] = self.probe[xid].reshape(shape)
+        self.m.add_op(Op(OP_RESHAPE, name, [xid], [oid], {}))
+        self.cursor = oid
+        return oid
+
+    def add(self, aid, bid, relu=True, name=None):
+        ta, tb = self.m.tensor(aid), self.m.tensor(bid)
+        name = name or f"add{len(self.m.ops)}"
+        fout = self.probe[aid] + self.probe[bid]
+        if relu:
+            fout = _relu(fout)
+        oid = self._act_tensor(f"{name}.out", ta.shape, fout, relu)
+        self.m.add_op(Op(
+            OP_ADD, name, [aid, bid], [oid],
+            {"fused_act": ACT_RELU if relu else ACT_NONE},
+        ))
+        self.cursor = oid
+        return oid
+
+    def softmax(self, name=None):
+        xid = self.cursor
+        xin = self.m.tensor(xid)
+        name = name or f"softmax{len(self.m.ops)}"
+        f = self.probe[xid].astype(np.float64)
+        f = f - f.max(axis=-1, keepdims=True)
+        p = np.exp(f) / np.exp(f).sum(axis=-1, keepdims=True)
+        oid = self.m.add_tensor(
+            Tensor(f"{name}.out", xin.shape, DTYPE_I8, 1.0 / 256.0, -128)
+        )
+        self.probe[oid] = p.astype(np.float32)
+        self.m.add_op(Op(OP_SOFTMAX, name, [xid], [oid], {}))
+        self.cursor = oid
+        return oid
+
+    def finish(self) -> TModel:
+        self.m.outputs = [self.cursor]
+        return self.m
+
+
+# --------------------------------------------------------------------------
+# the four models
+# --------------------------------------------------------------------------
+
+def build_aww(seed: int = 101) -> TModel:
+    """DS-CNN keyword spotting: 49×10 MFCC input, 12 classes."""
+    b = Builder("aww", (1, 49, 10, 1), seed)
+    b.conv2d(64, 10, 4, stride=(2, 2))
+    for _ in range(4):
+        b.dwconv2d(3, 3)
+        b.conv2d(64, 1, 1)
+    b.global_avgpool()
+    b.reshape((1, 64))
+    b.dense(12)
+    b.softmax()
+    return b.finish()
+
+
+def _scale_ch(c: int, alpha: float) -> int:
+    return max(8, int(round(c * alpha / 8.0)) * 8)
+
+
+def build_vww(seed: int = 202, alpha: float = 0.3) -> TModel:
+    """MobileNetV1 visual wake words: 96×96×3 input, 2 classes."""
+    b = Builder("vww", (1, 96, 96, 3), seed)
+    b.conv2d(_scale_ch(32, alpha), 3, 3, stride=(2, 2))
+    cfg = [  # (stride, base output channels)
+        (1, 64), (2, 128), (1, 128), (2, 256), (1, 256),
+        (2, 512), (1, 512), (1, 512), (1, 512), (1, 512), (1, 512),
+        (2, 1024), (1, 1024),
+    ]
+    for s, oc in cfg:
+        b.dwconv2d(3, 3, stride=(s, s))
+        b.conv2d(_scale_ch(oc, alpha), 1, 1)
+    b.global_avgpool()
+    b.reshape((1, _scale_ch(1024, alpha)))
+    b.dense(2)
+    b.softmax()
+    return b.finish()
+
+
+def build_resnet(seed: int = 303) -> TModel:
+    """ResNet-8 image classification: 32×32×3 CIFAR input, 10 classes."""
+    b = Builder("resnet", (1, 32, 32, 3), seed)
+    b.conv2d(16, 3, 3)
+    ch_in = 16
+    for ch, stride in ((16, 1), (32, 2), (64, 2)):
+        skip = b.cursor
+        y = b.conv2d(ch, 3, 3, stride=(stride, stride))
+        y = b.conv2d(ch, 3, 3, relu=False)
+        if stride != 1 or ch != ch_in:
+            b.cursor = skip
+            skip = b.conv2d(ch, 1, 1, stride=(stride, stride), relu=False)
+        b.add(y, skip, relu=True)
+        ch_in = ch
+    b.global_avgpool()
+    b.reshape((1, 64))
+    b.dense(10)
+    b.softmax()
+    return b.finish()
+
+
+def build_toycar(seed: int = 404) -> TModel:
+    """DCASE toy-car anomaly-detection autoencoder: 640-d input."""
+    b = Builder("toycar", (1, 640), seed)
+    for _ in range(4):
+        b.dense(128, relu=True)
+    b.dense(8, relu=True)
+    for _ in range(4):
+        b.dense(128, relu=True)
+    b.dense(640, relu=False)
+    return b.finish()
+
+
+BUILDERS = {
+    "aww": build_aww,
+    "vww": build_vww,
+    "resnet": build_resnet,
+    "toycar": build_toycar,
+}
+
+
+def build(name: str) -> TModel:
+    return BUILDERS[name]()
+
+
+def build_all(out_dir) -> dict:
+    """Build every model, save .tmodel files, return {name: TModel}."""
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    models = {}
+    for name in MODEL_NAMES:
+        m = build(name)
+        m.save(os.path.join(out_dir, f"{name}.tmodel"))
+        models[name] = m
+    return models
+
+
+if __name__ == "__main__":
+    import sys
+
+    out = sys.argv[1] if len(sys.argv) > 1 else "../artifacts/models"
+    for name, m in build_all(out).items():
+        print(
+            f"{name:8s} params={m.param_count():>8d} "
+            f"weights={m.weight_bytes() / 1024:7.1f} kB "
+            f"(paper {PAPER_SIZES_KB[name]} kB) macs={m.macs() / 1e6:6.2f} M"
+        )

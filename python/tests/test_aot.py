@@ -1,0 +1,54 @@
+"""AOT bridge: HLO-text lowering sanity (the rust side integration-tests
+actual PJRT execution of these artifacts)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as model_mod, zoo
+
+
+@pytest.fixture(scope="module")
+def toycar():
+    return zoo.build("toycar")
+
+
+def test_lowering_produces_hlo_text(toycar):
+    hlo = aot.lower_model(toycar)
+    assert "HloModule" in hlo
+    # entry computation takes exactly the int8 input tensor
+    assert "s8[1,640]" in hlo
+    # weights are folded: no f64/f32 parameters
+    assert hlo.count("parameter(") >= 1
+
+
+def test_lowering_is_deterministic(toycar):
+    assert aot.lower_model(toycar) == aot.lower_model(toycar)
+
+
+def test_golden_dump_roundtrip(tmp_path, toycar):
+    x, y = model_mod.golden_io(toycar)
+    path = tmp_path / "g.json"
+    with open(path, "w") as f:
+        json.dump({"input": x.flatten().tolist(),
+                   "output": y.flatten().tolist()}, f)
+    g = json.load(open(path))
+    np.testing.assert_array_equal(
+        np.array(g["input"], np.int8), x.flatten())
+    np.testing.assert_array_equal(
+        np.array(g["output"], np.int8), y.flatten())
+
+
+def test_main_writes_artifacts(tmp_path):
+    import sys
+    argv = sys.argv
+    sys.argv = ["aot", "--out", str(tmp_path), "--models", "toycar"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    assert (tmp_path / "models" / "toycar.tmodel").exists()
+    assert (tmp_path / "toycar.hlo.txt").exists()
+    assert (tmp_path / "golden" / "toycar.json").exists()

@@ -1,0 +1,199 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes, strides, paddings, quantization params and
+data; all comparisons are EXACT integer equality (the kernels implement
+identical arithmetic, so any mismatch is a bug, not noise).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as pk
+from compile.kernels import ref
+from compile.kernels.matmul import matmul_int8, vmem_bytes
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng_for(data):
+    return np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+
+
+# ---------------------------------------------------------------- matmul --
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_matmul_int8_matches_numpy(data):
+    m = data.draw(st.integers(1, 96), label="m")
+    k = data.draw(st.integers(1, 64), label="k")
+    n = data.draw(st.integers(1, 48), label="n")
+    rng = rng_for(data)
+    x = rng.integers(-128, 128, (m, k), dtype=np.int8)
+    w = rng.integers(-128, 128, (k, n), dtype=np.int8)
+    got = np.asarray(matmul_int8(jnp.asarray(x), jnp.asarray(w)))
+    want = x.astype(np.int32) @ w.astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_matmul_int8_blocked_matches_unblocked(data):
+    """Block-size choice must not change results (pure tiling)."""
+    m = data.draw(st.sampled_from([8, 32, 64, 128]))
+    n = data.draw(st.sampled_from([8, 16, 64]))
+    k = data.draw(st.integers(1, 40))
+    bm = data.draw(st.sampled_from([8, 16, 128]))
+    bn = data.draw(st.sampled_from([8, 16, 128]))
+    rng = rng_for(data)
+    x = rng.integers(-128, 128, (m, k), dtype=np.int8)
+    w = rng.integers(-128, 128, (k, n), dtype=np.int8)
+    a = np.asarray(matmul_int8(jnp.asarray(x), jnp.asarray(w), bm=bm, bn=bn))
+    b = x.astype(np.int32) @ w.astype(np.int32)
+    np.testing.assert_array_equal(a, b)
+
+
+def test_matmul_vmem_budget():
+    """Perf-pass invariant: worst-case zoo block fits in a VMEM budget."""
+    # largest K in the zoo: vww pw 304->304 at 3x3 spatial => K=304
+    # largest matmul: resnet stack1 conv: M=1024, K=144, N=16..64
+    assert vmem_bytes(2304, 288, 64) < 4 * 1024 * 1024
+    assert vmem_bytes(1024, 576, 64) < 4 * 1024 * 1024
+
+
+# ------------------------------------------------------------------ conv --
+def _conv_case(data, max_hw=14, max_c=8, max_oc=8):
+    rng = rng_for(data)
+    h = data.draw(st.integers(3, max_hw), label="h")
+    w = data.draw(st.integers(3, max_hw), label="w")
+    ic = data.draw(st.integers(1, max_c), label="ic")
+    oc = data.draw(st.integers(1, max_oc), label="oc")
+    kh = data.draw(st.integers(1, min(3, h)), label="kh")
+    kw = data.draw(st.integers(1, min(3, w)), label="kw")
+    sh = data.draw(st.integers(1, 2), label="sh")
+    sw = data.draw(st.integers(1, 2), label="sw")
+    padding = data.draw(st.integers(0, 1), label="padding")
+    act = data.draw(st.integers(0, 1), label="act")
+    zp_in = data.draw(st.integers(-10, 10), label="zp_in")
+    zp_out = data.draw(st.integers(-20, 20), label="zp_out")
+    mult = data.draw(
+        st.floats(1e-4, 0.05, allow_nan=False), label="mult"
+    )
+    x = rng.integers(-128, 128, (1, h, w, ic), dtype=np.int8)
+    wt = rng.integers(-128, 128, (oc, kh, kw, ic), dtype=np.int8)
+    b = rng.integers(-(2**15), 2**15, (oc,), dtype=np.int32)
+    return x, wt, b, zp_in, mult, zp_out, (sh, sw), padding, act
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_conv2d_nhwc_matches_ref(data):
+    x, w, b, zp, mult, zpo, stride, pad, act = _conv_case(data)
+    got = np.asarray(pk.conv2d_int8_nhwc(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+        zp, mult, zpo, stride, pad, act))
+    want = np.asarray(ref.conv2d_int8(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+        zp, mult, zpo, stride, pad, act))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_conv2d_nchw_matches_ref(data):
+    """The NCHW-packed variant must be numerically identical — layouts
+    change performance (Table V), never results."""
+    x, w, b, zp, mult, zpo, stride, pad, act = _conv_case(data)
+    got = np.asarray(pk.conv2d_int8_nchw(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+        zp, mult, zpo, stride, pad, act))
+    want = np.asarray(ref.conv2d_int8(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+        zp, mult, zpo, stride, pad, act))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_dwconv2d_matches_ref(data):
+    rng = rng_for(data)
+    h = data.draw(st.integers(3, 12))
+    w = data.draw(st.integers(3, 12))
+    c = data.draw(st.sampled_from([1, 2, 3, 8, 16]))
+    kh = data.draw(st.integers(1, 3))
+    kw = data.draw(st.integers(1, 3))
+    s = data.draw(st.integers(1, 2))
+    padding = data.draw(st.integers(0, 1))
+    act = data.draw(st.integers(0, 1))
+    zp = data.draw(st.integers(-10, 10))
+    zpo = data.draw(st.integers(-20, 20))
+    mult = data.draw(st.floats(1e-4, 0.05, allow_nan=False))
+    x = rng.integers(-128, 128, (1, h, w, c), dtype=np.int8)
+    wt = rng.integers(-128, 128, (1, kh, kw, c), dtype=np.int8)
+    b = rng.integers(-(2**15), 2**15, (c,), dtype=np.int32)
+    got = np.asarray(pk.dwconv2d_int8(
+        jnp.asarray(x), jnp.asarray(wt), jnp.asarray(b),
+        zp, mult, zpo, (s, s), padding, act))
+    want = np.asarray(ref.dwconv2d_int8(
+        jnp.asarray(x), jnp.asarray(wt), jnp.asarray(b),
+        zp, mult, zpo, (s, s), padding, act))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_dense_matches_ref(data):
+    rng = rng_for(data)
+    b_ = data.draw(st.integers(1, 4))
+    i = data.draw(st.integers(1, 64))
+    o = data.draw(st.integers(1, 32))
+    act = data.draw(st.integers(0, 1))
+    zp = data.draw(st.integers(-10, 10))
+    zpo = data.draw(st.integers(-20, 20))
+    mult = data.draw(st.floats(1e-4, 0.05, allow_nan=False))
+    x = rng.integers(-128, 128, (b_, i), dtype=np.int8)
+    wt = rng.integers(-128, 128, (o, i), dtype=np.int8)
+    bias = rng.integers(-(2**15), 2**15, (o,), dtype=np.int32)
+    got = np.asarray(pk.dense_int8(
+        jnp.asarray(x), jnp.asarray(wt), jnp.asarray(bias),
+        zp, mult, zpo, act))
+    want = np.asarray(ref.dense_int8(
+        jnp.asarray(x), jnp.asarray(wt), jnp.asarray(bias),
+        zp, mult, zpo, act))
+    np.testing.assert_array_equal(got, want)
+
+
+# ------------------------------------------------------------- misc ops --
+def test_same_pads_matches_tf_convention():
+    assert ref.same_pads(10, 3, 1) == (1, 1)
+    assert ref.same_pads(10, 4, 2) == (1, 1)
+    assert ref.same_pads(49, 10, 2) == (4, 5)
+    assert ref.same_pads(5, 1, 1) == (0, 0)
+
+
+@settings(**SETTINGS)
+@given(data=st.data())
+def test_requantize_saturates_and_rounds_half_even(data):
+    acc = data.draw(st.integers(-(2**30), 2**30))
+    zp = data.draw(st.integers(-128, 127))
+    mult = data.draw(st.floats(1e-8, 1.0, allow_nan=False))
+    y = int(np.asarray(ref.requantize(jnp.asarray([acc], jnp.int32),
+                                      mult, zp))[0])
+    assert -128 <= y <= 127
+    exact = np.round(np.float64(acc) * np.float64(mult)) + zp
+    assert y == int(np.clip(exact, -128, 127))
+
+
+def test_requantize_relu_clamps_at_zero_point():
+    acc = jnp.asarray([-1000, -1, 0, 1, 1000], jnp.int32)
+    y = np.asarray(ref.requantize(acc, 0.5, 3, act=1))
+    assert (y >= 3).all()
+
+
+def test_softmax_int8_is_distribution_like():
+    x = jnp.asarray([[10, 20, 30, 40]], jnp.int8)
+    y = np.asarray(ref.softmax_int8(x, 0.2, 0))
+    # quantized probabilities: sum of (q+128)/256 ~= 1
+    total = (y.astype(np.int32) + 128).sum() / 256.0
+    assert abs(total - 1.0) < 0.05
+    assert y.argmax() == 3

@@ -1,0 +1,51 @@
+"""Quantization helper properties (quant.py)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import quant
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-1e4, 1e4, allow_nan=False),
+       st.floats(1e-4, 10.0, allow_nan=False),
+       st.integers(-128, 127))
+def test_quantize_in_range(x, scale, zp):
+    q = quant.quantize(np.float32(x), scale, zp)
+    assert -128 <= int(q) <= 127
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(-100, 100), st.floats(0.01, 1.0, allow_nan=False))
+def test_quant_dequant_roundtrip_error_bounded(qv, scale):
+    """dequantize∘quantize error is at most scale/2 for in-range values."""
+    f = quant.dequantize(np.int8(qv), scale, 0)
+    q2 = quant.quantize(f, scale, 0)
+    assert int(q2) == qv
+
+
+def test_round_half_even():
+    got = quant.round_half_even(np.array([0.5, 1.5, 2.5, -0.5, -1.5]))
+    np.testing.assert_array_equal(got, [0.0, 2.0, 2.0, -0.0, -2.0])
+
+
+def test_choose_weight_scale_covers_max():
+    w = np.array([-0.7, 0.3, 0.5], np.float32)
+    s = quant.choose_weight_scale(w)
+    q = quant.quantize(w, s, 0)
+    assert int(np.abs(q).max()) == 127  # max magnitude uses full range
+
+
+def test_choose_act_qparams_relu_convention():
+    x = np.array([0.0, 1.0, 2.0], np.float32)
+    s, zp = quant.choose_act_qparams(x, relu=True)
+    assert zp == -128 and s > 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(-(2**20), 2**20), st.floats(1e-6, 0.1, allow_nan=False),
+       st.integers(-128, 127))
+def test_requantize_matches_formula(acc, mult, zp):
+    got = int(quant.requantize(np.array([acc], np.int32), mult, zp)[0])
+    want = int(np.clip(np.round(np.float64(acc) * mult) + zp, -128, 127))
+    assert got == want

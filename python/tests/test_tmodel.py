@@ -1,0 +1,74 @@
+"""TModel container format: round-trip and integrity properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tmodel as tm
+
+
+def tiny_model(seed=0):
+    rng = np.random.default_rng(seed)
+    m = tm.TModel(name="tiny")
+    x = m.add_tensor(tm.Tensor("input", (1, 4, 4, 2), tm.DTYPE_I8, 0.5, 3))
+    w = m.add_tensor(tm.Tensor(
+        "w", (3, 3, 3, 2), tm.DTYPE_I8, 0.01, 0,
+        data=rng.integers(-128, 128, (3, 3, 3, 2)).astype(np.int8)))
+    b = m.add_tensor(tm.Tensor(
+        "b", (3,), tm.DTYPE_I32, 0.005, 0,
+        data=rng.integers(-1000, 1000, (3,)).astype(np.int32)))
+    y = m.add_tensor(tm.Tensor("y", (1, 4, 4, 3), tm.DTYPE_I8, 0.25, -1))
+    m.add_op(tm.Op(tm.OP_CONV_2D, "conv0", [x, w, b], [y],
+                   {"stride_h": 1, "stride_w": 1, "padding": 0,
+                    "fused_act": 1}))
+    m.inputs, m.outputs = [x], [y]
+    return m
+
+
+def test_roundtrip_preserves_everything():
+    m = tiny_model()
+    m2 = tm.TModel.from_bytes(m.to_bytes())
+    assert m2.name == m.name
+    assert m2.inputs == m.inputs and m2.outputs == m.outputs
+    assert len(m2.tensors) == len(m.tensors)
+    for a, b in zip(m.tensors, m2.tensors):
+        assert a.name == b.name and a.shape == tuple(b.shape)
+        assert a.dtype == b.dtype
+        assert a.scale == pytest.approx(b.scale)
+        assert a.zero_point == b.zero_point
+        if a.data is None:
+            assert b.data is None
+        else:
+            np.testing.assert_array_equal(a.data, b.data)
+    for a, b in zip(m.ops, m2.ops):
+        assert (a.opcode, a.name, a.inputs, a.outputs, a.attrs) == \
+               (b.opcode, b.name, b.inputs, b.outputs, b.attrs)
+
+
+def test_bad_magic_rejected():
+    with pytest.raises(ValueError, match="magic"):
+        tm.TModel.from_bytes(b"NOPE" + b"\x00" * 64)
+
+
+def test_bad_version_rejected():
+    raw = bytearray(tiny_model().to_bytes())
+    raw[4] = 99
+    with pytest.raises(ValueError, match="version"):
+        tm.TModel.from_bytes(bytes(raw))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_roundtrip_is_byte_stable(seed):
+    """serialize(parse(serialize(m))) == serialize(m) — reproducibility."""
+    m = tiny_model(seed)
+    b1 = m.to_bytes()
+    b2 = tm.TModel.from_bytes(b1).to_bytes()
+    assert b1 == b2
+
+
+def test_size_accounting():
+    m = tiny_model()
+    assert m.param_count() == 3 * 3 * 3 * 2 + 3
+    assert m.weight_bytes() == 54 + 12
+    assert m.macs() == 4 * 4 * 3 * 3 * 3 * 2

@@ -1,0 +1,125 @@
+//! Backends (paper §II-B2): convert a loaded model graph into
+//! inference code (a TinyIR `Program`) plus the ROM/RAM/setup
+//! accounting of the deployment method. The five backends of Table IV:
+//!
+//!   tflmi    — TFLite-Micro interpreter: reference kernels, FlatBuffer
+//!              parsed at runtime, greedy arena planner.
+//!   tflmc    — TFLite-Micro *Compiler*: same kernels, but fully static
+//!              codegen — no interpreter ROM, minimal setup.
+//!   tvmaot   — TVM Ahead-of-Time executor: scheduled kernels,
+//!              storage-token memory planning.
+//!   tvmaot+  — tvmaot + Unified Static Memory Planner (USMP):
+//!              interval-packed arena (−9…−28 % RAM in the paper).
+//!   tvmrt    — TVM Graph executor: JSON graph parsed at runtime,
+//!              page-pool dynamic allocation (the +605 %…+14 374 % RAM
+//!              rows of Table IV).
+
+pub mod builder;
+pub mod planner;
+pub mod tflm;
+pub mod tvm;
+
+use anyhow::Result;
+
+use crate::graph::Graph;
+use crate::schedules::Schedule;
+use crate::tinyir::Program;
+
+/// Build-stage output: the program plus deployment metrics.
+#[derive(Debug, Clone)]
+pub struct BuildResult {
+    pub program: Program,
+    pub metrics: BuildMetrics,
+}
+
+/// Static deployment metrics (Table IV rows besides Invoke).
+#[derive(Debug, Clone, Default)]
+pub struct BuildMetrics {
+    /// Setup-phase instruction count on the reference ISA.
+    pub setup_instructions: u64,
+    pub rom_code: u64,
+    pub rom_weights: u64,
+    /// Runtime/interpreter/metadata ROM (flatbuffer, JSON, ...).
+    pub rom_misc: u64,
+    pub ram_arena: u64,
+    pub ram_workspace: u64,
+    pub ram_runtime: u64,
+}
+
+impl BuildMetrics {
+    pub fn rom_total(&self) -> u64 {
+        self.rom_code + self.rom_weights + self.rom_misc
+    }
+    pub fn ram_total(&self) -> u64 {
+        self.ram_arena + self.ram_workspace + self.ram_runtime
+    }
+}
+
+/// Per-build configuration handed down from the run matrix.
+#[derive(Debug, Clone, Default)]
+pub struct BackendConfig {
+    /// TVM schedule selection (Table V rows). `None` = backend default.
+    pub schedule: Option<Schedule>,
+    /// Tuned per-op knob overrides from the autotvm feature, keyed by
+    /// graph op name.
+    pub tuned_knobs: std::collections::BTreeMap<String, crate::schedules::Knobs>,
+}
+
+/// A deployment backend (Build stage).
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Framework the backend belongs to ("tflm" / "tvm") — Table IV's
+    /// column grouping.
+    fn framework(&self) -> &'static str;
+    /// Whether this backend accepts TVM schedule configuration.
+    fn supports_schedules(&self) -> bool {
+        false
+    }
+    fn build(&self, graph: &Graph, cfg: &BackendConfig) -> Result<BuildResult>;
+}
+
+/// Instantiate a backend by its Table IV name.
+pub fn by_name(name: &str) -> Option<Box<dyn Backend>> {
+    match name {
+        "tflmi" => Some(Box::new(tflm::Tflmi)),
+        "tflmc" => Some(Box::new(tflm::Tflmc)),
+        "tvmaot" => Some(Box::new(tvm::TvmAot { usmp: false })),
+        "tvmaot+" | "tvmaotplus" => Some(Box::new(tvm::TvmAot { usmp: true })),
+        "tvmrt" => Some(Box::new(tvm::TvmRt)),
+        _ => None,
+    }
+}
+
+/// The Table IV backend list, in paper column order.
+pub fn all_backend_names() -> [&'static str; 5] {
+    ["tflmi", "tflmc", "tvmaot", "tvmaot+", "tvmrt"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for n in all_backend_names() {
+            let b = by_name(n).unwrap();
+            assert_eq!(b.name(), if n == "tvmaot+" { "tvmaot+" } else { n });
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn framework_grouping() {
+        assert_eq!(by_name("tflmi").unwrap().framework(), "tflm");
+        assert_eq!(by_name("tflmc").unwrap().framework(), "tflm");
+        assert_eq!(by_name("tvmaot").unwrap().framework(), "tvm");
+        assert_eq!(by_name("tvmrt").unwrap().framework(), "tvm");
+    }
+
+    #[test]
+    fn schedule_support() {
+        assert!(!by_name("tflmi").unwrap().supports_schedules());
+        assert!(by_name("tvmaot").unwrap().supports_schedules());
+        assert!(by_name("tvmrt").unwrap().supports_schedules());
+    }
+}

@@ -1,0 +1,256 @@
+//! Memory planners — the RAM story of Table IV.
+//!
+//! * `greedy_arena` — TFLite-Micro's GreedyMemoryPlanner: place
+//!   buffers in decreasing size order at the lowest offset that does
+//!   not collide with an already-placed, lifetime-overlapping buffer.
+//! * `storage_tokens` — TVM's classic GraphPlanMemory: freed storage
+//!   "tokens" are reused only by tensors that fit an existing token
+//!   (tokens are never split or merged) — decent but conservative.
+//! * `usmp_interval` — TVM's Unified Static Memory Planner: full
+//!   interval packing (first-fit over live ranges), the tvmaot+
+//!   improvement (−9…−28 % RAM in the paper).
+//! * `no_reuse` — every buffer gets its own slot (tvmrt's behaviour:
+//!   the graph executor allocates all storage up front).
+//!
+//! All planners fill `BufferDecl::offset` and `Program::arena_size`,
+//! and every plan must pass `Program::check_plan()` (no live-range
+//! overlap) — property-tested in tests/planner_props.rs.
+
+use crate::tinyir::Program;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannerKind {
+    GreedyArena,
+    StorageTokens,
+    UsmpInterval,
+    NoReuse,
+}
+
+impl PlannerKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PlannerKind::GreedyArena => "greedy_arena",
+            PlannerKind::StorageTokens => "storage_tokens",
+            PlannerKind::UsmpInterval => "usmp_interval",
+            PlannerKind::NoReuse => "no_reuse",
+        }
+    }
+}
+
+/// Plan a program in place; returns the arena size.
+pub fn plan(p: &mut Program, kind: PlannerKind) -> usize {
+    match kind {
+        PlannerKind::GreedyArena => greedy_arena(p),
+        PlannerKind::StorageTokens => storage_tokens(p),
+        PlannerKind::UsmpInterval => usmp_interval(p),
+        PlannerKind::NoReuse => no_reuse(p),
+    }
+    debug_assert!(p.check_plan().is_ok(), "planner produced colliding plan");
+    p.arena_size
+}
+
+fn lifetimes_overlap(p: &Program, a: usize, b: usize) -> bool {
+    let (ba, bb) = (&p.buffers[a], &p.buffers[b]);
+    ba.first_use <= bb.last_use && bb.first_use <= ba.last_use
+}
+
+/// TFLM GreedyMemoryPlanner (decreasing size, first gap that fits).
+fn greedy_arena(p: &mut Program) {
+    let mut order: Vec<usize> = (0..p.buffers.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(p.buffers[i].size));
+    let mut placed: Vec<usize> = Vec::new();
+    let mut arena = 0usize;
+    for &i in &order {
+        // collect intervals of lifetime-overlapping, already-placed bufs
+        let mut busy: Vec<(usize, usize)> = placed
+            .iter()
+            .filter(|&&j| lifetimes_overlap(p, i, j))
+            .map(|&j| {
+                let o = p.buffers[j].offset.unwrap();
+                (o, o + p.buffers[j].size)
+            })
+            .collect();
+        busy.sort_unstable();
+        let size = p.buffers[i].size;
+        let mut cand = 0usize;
+        for (s, e) in busy {
+            if cand + size <= s {
+                break;
+            }
+            cand = cand.max(e);
+        }
+        p.buffers[i].offset = Some(cand);
+        arena = arena.max(cand + size);
+        placed.push(i);
+    }
+    p.arena_size = arena;
+}
+
+/// TVM GraphPlanMemory-style storage tokens: walk buffers in first-use
+/// order; a token freed at last_use can be reused by any later tensor
+/// with size <= token size; tokens never split.
+fn storage_tokens(p: &mut Program) {
+    #[derive(Clone)]
+    struct Token {
+        offset: usize,
+        size: usize,
+        free_after: usize, // call index after which the token is free
+    }
+    let mut order: Vec<usize> = (0..p.buffers.len()).collect();
+    order.sort_by_key(|&i| (p.buffers[i].first_use, std::cmp::Reverse(p.buffers[i].size)));
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut arena = 0usize;
+    for &i in &order {
+        let b = &p.buffers[i];
+        // find the *smallest* free token that fits (best-fit, like TVM)
+        let mut best: Option<usize> = None;
+        for (ti, t) in tokens.iter().enumerate() {
+            if t.free_after < b.first_use && t.size >= b.size {
+                if best.is_none_or(|bi| tokens[bi].size > t.size) {
+                    best = Some(ti);
+                }
+            }
+        }
+        let off = match best {
+            Some(ti) => {
+                tokens[ti].free_after = b.last_use;
+                tokens[ti].offset
+            }
+            None => {
+                let off = arena;
+                arena += b.size;
+                tokens.push(Token { offset: off, size: b.size, free_after: b.last_use });
+                off
+            }
+        };
+        p.buffers[i].offset = Some(off);
+    }
+    p.arena_size = arena;
+}
+
+/// USMP: first-fit interval packing over exact live ranges — strictly
+/// better than (or equal to) storage tokens.
+fn usmp_interval(p: &mut Program) {
+    // identical placement rule to greedy_arena but ordered by
+    // (size desc) over *exact* byte intervals — the difference from
+    // storage_tokens is that space is shared at byte granularity.
+    greedy_arena(p);
+}
+
+/// tvmrt: all buffers statically distinct, no reuse.
+fn no_reuse(p: &mut Program) {
+    let mut off = 0usize;
+    for b in &mut p.buffers {
+        b.offset = Some(off);
+        off += b.size;
+    }
+    p.arena_size = off;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+    use crate::tinyir::*;
+
+    /// Build a program with a linear chain of N copy calls (classic
+    /// ping-pong reuse pattern).
+    fn chain(sizes: &[usize]) -> Program {
+        let buffers: Vec<BufferDecl> = sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| BufferDecl {
+                name: format!("b{i}"),
+                size: s,
+                dtype: DType::I8,
+                offset: None,
+                first_use: 0,
+                last_use: 0,
+            })
+            .collect();
+        let calls: Vec<KernelCall> = (1..sizes.len())
+            .map(|i| KernelCall {
+                kind: KernelKind::Copy { elems: sizes[i] },
+                inputs: vec![Operand::Buf(i - 1)],
+                consts: vec![],
+                output: i,
+                cost: crate::kernels::copy_cost(sizes[i] as u64),
+                origin: format!("c{i}"),
+            })
+            .collect();
+        let n = sizes.len();
+        let mut p = Program {
+            name: "chain".into(),
+            buffers,
+            consts: vec![],
+            calls,
+            input: 0,
+            output: n - 1,
+            arena_size: 0,
+            workspace_size: 0,
+        };
+        p.recompute_lifetimes();
+        p
+    }
+
+    #[test]
+    fn greedy_reuses_pingpong() {
+        let mut p = chain(&[100, 100, 100, 100, 100]);
+        let arena = plan(&mut p, PlannerKind::GreedyArena);
+        p.check_plan().unwrap();
+        // adjacent buffers overlap in time, but b0 and b2 can alias:
+        // optimal = 2 slots of 100... wait: call i uses b[i-1] and
+        // b[i]; b1 is live calls 0..1, b3 live 2..3 — 2-3 slots
+        assert!(arena <= 300, "arena {arena}");
+        assert!(arena >= 200);
+    }
+
+    #[test]
+    fn no_reuse_is_sum_of_sizes() {
+        let mut p = chain(&[10, 20, 30]);
+        assert_eq!(plan(&mut p, PlannerKind::NoReuse), 60);
+        p.check_plan().unwrap();
+    }
+
+    #[test]
+    fn usmp_never_worse_than_tokens() {
+        for sizes in [
+            vec![128usize, 64, 256, 64, 32],
+            vec![1000, 10, 1000, 10, 1000],
+            vec![5, 50, 500, 50, 5, 500],
+        ] {
+            let mut a = chain(&sizes);
+            let mut b = chain(&sizes);
+            let usmp = plan(&mut a, PlannerKind::UsmpInterval);
+            let tok = plan(&mut b, PlannerKind::StorageTokens);
+            assert!(usmp <= tok, "usmp {usmp} > tokens {tok} for {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn tokens_reuse_requires_fit() {
+        // big -> small -> big: token of 1000 reused by 10? yes (fits),
+        // but second 1000 can reuse the first's token after it frees
+        let mut p = chain(&[1000, 10, 1000]);
+        let arena = plan(&mut p, PlannerKind::StorageTokens);
+        p.check_plan().unwrap();
+        // b0 live [0,1), b2 live [1,2): b0's token frees after call 0?
+        // last_use(b0)=0 < first_use(b2)=1 -> reused
+        assert!(arena <= 1010 + 1000, "{arena}");
+    }
+
+    #[test]
+    fn all_planners_produce_valid_plans() {
+        for kind in [
+            PlannerKind::GreedyArena,
+            PlannerKind::StorageTokens,
+            PlannerKind::UsmpInterval,
+            PlannerKind::NoReuse,
+        ] {
+            let mut p = chain(&[64, 128, 32, 256, 16, 8]);
+            plan(&mut p, kind);
+            p.check_plan()
+                .unwrap_or_else(|e| panic!("{}: {e}", kind.name()));
+        }
+    }
+}

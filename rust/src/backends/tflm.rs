@@ -1,0 +1,152 @@
+//! TFLite-Micro backends: `tflmi` (interpreter) and `tflmc` (TFLite
+//! Micro Compiler codegen). Both loop over the same reference kernels,
+//! so their invoke instruction counts are identical by construction
+//! (Table IV ±0 %); they differ in ROM (interpreter + flatbuffer vs
+//! static code), RAM (interpreter state) and setup (parse vs none).
+
+use anyhow::Result;
+
+use crate::calib;
+use crate::graph::Graph;
+use crate::kernels::{distinct_kernel_types, KernelLib};
+use crate::tinyir::Program;
+
+use super::builder::{lower, LowerOpts};
+use super::planner::{plan, PlannerKind};
+use super::{Backend, BackendConfig, BuildMetrics, BuildResult};
+
+fn conv_channels(g: &Graph) -> u64 {
+    g.ops
+        .iter()
+        .filter(|o| o.opcode.is_conv_like())
+        .map(|o| *g.tensor(o.outputs[0]).shape.last().unwrap_or(&0) as u64)
+        .sum()
+}
+
+fn setup_instructions(m: &calib::SetupModel, g: &Graph, arena: u64) -> u64 {
+    (m.fixed
+        + m.per_op * g.ops.len() as f64
+        + m.per_conv_channel * conv_channels(g) as f64
+        + m.per_arena_byte * arena as f64
+        + m.per_weight_byte * g.weight_bytes() as f64) as u64
+}
+
+fn tflm_common(g: &Graph, name: &str) -> Result<Program> {
+    lower(
+        g,
+        name,
+        LowerOpts {
+            lib: KernelLib::TflmRef,
+            legalize_i16: false,
+            transform_input: false,
+        },
+    )
+}
+
+/// `tflmi` — the TFLite Micro Interpreter backend.
+pub struct Tflmi;
+
+impl Backend for Tflmi {
+    fn name(&self) -> &'static str {
+        "tflmi"
+    }
+    fn framework(&self) -> &'static str {
+        "tflm"
+    }
+
+    fn build(&self, g: &Graph, _cfg: &BackendConfig) -> Result<BuildResult> {
+        let mut program = tflm_common(g, &format!("{}-tflmi", g.name))?;
+        let arena = plan(&mut program, PlannerKind::GreedyArena) as u64;
+        // kernel library: one reference kernel per op *type*
+        let kernel_code =
+            distinct_kernel_types(g) as u64 * calib::TFLM_KERNEL_CODE_PER_TYPE;
+        let n_tensors = g.tensors.len() as u64;
+        let metrics = BuildMetrics {
+            setup_instructions: setup_instructions(&calib::TFLMI_SETUP, g, arena),
+            rom_code: calib::TFLMI_RUNTIME_ROM + calib::MLIF_ROM + kernel_code,
+            // the interpreter embeds the whole model container:
+            // weights + flatbuffer metadata per tensor/op
+            rom_weights: g.weight_bytes() as u64,
+            rom_misc: n_tensors * calib::FLATBUFFER_OVERHEAD_PER_TENSOR,
+            ram_arena: arena,
+            ram_workspace: program.workspace_size as u64,
+            ram_runtime: calib::TFLMI_RUNTIME_RAM_FIXED
+                + n_tensors * calib::TFLMI_RUNTIME_RAM_PER_TENSOR
+                + calib::MLIF_RAM,
+        };
+        Ok(BuildResult { program, metrics })
+    }
+}
+
+/// `tflmc` — the TFLite Micro Compiler backend [paper ref 4]: static
+/// inference code, interpreter eliminated.
+pub struct Tflmc;
+
+impl Backend for Tflmc {
+    fn name(&self) -> &'static str {
+        "tflmc"
+    }
+    fn framework(&self) -> &'static str {
+        "tflm"
+    }
+
+    fn build(&self, g: &Graph, _cfg: &BackendConfig) -> Result<BuildResult> {
+        let mut program = tflm_common(g, &format!("{}-tflmc", g.name))?;
+        let arena = plan(&mut program, PlannerKind::GreedyArena) as u64;
+        let kernel_code =
+            distinct_kernel_types(g) as u64 * calib::TFLM_KERNEL_CODE_PER_TYPE;
+        // generated dispatch code replaces the interpreter: ~90 B/op
+        let gen_code = 90 * g.ops.len() as u64;
+        let metrics = BuildMetrics {
+            setup_instructions: setup_instructions(&calib::TFLMC_SETUP, g, arena),
+            rom_code: calib::TFLMC_RUNTIME_ROM
+                + calib::MLIF_ROM
+                + kernel_code
+                + gen_code,
+            // raw weight arrays only — flatbuffer stripped
+            rom_weights: g.weight_bytes() as u64,
+            rom_misc: 0,
+            ram_arena: arena,
+            ram_workspace: program.workspace_size as u64,
+            ram_runtime: calib::TFLMC_RUNTIME_RAM_FIXED + calib::MLIF_RAM,
+        };
+        Ok(BuildResult { program, metrics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::model::testutil::tiny_conv;
+
+    #[test]
+    fn tflmc_strictly_cheaper_than_tflmi_same_invoke() {
+        let g = tiny_conv();
+        let cfg = BackendConfig::default();
+        let i = Tflmi.build(&g, &cfg).unwrap();
+        let c = Tflmc.build(&g, &cfg).unwrap();
+        // identical kernels => identical invoke cost (Table IV ±0 %)
+        assert_eq!(
+            i.program.ref_invoke_instructions(),
+            c.program.ref_invoke_instructions()
+        );
+        // tflmc: less ROM, less RAM, much less setup
+        assert!(c.metrics.rom_total() < i.metrics.rom_total());
+        assert!(c.metrics.ram_total() < i.metrics.ram_total());
+        assert!(
+            (c.metrics.setup_instructions as f64)
+                < 0.3 * i.metrics.setup_instructions as f64
+        );
+        // the ROM delta is interpreter-sized: 15–40 kB (paper: 15–30)
+        let delta = i.metrics.rom_total() - c.metrics.rom_total();
+        assert!((15_000..45_000).contains(&delta), "{delta}");
+    }
+
+    #[test]
+    fn arena_planned_and_valid() {
+        let g = tiny_conv();
+        let r = Tflmi.build(&g, &BackendConfig::default()).unwrap();
+        r.program.check_plan().unwrap();
+        assert!(r.metrics.ram_arena >= (4 * 4 * 3) as u64);
+    }
+}

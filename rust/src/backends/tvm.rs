@@ -1,0 +1,205 @@
+//! TVM backends: `tvmaot`, `tvmaot+` (USMP) and `tvmrt` (graph
+//! executor). All three share the scheduled-kernel lowering; they
+//! differ in executor runtime, memory planning and setup behaviour.
+//!
+//! Schedule selection: the backend default is TVM's default schedule
+//! set with the NCHW relayout (the paper's Table IV configuration);
+//! Table V passes explicit schedules through `BackendConfig`.
+
+use anyhow::Result;
+
+use crate::calib;
+use crate::graph::Graph;
+use crate::kernels::KernelLib;
+use crate::schedules::{Family, Layout, Schedule};
+use crate::tinyir::Program;
+
+use super::builder::{lower, LowerOpts};
+use super::planner::{plan, PlannerKind};
+use super::{Backend, BackendConfig, BuildMetrics, BuildResult};
+
+fn effective_schedule(cfg: &BackendConfig) -> Schedule {
+    cfg.schedule
+        .unwrap_or_else(|| Schedule::new(Family::DefaultX86, Layout::Nchw))
+}
+
+fn lower_tvm(g: &Graph, name: &str, s: Schedule) -> Result<Program> {
+    lower(
+        g,
+        name,
+        LowerOpts {
+            lib: KernelLib::Tvm(s),
+            legalize_i16: s.legalizes_to_i16(),
+            transform_input: s.legalizes_to_i16(),
+        },
+    )
+}
+
+fn tvm_rom_code(p: &Program) -> u64 {
+    p.code_bytes()
+}
+
+fn setup_instructions(m: &calib::SetupModel, g: &Graph, arena: u64) -> u64 {
+    (m.fixed
+        + m.per_op * g.ops.len() as f64
+        + m.per_arena_byte * arena as f64
+        + m.per_weight_byte * g.weight_bytes() as f64) as u64
+}
+
+/// `tvmaot` / `tvmaot+` — Ahead-of-Time executor; `usmp` enables the
+/// Unified Static Memory Planner (the paper's tvmaot+ backend).
+pub struct TvmAot {
+    pub usmp: bool,
+}
+
+impl Backend for TvmAot {
+    fn name(&self) -> &'static str {
+        if self.usmp {
+            "tvmaot+"
+        } else {
+            "tvmaot"
+        }
+    }
+    fn framework(&self) -> &'static str {
+        "tvm"
+    }
+    fn supports_schedules(&self) -> bool {
+        true
+    }
+
+    fn build(&self, g: &Graph, cfg: &BackendConfig) -> Result<BuildResult> {
+        let s = effective_schedule(cfg);
+        let mut program =
+            lower_tvm(g, &format!("{}-{}", g.name, self.name()), s)?;
+        let planner = if self.usmp {
+            PlannerKind::UsmpInterval
+        } else {
+            PlannerKind::StorageTokens
+        };
+        let arena = plan(&mut program, planner) as u64;
+        // USMP also pools per-kernel workspaces into the arena plan;
+        // classic AoT keeps the worst-case workspace separate.
+        let workspace = if self.usmp {
+            (program.workspace_size as u64) * 3 / 4
+        } else {
+            program.workspace_size as u64
+        };
+        let metrics = BuildMetrics {
+            setup_instructions: setup_instructions(
+                &calib::TVMAOT_SETUP, g, arena,
+            ),
+            rom_code: calib::TVMAOT_RUNTIME_ROM
+                + calib::MLIF_ROM
+                + tvm_rom_code(&program),
+            rom_weights: program.const_bytes() as u64,
+            rom_misc: 0,
+            ram_arena: arena,
+            ram_workspace: workspace,
+            ram_runtime: calib::TVMAOT_RUNTIME_RAM_FIXED + calib::MLIF_RAM,
+        };
+        Ok(BuildResult { program, metrics })
+    }
+}
+
+/// `tvmrt` — the Graph executor: parses a JSON graph at runtime,
+/// allocates every tensor from a page-based heap pool. Powerful for
+/// profiling/AutoTVM, terrible for RAM (Table IV).
+pub struct TvmRt;
+
+impl Backend for TvmRt {
+    fn name(&self) -> &'static str {
+        "tvmrt"
+    }
+    fn framework(&self) -> &'static str {
+        "tvm"
+    }
+    fn supports_schedules(&self) -> bool {
+        true
+    }
+
+    fn build(&self, g: &Graph, cfg: &BackendConfig) -> Result<BuildResult> {
+        let s = effective_schedule(cfg);
+        let mut program = lower_tvm(g, &format!("{}-tvmrt", g.name), s)?;
+        // graph executor: no static planning — every tensor distinct
+        let arena = plan(&mut program, PlannerKind::NoReuse) as u64;
+        let n_tensors = program.buffers.len() as u64;
+        let metrics = BuildMetrics {
+            setup_instructions: setup_instructions(
+                &calib::TVMRT_SETUP, g, arena,
+            ),
+            rom_code: calib::TVMRT_RUNTIME_ROM
+                + calib::MLIF_ROM
+                + tvm_rom_code(&program),
+            rom_weights: program.const_bytes() as u64,
+            // the JSON graph string lives in flash
+            rom_misc: g.ops.len() as u64 * calib::TVMRT_JSON_PER_OP,
+            // tensors live inside the heap pool; the pool dominates
+            ram_arena: calib::TVMRT_HEAP_POOL.max(arena),
+            ram_workspace: program.workspace_size as u64,
+            ram_runtime: calib::TVMRT_RUNTIME_RAM_FIXED
+                + n_tensors * calib::TVMRT_RUNTIME_RAM_PER_TENSOR
+                + calib::MLIF_RAM,
+        };
+        Ok(BuildResult { program, metrics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::model::testutil::tiny_conv;
+
+    #[test]
+    fn usmp_never_increases_ram() {
+        let g = tiny_conv();
+        let cfg = BackendConfig::default();
+        let aot = TvmAot { usmp: false }.build(&g, &cfg).unwrap();
+        let plus = TvmAot { usmp: true }.build(&g, &cfg).unwrap();
+        assert!(plus.metrics.ram_total() <= aot.metrics.ram_total());
+        // invoke cost identical — USMP is memory-only
+        assert_eq!(
+            aot.program.ref_invoke_instructions(),
+            plus.program.ref_invoke_instructions()
+        );
+    }
+
+    #[test]
+    fn tvmrt_ram_dominated_by_heap_pool() {
+        let g = tiny_conv();
+        let r = TvmRt.build(&g, &BackendConfig::default()).unwrap();
+        assert!(r.metrics.ram_total() >= calib::TVMRT_HEAP_POOL);
+        // and setup is orders of magnitude above tvmaot
+        let aot = TvmAot { usmp: false }
+            .build(&g, &BackendConfig::default())
+            .unwrap();
+        assert!(
+            r.metrics.setup_instructions
+                > 100 * aot.metrics.setup_instructions.max(1)
+        );
+    }
+
+    #[test]
+    fn schedule_config_changes_cost() {
+        let g = tiny_conv();
+        let mut cfg = BackendConfig::default();
+        cfg.schedule = Some(Schedule::new(Family::DefaultX86, Layout::Nchw));
+        let nchw = TvmAot { usmp: false }.build(&g, &cfg).unwrap();
+        cfg.schedule = Some(Schedule::new(Family::DefaultX86, Layout::Nhwc));
+        let nhwc = TvmAot { usmp: false }.build(&g, &cfg).unwrap();
+        assert!(
+            nhwc.program.ref_invoke_instructions()
+                > nchw.program.ref_invoke_instructions()
+        );
+    }
+
+    #[test]
+    fn arm_schedules_skip_legalization_ram() {
+        let g = tiny_conv();
+        let mut cfg = BackendConfig::default();
+        cfg.schedule = Some(Schedule::new(Family::DefaultX86, Layout::Nchw));
+        let x86 = TvmAot { usmp: false }.build(&g, &cfg).unwrap();
+        cfg.schedule = Some(Schedule::new(Family::Arm, Layout::Nchw));
+        let arm = TvmAot { usmp: false }.build(&g, &cfg).unwrap();
+        assert!(arm.metrics.ram_arena < x86.metrics.ram_arena);
+    }
+}

@@ -1,0 +1,339 @@
+//! Cost-model calibration constants, with their derivations.
+//!
+//! The virtual targets must reproduce the *shape* of the paper's
+//! Tables III–V, not the authors' absolute testbed numbers. Every
+//! constant here is derived from a paper datapoint (cited inline) or
+//! from the structure of the kernel code it models. The instruction
+//! accounting itself (trip counts × instruction mixes) lives in
+//! `kernels/`; this module only pins the per-implementation mixes and
+//! runtime overheads.
+//!
+//! Reference-ISA ground truth from Table IV (RV32GC, instructions/MAC):
+//!
+//!   backend   model    invoke instr / MACs       => instr per MAC
+//!   tflmi     aww      153.1 M / 2.66 M          => ~57
+//!   tflmi     vww      432.0 M / ~10 M           => ~43
+//!   tflmi     resnet   687.5 M / 12.5 M          => ~55
+//!   tflmi     toycar     3.0 M / 0.264 M         => ~11 (dense)
+//!   tvmaot    aww       29.8 M / 2.66 M          => ~11
+//!   tvmaot    resnet   114.8 M / 12.5 M          => ~9.2
+//!   tvmaot    toycar     2.44 M / 0.264 M        => ~9.2 (dense)
+//!
+//! TFLM's reference conv kernels recompute offsets per element and
+//! take no advantage of layout, hence ~6× the GEMM-ified TVM cost;
+//! its dense kernel is a plain dot-product loop, hence near-TVM.
+
+use crate::tinyir::InstrMix;
+
+// ---------------------------------------------------------------------------
+// per-MAC instruction mixes of the kernel implementations
+// ---------------------------------------------------------------------------
+
+/// TFLM reference conv2d (tflite-micro `reference_ops::Conv`):
+/// per MAC: 2 loads (input, filter — both via Offset() index math:
+/// ~4 address ALU each), 1 mul, 1 add, amortized branch.
+/// Σ ≈ 55 instructions/MAC — matches tflmi aww/resnet rows above.
+pub const TFLM_CONV_PER_MAC: InstrMix = InstrMix {
+    alu: 42.0, // offset arithmetic dominates (4 nested index computations)
+    mul: 1.0,
+    load: 8.0, // input+filter plus re-loaded loop bounds/pointers
+    store: 0.0,
+    branch: 4.0,
+};
+
+/// TFLM reference depthwise conv — same structure, slightly worse
+/// per-MAC bookkeeping (per-channel multiplier lookup).
+pub const TFLM_DWCONV_PER_MAC: InstrMix = InstrMix {
+    alu: 46.0,
+    mul: 1.0,
+    load: 9.0,
+    store: 0.0,
+    branch: 4.0,
+};
+
+/// TFLM fully_connected: tight dot-product loop, no index math.
+/// ≈ 11 instr/MAC (toycar tflmi row).
+pub const TFLM_DENSE_PER_MAC: InstrMix = InstrMix {
+    alu: 4.0,
+    mul: 1.0,
+    load: 4.0,
+    store: 0.0,
+    branch: 2.0,
+};
+
+/// TVM GEMM-ified conv (default NCHW/NCHWc schedule): blocked loops,
+/// hoisted addresses, unrolled-by-4 inner body.
+/// ≈ 9.2 instr/MAC (tvmaot resnet/toycar rows).
+pub const TVM_CONV_NCHW_PER_MAC: InstrMix = InstrMix {
+    alu: 3.7,
+    mul: 1.0,
+    load: 3.0,
+    store: 0.5,
+    branch: 1.0,
+};
+
+/// TVM default NHWC conv schedule (written for x86 SIMD): on a scalar
+/// MCU the vector body scalarizes with register spills — ~1.8× the
+/// NCHW cost in pure instructions (Table V: "difference ×1.5–2 for
+/// the rest"). The catastrophic NHWC rows on SPI-flash targets come
+/// from the weight-streaming model, not from this mix.
+pub const TVM_CONV_NHWC_PER_MAC: InstrMix = InstrMix {
+    alu: 7.4,
+    mul: 1.0,
+    load: 6.0,
+    store: 1.0,
+    branch: 1.6,
+};
+
+/// TVM ARM (aarch64) NHWC conv schedule on a 32-bit MCU: tiled for
+/// big cores; mediocre here (Table V: "similar or worse").
+pub const TVM_CONV_ARM_NHWC_PER_MAC: InstrMix = InstrMix {
+    alu: 8.9,
+    mul: 1.0,
+    load: 6.5,
+    store: 1.0,
+    branch: 1.8,
+};
+
+/// TVM ARM NCHW conv schedule: ~1.4× default NCHW (Table V).
+pub const TVM_CONV_ARM_NCHW_PER_MAC: InstrMix = InstrMix {
+    alu: 5.6,
+    mul: 1.0,
+    load: 4.2,
+    store: 0.7,
+    branch: 1.4,
+};
+
+/// TVM default dense schedule ≈ 9.2 instr/MAC (toycar tvmaot row).
+pub const TVM_DENSE_PER_MAC: InstrMix = InstrMix {
+    alu: 3.2,
+    mul: 1.0,
+    load: 3.5,
+    store: 0.3,
+    branch: 1.2,
+};
+
+/// TVM ARM dense schedule: ~2× better (Table V toycar: ARM 0.040 s vs
+/// default 0.075 s on esp32c3) — unrolled, dual-accumulator.
+pub const TVM_DENSE_ARM_PER_MAC: InstrMix = InstrMix {
+    alu: 1.3,
+    mul: 1.0,
+    load: 1.6,
+    store: 0.15,
+    branch: 0.55,
+};
+
+/// Per-output-element requantization (f64-multiplier model of the
+/// fixed-point SRDHM sequence) + store + loop tail. Shared by all
+/// conv-like kernels.
+pub const REQUANT_PER_OUT: InstrMix = InstrMix {
+    alu: 12.0,
+    mul: 2.0,
+    load: 1.0,
+    store: 1.0,
+    branch: 2.0,
+};
+
+/// Simple elementwise ops (add: two rescales + clamp).
+pub const ADD_PER_ELEM: InstrMix = InstrMix {
+    alu: 14.0,
+    mul: 2.0,
+    load: 2.0,
+    store: 1.0,
+    branch: 1.0,
+};
+
+/// Pooling per input-window element.
+pub const POOL_PER_ELEM: InstrMix = InstrMix {
+    alu: 2.0,
+    mul: 0.0,
+    load: 1.0,
+    store: 0.1,
+    branch: 0.5,
+};
+
+/// Softmax per element (LUT exp + fixed-point normalize).
+pub const SOFTMAX_PER_ELEM: InstrMix = InstrMix {
+    alu: 40.0,
+    mul: 4.0,
+    load: 6.0,
+    store: 1.0,
+    branch: 4.0,
+};
+
+/// memcpy-style per element.
+pub const COPY_PER_ELEM: InstrMix = InstrMix {
+    alu: 0.5,
+    mul: 0.0,
+    load: 1.0,
+    store: 1.0,
+    branch: 0.25,
+};
+
+/// Layout/dtype transform per element (strided gather + widen).
+pub const TRANSFORM_PER_ELEM: InstrMix = InstrMix {
+    alu: 4.0,
+    mul: 0.0,
+    load: 1.0,
+    store: 1.0,
+    branch: 0.5,
+};
+
+/// Fixed prologue per kernel call (argument setup, bounds checks).
+pub const CALL_FIXED: f64 = 150.0;
+
+// ---------------------------------------------------------------------------
+// setup-phase models (Table IV "Setup" column)
+// ---------------------------------------------------------------------------
+
+/// tflmi: FlatBuffer verification + interpreter graph walk + per-op
+/// Prepare() + arena planning touch-per-byte.
+/// Table IV: aww 264k, vww 1025k, resnet 217k, toycar 71k.
+pub struct SetupModel {
+    pub per_op: f64,
+    pub per_conv_channel: f64,
+    pub per_arena_byte: f64,
+    pub per_weight_byte: f64,
+    pub fixed: f64,
+}
+
+pub const TFLMI_SETUP: SetupModel = SetupModel {
+    per_op: 4_000.0,
+    per_conv_channel: 250.0, // per-channel quant-param expansion
+    per_arena_byte: 1.0,     // greedy planner touches lifetimes per byte
+    per_weight_byte: 0.55,   // flatbuffer vector verification
+    fixed: 25_000.0,
+};
+
+/// tflmc: codegen removes parse + planning; only per-op Init/Prepare
+/// remain. Table IV: −73 % … −92 % vs tflmi.
+pub const TFLMC_SETUP: SetupModel = SetupModel {
+    per_op: 1_200.0,
+    per_conv_channel: 60.0,
+    per_arena_byte: 0.0,
+    per_weight_byte: 0.0,
+    fixed: 3_500.0,
+};
+
+/// tvmaot: fully static — "≈ 0" in Table IV. A handful of pointer
+/// assignments remain.
+pub const TVMAOT_SETUP: SetupModel = SetupModel {
+    per_op: 12.0,
+    per_conv_channel: 0.0,
+    per_arena_byte: 0.0,
+    per_weight_byte: 0.0,
+    fixed: 300.0,
+};
+
+/// tvmrt: JSON graph parse + param-blob load + dynamic allocation.
+/// Table IV: aww 2 988k, vww 10 688k, resnet 3 970k, toycar 5 014k —
+/// correlates with weight bytes (param memcpy + alloc) plus a large
+/// fixed runtime bring-up.
+pub const TVMRT_SETUP: SetupModel = SetupModel {
+    per_op: 60_000.0,
+    per_conv_channel: 0.0,
+    per_arena_byte: 0.6,
+    per_weight_byte: 14.0,
+    fixed: 1_200_000.0,
+};
+
+// ---------------------------------------------------------------------------
+// ROM models (Table IV "ROM")
+// ---------------------------------------------------------------------------
+
+/// Code+rodata overhead per backend runtime, bytes.
+/// tflmi aww ROM 143 kB ≈ 58 kB model flatbuffer + ~45 kB interpreter
+/// + ~35 kB kernel library + MLIF; tvmrt adds the JSON graph string
+/// and the graph-executor runtime.
+pub const TFLMI_RUNTIME_ROM: u64 = 46_000;
+pub const TFLMC_RUNTIME_ROM: u64 = 9_000;
+pub const TVMAOT_RUNTIME_ROM: u64 = 11_000;
+pub const TVMRT_RUNTIME_ROM: u64 = 52_000;
+/// Per-op kernel code: TFLM links one reference kernel per op *type*;
+/// TVM emits specialized code per op *instance*.
+pub const TFLM_KERNEL_CODE_PER_TYPE: u64 = 6_500;
+pub const TVM_KERNEL_CODE_PER_INSTANCE: u64 = 2_200;
+/// FlatBuffer metadata on top of raw weights (tflmi/tflmc embed the
+/// model container; tflmc strips it to raw arrays).
+pub const FLATBUFFER_OVERHEAD_PER_TENSOR: u64 = 220;
+pub const TVMRT_JSON_PER_OP: u64 = 1_100;
+/// MLIF target-software wrapper (shared by all backends).
+pub const MLIF_ROM: u64 = 14_000;
+
+// ---------------------------------------------------------------------------
+// RAM models (Table IV "RAM")
+// ---------------------------------------------------------------------------
+
+/// Interpreter state: tflmi keeps per-tensor runtime structs + the
+/// interpreter object; tflmc only a static context; tvmrt keeps the
+/// JSON DOM + per-node storage entries.
+pub const TFLMI_RUNTIME_RAM_FIXED: u64 = 10_000;
+pub const TFLMI_RUNTIME_RAM_PER_TENSOR: u64 = 64;
+pub const TFLMC_RUNTIME_RAM_FIXED: u64 = 1_200;
+pub const TVMAOT_RUNTIME_RAM_FIXED: u64 = 1_500;
+pub const TVMRT_RUNTIME_RAM_FIXED: u64 = 24_000;
+pub const TVMRT_RUNTIME_RAM_PER_TENSOR: u64 = 160;
+/// tvmrt's page-based dynamic allocator reserves a fixed pool
+/// (Table IV: toycar tvmrt RAM ≈ 1 MB despite ~10 kB of tensors).
+pub const TVMRT_HEAP_POOL: u64 = 1_000_000;
+/// MLIF static buffers (UART, timers, stacks).
+pub const MLIF_RAM: u64 = 2_600;
+
+// ---------------------------------------------------------------------------
+// tuning (Table V AutoTVM columns)
+// ---------------------------------------------------------------------------
+
+/// Tuning iterations the paper used ("at least 600 per combination").
+pub const PAPER_TUNING_ITERATIONS: usize = 600;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_mac_totals_match_table4_ratios() {
+        // tflm conv ~55/MAC, tvm nchw ~9.2/MAC => ratio ~6
+        let tflm = TFLM_CONV_PER_MAC.total();
+        let tvm = TVM_CONV_NCHW_PER_MAC.total();
+        assert!((50.0..60.0).contains(&tflm), "{tflm}");
+        assert!((8.0..10.5).contains(&tvm), "{tvm}");
+        assert!(tflm / tvm > 4.0 && tflm / tvm < 8.0);
+        // dense: tflm ~11, tvm ~9.2, arm ~4.6 (2x better than tvm)
+        let td = TFLM_DENSE_PER_MAC.total();
+        let vd = TVM_DENSE_PER_MAC.total();
+        let ad = TVM_DENSE_ARM_PER_MAC.total();
+        assert!((10.0..12.5).contains(&td), "{td}");
+        assert!((8.0..10.5).contains(&vd), "{vd}");
+        assert!(vd / ad > 1.7 && vd / ad < 2.4, "{}", vd / ad);
+    }
+
+    #[test]
+    fn nhwc_penalty_is_moderate_in_pure_instructions() {
+        // the ×1.5–2 "rest" gap of Table V; flash thrash adds the rest
+        let r = TVM_CONV_NHWC_PER_MAC.total() / TVM_CONV_NCHW_PER_MAC.total();
+        assert!((1.5..2.2).contains(&r), "{r}");
+    }
+
+    #[test]
+    fn setup_models_reproduce_table4_order() {
+        // tvmaot << tflmc < tflmi << tvmrt for a mid-size CNN
+        let ops = 16.0;
+        let conv_ch = 8.0 * 40.0;
+        let arena = 70_000.0;
+        let weights = 80_000.0;
+        let eval = |m: &SetupModel| {
+            m.fixed
+                + m.per_op * ops
+                + m.per_conv_channel * conv_ch
+                + m.per_arena_byte * arena
+                + m.per_weight_byte * weights
+        };
+        let i = eval(&TFLMI_SETUP);
+        let c = eval(&TFLMC_SETUP);
+        let a = eval(&TVMAOT_SETUP);
+        let r = eval(&TVMRT_SETUP);
+        assert!(a < 10_000.0);
+        assert!(c < 0.27 * i, "tflmc {c} vs tflmi {i}"); // −73 %+
+        assert!(r > 5.0 * i, "tvmrt {r} vs tflmi {i}");
+    }
+}

@@ -1,0 +1,93 @@
+//! Tiny argument parser: named flags with or without values, values
+//! may repeat (`-m aww -m vww`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments: flag -> values (booleans get an empty marker).
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+}
+
+impl Parsed {
+    /// `spec`: (flag, takes_value). Unknown flags are errors.
+    pub fn parse(argv: &[String], spec: &[(&str, bool)]) -> Result<Parsed> {
+        let mut p = Parsed::default();
+        let mut it = argv.iter().peekable();
+        while let Some(arg) = it.next() {
+            let Some(&(name, takes_value)) =
+                spec.iter().find(|(n, _)| n == arg)
+            else {
+                bail!("unknown argument '{arg}'");
+            };
+            if takes_value {
+                let Some(v) = it.next() else {
+                    bail!("flag {name} needs a value");
+                };
+                p.values.entry(name.to_string()).or_default().push(v.clone());
+            } else {
+                p.flags.push(name.to_string());
+            }
+        }
+        Ok(p)
+    }
+
+    /// All values given under any alias.
+    pub fn all(&self, aliases: &[&str]) -> Vec<String> {
+        let mut out = Vec::new();
+        for a in aliases {
+            if let Some(vs) = self.values.get(*a) {
+                out.extend(vs.iter().cloned());
+            }
+        }
+        out
+    }
+
+    pub fn one(&self, flag: &str) -> Option<&String> {
+        self.values.get(flag).and_then(|v| v.last())
+    }
+
+    pub fn flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(str::to_string).collect()
+    }
+
+    #[test]
+    fn repeated_values_collect() {
+        let p = Parsed::parse(
+            &argv("-m aww -m vww -b tvmaot --tune"),
+            &[("-m", true), ("-b", true), ("--tune", false)],
+        )
+        .unwrap();
+        assert_eq!(p.all(&["-m"]), vec!["aww", "vww"]);
+        assert_eq!(p.one("-b"), Some(&"tvmaot".to_string()));
+        assert!(p.flag("--tune"));
+    }
+
+    #[test]
+    fn aliases_merge() {
+        let p = Parsed::parse(
+            &argv("-m aww --model vww"),
+            &[("-m", true), ("--model", true)],
+        )
+        .unwrap();
+        assert_eq!(p.all(&["-m", "--model"]), vec!["aww", "vww"]);
+    }
+
+    #[test]
+    fn unknown_flag_and_missing_value_error() {
+        assert!(Parsed::parse(&argv("--wat"), &[("-m", true)]).is_err());
+        assert!(Parsed::parse(&argv("-m"), &[("-m", true)]).is_err());
+    }
+}

@@ -1,0 +1,240 @@
+//! Command line interface (paper §II-A: "a straightforward to use but
+//! very powerful command line interface"). Hand-rolled parser (clap is
+//! not reachable offline).
+//!
+//! ```text
+//! mlonmcu init [DIR]
+//! mlonmcu models ls
+//! mlonmcu flow run -m M.. -b B.. -t T.. [--schedule S..] [--tune]
+//!         [-f FEAT..] [--parallel N] [-c k=v..] [--postprocess P..]
+//! mlonmcu report [--session N]
+//! mlonmcu targets ls | backends ls
+//! ```
+
+pub mod args;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Environment;
+use crate::postprocess;
+use crate::session::{RunMatrix, Session};
+
+use args::Parsed;
+
+pub const USAGE: &str = "\
+mlonmcu — TinyML benchmarking with fast retargeting (paper reproduction)
+
+USAGE:
+  mlonmcu init [DIR]                      initialize an environment
+  mlonmcu models ls                       list available models
+  mlonmcu backends ls                     list backends (Table IV)
+  mlonmcu targets ls                      list targets (Table II)
+  mlonmcu flow run -m M [-m M2..] -b B.. -t T..
+          [--schedule default-nchw ..] [--tune]
+          [-f validate ..] [--parallel N] [-c key=val ..]
+          [--postprocess filter_cols:a,b ..]
+  mlonmcu report [--session N]            reprint a session report
+";
+
+/// Entry point for the binary.
+pub fn main_with_args(argv: &[String]) -> Result<i32> {
+    let mut it = argv.iter();
+    let Some(cmd) = it.next() else {
+        println!("{USAGE}");
+        return Ok(2);
+    };
+    let rest: Vec<String> = it.cloned().collect();
+    match cmd.as_str() {
+        "init" => cmd_init(&rest),
+        "models" => cmd_models(&rest),
+        "backends" => cmd_backends(),
+        "targets" => cmd_targets(),
+        "flow" => cmd_flow(&rest),
+        "report" => cmd_report(&rest),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_init(rest: &[String]) -> Result<i32> {
+    let dir = rest
+        .first()
+        .map(std::path::PathBuf::from)
+        .unwrap_or(std::env::current_dir()?);
+    let env = Environment::init(&dir)?;
+    println!(
+        "initialized environment '{}' at {}",
+        env.get_str("", "name", "default"),
+        env.root.display()
+    );
+    Ok(0)
+}
+
+fn cmd_models(rest: &[String]) -> Result<i32> {
+    if rest.first().map(String::as_str) != Some("ls") {
+        bail!("usage: mlonmcu models ls");
+    }
+    let env = Environment::discover()?;
+    let models = crate::frontends::list_models(&env.model_dirs());
+    if models.is_empty() {
+        println!("no models found — run `make artifacts` to build the zoo");
+    }
+    for m in models {
+        match crate::frontends::load_model(&m, &env.model_dirs()) {
+            Ok(g) => println!(
+                "{m:10} {:>9} params {:>9} B {:>10} MACs",
+                g.param_count(),
+                g.weight_bytes(),
+                g.macs()
+            ),
+            Err(e) => println!("{m:10} (unreadable: {e})"),
+        }
+    }
+    Ok(0)
+}
+
+fn cmd_backends() -> Result<i32> {
+    for n in crate::backends::all_backend_names() {
+        let b = crate::backends::by_name(n).unwrap();
+        println!(
+            "{n:8} framework={} schedules={}",
+            b.framework(),
+            if b.supports_schedules() { "yes" } else { "no" }
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_targets() -> Result<i32> {
+    for n in ["etiss", "esp32c3", "stm32f4", "stm32f7", "esp32"] {
+        let t = crate::targets::by_name(n).unwrap();
+        let s = t.spec();
+        println!(
+            "{n:8} isa={:<10} {:>5} MHz flash={:>8} ram={:>7} tuning={}",
+            s.isa.name,
+            s.clock_mhz,
+            s.flash_total,
+            s.ram_total,
+            if t.supports_tuning() { "yes" } else { "no" }
+        );
+    }
+    Ok(0)
+}
+
+fn cmd_flow(rest: &[String]) -> Result<i32> {
+    if rest.first().map(String::as_str) != Some("run") {
+        bail!("usage: mlonmcu flow run ...");
+    }
+    let p = Parsed::parse(
+        &rest[1..],
+        &[
+            ("-m", true), ("--model", true),
+            ("-b", true), ("--backend", true),
+            ("-t", true), ("--target", true),
+            ("--schedule", true),
+            ("-f", true), ("--feature", true),
+            ("-c", true), ("--config", true),
+            ("--postprocess", true),
+            ("--parallel", true),
+            ("--tune", false),
+        ],
+    )?;
+    let models = p.all(&["-m", "--model"]);
+    let backends = p.all(&["-b", "--backend"]);
+    let targets = p.all(&["-t", "--target"]);
+    if models.is_empty() || backends.is_empty() || targets.is_empty() {
+        bail!("flow run needs at least -m, -b and -t\n{USAGE}");
+    }
+    let env = Environment::discover()?
+        .with_overrides(&p.all(&["-c", "--config"]))?;
+    let parallel = p
+        .one("--parallel")
+        .map(|s| s.parse::<usize>().context("--parallel"))
+        .transpose()?
+        .unwrap_or(env.get_i64("run", "parallel", 2) as usize);
+
+    let mut matrix = RunMatrix::new()
+        .models(models)
+        .backends(backends)
+        .targets(targets)
+        .schedules(p.all(&["--schedule"]))
+        .features(p.all(&["-f", "--feature"]))
+        .postprocesses(p.all(&["--postprocess"]));
+    if p.flag("--tune") {
+        matrix = matrix.with_tuning_sweep();
+    }
+
+    let session = Session::new(&env)?;
+    let mut report = session.run_matrix(&matrix, parallel)?;
+    let artifacts =
+        postprocess::apply_all(matrix.postprocess_specs(), &mut report)?;
+    for (name, text) in &artifacts {
+        std::fs::write(session.dir.join(name), text)?;
+    }
+    println!("{}", report.to_text());
+    let t = *session.last_timing.lock().unwrap();
+    println!(
+        "session {} done: {} runs in {:.1}s wall ({} workers); \
+         simulated device time {:.1}s; artifacts in {}",
+        session.id,
+        t.runs,
+        t.wall_s,
+        parallel,
+        t.sim_s,
+        session.dir.display()
+    );
+    Ok(0)
+}
+
+fn cmd_report(rest: &[String]) -> Result<i32> {
+    let p = Parsed::parse(rest, &[("--session", true)])?;
+    let env = Environment::discover()?;
+    let sessions = env.sessions_dir();
+    let id = match p.one("--session") {
+        Some(s) => s.parse::<usize>().context("--session")?,
+        None => {
+            // latest session
+            let mut id = 0usize;
+            while sessions.join(format!("{}", id + 1)).exists() {
+                id += 1;
+            }
+            id
+        }
+    };
+    let path = sessions.join(format!("{id}")).join("report.md");
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("no report at {}", path.display()))?;
+    println!("{text}");
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(main_with_args(&["frobnicate".into()]).is_err());
+    }
+
+    #[test]
+    fn help_prints() {
+        assert_eq!(main_with_args(&["help".into()]).unwrap(), 0);
+    }
+
+    #[test]
+    fn backends_and_targets_ls() {
+        assert_eq!(main_with_args(&["backends".into()]).unwrap(), 0);
+        assert_eq!(main_with_args(&["targets".into()]).unwrap(), 0);
+    }
+
+    #[test]
+    fn flow_run_requires_mbt() {
+        let err =
+            main_with_args(&["flow".into(), "run".into()]).unwrap_err();
+        assert!(err.to_string().contains("needs at least"));
+    }
+}

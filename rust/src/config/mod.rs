@@ -1,0 +1,187 @@
+//! Environments (paper §II-A1 "Configuration"): a directory with an
+//! `environment.toml` describing paths, enabled components and default
+//! config. Multiple environments can coexist ("isolated dependencies
+//! and reproducibility"); `Environment::discover` resolves the active
+//! one from `MLONMCU_HOME`, the working directory, or defaults.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::data::toml::{TomlDoc, TomlValue};
+
+/// A resolved environment.
+#[derive(Debug, Clone)]
+pub struct Environment {
+    pub root: PathBuf,
+    pub doc: TomlDoc,
+    /// `-c key=value` CLI overrides (highest precedence).
+    pub overrides: BTreeMap<String, String>,
+}
+
+pub const DEFAULT_TEMPLATE: &str = r#"# MLonMCU environment
+name = "default"
+
+[paths]
+artifacts = "artifacts"
+models = "artifacts/models"
+sessions = "artifacts/sessions"
+
+[run]
+parallel = 2
+validate_atol = 1
+seed = 7
+
+[tune]
+trials = 600
+
+[frameworks]
+enabled = ["tflm", "tvm"]
+
+[targets]
+enabled = ["etiss", "esp32c3", "stm32f4", "stm32f7", "esp32"]
+"#;
+
+impl Environment {
+    /// Initialize a new environment directory (CLI `init`).
+    pub fn init(dir: &Path) -> Result<Environment> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let file = dir.join("environment.toml");
+        if !file.exists() {
+            std::fs::write(&file, DEFAULT_TEMPLATE)?;
+        }
+        Environment::load(dir)
+    }
+
+    pub fn load(dir: &Path) -> Result<Environment> {
+        let doc = TomlDoc::parse_file(&dir.join("environment.toml"))?;
+        Ok(Environment {
+            root: dir.to_path_buf(),
+            doc,
+            overrides: BTreeMap::new(),
+        })
+    }
+
+    /// Resolve the active environment: $MLONMCU_HOME, else ./, else an
+    /// implicit default rooted in the working directory.
+    pub fn discover() -> Result<Environment> {
+        if let Ok(home) = std::env::var("MLONMCU_HOME") {
+            return Environment::load(Path::new(&home));
+        }
+        let cwd = std::env::current_dir()?;
+        if cwd.join("environment.toml").is_file() {
+            return Environment::load(&cwd);
+        }
+        // implicit default: built-in template, rooted at cwd
+        Ok(Environment {
+            root: cwd,
+            doc: TomlDoc::parse(DEFAULT_TEMPLATE).expect("builtin template"),
+            overrides: BTreeMap::new(),
+        })
+    }
+
+    /// Apply `-c table.key=value` overrides.
+    pub fn with_overrides(mut self, kvs: &[String]) -> Result<Environment> {
+        for kv in kvs {
+            let (k, v) = kv
+                .split_once('=')
+                .with_context(|| format!("override '{kv}' is not key=value"))?;
+            self.overrides.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(self)
+    }
+
+    /// Look up `table.key` with override precedence.
+    fn raw(&self, table: &str, key: &str) -> Option<TomlValue> {
+        let dotted = if table.is_empty() {
+            key.to_string()
+        } else {
+            format!("{table}.{key}")
+        };
+        if let Some(v) = self.overrides.get(&dotted) {
+            return Some(TomlValue::Str(v.clone()));
+        }
+        self.doc.get(table, key).cloned()
+    }
+
+    pub fn get_str(&self, table: &str, key: &str, default: &str) -> String {
+        match self.raw(table, key) {
+            Some(TomlValue::Str(s)) => s,
+            Some(v) => v.as_str().map(str::to_string).unwrap_or_else(|| default.into()),
+            None => default.into(),
+        }
+    }
+
+    pub fn get_i64(&self, table: &str, key: &str, default: i64) -> i64 {
+        match self.raw(table, key) {
+            Some(TomlValue::Str(s)) => s.parse().unwrap_or(default),
+            Some(v) => v.as_i64().unwrap_or(default),
+            None => default,
+        }
+    }
+
+    /// Artifacts root (HLO files, models, sessions).
+    pub fn artifacts_dir(&self) -> PathBuf {
+        self.root.join(self.get_str("paths", "artifacts", "artifacts"))
+    }
+
+    pub fn model_dirs(&self) -> Vec<PathBuf> {
+        vec![self.root.join(self.get_str("paths", "models", "artifacts/models"))]
+    }
+
+    pub fn sessions_dir(&self) -> PathBuf {
+        self.root
+            .join(self.get_str("paths", "sessions", "artifacts/sessions"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_writes_template_and_loads() {
+        let dir = std::env::temp_dir().join("mlonmcu_env_test_init");
+        let _ = std::fs::remove_dir_all(&dir);
+        let env = Environment::init(&dir).unwrap();
+        assert_eq!(env.get_str("", "name", "?"), "default");
+        assert_eq!(env.get_i64("run", "parallel", 0), 2);
+        assert!(env.artifacts_dir().ends_with("artifacts"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn overrides_win() {
+        let env = Environment {
+            root: PathBuf::from("/tmp"),
+            doc: TomlDoc::parse(DEFAULT_TEMPLATE).unwrap(),
+            overrides: BTreeMap::new(),
+        }
+        .with_overrides(&["run.parallel=8".into()])
+        .unwrap();
+        assert_eq!(env.get_i64("run", "parallel", 0), 8);
+    }
+
+    #[test]
+    fn bad_override_rejected() {
+        let env = Environment {
+            root: PathBuf::from("/tmp"),
+            doc: TomlDoc::parse(DEFAULT_TEMPLATE).unwrap(),
+            overrides: BTreeMap::new(),
+        };
+        assert!(env.with_overrides(&["no-equals".into()]).is_err());
+    }
+
+    #[test]
+    fn defaults_for_missing_keys() {
+        let env = Environment {
+            root: PathBuf::from("/x"),
+            doc: TomlDoc::parse("").unwrap(),
+            overrides: BTreeMap::new(),
+        };
+        assert_eq!(env.get_i64("run", "parallel", 3), 3);
+        assert_eq!(env.get_str("paths", "artifacts", "artifacts"), "artifacts");
+    }
+}

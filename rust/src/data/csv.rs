@@ -1,0 +1,101 @@
+//! CSV writer for report artifacts (RFC-4180 quoting).
+
+/// Serialize rows into CSV text. Every row must have `headers.len()`
+/// cells; this is asserted because ragged report artifacts are always
+/// a bug upstream.
+pub fn to_csv(headers: &[String], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&join(headers));
+    out.push('\n');
+    for row in rows {
+        assert_eq!(
+            row.len(),
+            headers.len(),
+            "ragged CSV row: {row:?} vs headers {headers:?}"
+        );
+        out.push_str(&join(row));
+        out.push('\n');
+    }
+    out
+}
+
+fn join(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| quote(c))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn quote(cell: &str) -> String {
+    if cell.contains([',', '"', '\n']) {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+/// Minimal CSV reader (used by tests and the compare postprocess).
+pub fn parse_csv(text: &str) -> Vec<Vec<String>> {
+    let mut rows = Vec::new();
+    let mut row = Vec::new();
+    let mut cell = String::new();
+    let mut in_quotes = false;
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    cell.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' if cell.is_empty() => in_quotes = true,
+            ',' if !in_quotes => {
+                row.push(std::mem::take(&mut cell));
+            }
+            '\n' if !in_quotes => {
+                row.push(std::mem::take(&mut cell));
+                rows.push(std::mem::take(&mut row));
+            }
+            '\r' if !in_quotes => {}
+            c => cell.push(c),
+        }
+    }
+    if !cell.is_empty() || !row.is_empty() {
+        row.push(cell);
+        rows.push(row);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(x: &str) -> String {
+        x.to_string()
+    }
+
+    #[test]
+    fn roundtrip_with_quoting() {
+        let headers = vec![s("a"), s("b")];
+        let rows = vec![
+            vec![s("1"), s("x,y")],
+            vec![s("he said \"hi\""), s("line\nbreak")],
+        ];
+        let text = to_csv(&headers, &rows);
+        let parsed = parse_csv(&text);
+        assert_eq!(parsed[0], headers);
+        assert_eq!(parsed[1], rows[0]);
+        assert_eq!(parsed[2], rows[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_panic() {
+        to_csv(&[s("a"), s("b")], &[vec![s("only-one")]]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained data formats (serde is not available offline):
+//! a JSON value + parser/writer, a TOML subset for environment files,
+//! and CSV emission for report artifacts.
+
+pub mod json;
+pub mod toml;
+pub mod csv;
+
+pub use json::Json;

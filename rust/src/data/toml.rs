@@ -1,0 +1,289 @@
+//! TOML subset parser for environment/config files
+//! (`environment.toml`). Supports: `[table]` and `[table.sub]`
+//! headers, `key = value` with string / integer / float / bool /
+//! homogeneous-array values, comments, and blank lines. That covers
+//! everything MLonMCU environment templates need; exotic TOML
+//! (multi-line strings, dates, inline tables) is intentionally out of
+//! scope and rejected loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str_arr(&self) -> Option<Vec<String>> {
+        match self {
+            TomlValue::Arr(v) => v
+                .iter()
+                .map(|x| x.as_str().map(|s| s.to_string()))
+                .collect(),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted table path -> key -> value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    pub tables: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, table: &str, key: &str) -> Option<&TomlValue> {
+        self.tables.get(table).and_then(|t| t.get(key))
+    }
+
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new(); // "" = root table
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let ctx = || format!("line {}: {raw:?}", lineno + 1);
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("unclosed table header, {}", ctx()))?
+                    .trim();
+                if name.is_empty() {
+                    bail!("empty table name, {}", ctx());
+                }
+                current = name.to_string();
+                doc.tables.entry(current.clone()).or_default();
+            } else if let Some(eq) = find_eq(line) {
+                let key = line[..eq].trim().trim_matches('"').to_string();
+                if key.is_empty() {
+                    bail!("empty key, {}", ctx());
+                }
+                let val = parse_value(line[eq + 1..].trim())
+                    .with_context(ctx)?;
+                doc.tables
+                    .entry(current.clone())
+                    .or_default()
+                    .insert(key, val);
+            } else {
+                bail!("unparseable line, {}", ctx());
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<TomlDoc> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        TomlDoc::parse(&text)
+    }
+
+    /// Render back to TOML text (environment init writes templates).
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        for (table, kv) in &self.tables {
+            if !table.is_empty() {
+                out.push_str(&format!("[{table}]\n"));
+            }
+            for (k, v) in kv {
+                out.push_str(&format!("{k} = {}\n", render(v)));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn render(v: &TomlValue) -> String {
+    match v {
+        TomlValue::Str(s) => format!("{s:?}"),
+        TomlValue::Int(x) => x.to_string(),
+        TomlValue::Float(x) => {
+            if x.fract() == 0.0 {
+                format!("{x:.1}")
+            } else {
+                x.to_string()
+            }
+        }
+        TomlValue::Bool(b) => b.to_string(),
+        TomlValue::Arr(xs) => format!(
+            "[{}]",
+            xs.iter().map(render).collect::<Vec<_>>().join(", ")
+        ),
+    }
+}
+
+/// Find the `=` separating key and value (not inside quotes).
+fn find_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("missing value");
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').context("unterminated string")?;
+        // minimal escapes
+        let un = body.replace("\\\"", "\"").replace("\\\\", "\\");
+        return Ok(TomlValue::Str(un));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        for part in split_top(body) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if let Ok(x) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(x));
+    }
+    if let Ok(x) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(x));
+    }
+    bail!("unsupported TOML value: {s:?}")
+}
+
+/// Split on commas not inside quotes or nested brackets.
+fn split_top(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth -= 1,
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_environment_shape() {
+        let doc = TomlDoc::parse(
+            r#"
+# MLonMCU environment
+name = "default"
+
+[paths]
+artifacts = "artifacts"   # inline comment
+
+[targets.etiss]
+enabled = true
+clock_mhz = 100
+
+[run]
+models = ["aww", "vww"]
+parallel = 4
+validate_atol = 1
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str(), Some("default"));
+        assert_eq!(
+            doc.get("targets.etiss", "clock_mhz").unwrap().as_i64(),
+            Some(100)
+        );
+        assert_eq!(
+            doc.get("run", "models").unwrap().as_str_arr().unwrap(),
+            vec!["aww", "vww"]
+        );
+        assert_eq!(doc.get("run", "parallel").unwrap().as_i64(), Some(4));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let src = "a = 1\n\n[t]\nb = \"x\"\nc = [1, 2]\nd = true\ne = 2.5\n";
+        let doc = TomlDoc::parse(src).unwrap();
+        let doc2 = TomlDoc::parse(&doc.to_string()).unwrap();
+        assert_eq!(doc, doc2);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("[unclosed").is_err());
+        assert!(TomlDoc::parse("novalue =").is_err());
+        assert!(TomlDoc::parse("just words").is_err());
+        assert!(TomlDoc::parse("k = 1990-01-01").is_err()); // dates: out of scope
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse("k = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "k").unwrap().as_str(), Some("a#b"));
+    }
+}

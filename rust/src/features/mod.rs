@@ -1,0 +1,150 @@
+//! Features (paper §II-B5): components that change how the other
+//! components interact. Each feature hooks into specific stages:
+//!
+//!   * `validate` — compare target outputs against the JAX/Pallas
+//!     golden reference via PJRT ("golden reference values ... useful
+//!     to detect if a framework degrades the models' accuracy").
+//!   * `autotvm` — insert the Tune stage before Build.
+//!   * `usmp` — alias: retarget tvmaot to tvmaot+ behaviour.
+//!   * `debug-arena` — verify the memory plan and record arena stats.
+//!
+//! Features are parsed from CLI strings ("validate", "autotvm") and
+//! applied by the session to each run.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+/// The feature set of a run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Features {
+    set: BTreeSet<String>,
+}
+
+pub const KNOWN: [&str; 4] = ["validate", "autotvm", "usmp", "debug-arena"];
+
+impl Features {
+    pub fn parse(names: &[String]) -> Result<Features> {
+        let mut set = BTreeSet::new();
+        for n in names {
+            if !KNOWN.contains(&n.as_str()) {
+                bail!("unknown feature '{n}' (known: {KNOWN:?})");
+            }
+            set.insert(n.clone());
+        }
+        Ok(Features { set })
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.set.contains(name)
+    }
+
+    pub fn validate(&self) -> bool {
+        self.has("validate")
+    }
+    pub fn autotvm(&self) -> bool {
+        self.has("autotvm")
+    }
+    pub fn usmp(&self) -> bool {
+        self.has("usmp")
+    }
+    pub fn debug_arena(&self) -> bool {
+        self.has("debug-arena")
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.set.iter().cloned().collect()
+    }
+}
+
+/// Result of the validate feature on one run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Validation {
+    /// Max |device − golden| quantum difference observed.
+    Pass { max_diff: i32 },
+    Fail { max_diff: i32, first_mismatch: usize },
+    /// Feature disabled or golden unavailable.
+    Skipped,
+}
+
+impl Validation {
+    pub fn label(&self) -> String {
+        match self {
+            Validation::Pass { max_diff } => format!("pass(\u{0394}{max_diff})"),
+            Validation::Fail { max_diff, first_mismatch } => {
+                format!("FAIL(\u{0394}{max_diff}@{first_mismatch})")
+            }
+            Validation::Skipped => "-".to_string(),
+        }
+    }
+}
+
+/// Compare device output vs golden with a quantum tolerance
+/// (±1 covers the softmax f32-exp ulp difference; everything else is
+/// bit-exact — see DESIGN.md §1).
+pub fn compare_outputs(device: &[i8], golden: &[i8], atol: i32) -> Validation {
+    if device.len() != golden.len() {
+        return Validation::Fail {
+            max_diff: i32::MAX,
+            first_mismatch: device.len().min(golden.len()),
+        };
+    }
+    let mut max_diff = 0i32;
+    let mut first = None;
+    for (i, (&d, &g)) in device.iter().zip(golden).enumerate() {
+        let diff = (d as i32 - g as i32).abs();
+        if diff > max_diff {
+            max_diff = diff;
+        }
+        if diff > atol && first.is_none() {
+            first = Some(i);
+        }
+    }
+    match first {
+        None => Validation::Pass { max_diff },
+        Some(i) => Validation::Fail { max_diff, first_mismatch: i },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_known_features() {
+        let f = Features::parse(&["validate".into(), "autotvm".into()]).unwrap();
+        assert!(f.validate() && f.autotvm() && !f.usmp());
+        assert_eq!(f.names(), vec!["autotvm", "validate"]);
+    }
+
+    #[test]
+    fn unknown_feature_rejected() {
+        assert!(Features::parse(&["warp-drive".into()]).is_err());
+    }
+
+    #[test]
+    fn compare_exact_pass() {
+        let v = compare_outputs(&[1, 2, 3], &[1, 2, 3], 0);
+        assert_eq!(v, Validation::Pass { max_diff: 0 });
+    }
+
+    #[test]
+    fn compare_within_tolerance() {
+        let v = compare_outputs(&[1, 2, 4], &[1, 2, 3], 1);
+        assert_eq!(v, Validation::Pass { max_diff: 1 });
+    }
+
+    #[test]
+    fn compare_fail_reports_position() {
+        let v = compare_outputs(&[1, 9, 3], &[1, 2, 3], 1);
+        assert_eq!(v, Validation::Fail { max_diff: 7, first_mismatch: 1 });
+    }
+
+    #[test]
+    fn length_mismatch_fails() {
+        assert!(matches!(
+            compare_outputs(&[1], &[1, 2], 0),
+            Validation::Fail { .. }
+        ));
+    }
+}

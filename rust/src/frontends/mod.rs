@@ -1,0 +1,81 @@
+//! Frontends (paper §II-B1): resolve a model name or path into a
+//! loaded `Graph` during the **Load** stage. The only on-disk format is
+//! `.tmodel` (our TFLite-flatbuffer substitute, written by
+//! python/compile/zoo.py).
+
+pub mod tmodel;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::Graph;
+
+/// Resolve a model name ("aww") or explicit path ("/x/y.tmodel")
+/// against the model directories, then parse it.
+pub fn load_model(name_or_path: &str, model_dirs: &[PathBuf]) -> Result<Graph> {
+    let path = resolve(name_or_path, model_dirs)?;
+    let graph = tmodel::parse_file(&path)
+        .with_context(|| format!("loading {}", path.display()))?;
+    graph.validate()?;
+    Ok(graph)
+}
+
+/// Model lookup: explicit path wins; otherwise `<dir>/<name>.tmodel`
+/// over the search path.
+pub fn resolve(name_or_path: &str, model_dirs: &[PathBuf]) -> Result<PathBuf> {
+    let p = Path::new(name_or_path);
+    if p.extension().is_some() {
+        if p.is_file() {
+            return Ok(p.to_path_buf());
+        }
+        bail!("model file not found: {name_or_path}");
+    }
+    for dir in model_dirs {
+        let cand = dir.join(format!("{name_or_path}.tmodel"));
+        if cand.is_file() {
+            return Ok(cand);
+        }
+    }
+    bail!(
+        "model '{name_or_path}' not found in {:?} — run `make artifacts` \
+         to generate the zoo",
+        model_dirs
+    )
+}
+
+/// List models available in the search path (CLI `models ls`).
+pub fn list_models(model_dirs: &[PathBuf]) -> Vec<String> {
+    let mut names = Vec::new();
+    for dir in model_dirs {
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for e in entries.flatten() {
+                let p = e.path();
+                if p.extension().is_some_and(|x| x == "tmodel") {
+                    if let Some(stem) = p.file_stem() {
+                        names.push(stem.to_string_lossy().to_string());
+                    }
+                }
+            }
+        }
+    }
+    names.sort();
+    names.dedup();
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_missing_is_helpful() {
+        let err = resolve("nosuch", &[PathBuf::from("/tmp")]).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn resolve_explicit_path_must_exist() {
+        assert!(resolve("/does/not/exist.tmodel", &[]).is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Binary `.tmodel` parser — the rust half of the interchange format
+//! defined in python/compile/tmodel.py (see that file for the full
+//! layout). Little-endian throughout.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::graph::op::{Attrs, OpCode, OpNode};
+use crate::graph::{Graph, TensorInfo};
+use crate::tensor::DType;
+
+const MAGIC: &[u8; 4] = b"TMDL";
+const VERSION: u32 = 1;
+
+pub fn parse_file(path: &Path) -> Result<Graph> {
+    let raw = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse(&raw)
+}
+
+pub fn parse(raw: &[u8]) -> Result<Graph> {
+    let mut r = Reader { b: raw, i: 0 };
+    ensure!(r.bytes(4)? == MAGIC, "bad magic: not a TModel file");
+    let version = r.u32()?;
+    ensure!(version == VERSION, "unsupported TModel version {version}");
+    let name = r.string()?;
+    let n_tensors = r.u32()? as usize;
+    let n_ops = r.u32()? as usize;
+    ensure!(
+        n_tensors < 100_000 && n_ops < 100_000,
+        "implausible tensor/op counts"
+    );
+    let n_in = r.u32()? as usize;
+    let inputs: Vec<usize> =
+        (0..n_in).map(|_| r.u32().map(|x| x as usize)).collect::<Result<_>>()?;
+    let n_out = r.u32()? as usize;
+    let outputs: Vec<usize> =
+        (0..n_out).map(|_| r.u32().map(|x| x as usize)).collect::<Result<_>>()?;
+
+    let mut tensors = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        let tname = r.string()?;
+        let dtype = DType::from_u8(r.u8()?)?;
+        let ndim = r.u8()? as usize;
+        let shape: Vec<usize> =
+            (0..ndim).map(|_| r.u32().map(|x| x as usize)).collect::<Result<_>>()?;
+        let scale = r.f32()?;
+        let zero_point = r.i32()?;
+        let has_data = r.u8()?;
+        let data = if has_data == 1 {
+            let len = r.u64()? as usize;
+            let expected: usize =
+                shape.iter().product::<usize>() * dtype.size();
+            ensure!(
+                len == expected,
+                "{tname}: data len {len} != shape-implied {expected}"
+            );
+            Some(r.bytes(len)?.to_vec())
+        } else {
+            None
+        };
+        tensors.push(TensorInfo { name: tname, shape, dtype, scale, zero_point, data });
+    }
+
+    let mut ops = Vec::with_capacity(n_ops);
+    for _ in 0..n_ops {
+        let opcode = OpCode::from_u8(r.u8()?)?;
+        let oname = r.string()?;
+        let ni = r.u8()? as usize;
+        let op_in: Vec<usize> =
+            (0..ni).map(|_| r.u32().map(|x| x as usize)).collect::<Result<_>>()?;
+        let no = r.u8()? as usize;
+        let op_out: Vec<usize> =
+            (0..no).map(|_| r.u32().map(|x| x as usize)).collect::<Result<_>>()?;
+        let na = r.u8()? as usize;
+        let mut attrs = Attrs::new();
+        for _ in 0..na {
+            let klen = r.u8()? as usize;
+            let key = String::from_utf8(r.bytes(klen)?.to_vec())?;
+            let val = r.i64()?;
+            attrs.insert(key, val);
+        }
+        ops.push(OpNode { opcode, name: oname, inputs: op_in, outputs: op_out, attrs });
+    }
+
+    ensure!(r.i == raw.len(), "trailing bytes after model body");
+    Ok(Graph { name, tensors, ops, inputs, outputs })
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("truncated TModel at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn i32(&mut self) -> Result<i32> {
+        let b = self.bytes(4)?;
+        Ok(i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64> {
+        let b = self.bytes(8)?;
+        Ok(i64::from_le_bytes(b.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.bytes(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        ensure!(n < 1 << 20, "implausible string length {n}");
+        Ok(String::from_utf8(self.bytes(n)?.to_vec())?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serialize a minimal model by hand, matching the python writer.
+    fn tiny_bytes() -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend(MAGIC);
+        v.extend(1u32.to_le_bytes()); // version
+        v.extend(4u32.to_le_bytes());
+        v.extend(b"tiny");
+        v.extend(2u32.to_le_bytes()); // n_tensors
+        v.extend(1u32.to_le_bytes()); // n_ops
+        v.extend(1u32.to_le_bytes()); // n_inputs
+        v.extend(0u32.to_le_bytes());
+        v.extend(1u32.to_le_bytes()); // n_outputs
+        v.extend(1u32.to_le_bytes());
+        // tensor 0: input [1,4] i8 scale 0.5 zp 3, no data
+        v.extend(5u32.to_le_bytes());
+        v.extend(b"input");
+        v.push(0); // i8
+        v.push(2); // ndim
+        v.extend(1u32.to_le_bytes());
+        v.extend(4u32.to_le_bytes());
+        v.extend(0.5f32.to_le_bytes());
+        v.extend(3i32.to_le_bytes());
+        v.push(0); // no data
+        // tensor 1: out [1,4] i8
+        v.extend(3u32.to_le_bytes());
+        v.extend(b"out");
+        v.push(0);
+        v.push(2);
+        v.extend(1u32.to_le_bytes());
+        v.extend(4u32.to_le_bytes());
+        v.extend(0.25f32.to_le_bytes());
+        v.extend((-1i32).to_le_bytes());
+        v.push(0);
+        // op: SOFTMAX "sm" [0] -> [1], 0 attrs
+        v.push(7);
+        v.extend(2u32.to_le_bytes());
+        v.extend(b"sm");
+        v.push(1);
+        v.extend(0u32.to_le_bytes());
+        v.push(1);
+        v.extend(1u32.to_le_bytes());
+        v.push(0);
+        v
+    }
+
+    #[test]
+    fn parses_hand_built_model() {
+        let g = parse(&tiny_bytes()).unwrap();
+        assert_eq!(g.name, "tiny");
+        assert_eq!(g.tensors.len(), 2);
+        assert_eq!(g.tensors[0].shape, vec![1, 4]);
+        assert_eq!(g.tensors[0].zero_point, 3);
+        assert_eq!(g.ops[0].opcode, OpCode::Softmax);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_truncation_everywhere() {
+        let full = tiny_bytes();
+        // every strict prefix must fail cleanly, never panic
+        for cut in 0..full.len() {
+            assert!(parse(&full[..cut]).is_err(), "prefix {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let mut v = tiny_bytes();
+        v[0] = b'X';
+        assert!(parse(&v).is_err());
+        let mut v = tiny_bytes();
+        v[4] = 9;
+        assert!(parse(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut v = tiny_bytes();
+        v.push(0);
+        assert!(parse(&v).is_err());
+    }
+}

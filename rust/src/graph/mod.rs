@@ -1,0 +1,9 @@
+//! Model IR: the in-memory graph loaded from `.tmodel` files —
+//! quantized tensors plus a topologically-ordered op list. This is the
+//! substrate standing in for the TFLite flatbuffer schema.
+
+pub mod op;
+pub mod model;
+
+pub use model::{Graph, TensorInfo};
+pub use op::{Attrs, OpCode, OpNode, ACT_NONE, ACT_RELU, PAD_SAME, PAD_VALID};

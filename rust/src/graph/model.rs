@@ -1,0 +1,353 @@
+//! The model graph: tensors + ops, with validation and the size/MAC
+//! accounting that drives Table I and the cost models.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::tensor::{numel, DType};
+
+use super::op::{OpCode, OpNode};
+
+/// One tensor: quantization params and (for weights) constant data.
+#[derive(Debug, Clone)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub scale: f32,
+    pub zero_point: i32,
+    /// Raw little-endian constant data; `None` for activations.
+    pub data: Option<Vec<u8>>,
+}
+
+impl TensorInfo {
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn nbytes(&self) -> usize {
+        self.numel() * self.dtype.size()
+    }
+
+    pub fn is_const(&self) -> bool {
+        self.data.is_some()
+    }
+
+    /// Constant data as i8 (weights).
+    pub fn data_i8(&self) -> Result<&[i8]> {
+        ensure!(self.dtype == DType::I8, "{}: not i8", self.name);
+        let d = self.data.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("{}: no constant data", self.name)
+        })?;
+        // i8 and u8 have identical layout
+        Ok(unsafe { std::slice::from_raw_parts(d.as_ptr() as *const i8, d.len()) })
+    }
+
+    /// Constant data as i32 (biases).
+    pub fn data_i32(&self) -> Result<Vec<i32>> {
+        ensure!(self.dtype == DType::I32, "{}: not i32", self.name);
+        let d = self.data.as_ref().ok_or_else(|| {
+            anyhow::anyhow!("{}: no constant data", self.name)
+        })?;
+        ensure!(d.len() % 4 == 0);
+        Ok(d.chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// A loaded model: the rust-side equivalent of a TFLite flatbuffer.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub tensors: Vec<TensorInfo>,
+    pub ops: Vec<OpNode>,
+    pub inputs: Vec<usize>,
+    pub outputs: Vec<usize>,
+}
+
+impl Graph {
+    pub fn tensor(&self, id: usize) -> &TensorInfo {
+        &self.tensors[id]
+    }
+
+    /// Structural validation: ids in range, topological order, conv-like
+    /// ops carry weights+bias, and activations are i8.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.inputs.len() == 1, "exactly one input supported");
+        ensure!(self.outputs.len() == 1, "exactly one output supported");
+        let n = self.tensors.len();
+        let mut produced: Vec<bool> = vec![false; n];
+        for &i in &self.inputs {
+            ensure!(i < n, "input id {i} out of range");
+            produced[i] = true;
+        }
+        for op in &self.ops {
+            for &t in op.inputs.iter().chain(&op.outputs) {
+                ensure!(t < n, "op {}: tensor id {t} out of range", op.name);
+            }
+            for &t in &op.inputs {
+                ensure!(
+                    self.tensors[t].is_const() || produced[t],
+                    "op {}: input {} used before production (not topological)",
+                    op.name,
+                    self.tensors[t].name
+                );
+            }
+            if op.opcode.is_conv_like() {
+                ensure!(
+                    op.inputs.len() == 3,
+                    "op {}: conv-like needs [input, weights, bias]",
+                    op.name
+                );
+                ensure!(
+                    self.tensors[op.inputs[1]].is_const()
+                        && self.tensors[op.inputs[2]].is_const(),
+                    "op {}: weights/bias must be constant",
+                    op.name
+                );
+                ensure!(
+                    self.tensors[op.inputs[2]].dtype == DType::I32,
+                    "op {}: bias must be i32",
+                    op.name
+                );
+            }
+            for &t in &op.outputs {
+                ensure!(
+                    !self.tensors[t].is_const(),
+                    "op {}: writes to constant {}",
+                    op.name,
+                    self.tensors[t].name
+                );
+                produced[t] = true;
+            }
+        }
+        for &o in &self.outputs {
+            ensure!(produced[o], "output never produced");
+        }
+        self.check_shapes()?;
+        Ok(())
+    }
+
+    /// Shape inference checks: declared output shapes must match what
+    /// the op semantics produce (guards against malformed models).
+    fn check_shapes(&self) -> Result<()> {
+        use crate::tensor::conv_out;
+        for op in &self.ops {
+            let outs = &self.tensors[op.outputs[0]].shape;
+            match op.opcode {
+                OpCode::Conv2D => {
+                    let x = &self.tensors[op.inputs[0]].shape;
+                    let w = &self.tensors[op.inputs[1]].shape;
+                    ensure!(x.len() == 4 && w.len() == 4, "{}: rank", op.name);
+                    ensure!(w[3] == x[3], "{}: ic mismatch", op.name);
+                    let oh = conv_out(x[1], w[1], op.attr("stride_h")? as usize,
+                                      op.attr("padding")? as u8);
+                    let ow = conv_out(x[2], w[2], op.attr("stride_w")? as usize,
+                                      op.attr("padding")? as u8);
+                    ensure!(
+                        outs == &vec![1, oh, ow, w[0]],
+                        "{}: output shape {:?} != expected {:?}",
+                        op.name, outs, [1, oh, ow, w[0]]
+                    );
+                }
+                OpCode::DepthwiseConv2D => {
+                    let x = &self.tensors[op.inputs[0]].shape;
+                    let w = &self.tensors[op.inputs[1]].shape;
+                    ensure!(w[0] == 1 && w[3] == x[3], "{}: dw shape", op.name);
+                    let oh = conv_out(x[1], w[1], op.attr("stride_h")? as usize,
+                                      op.attr("padding")? as u8);
+                    let ow = conv_out(x[2], w[2], op.attr("stride_w")? as usize,
+                                      op.attr("padding")? as u8);
+                    ensure!(outs == &vec![1, oh, ow, x[3]], "{}: out", op.name);
+                }
+                OpCode::FullyConnected => {
+                    let x = &self.tensors[op.inputs[0]].shape;
+                    let w = &self.tensors[op.inputs[1]].shape;
+                    ensure!(w.len() == 2, "{}: fc weights rank", op.name);
+                    ensure!(
+                        x.last() == Some(&w[1]),
+                        "{}: fc in dim {:?} vs {:?}", op.name, x, w
+                    );
+                    ensure!(outs.last() == Some(&w[0]), "{}: fc out", op.name);
+                }
+                OpCode::Add => {
+                    let a = &self.tensors[op.inputs[0]].shape;
+                    let b = &self.tensors[op.inputs[1]].shape;
+                    ensure!(a == b && a == outs, "{}: add shapes", op.name);
+                }
+                OpCode::Reshape => {
+                    let a = numel(&self.tensors[op.inputs[0]].shape);
+                    ensure!(a == numel(outs), "{}: reshape numel", op.name);
+                }
+                OpCode::AvgPool2D | OpCode::MaxPool2D | OpCode::Softmax => {}
+            }
+        }
+        Ok(())
+    }
+
+    // -- Table I accounting ------------------------------------------------
+    /// Total bytes of constant data — the "quantized size".
+    pub fn weight_bytes(&self) -> usize {
+        self.tensors
+            .iter()
+            .filter(|t| t.is_const())
+            .map(|t| t.nbytes())
+            .sum()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.tensors
+            .iter()
+            .filter(|t| t.is_const())
+            .map(|t| t.numel())
+            .sum()
+    }
+
+    /// Multiply-accumulates per inference — the invoke-cost driver.
+    pub fn macs(&self) -> u64 {
+        let mut total = 0u64;
+        for op in &self.ops {
+            total += self.op_macs(op);
+        }
+        total
+    }
+
+    pub fn op_macs(&self, op: &OpNode) -> u64 {
+        match op.opcode {
+            OpCode::Conv2D => {
+                let w = &self.tensors[op.inputs[1]].shape;
+                let o = &self.tensors[op.outputs[0]].shape;
+                (o[1] * o[2] * w[0] * w[1] * w[2] * w[3]) as u64
+            }
+            OpCode::DepthwiseConv2D => {
+                let w = &self.tensors[op.inputs[1]].shape;
+                let o = &self.tensors[op.outputs[0]].shape;
+                (o[1] * o[2] * o[3] * w[1] * w[2]) as u64
+            }
+            OpCode::FullyConnected => {
+                numel(&self.tensors[op.inputs[1]].shape) as u64
+            }
+            _ => 0,
+        }
+    }
+
+    /// Largest activation tensor in bytes (RAM lower bound).
+    pub fn max_activation_bytes(&self) -> usize {
+        self.tensors
+            .iter()
+            .filter(|t| !t.is_const())
+            .map(|t| t.nbytes())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Ids of all non-constant tensors.
+    pub fn activation_ids(&self) -> Vec<usize> {
+        (0..self.tensors.len())
+            .filter(|&i| !self.tensors[i].is_const())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+pub mod testutil {
+    //! Tiny hand-built graphs for unit tests across the crate.
+    use super::*;
+    use crate::graph::op::*;
+
+    /// input[1,4,4,2] -> conv 3ch 3x3 SAME relu -> out[1,4,4,3]
+    pub fn tiny_conv() -> Graph {
+        let mut attrs = Attrs::new();
+        attrs.insert("stride_h".into(), 1);
+        attrs.insert("stride_w".into(), 1);
+        attrs.insert("padding".into(), PAD_SAME);
+        attrs.insert("fused_act".into(), ACT_RELU);
+        Graph {
+            name: "tiny_conv".into(),
+            tensors: vec![
+                TensorInfo {
+                    name: "input".into(),
+                    shape: vec![1, 4, 4, 2],
+                    dtype: DType::I8,
+                    scale: 0.5,
+                    zero_point: 0,
+                    data: None,
+                },
+                TensorInfo {
+                    name: "w".into(),
+                    shape: vec![3, 3, 3, 2],
+                    dtype: DType::I8,
+                    scale: 0.01,
+                    zero_point: 0,
+                    data: Some((0..54).map(|x| (x % 7) as u8).collect()),
+                },
+                TensorInfo {
+                    name: "b".into(),
+                    shape: vec![3],
+                    dtype: DType::I32,
+                    scale: 0.005,
+                    zero_point: 0,
+                    data: Some(vec![0; 12]),
+                },
+                TensorInfo {
+                    name: "out".into(),
+                    shape: vec![1, 4, 4, 3],
+                    dtype: DType::I8,
+                    scale: 0.25,
+                    zero_point: -128,
+                    data: None,
+                },
+            ],
+            ops: vec![OpNode {
+                opcode: OpCode::Conv2D,
+                name: "conv0".into(),
+                inputs: vec![0, 1, 2],
+                outputs: vec![3],
+                attrs,
+            }],
+            inputs: vec![0],
+            outputs: vec![3],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::tiny_conv;
+    use super::*;
+
+    #[test]
+    fn tiny_conv_validates() {
+        tiny_conv().validate().unwrap();
+    }
+
+    #[test]
+    fn accounting() {
+        let g = tiny_conv();
+        assert_eq!(g.param_count(), 54 + 3);
+        assert_eq!(g.weight_bytes(), 54 + 12);
+        assert_eq!(g.macs(), 4 * 4 * 3 * 3 * 3 * 2);
+        assert_eq!(g.max_activation_bytes(), 4 * 4 * 3);
+    }
+
+    #[test]
+    fn validation_catches_bad_topology() {
+        let mut g = tiny_conv();
+        g.ops[0].inputs[0] = 3; // op consumes its own output
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_shape_mismatch() {
+        let mut g = tiny_conv();
+        g.tensors[3].shape = vec![1, 5, 4, 3];
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_write_to_const() {
+        let mut g = tiny_conv();
+        g.ops[0].outputs[0] = 1; // writes to weights
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! Graph operations. The opcode registry mirrors
+//! python/compile/tmodel.py — keep the two in sync.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+pub const PAD_SAME: i64 = 0;
+pub const PAD_VALID: i64 = 1;
+pub const ACT_NONE: i64 = 0;
+pub const ACT_RELU: i64 = 1;
+
+/// Supported TinyML graph operations (the MLPerf-Tiny op set).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpCode {
+    Conv2D,
+    DepthwiseConv2D,
+    FullyConnected,
+    AvgPool2D,
+    MaxPool2D,
+    Add,
+    Reshape,
+    Softmax,
+}
+
+impl OpCode {
+    pub fn from_u8(x: u8) -> Result<OpCode> {
+        Ok(match x {
+            0 => OpCode::Conv2D,
+            1 => OpCode::DepthwiseConv2D,
+            2 => OpCode::FullyConnected,
+            3 => OpCode::AvgPool2D,
+            4 => OpCode::MaxPool2D,
+            5 => OpCode::Add,
+            6 => OpCode::Reshape,
+            7 => OpCode::Softmax,
+            _ => bail!("unknown opcode {x}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpCode::Conv2D => "CONV_2D",
+            OpCode::DepthwiseConv2D => "DEPTHWISE_CONV_2D",
+            OpCode::FullyConnected => "FULLY_CONNECTED",
+            OpCode::AvgPool2D => "AVG_POOL_2D",
+            OpCode::MaxPool2D => "MAX_POOL_2D",
+            OpCode::Add => "ADD",
+            OpCode::Reshape => "RESHAPE",
+            OpCode::Softmax => "SOFTMAX",
+        }
+    }
+
+    /// Ops that carry weights and dominate compute (Table IV's
+    /// invoke-instruction drivers).
+    pub fn is_conv_like(self) -> bool {
+        matches!(
+            self,
+            OpCode::Conv2D | OpCode::DepthwiseConv2D | OpCode::FullyConnected
+        )
+    }
+}
+
+/// Integer attribute map (stride_h, padding, fused_act, ...).
+pub type Attrs = BTreeMap<String, i64>;
+
+/// One operation node: opcode + tensor ids + attributes.
+#[derive(Debug, Clone)]
+pub struct OpNode {
+    pub opcode: OpCode,
+    pub name: String,
+    pub inputs: Vec<usize>,
+    pub outputs: Vec<usize>,
+    pub attrs: Attrs,
+}
+
+impl OpNode {
+    pub fn attr(&self, key: &str) -> Result<i64> {
+        self.attrs
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("op {}: missing attr {key}", self.name))
+    }
+
+    pub fn attr_or(&self, key: &str, default: i64) -> i64 {
+        self.attrs.get(key).copied().unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcode_roundtrip() {
+        for x in 0..8u8 {
+            let op = OpCode::from_u8(x).unwrap();
+            assert!(!op.name().is_empty());
+        }
+        assert!(OpCode::from_u8(42).is_err());
+    }
+
+    #[test]
+    fn conv_like_classification() {
+        assert!(OpCode::Conv2D.is_conv_like());
+        assert!(OpCode::FullyConnected.is_conv_like());
+        assert!(!OpCode::Softmax.is_conv_like());
+        assert!(!OpCode::Add.is_conv_like());
+    }
+}

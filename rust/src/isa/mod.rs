@@ -1,0 +1,177 @@
+//! Per-ISA cost models for the targets of Table II.
+//!
+//! The cost model maps a TinyIR `InstrMix` (expressed on the reference
+//! scalar RV32GC ISA, the one ETISS simulates) to instruction and
+//! cycle counts on each micro-architecture:
+//!
+//!   instructions = ref_instructions × instr_factor(class mix)
+//!   cycles       = instructions × CPI / dual_issue + memory stalls
+//!
+//! `instr_factor` captures compiler/ISA density differences the paper
+//! observes ("the used ARM compiler seems to be more sophisticated"):
+//! Thumb-2 with DSP MAC instructions needs fewer instructions per MAC
+//! than RV32GC; Xtensa LX6 sits in between.
+
+use crate::tinyir::InstrMix;
+
+/// One micro-architecture's cost parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct IsaModel {
+    pub name: &'static str,
+    /// Instruction-count factor vs the RV32GC reference, per class.
+    pub alu_factor: f64,
+    pub mul_factor: f64,
+    pub mem_factor: f64,
+    pub branch_factor: f64,
+    /// Cycles per (issued) instruction, before stalls.
+    pub cpi: f64,
+    /// Sustained issue width (Cortex-M7 is dual-issue: Table II).
+    pub issue_width: f64,
+}
+
+impl IsaModel {
+    /// Scale a reference-ISA instruction count by the class mix.
+    pub fn instructions(&self, per_unit: &InstrMix, units: f64) -> f64 {
+        units
+            * (per_unit.alu * self.alu_factor
+                + per_unit.mul * self.mul_factor
+                + (per_unit.load + per_unit.store) * self.mem_factor
+                + per_unit.branch * self.branch_factor)
+    }
+
+    /// Core cycles for an instruction count (no memory stalls).
+    pub fn core_cycles(&self, instructions: f64) -> f64 {
+        instructions * self.cpi / self.issue_width
+    }
+}
+
+/// RV32GC (ETISS reference) — by definition all factors are 1.
+pub const RV32GC: IsaModel = IsaModel {
+    name: "rv32gc",
+    alu_factor: 1.0,
+    mul_factor: 1.0,
+    mem_factor: 1.0,
+    branch_factor: 1.0,
+    cpi: 1.0,
+    issue_width: 1.0,
+};
+
+/// ESP32-C3: RV32IMC single-issue in-order @ 160 MHz. Same ISA family
+/// as the reference minus compressed-code effects (slightly denser).
+pub const RV32IMC_ESP32C3: IsaModel = IsaModel {
+    name: "rv32imc",
+    alu_factor: 1.0,
+    mul_factor: 1.0,
+    mem_factor: 1.0,
+    branch_factor: 1.05, // no compressed branch fusion
+    cpi: 1.0,
+    issue_width: 1.0,
+};
+
+/// STM32F4: Cortex-M4 @ 100 MHz. Thumb-2 + DSP (SMLABB etc.): MACs
+/// fold mul+add, LDRD pairs loads — ~0.72× the RV32 instruction count
+/// for kernel loops (fits Table V: aww NCHW 0.220 s @100 MHz vs
+/// esp32c3 0.113 s @160 MHz).
+pub const CORTEX_M4: IsaModel = IsaModel {
+    name: "cortex-m4",
+    alu_factor: 0.70,
+    mul_factor: 0.55, // MLA/SMLA fold multiply-accumulate
+    mem_factor: 0.80,
+    branch_factor: 0.85,
+    cpi: 1.08, // occasional pipeline bubbles
+    issue_width: 1.0,
+};
+
+/// STM32F7: Cortex-M7 @ 216 MHz, dual-issue in-order (Table II notes
+/// "dual issue"): best latency row of Table V throughout.
+pub const CORTEX_M7: IsaModel = IsaModel {
+    name: "cortex-m7",
+    alu_factor: 0.70,
+    mul_factor: 0.55,
+    mem_factor: 0.80,
+    branch_factor: 0.85,
+    cpi: 1.0,
+    issue_width: 1.55, // sustained dual-issue on kernel loops
+};
+
+/// ESP32: Xtensa LX6 @ 240 MHz. Dense 16/24-bit encodings, MUL16;
+/// clocked 50 % above the esp32c3 — "similar or better performance in
+/// most of the rows" (paper §III-C) comes from the clock.
+pub const XTENSA_LX6: IsaModel = IsaModel {
+    name: "xtensa-lx6",
+    alu_factor: 0.95,
+    mul_factor: 0.85,
+    mem_factor: 1.0,
+    branch_factor: 1.0,
+    cpi: 1.05,
+    issue_width: 1.0,
+};
+
+pub fn by_name(name: &str) -> Option<&'static IsaModel> {
+    match name {
+        "rv32gc" => Some(&RV32GC),
+        "rv32imc" => Some(&RV32IMC_ESP32C3),
+        "cortex-m4" => Some(&CORTEX_M4),
+        "cortex-m7" => Some(&CORTEX_M7),
+        "xtensa-lx6" => Some(&XTENSA_LX6),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MIX: InstrMix = InstrMix { alu: 4.0, mul: 1.0, load: 3.0, store: 0.5, branch: 1.0 };
+
+    #[test]
+    fn reference_is_identity() {
+        let i = RV32GC.instructions(&MIX, 1000.0);
+        assert!((i - 1000.0 * MIX.total()).abs() < 1e-9);
+        assert_eq!(RV32GC.core_cycles(100.0), 100.0);
+    }
+
+    #[test]
+    fn arm_denser_than_riscv() {
+        let rv = RV32GC.instructions(&MIX, 1e6);
+        let m4 = CORTEX_M4.instructions(&MIX, 1e6);
+        assert!(m4 < 0.85 * rv, "m4 {m4} vs rv {rv}");
+    }
+
+    #[test]
+    fn m7_faster_than_m4_per_instruction() {
+        let i = 1e6;
+        assert!(CORTEX_M7.core_cycles(i) < 0.75 * CORTEX_M4.core_cycles(i));
+    }
+
+    #[test]
+    fn table5_aww_nchw_cross_target_shape() {
+        // aww NCHW untuned: c3 0.113s@160MHz, f4 0.220s@100MHz,
+        // f7 0.043s@216MHz — check relative ordering with a
+        // representative conv mix (~9.2 ref instr/MAC, 2.66M MACs)
+        let macs = 2.66e6;
+        let mix = crate::calib::TVM_CONV_NCHW_PER_MAC;
+        let time = |isa: &IsaModel, mhz: f64| {
+            isa.core_cycles(isa.instructions(&mix, macs)) / (mhz * 1e6)
+        };
+        let c3 = time(&RV32IMC_ESP32C3, 160.0);
+        let f4 = time(&CORTEX_M4, 100.0);
+        let f7 = time(&CORTEX_M7, 216.0);
+        let lx6 = time(&XTENSA_LX6, 240.0);
+        // paper ordering: f7 << c3 < lx6? (0.125) < f4 hmm: c3 0.113,
+        // lx6 0.125, f4 0.220 — check the ordering we can claim:
+        assert!(f7 < c3 && f7 < f4 && f7 < lx6, "f7 fastest");
+        assert!(f4 > c3, "f4 slower than c3 (100 vs 160 MHz)");
+        // ratios within 2x of the paper's
+        assert!((0.3..1.2).contains(&(c3 / f4)), "c3/f4 {}", c3 / f4);
+        assert!((0.15..0.45).contains(&(f7 / f4)), "f7/f4 {}", f7 / f4);
+    }
+
+    #[test]
+    fn registry() {
+        for n in ["rv32gc", "rv32imc", "cortex-m4", "cortex-m7", "xtensa-lx6"] {
+            assert_eq!(by_name(n).unwrap().name, n);
+        }
+        assert!(by_name("z80").is_none());
+    }
+}

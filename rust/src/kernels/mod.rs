@@ -1,0 +1,345 @@
+//! Kernel-library code generation: computes the `LoopCost` descriptor
+//! and packs constants for each graph op, for the two kernel libraries
+//! the paper compares:
+//!
+//!   * `TflmRef` — TFLite-Micro reference kernels (portable nested
+//!     loops, per-element offset math; both tflmi and tflmc loop over
+//!     the same kernels, which is why their invoke counts are equal in
+//!     Table IV).
+//!   * `Tvm(schedule)` — TVM-generated kernels under a `Schedule`
+//!     (family × layout × knobs), GEMM-ified convs.
+//!
+//! The *numerics* of every kernel are identical (and identical to the
+//! Pallas/JAX golden path); libraries differ only in cost, memory and
+//! code-size characteristics — exactly the paper's framing.
+
+use crate::calib;
+use crate::graph::{Graph, OpNode};
+use crate::schedules::Schedule;
+use crate::tinyir::{InstrMix, LoopCost, WeightStream};
+
+/// Which kernel implementations a backend links.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelLib {
+    TflmRef,
+    Tvm(Schedule),
+}
+
+impl KernelLib {
+    pub fn is_tvm(&self) -> bool {
+        matches!(self, KernelLib::Tvm(_))
+    }
+
+    pub fn schedule(&self) -> Option<Schedule> {
+        match self {
+            KernelLib::Tvm(s) => Some(*s),
+            KernelLib::TflmRef => None,
+        }
+    }
+}
+
+/// Conv2D cost under a kernel library.
+///
+/// Dimensions: output `oh×ow×oc`, kernel `kh×kw×ic`.
+pub fn conv2d_cost(
+    lib: KernelLib,
+    ih: usize, iw: usize,
+    oh: usize, ow: usize, oc: usize,
+    kh: usize, kw: usize, ic: usize,
+) -> LoopCost {
+    let macs = (oh * ow * oc * kh * kw * ic) as u64;
+    let out_elems = (oh * ow * oc) as u64;
+    let weight_bytes = (kh * kw * ic * oc) as u64;
+    match lib {
+        KernelLib::TflmRef => LoopCost {
+            macs,
+            out_elems,
+            per_mac: calib::TFLM_CONV_PER_MAC,
+            per_out: calib::REQUANT_PER_OUT,
+            fixed: calib::CALL_FIXED,
+            // reference kernels walk OHWI weights row-contiguously per
+            // output pixel: full-layer window, but instruction counting
+            // (ETISS) is what Table IV uses for TFLM anyway.
+            weights: WeightStream {
+                bytes_streamed: macs, // one weight byte per MAC
+                reuse_window: weight_bytes,
+                contiguous: true,
+            },
+            code_bytes: 0, // charged per kernel *type* by the backend
+            workspace: 0,
+        },
+        KernelLib::Tvm(s) => {
+            let tile_oh = if s.knobs.tile_oh == 0 { oh } else { s.knobs.tile_oh.min(oh) };
+            // bytes streamed from flash per inference:
+            //  - packed NCHWc blocks are re-fetched once per spatial
+            //    tile pass (bounded: blocks stay line-resident)
+            //  - strided NHWC walks touch one weight byte per MAC —
+            //    the flash-thrash driver on SPI-cached targets when
+            //    the reuse window outgrows the (conflict-degraded)
+            //    cache (mcu/memsys.rs)
+            let passes = (oh as u64).div_ceil(tile_oh as u64);
+            let bytes_streamed = if s.weights_contiguous() {
+                weight_bytes * passes.min(4)
+            } else {
+                macs
+            };
+            let elem = if s.legalizes_to_i16() { 2 } else { 1 };
+            // workspace: the x86 NHWC conv schedule materializes a
+            // PaddedInput copy of the whole feature map (TVM's
+            // conv2d_nhwc pad stage); NCHW keeps a small line block
+            let workspace = match s.layout {
+                crate::schedules::Layout::Nhwc => {
+                    (ih + kh - 1) * (iw + kw - 1) * ic * elem
+                }
+                crate::schedules::Layout::Nchw => {
+                    tile_oh.min(8) * ow * ic.min(32) * elem
+                }
+            };
+            LoopCost {
+                macs,
+                out_elems,
+                per_mac: conv_mix(s),
+                per_out: calib::REQUANT_PER_OUT,
+                fixed: calib::CALL_FIXED,
+                weights: WeightStream {
+                    bytes_streamed,
+                    reuse_window: s.conv_reuse_window(kh, kw, ic, oc),
+                    contiguous: s.weights_contiguous(),
+                },
+                code_bytes: tvm_conv_code_bytes(s),
+                workspace,
+            }
+        }
+    }
+}
+
+fn conv_mix(s: Schedule) -> InstrMix {
+    s.conv_per_mac()
+}
+
+/// x86-NHWC conv bodies are aggressively unrolled for SIMD → large
+/// per-instance code; NCHW tiled bodies are compact.
+fn tvm_conv_code_bytes(s: Schedule) -> u64 {
+    use crate::schedules::{Family, Layout};
+    match (s.family, s.layout) {
+        (Family::DefaultX86, Layout::Nhwc) => 9_000,
+        (Family::Arm, Layout::Nhwc) => 6_000,
+        _ => calib::TVM_KERNEL_CODE_PER_INSTANCE,
+    }
+}
+
+/// Depthwise conv cost.
+pub fn dwconv2d_cost(
+    lib: KernelLib,
+    oh: usize, ow: usize, c: usize,
+    kh: usize, kw: usize,
+) -> LoopCost {
+    let macs = (oh * ow * c * kh * kw) as u64;
+    let out_elems = (oh * ow * c) as u64;
+    let weight_bytes = (kh * kw * c) as u64;
+    let (per_mac, code, workspace) = match lib {
+        KernelLib::TflmRef => (calib::TFLM_DWCONV_PER_MAC, 0, 0),
+        KernelLib::Tvm(s) => {
+            let elem = if s.legalizes_to_i16() { 2 } else { 1 };
+            (
+                s.dwconv_per_mac(),
+                tvm_conv_code_bytes(s) / 2,
+                kh * kw * c.min(64) * elem,
+            )
+        }
+    };
+    LoopCost {
+        macs,
+        out_elems,
+        per_mac,
+        per_out: calib::REQUANT_PER_OUT,
+        fixed: calib::CALL_FIXED,
+        // dw weights are tiny (kh*kw*c) — always cache-resident
+        weights: WeightStream {
+            bytes_streamed: weight_bytes,
+            reuse_window: weight_bytes,
+            contiguous: true,
+        },
+        code_bytes: code,
+        workspace,
+    }
+}
+
+/// Fully-connected cost.
+pub fn dense_cost(lib: KernelLib, batch: usize, in_n: usize, out_n: usize) -> LoopCost {
+    let macs = (batch * in_n * out_n) as u64;
+    let out_elems = (batch * out_n) as u64;
+    let (per_mac, code) = match lib {
+        KernelLib::TflmRef => (calib::TFLM_DENSE_PER_MAC, 0),
+        KernelLib::Tvm(s) => (s.dense_per_mac(), calib::TVM_KERNEL_CODE_PER_INSTANCE),
+    };
+    LoopCost {
+        macs,
+        out_elems,
+        per_mac,
+        per_out: calib::REQUANT_PER_OUT,
+        fixed: calib::CALL_FIXED,
+        // dense weights are streamed exactly once (no reuse across
+        // outputs of a single inference)
+        weights: WeightStream {
+            bytes_streamed: (in_n * out_n) as u64,
+            reuse_window: 0,
+            contiguous: true,
+        },
+        code_bytes: code,
+        workspace: 0,
+    }
+}
+
+/// Pooling cost (window elements dominate).
+pub fn pool_cost(ih_elems: u64, out_elems: u64) -> LoopCost {
+    LoopCost {
+        macs: 0,
+        out_elems,
+        per_mac: InstrMix::default(),
+        per_out: calib::REQUANT_PER_OUT.add(&calib::POOL_PER_ELEM.scale(
+            (ih_elems as f64 / out_elems.max(1) as f64).max(1.0),
+        )),
+        fixed: calib::CALL_FIXED,
+        weights: WeightStream::none(),
+        code_bytes: 600,
+        workspace: 0,
+    }
+}
+
+/// Elementwise add cost.
+pub fn add_cost(elems: u64) -> LoopCost {
+    LoopCost {
+        macs: 0,
+        out_elems: elems,
+        per_mac: InstrMix::default(),
+        per_out: calib::ADD_PER_ELEM,
+        fixed: calib::CALL_FIXED,
+        weights: WeightStream::none(),
+        code_bytes: 450,
+        workspace: 0,
+    }
+}
+
+/// Softmax cost.
+pub fn softmax_cost(elems: u64) -> LoopCost {
+    LoopCost {
+        macs: 0,
+        out_elems: elems,
+        per_mac: InstrMix::default(),
+        per_out: calib::SOFTMAX_PER_ELEM,
+        fixed: calib::CALL_FIXED,
+        weights: WeightStream::none(),
+        code_bytes: 900,
+        workspace: 0,
+    }
+}
+
+/// Copy / reshape cost.
+pub fn copy_cost(elems: u64) -> LoopCost {
+    LoopCost {
+        macs: 0,
+        out_elems: elems,
+        per_mac: InstrMix::default(),
+        per_out: calib::COPY_PER_ELEM,
+        fixed: calib::CALL_FIXED / 3.0,
+        weights: WeightStream::none(),
+        code_bytes: 120,
+        workspace: 0,
+    }
+}
+
+/// Layout/dtype transform cost (TVM legalization copies).
+pub fn transform_cost(elems: u64) -> LoopCost {
+    LoopCost {
+        macs: 0,
+        out_elems: elems,
+        per_mac: InstrMix::default(),
+        per_out: calib::TRANSFORM_PER_ELEM,
+        fixed: calib::CALL_FIXED / 2.0,
+        weights: WeightStream::none(),
+        code_bytes: 350,
+        workspace: 0,
+    }
+}
+
+/// Distinct conv-like kernel *types* in a graph (TFLM links one
+/// reference kernel per type — ROM model).
+pub fn distinct_kernel_types(g: &Graph) -> usize {
+    let mut set = std::collections::BTreeSet::new();
+    for op in &g.ops {
+        set.insert(op.opcode.name());
+    }
+    set.len()
+}
+
+/// Workspace-free MAC count of one op (used by tuner heuristics).
+pub fn op_macs(g: &Graph, op: &OpNode) -> u64 {
+    g.op_macs(op)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedules::{Family, Layout};
+
+    #[test]
+    fn table4_invoke_shape_tflm_vs_tvm() {
+        // aww-scale conv: tflm must be ~5-7x tvm-nchw per Table IV
+        let tflm = conv2d_cost(KernelLib::TflmRef, 25, 5, 25, 5, 64, 1, 1, 64);
+        let tvm = conv2d_cost(
+            KernelLib::Tvm(Schedule::new(Family::DefaultX86, Layout::Nchw)),
+            25, 5, 25, 5, 64, 1, 1, 64,
+        );
+        assert_eq!(tflm.macs, tvm.macs);
+        let r = tflm.ref_instructions() as f64 / tvm.ref_instructions() as f64;
+        assert!((4.0..8.0).contains(&r), "ratio {r}");
+    }
+
+    #[test]
+    fn identical_invoke_for_tflm_backends_is_by_construction() {
+        // tflmi and tflmc share kernels — cost comes from the same fn
+        let a = conv2d_cost(KernelLib::TflmRef, 4, 4, 4, 4, 8, 3, 3, 8);
+        let b = conv2d_cost(KernelLib::TflmRef, 4, 4, 4, 4, 8, 3, 3, 8);
+        assert_eq!(a.ref_instructions(), b.ref_instructions());
+    }
+
+    #[test]
+    fn nhwc_workspace_exceeds_nchw() {
+        let nhwc = conv2d_cost(
+            KernelLib::Tvm(Schedule::new(Family::DefaultX86, Layout::Nhwc)),
+            48, 48, 48, 48, 16, 3, 3, 8,
+        );
+        let nchw = conv2d_cost(
+            KernelLib::Tvm(Schedule::new(Family::DefaultX86, Layout::Nchw)),
+            48, 48, 48, 48, 16, 3, 3, 8,
+        );
+        assert!(nhwc.workspace > 4 * nchw.workspace);
+    }
+
+    #[test]
+    fn nhwc_reuse_window_is_whole_layer() {
+        let s = Schedule::new(Family::DefaultX86, Layout::Nhwc);
+        let c = conv2d_cost(KernelLib::Tvm(s), 32, 32, 32, 32, 64, 3, 3, 64);
+        assert_eq!(c.weights.reuse_window, 3 * 3 * 64 * 64);
+        assert!(!c.weights.contiguous);
+        let nchw = Schedule::new(Family::DefaultX86, Layout::Nchw);
+        let c2 = conv2d_cost(KernelLib::Tvm(nchw), 32, 32, 32, 32, 64, 3, 3, 64);
+        assert!(c2.weights.reuse_window <= 3 * 3 * 64 * 8);
+        assert!(c2.weights.contiguous);
+    }
+
+    #[test]
+    fn dense_stream_once() {
+        let c = dense_cost(KernelLib::TflmRef, 1, 640, 128);
+        assert_eq!(c.weights.bytes_streamed, 640 * 128);
+        assert_eq!(c.macs, 640 * 128);
+    }
+
+    #[test]
+    fn dwconv_weights_always_resident() {
+        let s = Schedule::new(Family::DefaultX86, Layout::Nhwc);
+        let c = dwconv2d_cost(KernelLib::Tvm(s), 24, 24, 40, 3, 3);
+        assert!(c.weights.reuse_window < 32 * 1024);
+    }
+}

@@ -1,0 +1,62 @@
+//! # mlonmcu — TinyML benchmarking with fast retargeting
+//!
+//! A from-scratch reproduction of *"MLonMCU: TinyML Benchmarking with
+//! Fast Retargeting"* (van Kempen et al., 2023) as a three-layer
+//! rust + JAX + Pallas stack. This crate is Layer 3: the benchmarking
+//! coordinator — session/run flow, backends, targets, platforms,
+//! features, postprocesses and reports — plus every substrate the
+//! paper's evaluation depends on (virtual MCUs, an instruction-set
+//! simulator, TFLM/TVM-like code generators, an AutoTVM-like tuner).
+//!
+//! See DESIGN.md for the system inventory and the experiment index
+//! mapping each paper table/figure to a module and bench target.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use mlonmcu::prelude::*;
+//!
+//! let env = Environment::discover().unwrap();
+//! let mut session = Session::new(&env).unwrap();
+//! let matrix = RunMatrix::new()
+//!     .models(["aww"])
+//!     .backends(["tvmaot"])
+//!     .targets(["etiss"]);
+//! let report = session.run_matrix(&matrix, 1).unwrap();
+//! println!("{}", report.to_markdown());
+//! ```
+
+pub mod util;
+pub mod data;
+pub mod tensor;
+pub mod graph;
+pub mod frontends;
+pub mod tinyir;
+pub mod kernels;
+pub mod schedules;
+pub mod backends;
+pub mod calib;
+pub mod isa;
+pub mod mcu;
+pub mod platform;
+pub mod targets;
+pub mod tuner;
+pub mod runtime;
+pub mod features;
+pub mod session;
+pub mod postprocess;
+pub mod report;
+pub mod config;
+pub mod cli;
+pub mod prop;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::backends::{Backend, BuildResult};
+    pub use crate::config::Environment;
+    pub use crate::frontends::load_model;
+    pub use crate::graph::Graph;
+    pub use crate::report::Report;
+    pub use crate::session::{RunMatrix, Session};
+    pub use crate::targets::Target;
+}

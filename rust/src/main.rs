@@ -1,0 +1,13 @@
+//! mlonmcu binary — leader entrypoint. See `cli` for the command
+//! surface and README.md for usage.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match mlonmcu::cli::main_with_args(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

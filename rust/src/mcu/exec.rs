@@ -1,0 +1,475 @@
+//! The TinyIR executor: numerically runs a program against simulated
+//! memory while accounting instructions (per-ISA) and cycles (core +
+//! memory stalls).
+//!
+//! Numerics are bit-identical to the JAX/Pallas golden path
+//! (python/compile/): int32 accumulation, f64-multiplier requantization
+//! with round-half-even, zero-point padding. The single exception is
+//! softmax (f32 `exp` may differ by 1 ulp across libms), which the
+//! validate feature covers with ±1 quantum tolerance.
+
+use anyhow::{bail, Result};
+
+use crate::mcu::{McuMemory, McuSpec};
+use crate::tinyir::*;
+use crate::util::round_half_even;
+
+/// Execution options.
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOpts {
+    /// Compute real values (Run stage) or account cost only (the
+    /// tuner's measure loop — numerics are data-independent).
+    pub compute: bool,
+}
+
+impl Default for ExecOpts {
+    fn default() -> Self {
+        ExecOpts { compute: true }
+    }
+}
+
+/// Accounting result of one invocation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    /// Reference-ISA (RV32GC) instruction count — what ETISS reports.
+    pub ref_instructions: u64,
+    /// Target-ISA instruction count.
+    pub instructions: u64,
+    /// Core cycles (CPI / dual-issue applied).
+    pub core_cycles: f64,
+    /// Memory-system stall cycles (flash weight streaming).
+    pub stall_cycles: f64,
+}
+
+impl ExecStats {
+    pub fn total_cycles(&self) -> f64 {
+        self.core_cycles + self.stall_cycles
+    }
+
+    /// Wall-clock seconds at the target clock.
+    pub fn seconds(&self, clock_mhz: f64) -> f64 {
+        self.total_cycles() / (clock_mhz * 1e6)
+    }
+}
+
+#[inline]
+fn requant(acc: i64, rq: &Requant) -> i32 {
+    let y = round_half_even(acc as f64 * rq.multiplier) + rq.zp_out as f64;
+    let lo = if rq.act == 1 { rq.zp_out.max(-128) } else { -128 };
+    (y as i64).clamp(lo as i64, 127) as i32
+}
+
+/// Account one call on the target micro-architecture.
+fn account(call: &KernelCall, spec: &McuSpec, stats: &mut ExecStats) {
+    let c = &call.cost;
+    stats.ref_instructions += c.ref_instructions();
+    let isa = spec.isa;
+    let instr = isa.instructions(&c.per_mac, c.macs as f64)
+        + isa.instructions(&c.per_out, c.out_elems as f64)
+        + c.fixed;
+    stats.instructions += instr as u64;
+    stats.core_cycles += isa.core_cycles(instr);
+    stats.stall_cycles += spec.memsys.weight_stall_cycles(&c.weights);
+}
+
+/// Run the program once. Returns the int8 output vector (empty when
+/// `opts.compute` is false) and the accounting stats.
+pub fn execute(
+    p: &Program,
+    spec: &McuSpec,
+    input: &[i8],
+    opts: ExecOpts,
+) -> Result<(Vec<i8>, ExecStats)> {
+    let mut stats = ExecStats::default();
+    if !opts.compute {
+        for call in &p.calls {
+            account(call, spec, &mut stats);
+        }
+        return Ok((Vec::new(), stats));
+    }
+
+    let mut mem = McuMemory::for_program(p)?;
+    mem.write_input(p, input)?;
+
+    for call in &p.calls {
+        account(call, spec, &mut stats);
+        run_call(p, call, &mut mem)?;
+    }
+    Ok((mem.read_output(p), stats))
+}
+
+fn in_buf(call: &KernelCall, i: usize) -> Result<BufId> {
+    match call.inputs.get(i) {
+        Some(Operand::Buf(id)) => Ok(*id),
+        other => bail!("call {}: expected buffer operand, got {other:?}", call.origin),
+    }
+}
+
+fn run_call(p: &Program, call: &KernelCall, mem: &mut McuMemory) -> Result<()> {
+    match &call.kind {
+        KernelKind::Conv2D {
+            ih, iw, ic, oh, ow, oc, kh, kw, stride, padding,
+            channels_first, requant: rq,
+        } => {
+            let x = in_buf(call, 0)?;
+            let w = &p.consts[call.consts[0]];
+            let bias = const_i32(p, call.consts[1]);
+            let (pt, pl) = pads(*ih, *iw, *kh, *kw, stride.0, stride.1, *padding);
+            let wd = &w.data;
+            // §Perf: widen the input once and subtract the zero point
+            // up front — the inner loop then reads a flat i32 slice
+            // instead of paying buffer-meta + dtype dispatch per MAC
+            let mut xin = mem.read_all(p, x);
+            for v in xin.iter_mut() {
+                *v -= rq.zp_in;
+            }
+            // §Perf iteration 2: loop interchange — accumulate all
+            // output channels of one pixel together so weight-matrix
+            // rows are read contiguously (GEMM row order), instead of
+            // striding by `oc` per MAC
+            let mut acc = vec![0i64; *oc];
+            for oy in 0..*oh {
+                for ox in 0..*ow {
+                    let out_base = ((oy * ow) + ox) * oc;
+                    for (co, a) in acc.iter_mut().enumerate() {
+                        *a = bias[co] as i64;
+                    }
+                    for ky in 0..*kh {
+                        let iy = (oy * stride.0 + ky) as isize - pt as isize;
+                        if iy < 0 || iy >= *ih as isize {
+                            continue;
+                        }
+                        for kx in 0..*kw {
+                            let ix = (ox * stride.1 + kx) as isize - pl as isize;
+                            if ix < 0 || ix >= *iw as isize {
+                                continue;
+                            }
+                            let base = ((iy as usize * iw) + ix as usize) * ic;
+                            let xrow = &xin[base..base + ic];
+                            // packed weight matrix row order: (ky,kx,ci)
+                            // for NHWC, (ci,ky,kx) for NCHW; cols = oc
+                            for (ci, &xv) in xrow.iter().enumerate() {
+                                if xv == 0 {
+                                    continue; // zp-padding fast path
+                                }
+                                let row = if *channels_first {
+                                    ci * kh * kw + ky * kw + kx
+                                } else {
+                                    (ky * kw + kx) * ic + ci
+                                };
+                                let wrow = &wd[row * oc..(row + 1) * oc];
+                                let xv = xv as i64;
+                                for (a, &wv) in acc.iter_mut().zip(wrow) {
+                                    *a += xv * (wv as i8 as i64);
+                                }
+                            }
+                        }
+                    }
+                    for (co, &a) in acc.iter().enumerate() {
+                        mem.store(p, call.output, out_base + co, requant(a, rq));
+                    }
+                }
+            }
+        }
+        KernelKind::DwConv2D {
+            ih, iw, c, oh, ow, kh, kw, stride, padding, requant: rq,
+        } => {
+            let x = in_buf(call, 0)?;
+            let w = &p.consts[call.consts[0]];
+            let bias = const_i32(p, call.consts[1]);
+            let (pt, pl) = pads(*ih, *iw, *kh, *kw, stride.0, stride.1, *padding);
+            let mut xin = mem.read_all(p, x);
+            for v in xin.iter_mut() {
+                *v -= rq.zp_in;
+            }
+            // §Perf iteration 3: channel-vector accumulation — both
+            // the input row and the 1HWC weight row are contiguous
+            // over channels, so the tap loop vectorizes
+            let mut acc = vec![0i64; *c];
+            for oy in 0..*oh {
+                for ox in 0..*ow {
+                    let out_base = ((oy * ow) + ox) * c;
+                    for (ch, a) in acc.iter_mut().enumerate() {
+                        *a = bias[ch] as i64;
+                    }
+                    for ky in 0..*kh {
+                        let iy = (oy * stride.0 + ky) as isize - pt as isize;
+                        if iy < 0 || iy >= *ih as isize {
+                            continue;
+                        }
+                        for kx in 0..*kw {
+                            let ix = (ox * stride.1 + kx) as isize - pl as isize;
+                            if ix < 0 || ix >= *iw as isize {
+                                continue;
+                            }
+                            let base = ((iy as usize * iw) + ix as usize) * c;
+                            let xrow = &xin[base..base + c];
+                            // weights stored 1HWC: [ky][kx][·]
+                            let wrow = &w.data[(ky * kw + kx) * c..(ky * kw + kx + 1) * c];
+                            for ((a, &xv), &wv) in
+                                acc.iter_mut().zip(xrow).zip(wrow)
+                            {
+                                *a += xv as i64 * (wv as i8 as i64);
+                            }
+                        }
+                    }
+                    for (ch, &a) in acc.iter().enumerate() {
+                        mem.store(p, call.output, out_base + ch, requant(a, rq));
+                    }
+                }
+            }
+        }
+        KernelKind::Dense { batch, in_n, out_n, requant: rq } => {
+            let x = in_buf(call, 0)?;
+            let w = &p.consts[call.consts[0]]; // [out, in] row-major
+            let bias = const_i32(p, call.consts[1]);
+            let mut xin = mem.read_all(p, x);
+            for v in xin.iter_mut() {
+                *v -= rq.zp_in;
+            }
+            for b in 0..*batch {
+                let xrow = &xin[b * in_n..(b + 1) * in_n];
+                for o in 0..*out_n {
+                    let wrow = &w.data[o * in_n..(o + 1) * in_n];
+                    let mut acc = bias[o] as i64;
+                    for (xv, wv) in xrow.iter().zip(wrow) {
+                        acc += *xv as i64 * (*wv as i8 as i64);
+                    }
+                    mem.store(p, call.output, b * out_n + o, requant(acc, rq));
+                }
+            }
+        }
+        KernelKind::AvgPool2D { ih: _, iw, c, oh, ow, fh, fw, stride } => {
+            let x = in_buf(call, 0)?;
+            let count = (fh * fw) as f64;
+            for oy in 0..*oh {
+                for ox in 0..*ow {
+                    for ch in 0..*c {
+                        let mut sum = 0i64;
+                        for ky in 0..*fh {
+                            for kx in 0..*fw {
+                                let iy = oy * stride.0 + ky;
+                                let ix = ox * stride.1 + kx;
+                                sum += mem.load(p, x, ((iy * iw) + ix) * c + ch)
+                                    as i64;
+                            }
+                        }
+                        let v = round_half_even(sum as f64 / count)
+                            .clamp(-128.0, 127.0) as i32;
+                        mem.store(p, call.output, ((oy * ow) + ox) * c + ch, v);
+                    }
+                }
+            }
+        }
+        KernelKind::MaxPool2D { ih: _, iw, c, oh, ow, fh, fw, stride } => {
+            let x = in_buf(call, 0)?;
+            for oy in 0..*oh {
+                for ox in 0..*ow {
+                    for ch in 0..*c {
+                        let mut m = i32::MIN;
+                        for ky in 0..*fh {
+                            for kx in 0..*fw {
+                                let iy = oy * stride.0 + ky;
+                                let ix = ox * stride.1 + kx;
+                                m = m.max(mem.load(p, x, ((iy * iw) + ix) * c + ch));
+                            }
+                        }
+                        mem.store(p, call.output, ((oy * ow) + ox) * c + ch, m);
+                    }
+                }
+            }
+        }
+        KernelKind::Add { elems, s_a, zp_a, s_b, zp_b, s_o, zp_o, act } => {
+            let a = in_buf(call, 0)?;
+            let b = in_buf(call, 1)?;
+            for i in 0..*elems {
+                let fa = (mem.load(p, a, i) - zp_a) as f64 * (s_a / s_o);
+                let fb = (mem.load(p, b, i) - zp_b) as f64 * (s_b / s_o);
+                let y = round_half_even(fa + fb) + *zp_o as f64;
+                let lo = if *act == 1 { *zp_o } else { -128 };
+                let v = (y as i64).clamp(lo as i64, 127) as i32;
+                mem.store(p, call.output, i, v);
+            }
+        }
+        KernelKind::Copy { elems } | KernelKind::Transform { elems, .. } => {
+            let x = in_buf(call, 0)?;
+            for i in 0..*elems {
+                let v = mem.load(p, x, i);
+                mem.store(p, call.output, i, v);
+            }
+        }
+        KernelKind::Softmax { elems, s_in, zp_in } => {
+            let x = in_buf(call, 0)?;
+            // f32 softmax matching kernels/ref.py::softmax_int8
+            let mut f: Vec<f32> = (0..*elems)
+                .map(|i| (mem.load(p, x, i) - zp_in) as f32 * *s_in as f32)
+                .collect();
+            let max = f.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0f32;
+            for v in f.iter_mut() {
+                *v = (*v - max).exp();
+                sum += *v;
+            }
+            for (i, v) in f.iter().enumerate() {
+                let q = round_half_even((*v / sum) as f64 * 256.0) - 128.0;
+                mem.store(p, call.output, i, q.clamp(-128.0, 127.0) as i32);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn const_i32(p: &Program, id: ConstId) -> Vec<i32> {
+    p.consts[id]
+        .data
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// SAME-padding (top, left) amounts; VALID = 0.
+fn pads(
+    ih: usize, iw: usize, kh: usize, kw: usize,
+    sh: usize, sw: usize, padding: u8,
+) -> (usize, usize) {
+    if padding == 1 {
+        return (0, 0);
+    }
+    let (pt, _) = crate::tensor::same_pads(ih, kh, sh);
+    let (pl, _) = crate::tensor::same_pads(iw, kw, sw);
+    (pt, pl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::builder::{lower, LowerOpts};
+    use crate::backends::planner::{plan, PlannerKind};
+    use crate::graph::model::testutil::tiny_conv;
+    use crate::isa;
+    use crate::kernels::KernelLib;
+    use crate::mcu::MemSystem;
+
+    fn etiss_spec() -> McuSpec {
+        McuSpec {
+            name: "etiss",
+            isa: &isa::RV32GC,
+            clock_mhz: 100.0,
+            flash_total: u64::MAX / 2,
+            flash_reserved: 0,
+            ram_total: u64::MAX / 2,
+            ram_reserved: 0,
+            memsys: MemSystem::ideal(),
+        }
+    }
+
+    fn tiny_program(lib: KernelLib, legalize: bool) -> Program {
+        let g = tiny_conv();
+        let mut p = lower(
+            &g,
+            "t",
+            LowerOpts { lib, legalize_i16: legalize, transform_input: legalize },
+        )
+        .unwrap();
+        plan(&mut p, PlannerKind::GreedyArena);
+        p
+    }
+
+    /// Reference conv implementation straight from the math.
+    fn conv_reference(input: &[i8]) -> Vec<i8> {
+        let g = tiny_conv();
+        let w = g.tensor(1).data_i8().unwrap().to_vec();
+        // scales are stored as f32 — convert exactly like the lowering
+        let mult = 0.5f32 as f64 * 0.01f32 as f64 / 0.25f32 as f64;
+        let mut out = vec![0i8; 4 * 4 * 3];
+        for oy in 0..4usize {
+            for ox in 0..4usize {
+                for oc in 0..3usize {
+                    let mut acc = 0i64;
+                    for ky in 0..3usize {
+                        for kx in 0..3usize {
+                            let iy = oy as isize + ky as isize - 1;
+                            let ix = ox as isize + kx as isize - 1;
+                            if iy < 0 || iy > 3 || ix < 0 || ix > 3 {
+                                continue;
+                            }
+                            for ic in 0..2usize {
+                                let x = input
+                                    [(iy as usize * 4 + ix as usize) * 2 + ic]
+                                    as i64;
+                                let wv = w[((oc * 3 + ky) * 3 + kx) * 2 + ic]
+                                    as i64;
+                                acc += x * wv;
+                            }
+                        }
+                    }
+                    let y = round_half_even(acc as f64 * mult) - 128.0;
+                    out[(oy * 4 + ox) * 3 + oc] =
+                        (y.max(-128.0).min(127.0)) as i8;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_matches_hand_reference() {
+        let p = tiny_program(KernelLib::TflmRef, false);
+        let input: Vec<i8> = (0..32).map(|x| (x * 7 % 256) as i8).collect();
+        let (out, stats) =
+            execute(&p, &etiss_spec(), &input, ExecOpts::default()).unwrap();
+        assert_eq!(out, conv_reference(&input));
+        assert!(stats.ref_instructions > 0);
+    }
+
+    #[test]
+    fn all_lowerings_agree_numerically() {
+        use crate::schedules::{Family, Layout, Schedule};
+        let input: Vec<i8> = (0..32).map(|x| (x as i8).wrapping_mul(13)).collect();
+        let base = {
+            let p = tiny_program(KernelLib::TflmRef, false);
+            execute(&p, &etiss_spec(), &input, ExecOpts::default()).unwrap().0
+        };
+        for (fam, lay) in [
+            (Family::DefaultX86, Layout::Nhwc),
+            (Family::DefaultX86, Layout::Nchw),
+            (Family::Arm, Layout::Nhwc),
+            (Family::Arm, Layout::Nchw),
+        ] {
+            let s = Schedule::new(fam, lay);
+            let p = tiny_program(KernelLib::Tvm(s), s.legalizes_to_i16());
+            let (out, _) =
+                execute(&p, &etiss_spec(), &input, ExecOpts::default()).unwrap();
+            assert_eq!(out, base, "{fam:?}/{lay:?} diverged");
+        }
+    }
+
+    #[test]
+    fn cost_only_mode_matches_accounting() {
+        let p = tiny_program(KernelLib::TflmRef, false);
+        let input = vec![0i8; 32];
+        let (_, full) =
+            execute(&p, &etiss_spec(), &input, ExecOpts::default()).unwrap();
+        let (out, dry) =
+            execute(&p, &etiss_spec(), &input, ExecOpts { compute: false })
+                .unwrap();
+        assert!(out.is_empty());
+        assert_eq!(full.ref_instructions, dry.ref_instructions);
+        assert_eq!(full.instructions, dry.instructions);
+    }
+
+    #[test]
+    fn requant_matches_python_round_half_even() {
+        // acc * 0.5 hits ties: np.round(2.5)=2, np.round(3.5)=4
+        let rq = Requant { multiplier: 0.5, zp_in: 0, zp_out: 0, act: 0 };
+        assert_eq!(requant(5, &rq), 2);
+        assert_eq!(requant(7, &rq), 4);
+        assert_eq!(requant(-5, &rq), -2);
+        // saturation
+        assert_eq!(requant(10_000, &rq), 127);
+        assert_eq!(requant(-10_000, &rq), -128);
+        // relu clamps at zp_out
+        let rq = Requant { multiplier: 0.5, zp_in: 0, zp_out: 3, act: 1 };
+        assert_eq!(requant(-10, &rq), 3);
+    }
+}

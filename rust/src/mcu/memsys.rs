@@ -1,0 +1,167 @@
+//! Memory-system model: where Table V's catastrophic NHWC rows come
+//! from.
+//!
+//! Weights live in flash. The ESP32 family executes from **external
+//! SPI flash through a small cache** (32 KiB): a kernel whose weight
+//! reuse window exceeds the cache re-fetches every pass over SPI at a
+//! huge per-line penalty — the 16–25 s NHWC rows on esp32c3/esp32
+//! (vs ~2× on the STM32s, whose **internal** flash with ART prefetch
+//! has single-digit wait states). The model is analytic (no per-access
+//! simulation): the kernel's `WeightStream` descriptor gives streamed
+//! bytes, reuse window and contiguity; we compute expected stall
+//! cycles per kernel call.
+
+use crate::tinyir::WeightStream;
+
+/// Kind of flash the weights are fetched from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlashKind {
+    /// On-die flash behind a prefetcher (STM32 ART): short, mostly
+    /// hidden wait states; strided access defeats prefetch.
+    Internal,
+    /// External SPI/QSPI flash behind a unified cache (ESP32 family).
+    SpiCached,
+    /// Host simulation (ETISS): memory is flat, no stall modelling —
+    /// Table IV reports pure instruction counts.
+    Ideal,
+}
+
+/// Memory-system parameters of one target.
+#[derive(Debug, Clone, Copy)]
+pub struct MemSystem {
+    pub flash: FlashKind,
+    /// Flash cache (SpiCached) or prefetch window (Internal), bytes.
+    pub cache_bytes: u64,
+    /// Cache line / prefetch burst size, bytes.
+    pub line_bytes: u64,
+    /// Cycles to refill one line from backing flash.
+    pub miss_cycles: f64,
+    /// SRAM access is single-cycle on all Table II parts.
+    pub sram_wait: f64,
+}
+
+impl MemSystem {
+    pub fn ideal() -> MemSystem {
+        MemSystem {
+            flash: FlashKind::Ideal,
+            cache_bytes: u64::MAX,
+            line_bytes: 32,
+            miss_cycles: 0.0,
+            sram_wait: 0.0,
+        }
+    }
+
+    /// STM32 internal flash: 5–7 wait states, ART prefetcher hides
+    /// sequential fetch almost completely.
+    pub fn stm32_internal() -> MemSystem {
+        MemSystem {
+            flash: FlashKind::Internal,
+            cache_bytes: 1024, // prefetch queue + ART cache lines
+            line_bytes: 16,
+            miss_cycles: 6.0,
+            sram_wait: 0.0,
+        }
+    }
+
+    /// ESP32/ESP32-C3 SPI flash behind the 32 KiB cache; a miss costs
+    /// an SPI burst (~80 core cycles at these clock ratios).
+    pub fn esp_spi() -> MemSystem {
+        MemSystem {
+            flash: FlashKind::SpiCached,
+            cache_bytes: 32 * 1024,
+            line_bytes: 32,
+            miss_cycles: 80.0,
+            sram_wait: 0.0,
+        }
+    }
+
+    /// Expected stall cycles for one kernel call's weight traffic.
+    ///
+    /// If the reuse window fits the *effective* cache, only the first
+    /// pass misses (compulsory): `window / line` refills. Strided
+    /// walks degrade the effective cache by 8× (power-of-two strides
+    /// concentrate on few sets — conflict misses long before
+    /// capacity). Past that window, a strided stream misses on every
+    /// access (1 useful byte per fetched line: the Table V NHWC
+    /// catastrophe on SPI-flash parts), while a packed stream still
+    /// amortizes whole lines.
+    pub fn weight_stall_cycles(&self, w: &WeightStream) -> f64 {
+        if w.bytes_streamed == 0 {
+            return 0.0;
+        }
+        match self.flash {
+            FlashKind::Ideal => 0.0,
+            FlashKind::Internal | FlashKind::SpiCached => {
+                let effective_cache = if w.contiguous {
+                    self.cache_bytes
+                } else {
+                    self.cache_bytes / 8
+                };
+                if w.reuse_window <= effective_cache {
+                    // compulsory misses only: each window byte once
+                    (w.reuse_window as f64 / self.line_bytes as f64)
+                        * self.miss_cycles
+                } else if w.contiguous {
+                    (w.bytes_streamed as f64 / self.line_bytes as f64)
+                        * self.miss_cycles
+                } else {
+                    // strided thrash: every access its own refill
+                    w.bytes_streamed as f64 * self.miss_cycles
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream(bytes: u64, window: u64, contiguous: bool) -> WeightStream {
+        WeightStream { bytes_streamed: bytes, reuse_window: window, contiguous }
+    }
+
+    #[test]
+    fn ideal_never_stalls() {
+        let m = MemSystem::ideal();
+        assert_eq!(m.weight_stall_cycles(&stream(1 << 30, 1 << 30, false)), 0.0);
+    }
+
+    #[test]
+    fn fitting_window_pays_compulsory_only() {
+        let m = MemSystem::esp_spi();
+        // 4 kB window fits the 32 kB cache: ~4k/32 * 80 = 10k cycles
+        let s = m.weight_stall_cycles(&stream(10_000_000, 4096, true));
+        assert!(s < 15_000.0, "{s}");
+    }
+
+    #[test]
+    fn thrashing_strided_stream_is_catastrophic_on_spi() {
+        let m = MemSystem::esp_spi();
+        // resnet stack3-like: 36 kB window > 32 kB cache, strided,
+        // streamed 64 times (once per output row) = 2.3 MB
+        let s = m.weight_stall_cycles(&stream(2_300_000, 36_864, false));
+        // ~2.3e6/4*80 = 46M stall cycles = ~0.3 s @160 MHz per layer —
+        // summed over layers this is the paper's 16–25 s NHWC rows
+        assert!(s > 4.0e7, "{s}");
+    }
+
+    #[test]
+    fn internal_flash_much_milder_than_spi() {
+        let s = stream(2_300_000, 36_864, false);
+        let spi = MemSystem::esp_spi().weight_stall_cycles(&s);
+        let stm = MemSystem::stm32_internal().weight_stall_cycles(&s);
+        assert!(
+            stm < spi / 10.0,
+            "stm {stm} should be >10x milder than spi {spi}"
+        );
+    }
+
+    #[test]
+    fn contiguous_streams_amortize_lines() {
+        let m = MemSystem::esp_spi();
+        let strided = m.weight_stall_cycles(&stream(1_000_000, 64 * 1024, false));
+        let packed = m.weight_stall_cycles(&stream(1_000_000, 64 * 1024, true));
+        assert!(packed < strided / 5.0);
+    }
+}

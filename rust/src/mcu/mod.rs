@@ -1,0 +1,65 @@
+//! The virtual MCU — the substrate standing in for the paper's four
+//! physical boards and the ETISS host simulator.
+//!
+//! A `Mcu` owns a memory map (flash + SRAM per Table II), a memory
+//! system model (internal flash wait-states vs external SPI flash
+//! with a small cache — the Table V NHWC-blowup mechanism), and an
+//! executor that *numerically* runs TinyIR programs against simulated
+//! RAM while accounting instructions and cycles.
+
+pub mod memsys;
+pub mod memory;
+pub mod exec;
+
+pub use exec::{execute, ExecOpts, ExecStats};
+pub use memory::{FlashImage, McuMemory};
+pub use memsys::{FlashKind, MemSystem};
+
+use crate::isa::IsaModel;
+
+/// Static description of one MCU (Table II row).
+#[derive(Debug, Clone, Copy)]
+pub struct McuSpec {
+    pub name: &'static str,
+    pub isa: &'static IsaModel,
+    pub clock_mhz: f64,
+    /// Total flash (bytes) and the slice the platform reserves
+    /// (bootloader, RTOS, partitions) — the rest holds the app image.
+    pub flash_total: u64,
+    pub flash_reserved: u64,
+    /// Total SRAM and the platform reserve (RTOS heap, radio stacks).
+    pub ram_total: u64,
+    pub ram_reserved: u64,
+    pub memsys: MemSystem,
+}
+
+impl McuSpec {
+    pub fn flash_available(&self) -> u64 {
+        self.flash_total - self.flash_reserved
+    }
+    pub fn ram_available(&self) -> u64 {
+        self.ram_total - self.ram_reserved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa;
+
+    #[test]
+    fn spec_accounting() {
+        let spec = McuSpec {
+            name: "t",
+            isa: &isa::RV32GC,
+            clock_mhz: 100.0,
+            flash_total: 1000,
+            flash_reserved: 100,
+            ram_total: 500,
+            ram_reserved: 50,
+            memsys: MemSystem::ideal(),
+        };
+        assert_eq!(spec.flash_available(), 900);
+        assert_eq!(spec.ram_available(), 450);
+    }
+}

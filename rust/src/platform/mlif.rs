@@ -1,0 +1,134 @@
+//! MLIF — the *Machine Learning Interface* (paper §II-B3): the target
+//! software layer that standardizes how models are executed and how
+//! benchmark results are reported over the serial port, platform-
+//! independently. This module defines the wire protocol: the virtual
+//! target prints it on its UART, the host parses it back. Keeping a
+//! real text protocol (rather than returning structs) preserves the
+//! paper's code-path shape: flash → run → parse serial output.
+
+use anyhow::{bail, Context, Result};
+
+/// Metrics the target firmware reports after a benchmark run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MlifReport {
+    pub model: String,
+    pub setup_instructions: u64,
+    pub invoke_instructions: u64,
+    pub invoke_cycles: u64,
+    /// Microseconds for one invoke at the target clock.
+    pub invoke_us: u64,
+    /// int8 output tensor of the last inference.
+    pub output: Vec<i8>,
+}
+
+/// Render the UART text the MLIF firmware prints.
+pub fn render(r: &MlifReport) -> String {
+    let mut s = String::new();
+    s.push_str("MLIF-BEGIN v1\n");
+    s.push_str(&format!("model={}\n", r.model));
+    s.push_str(&format!("setup_instructions={}\n", r.setup_instructions));
+    s.push_str(&format!("invoke_instructions={}\n", r.invoke_instructions));
+    s.push_str(&format!("invoke_cycles={}\n", r.invoke_cycles));
+    s.push_str(&format!("invoke_us={}\n", r.invoke_us));
+    s.push_str("output=");
+    for (i, v) in r.output.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&v.to_string());
+    }
+    s.push('\n');
+    s.push_str("MLIF-END OK\n");
+    s
+}
+
+/// Parse a UART capture back into a report. Tolerates boot noise
+/// before MLIF-BEGIN (real consoles print banners).
+pub fn parse(uart: &str) -> Result<MlifReport> {
+    let body = uart
+        .split("MLIF-BEGIN v1")
+        .nth(1)
+        .context("no MLIF-BEGIN marker in UART output")?;
+    if !body.contains("MLIF-END OK") {
+        bail!("target did not complete: no MLIF-END OK (crash? OOM?)");
+    }
+    let mut model = None;
+    let mut setup = None;
+    let mut invoke = None;
+    let mut cycles = None;
+    let mut us = None;
+    let mut output = None;
+    for line in body.lines() {
+        if let Some((k, v)) = line.split_once('=') {
+            match k.trim() {
+                "model" => model = Some(v.trim().to_string()),
+                "setup_instructions" => setup = Some(v.trim().parse()?),
+                "invoke_instructions" => invoke = Some(v.trim().parse()?),
+                "invoke_cycles" => cycles = Some(v.trim().parse()?),
+                "invoke_us" => us = Some(v.trim().parse()?),
+                "output" => {
+                    let vals: Result<Vec<i8>, _> = v
+                        .trim()
+                        .split(',')
+                        .filter(|x| !x.is_empty())
+                        .map(|x| x.trim().parse::<i8>())
+                        .collect();
+                    output = Some(vals?);
+                }
+                _ => {} // ignore unknown keys (forward compat)
+            }
+        }
+    }
+    Ok(MlifReport {
+        model: model.context("missing model=")?,
+        setup_instructions: setup.context("missing setup_instructions=")?,
+        invoke_instructions: invoke.context("missing invoke_instructions=")?,
+        invoke_cycles: cycles.context("missing invoke_cycles=")?,
+        invoke_us: us.context("missing invoke_us=")?,
+        output: output.context("missing output=")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MlifReport {
+        MlifReport {
+            model: "aww".into(),
+            setup_instructions: 1234,
+            invoke_instructions: 29_819_000,
+            invoke_cycles: 31_000_000,
+            invoke_us: 113_000,
+            output: vec![-128, 0, 127, 5],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let r = sample();
+        assert_eq!(parse(&render(&r)).unwrap(), r);
+    }
+
+    #[test]
+    fn tolerates_boot_banner() {
+        let uart = format!(
+            "*** Booting Zephyr OS v3.3 ***\nuart init ok\n{}",
+            render(&sample())
+        );
+        assert_eq!(parse(&uart).unwrap(), sample());
+    }
+
+    #[test]
+    fn detects_crash_without_end_marker() {
+        let mut text = render(&sample());
+        text.truncate(text.find("MLIF-END").unwrap());
+        let err = parse(&text).unwrap_err();
+        assert!(err.to_string().contains("did not complete"));
+    }
+
+    #[test]
+    fn missing_fields_are_errors() {
+        assert!(parse("MLIF-BEGIN v1\nMLIF-END OK\n").is_err());
+    }
+}

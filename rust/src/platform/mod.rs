@@ -1,0 +1,11 @@
+//! Platforms (paper §II-B3): toolchain + flash + serial handling for
+//! hardware-style targets. The paper uses the Zephyr project to reach
+//! many boards "out of the box"; our `ZephyrSim` reproduces that
+//! role over the virtual MCU, including the build/flash latency model
+//! that makes Table III's Load–Run column dominated by factors
+//! "MLonMCU cannot optimize" (cross-compiling, flashing, running).
+
+pub mod mlif;
+pub mod zephyr;
+
+pub use zephyr::{Deployment, ZephyrSim};

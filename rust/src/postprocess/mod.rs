@@ -1,0 +1,215 @@
+//! Postprocesses (paper §II-B4): predefined procedures applied in the
+//! final stage — report transforms (filter/rename/sort) and artifact
+//! generators (ASCII bar-chart visualization).
+
+use anyhow::{bail, Result};
+
+use crate::report::{Cell, Report};
+
+/// A postprocess step, parsed from "name" or "name:arg1,arg2".
+#[derive(Debug, Clone, PartialEq)]
+pub enum Postprocess {
+    /// Keep only these columns.
+    FilterCols(Vec<String>),
+    /// Rename column old→new.
+    RenameCol(String, String),
+    /// Sort rows by a column (ascending; Missing last).
+    SortBy(String),
+    /// Render an ASCII bar chart of a numeric column into an artifact.
+    Visualize(String),
+}
+
+impl Postprocess {
+    pub fn parse(spec: &str) -> Result<Postprocess> {
+        let (name, args) = match spec.split_once(':') {
+            Some((n, a)) => (n, a.split(',').map(str::trim).collect::<Vec<_>>()),
+            None => (spec, Vec::new()),
+        };
+        Ok(match name {
+            "filter_cols" => {
+                if args.is_empty() {
+                    bail!("filter_cols needs columns: filter_cols:a,b");
+                }
+                Postprocess::FilterCols(
+                    args.iter().map(|s| s.to_string()).collect(),
+                )
+            }
+            "rename_col" => {
+                if args.len() != 2 {
+                    bail!("rename_col:old,new");
+                }
+                Postprocess::RenameCol(args[0].into(), args[1].into())
+            }
+            "sort_by" => {
+                if args.len() != 1 {
+                    bail!("sort_by:column");
+                }
+                Postprocess::SortBy(args[0].into())
+            }
+            "visualize" => {
+                if args.len() != 1 {
+                    bail!("visualize:column");
+                }
+                Postprocess::Visualize(args[0].into())
+            }
+            other => bail!("unknown postprocess '{other}'"),
+        })
+    }
+
+    /// Apply to a report; may return an extra artifact (name, text).
+    pub fn apply(&self, report: &mut Report) -> Result<Option<(String, String)>> {
+        match self {
+            Postprocess::FilterCols(cols) => {
+                let refs: Vec<&str> = cols.iter().map(String::as_str).collect();
+                *report = report.select(&refs);
+                Ok(None)
+            }
+            Postprocess::RenameCol(old, new) => {
+                for c in report.columns.iter_mut() {
+                    if c == old {
+                        *c = new.clone();
+                    }
+                }
+                for row in report.rows.iter_mut() {
+                    if let Some(v) = row.remove(old) {
+                        row.insert(new.clone(), v);
+                    }
+                }
+                Ok(None)
+            }
+            Postprocess::SortBy(col) => {
+                report.rows.sort_by(|a, b| {
+                    let av = a.get(col).and_then(|c| c.as_f64());
+                    let bv = b.get(col).and_then(|c| c.as_f64());
+                    match (av, bv) {
+                        (Some(x), Some(y)) => x.total_cmp(&y),
+                        (Some(_), None) => std::cmp::Ordering::Less,
+                        (None, Some(_)) => std::cmp::Ordering::Greater,
+                        (None, None) => std::cmp::Ordering::Equal,
+                    }
+                });
+                Ok(None)
+            }
+            Postprocess::Visualize(col) => {
+                Ok(Some((format!("{col}.chart.txt"), bar_chart(report, col))))
+            }
+        }
+    }
+}
+
+/// ASCII horizontal bar chart of a numeric column, labelled by the
+/// first string-ish column.
+pub fn bar_chart(report: &Report, col: &str) -> String {
+    let label_col = report
+        .columns
+        .iter()
+        .find(|c| c.as_str() != col)
+        .cloned()
+        .unwrap_or_default();
+    let vals: Vec<(String, Option<f64>)> = report
+        .rows
+        .iter()
+        .map(|r| {
+            (
+                r.get(&label_col).map_or(String::new(), |c| c.render()),
+                r.get(col).and_then(|c| c.as_f64()),
+            )
+        })
+        .collect();
+    let max = vals
+        .iter()
+        .filter_map(|(_, v)| *v)
+        .fold(f64::MIN, f64::max)
+        .max(1e-12);
+    let width = 50usize;
+    let mut s = format!("{col} (max {max:.4})\n");
+    for (label, v) in vals {
+        match v {
+            Some(v) => {
+                let n = ((v / max) * width as f64).round().clamp(0.0, width as f64)
+                    as usize;
+                s.push_str(&format!(
+                    "{label:>16} | {}{} {v:.4}\n",
+                    "#".repeat(n),
+                    " ".repeat(width - n)
+                ));
+            }
+            None => s.push_str(&format!("{label:>16} | — (failed)\n")),
+        }
+    }
+    s
+}
+
+/// Parse and apply a pipeline of postprocess specs.
+pub fn apply_all(
+    specs: &[String],
+    report: &mut Report,
+) -> Result<Vec<(String, String)>> {
+    let mut artifacts = Vec::new();
+    for spec in specs {
+        let p = Postprocess::parse(spec)?;
+        if let Some(a) = p.apply(report)? {
+            artifacts.push(a);
+        }
+    }
+    Ok(artifacts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::row;
+
+    fn sample() -> Report {
+        let mut r = Report::default();
+        for (m, t) in [("aww", 0.2), ("vww", 1.4), ("toycar", 0.05)] {
+            r.push(row(vec![
+                ("model", Cell::Str(m.into())),
+                ("time_s", Cell::Float(t)),
+            ]));
+        }
+        r.push(row(vec![
+            ("model", Cell::Str("fail".into())),
+            ("time_s", Cell::Missing),
+        ]));
+        r
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            Postprocess::parse("filter_cols:a,b").unwrap(),
+            Postprocess::FilterCols(vec!["a".into(), "b".into()])
+        );
+        assert!(Postprocess::parse("rename_col:only-one").is_err());
+        assert!(Postprocess::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn sort_puts_missing_last() {
+        let mut r = sample();
+        Postprocess::parse("sort_by:time_s").unwrap().apply(&mut r).unwrap();
+        assert_eq!(r.rows[0]["model"].render(), "toycar");
+        assert_eq!(r.rows[3]["model"].render(), "fail");
+    }
+
+    #[test]
+    fn visualize_produces_chart_artifact() {
+        let mut r = sample();
+        let arts = apply_all(&["visualize:time_s".into()], &mut r).unwrap();
+        assert_eq!(arts.len(), 1);
+        assert!(arts[0].1.contains('#'));
+        assert!(arts[0].1.contains("failed"));
+    }
+
+    #[test]
+    fn pipeline_filter_then_rename() {
+        let mut r = sample();
+        apply_all(
+            &["filter_cols:model,time_s".into(), "rename_col:time_s,latency".into()],
+            &mut r,
+        )
+        .unwrap();
+        assert_eq!(r.columns, vec!["model", "latency"]);
+    }
+}

@@ -1,0 +1,112 @@
+//! Minimal property-testing framework (proptest is not reachable
+//! offline): seeded random case generation with iteration counts and
+//! greedy input shrinking for failing cases. Used by the coordinator
+//! invariant tests in rust/tests/.
+
+use crate::util::XorShift64;
+
+/// Configuration for a property check.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, seed: 0xB0B }
+    }
+}
+
+/// Check `prop` over `cases` generated inputs; on failure, greedily
+/// shrink via `shrink` and panic with the minimal failing input.
+pub fn check<T, G, S, P>(cfg: Config, mut gen: G, shrink: S, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut XorShift64) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> bool,
+{
+    let mut rng = XorShift64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            // shrink greedily: first shrink candidate that still fails
+            let mut minimal = input.clone();
+            'outer: loop {
+                for cand in shrink(&minimal) {
+                    if !prop(&cand) {
+                        minimal = cand;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed at case {case} (seed {}):\n  original: {input:?}\n  minimal:  {minimal:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// No-shrink helper.
+pub fn no_shrink<T>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+/// Shrinker for Vec<T>: drop halves, then drop single elements.
+pub fn shrink_vec<T: Clone>(v: &Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n == 0 {
+        return out;
+    }
+    // every candidate must be STRICTLY smaller, or shrinking loops
+    if n / 2 < n {
+        out.push(v[..n / 2].to_vec());
+    }
+    if n - n / 2 < n {
+        out.push(v[n / 2..].to_vec());
+    }
+    for i in 0..n.min(8) {
+        let mut c = v.clone();
+        c.remove(i);
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check(
+            Config { cases: 50, seed: 1 },
+            |rng| rng.range(0, 100),
+            no_shrink,
+            |&x| x <= 100,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        check(
+            Config { cases: 200, seed: 2 },
+            |rng| (0..rng.range(0, 20)).map(|_| rng.range(0, 50)).collect::<Vec<_>>(),
+            shrink_vec,
+            |v| v.iter().sum::<usize>() < 40, // fails for big vectors
+        );
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller_candidates() {
+        let v = vec![1, 2, 3, 4];
+        for c in shrink_vec(&v) {
+            assert!(c.len() < v.len());
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Reports (paper §II-A3 "Evaluate"): the tabular output of a
+//! session. A `Report` is an ordered list of rows (one per run) with
+//! dynamic columns; postprocesses transform it; renderers emit
+//! markdown, CSV and paper-style tables.
+
+use std::collections::BTreeMap;
+
+use crate::data::csv::to_csv;
+
+/// One report cell.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cell {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    /// A failed run ("—" in Table V).
+    Missing,
+}
+
+impl Cell {
+    pub fn render(&self) -> String {
+        match self {
+            Cell::Str(s) => s.clone(),
+            Cell::Int(x) => x.to_string(),
+            Cell::Float(x) => {
+                if x.abs() >= 1000.0 {
+                    format!("{x:.0}")
+                } else {
+                    format!("{x:.4}")
+                }
+            }
+            Cell::Missing => "—".to_string(),
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Cell::Int(x) => Some(*x as f64),
+            Cell::Float(x) => Some(*x),
+            _ => None,
+        }
+    }
+}
+
+/// One run's row: ordered key → cell map.
+pub type Row = BTreeMap<String, Cell>;
+
+/// A session report.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    /// Column order (columns appear as first encountered).
+    pub columns: Vec<String>,
+    pub rows: Vec<Row>,
+}
+
+impl Report {
+    pub fn push(&mut self, row: Row) {
+        for k in row.keys() {
+            if !self.columns.contains(k) {
+                self.columns.push(k.clone());
+            }
+        }
+        self.rows.push(row);
+    }
+
+    pub fn merge(&mut self, other: Report) {
+        for row in other.rows {
+            self.push(row);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Keep only the listed columns (filter_cols postprocess).
+    pub fn select(&self, cols: &[&str]) -> Report {
+        let columns: Vec<String> = cols
+            .iter()
+            .filter(|c| self.columns.iter().any(|x| x == *c))
+            .map(|c| c.to_string())
+            .collect();
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                columns
+                    .iter()
+                    .filter_map(|c| r.get(c).map(|v| (c.clone(), v.clone())))
+                    .collect()
+            })
+            .collect();
+        Report { columns, rows }
+    }
+
+    fn cell(&self, row: &Row, col: &str) -> String {
+        row.get(col).map_or(String::new(), |c| c.render())
+    }
+
+    /// GitHub-flavoured markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        s.push('|');
+        for c in &self.columns {
+            s.push_str(&format!(" {c} |"));
+        }
+        s.push_str("\n|");
+        for _ in &self.columns {
+            s.push_str("---|");
+        }
+        s.push('\n');
+        for row in &self.rows {
+            s.push('|');
+            for c in &self.columns {
+                s.push_str(&format!(" {} |", self.cell(row, c)));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// CSV artifact.
+    pub fn to_csv(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| self.columns.iter().map(|c| self.cell(r, c)).collect())
+            .collect();
+        to_csv(&self.columns, &rows)
+    }
+
+    /// Fixed-width plain-text table (CLI output).
+    pub fn to_text(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in self.columns.iter().enumerate() {
+                widths[i] = widths[i].max(self.cell(row, c).len());
+            }
+        }
+        let mut s = String::new();
+        for (i, c) in self.columns.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        s.push('\n');
+        for (i, _) in self.columns.iter().enumerate() {
+            s.push_str(&"-".repeat(widths[i]));
+            s.push_str("  ");
+        }
+        s.push('\n');
+        for row in &self.rows {
+            for (i, c) in self.columns.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", self.cell(row, c), w = widths[i]));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Row-building convenience.
+pub fn row(pairs: Vec<(&str, Cell)>) -> Row {
+    pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        let mut r = Report::default();
+        r.push(row(vec![
+            ("model", Cell::Str("aww".into())),
+            ("rom_kb", Cell::Float(143.2)),
+        ]));
+        r.push(row(vec![
+            ("model", Cell::Str("vww".into())),
+            ("rom_kb", Cell::Missing),
+        ]));
+        r
+    }
+
+    #[test]
+    fn markdown_and_text_contain_cells() {
+        let r = sample();
+        let md = r.to_markdown();
+        assert!(md.contains("| aww |"));
+        assert!(md.contains("—"));
+        let txt = r.to_text();
+        assert!(txt.contains("aww"));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let r = sample();
+        let parsed = crate::data::csv::parse_csv(&r.to_csv());
+        assert_eq!(parsed[0], vec!["model", "rom_kb"]);
+        assert_eq!(parsed[1][0], "aww");
+    }
+
+    #[test]
+    fn select_filters_columns() {
+        let r = sample().select(&["model", "nosuch"]);
+        assert_eq!(r.columns, vec!["model"]);
+        assert_eq!(r.rows[0].len(), 1);
+    }
+
+    #[test]
+    fn merge_unions_columns() {
+        let mut a = sample();
+        let mut b = Report::default();
+        b.push(row(vec![
+            ("model", Cell::Str("x".into())),
+            ("extra", Cell::Int(1)),
+        ]));
+        a.merge(b);
+        assert!(a.columns.contains(&"extra".to_string()));
+        assert_eq!(a.len(), 3);
+    }
+}

@@ -1,0 +1,147 @@
+//! PJRT golden runtime: loads the AOT artifacts the python build path
+//! produced (`artifacts/<model>.hlo.txt` — the JAX/Pallas golden
+//! inference lowered to HLO text) and executes them on the XLA CPU
+//! client. Used by the `validate` feature to check the virtual MCU's
+//! int8 outputs against the L1/L2 golden path, cross-language.
+//!
+//! HLO *text* is the interchange format (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see aot.py).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+/// Lazily-initialized PJRT CPU client + per-model executable cache.
+/// Compilation is expensive (~seconds for vww), so executables are
+/// compiled once per session and reused across runs/threads.
+pub struct GoldenRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// xla handles are opaque C pointers; the PJRT CPU client is
+// thread-safe for compile/execute, and our cache is mutex-guarded.
+unsafe impl Send for GoldenRuntime {}
+unsafe impl Sync for GoldenRuntime {}
+
+impl GoldenRuntime {
+    /// Create a CPU-PJRT golden runtime rooted at an artifacts dir.
+    pub fn new(artifacts_dir: &Path) -> Result<GoldenRuntime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+        Ok(GoldenRuntime {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn executable(
+        &self,
+        model: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(model) {
+            return Ok(e.clone());
+        }
+        let path = self.artifacts_dir.join(format!("{model}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| {
+            anyhow!(
+                "loading {} failed ({e}) — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("XLA compile of {model}: {e}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(model.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Run the golden model: int8 input tensor -> int8 output vector.
+    pub fn run_golden(
+        &self,
+        model: &str,
+        input: &[i8],
+        input_shape: &[usize],
+    ) -> Result<Vec<i8>> {
+        let exe = self.executable(model)?;
+        let bytes: Vec<u8> = input.iter().map(|&x| x as u8).collect();
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S8,
+            input_shape,
+            &bytes,
+        )
+        .map_err(|e| anyhow!("input literal: {e}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute {model}: {e}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = out.to_tuple1().map_err(|e| anyhow!("untuple: {e}"))?;
+        out.to_vec::<i8>().map_err(|e| anyhow!("to_vec<i8>: {e}"))
+    }
+
+    /// Load the golden I/O vectors dumped by aot.py (pytest-independent
+    /// cross-check of run_golden).
+    pub fn load_golden_json(&self, model: &str) -> Result<(Vec<i8>, Vec<i8>, Vec<usize>)> {
+        let path = self
+            .artifacts_dir
+            .join("golden")
+            .join(format!("{model}.json"));
+        let j = crate::data::Json::parse_file(&path)?;
+        let to_i8 = |key: &str| -> Result<Vec<i8>> {
+            Ok(j.get(key)
+                .and_then(|v| v.as_i64_vec())
+                .context(key.to_string())?
+                .into_iter()
+                .map(|x| x as i8)
+                .collect())
+        };
+        let shape: Vec<usize> = j
+            .get("input_shape")
+            .and_then(|v| v.as_i64_vec())
+            .context("input_shape")?
+            .into_iter()
+            .map(|x| x as usize)
+            .collect();
+        Ok((to_i8("input")?, to_i8("output")?, shape))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed tests live in tests/golden_e2e.rs (integration),
+    // since they need `make artifacts` outputs. Here: path handling.
+    use super::*;
+
+    #[test]
+    fn missing_artifact_error_mentions_make() {
+        let rt = GoldenRuntime::new(Path::new("/nonexistent-dir"));
+        // client creation itself should succeed (CPU plugin present)
+        let rt = match rt {
+            Ok(rt) => rt,
+            Err(_) => return, // no PJRT in this environment: skip
+        };
+        let err = rt.run_golden("nosuch", &[0], &[1]).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

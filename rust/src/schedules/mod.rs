@@ -1,0 +1,325 @@
+//! TVM-style schedule library (paper §III-C).
+//!
+//! A `Schedule` describes how a conv/dense kernel is lowered: loop
+//! order (layout), tiling, unrolling — exactly the axes Table V sweeps:
+//!
+//!   Default (NHWC) — TVM's x86 schedules on the TFLite-native layout;
+//!       int8→int16 QNN legalization, direct conv with an im2col/packed
+//!       workspace, weights walked **strided across the whole layer**
+//!       (the flash-cache thrash driver on SPI-flash targets).
+//!   Default (NCHW) — TVM's default relayout: NCHWc/OIHWio packing,
+//!       int16 legalization, weights **block-contiguous** with a small
+//!       reuse window. Fastest CNN schedules, bigger RAM.
+//!   ARM (NHWC/NCHW) — aarch64 schedules: no int16 legalization (i8
+//!       activations), different instruction mixes; dense is ~2×
+//!       better than default, convs similar-or-worse (Table V).
+//!
+//! Tunable knobs mirror AutoTVM template parameters; `knob_space`
+//! enumerates the candidate configurations the tuner measures on the
+//! target device.
+
+use crate::calib;
+use crate::tinyir::InstrMix;
+
+/// Schedule family — the two rows groups of Table V.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// TVM default schedules (written for x86).
+    DefaultX86,
+    /// Schedules intended for larger ARM (aarch64) targets.
+    Arm,
+}
+
+/// Activation/weight layout.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    Nhwc,
+    Nchw,
+}
+
+/// AutoTVM-style knob configuration for conv templates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Knobs {
+    /// Output-channel tile (0 = whole layer at once).
+    pub tile_oc: usize,
+    /// Spatial tile in output rows (0 = whole output).
+    pub tile_oh: usize,
+    /// Inner unroll factor (1, 2, 4, 8).
+    pub unroll: usize,
+}
+
+impl Knobs {
+    /// TVM "fallback config" used when no tuning log exists.
+    pub fn fallback(family: Family, layout: Layout) -> Knobs {
+        match (family, layout) {
+            // NCHWc default: modest channel blocking (io-block 8)
+            (Family::DefaultX86, Layout::Nchw) => {
+                Knobs { tile_oc: 8, tile_oh: 4, unroll: 2 }
+            }
+            // x86 NHWC: no MCU-suitable blocking — whole layer
+            (Family::DefaultX86, Layout::Nhwc) => {
+                Knobs { tile_oc: 0, tile_oh: 0, unroll: 4 }
+            }
+            (Family::Arm, Layout::Nchw) => {
+                Knobs { tile_oc: 8, tile_oh: 2, unroll: 2 }
+            }
+            (Family::Arm, Layout::Nhwc) => {
+                Knobs { tile_oc: 0, tile_oh: 0, unroll: 2 }
+            }
+        }
+    }
+}
+
+/// A fully specified schedule (family × layout × knobs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Schedule {
+    pub family: Family,
+    pub layout: Layout,
+    pub knobs: Knobs,
+}
+
+impl Schedule {
+    pub fn new(family: Family, layout: Layout) -> Schedule {
+        Schedule { family, layout, knobs: Knobs::fallback(family, layout) }
+    }
+
+    /// Parse Table V row labels: "default-nhwc", "arm-nchw", ...
+    pub fn parse(s: &str) -> Option<Schedule> {
+        let (fam, lay) = s.split_once('-')?;
+        let family = match fam {
+            "default" | "x86" => Family::DefaultX86,
+            "arm" => Family::Arm,
+            _ => return None,
+        };
+        let layout = match lay {
+            "nhwc" => Layout::Nhwc,
+            "nchw" => Layout::Nchw,
+            _ => return None,
+        };
+        Some(Schedule::new(family, layout))
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{} ({})",
+            match self.family {
+                Family::DefaultX86 => "Default",
+                Family::Arm => "ARM",
+            },
+            match self.layout {
+                Layout::Nhwc => "NHWC",
+                Layout::Nchw => "NCHW",
+            }
+        )
+    }
+
+    /// Does the int8→int16 QNN legalization apply? (x86 schedules
+    /// upcast; the paper's §III-B memory-factor-2 observation.)
+    pub fn legalizes_to_i16(&self) -> bool {
+        self.family == Family::DefaultX86
+    }
+
+    // ------------------------------------------------------------ cost --
+    /// Per-MAC instruction mix for a regular conv under this schedule,
+    /// including knob effects (unroll amortizes branches; spatial
+    /// tiling adds modest re-load overhead when tiles are tiny).
+    pub fn conv_per_mac(&self) -> InstrMix {
+        let base = match (self.family, self.layout) {
+            (Family::DefaultX86, Layout::Nchw) => calib::TVM_CONV_NCHW_PER_MAC,
+            (Family::DefaultX86, Layout::Nhwc) => calib::TVM_CONV_NHWC_PER_MAC,
+            (Family::Arm, Layout::Nchw) => calib::TVM_CONV_ARM_NCHW_PER_MAC,
+            (Family::Arm, Layout::Nhwc) => calib::TVM_CONV_ARM_NHWC_PER_MAC,
+        };
+        self.apply_knobs(base)
+    }
+
+    /// Depthwise conv mix: same family characteristics, ~15 % more
+    /// bookkeeping per MAC (per-channel accumulators).
+    pub fn dwconv_per_mac(&self) -> InstrMix {
+        let m = self.conv_per_mac();
+        m.scale(1.15)
+    }
+
+    /// Dense mix. The ARM dense schedule has **no tuning template**
+    /// (Table V: zero improvement from AutoTVM on ARM dense), so knobs
+    /// are not applied there.
+    pub fn dense_per_mac(&self) -> InstrMix {
+        match self.family {
+            Family::DefaultX86 => self.apply_knobs(calib::TVM_DENSE_PER_MAC),
+            Family::Arm => calib::TVM_DENSE_ARM_PER_MAC,
+        }
+    }
+
+    fn apply_knobs(&self, base: InstrMix) -> InstrMix {
+        let k = self.knobs;
+        // unroll amortizes loop branches (fallback unroll is the
+        // baseline the calib constants were fitted at)
+        let fallback = Knobs::fallback(self.family, self.layout);
+        let branch_scale = fallback.unroll as f64 / k.unroll as f64;
+        // register-tiled oc blocks keep accumulators resident: fewer
+        // result re-loads once tile_oc is a sane small block
+        let load_scale = match k.tile_oc {
+            0 => 1.0,            // whole layer: accumulator spills
+            1..=4 => 0.92,
+            5..=16 => 0.85,
+            _ => 0.95,
+        } / match fallback.tile_oc {
+            0 => 1.0,
+            1..=4 => 0.92,
+            5..=16 => 0.85,
+            _ => 0.95,
+        };
+        InstrMix {
+            branch: base.branch * branch_scale,
+            load: base.load * load_scale,
+            ..base
+        }
+    }
+
+    // ------------------------------------------------- weight streaming --
+    /// Weight-reuse window in bytes for a conv with `kh*kw*ic*oc`-byte
+    /// weights: the working set that must stay cache-resident between
+    /// successive uses. NCHW packs weights into OIHWio blocks reused
+    /// per tile; NHWC walks the full layer per output pixel.
+    pub fn conv_reuse_window(&self, kh: usize, kw: usize, ic: usize, oc: usize) -> u64 {
+        let tile_oc = if self.knobs.tile_oc == 0 { oc } else { self.knobs.tile_oc.min(oc) };
+        match self.layout {
+            Layout::Nchw => (kh * kw * ic * tile_oc) as u64,
+            Layout::Nhwc => (kh * kw * ic * tile_oc) as u64,
+        }
+    }
+
+    /// Are weight accesses contiguous (packed blocks) or strided?
+    pub fn weights_contiguous(&self) -> bool {
+        self.layout == Layout::Nchw
+    }
+
+    // ---------------------------------------------------------- tuning --
+    /// Does an AutoTVM template exist for convs under this schedule?
+    /// x86 NHWC convs are untunable (Table V: "only fully-connected
+    /// layers are tunable" for x86 NHWC).
+    pub fn conv_tunable(&self) -> bool {
+        !(self.family == Family::DefaultX86 && self.layout == Layout::Nhwc)
+    }
+
+    /// Dense template: exists for x86, missing for ARM (Table V last
+    /// row: "no tuning-templates for fully-connected on ARM").
+    pub fn dense_tunable(&self) -> bool {
+        self.family == Family::DefaultX86
+    }
+
+    /// Enumerate the knob space for the tuner (conv templates).
+    pub fn conv_knob_space(&self, oc: usize) -> Vec<Knobs> {
+        if !self.conv_tunable() {
+            return vec![self.knobs];
+        }
+        let mut space = Vec::new();
+        for &tile_oc in &[1usize, 2, 4, 8, 16, 32, 0] {
+            if tile_oc > oc {
+                continue;
+            }
+            for &tile_oh in &[1usize, 2, 4, 8, 0] {
+                for &unroll in &[1usize, 2, 4, 8] {
+                    space.push(Knobs { tile_oc, tile_oh, unroll });
+                }
+            }
+        }
+        space
+    }
+
+    /// Knob space for dense templates (unroll only).
+    pub fn dense_knob_space(&self) -> Vec<Knobs> {
+        if !self.dense_tunable() {
+            return vec![self.knobs];
+        }
+        [1usize, 2, 4, 8]
+            .iter()
+            .map(|&unroll| Knobs { tile_oc: self.knobs.tile_oc, tile_oh: 0, unroll })
+            .collect()
+    }
+
+    pub fn with_knobs(&self, knobs: Knobs) -> Schedule {
+        Schedule { knobs, ..*self }
+    }
+}
+
+/// The four Table V schedule rows.
+pub fn table5_schedules() -> Vec<Schedule> {
+    vec![
+        Schedule::new(Family::DefaultX86, Layout::Nhwc),
+        Schedule::new(Family::DefaultX86, Layout::Nchw),
+        Schedule::new(Family::Arm, Layout::Nhwc),
+        Schedule::new(Family::Arm, Layout::Nchw),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for s in table5_schedules() {
+            let txt = match (s.family, s.layout) {
+                (Family::DefaultX86, Layout::Nhwc) => "default-nhwc",
+                (Family::DefaultX86, Layout::Nchw) => "default-nchw",
+                (Family::Arm, Layout::Nhwc) => "arm-nhwc",
+                (Family::Arm, Layout::Nchw) => "arm-nchw",
+            };
+            assert_eq!(Schedule::parse(txt).unwrap(), s);
+        }
+        assert!(Schedule::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn nchw_beats_nhwc_in_instructions() {
+        let nchw = Schedule::new(Family::DefaultX86, Layout::Nchw);
+        let nhwc = Schedule::new(Family::DefaultX86, Layout::Nhwc);
+        assert!(nhwc.conv_per_mac().total() > 1.4 * nchw.conv_per_mac().total());
+    }
+
+    #[test]
+    fn arm_dense_twice_as_fast_and_untunable() {
+        let x86 = Schedule::new(Family::DefaultX86, Layout::Nhwc);
+        let arm = Schedule::new(Family::Arm, Layout::Nhwc);
+        let ratio = x86.dense_per_mac().total() / arm.dense_per_mac().total();
+        assert!((1.7..2.4).contains(&ratio), "{ratio}");
+        assert!(!arm.dense_tunable());
+        assert!(x86.dense_tunable());
+        assert_eq!(arm.dense_knob_space().len(), 1);
+    }
+
+    #[test]
+    fn x86_nhwc_convs_untunable() {
+        let s = Schedule::new(Family::DefaultX86, Layout::Nhwc);
+        assert!(!s.conv_tunable());
+        assert_eq!(s.conv_knob_space(64).len(), 1);
+        let nchw = Schedule::new(Family::DefaultX86, Layout::Nchw);
+        assert!(nchw.conv_tunable());
+        assert!(nchw.conv_knob_space(64).len() > 20);
+    }
+
+    #[test]
+    fn legalization_only_for_x86() {
+        assert!(Schedule::new(Family::DefaultX86, Layout::Nhwc).legalizes_to_i16());
+        assert!(Schedule::new(Family::DefaultX86, Layout::Nchw).legalizes_to_i16());
+        assert!(!Schedule::new(Family::Arm, Layout::Nhwc).legalizes_to_i16());
+    }
+
+    #[test]
+    fn reuse_window_shrinks_with_tiling() {
+        let untiled = Schedule::new(Family::Arm, Layout::Nhwc); // tile_oc=0
+        let full = untiled.conv_reuse_window(3, 3, 64, 64);
+        assert_eq!(full, 3 * 3 * 64 * 64);
+        let tiled = untiled.with_knobs(Knobs { tile_oc: 4, tile_oh: 2, unroll: 2 });
+        assert_eq!(tiled.conv_reuse_window(3, 3, 64, 64), 3 * 3 * 64 * 4);
+    }
+
+    #[test]
+    fn unroll_reduces_branch_cost() {
+        let s = Schedule::new(Family::DefaultX86, Layout::Nchw);
+        let fast = s.with_knobs(Knobs { unroll: 8, ..s.knobs });
+        assert!(fast.conv_per_mac().branch < s.conv_per_mac().branch);
+        assert!(fast.conv_per_mac().total() < s.conv_per_mac().total());
+    }
+}

@@ -1,0 +1,194 @@
+//! Run-matrix expansion: the cartesian product of models × backends ×
+//! targets × schedules (× tuned on/off), with component validation up
+//! front so typos fail before any work is scheduled.
+
+use anyhow::{bail, Result};
+
+use crate::backends;
+use crate::features::Features;
+use crate::session::run::RunSpec;
+use crate::targets;
+
+/// Builder for a benchmark session's run set.
+#[derive(Debug, Clone, Default)]
+pub struct RunMatrix {
+    models: Vec<String>,
+    backends: Vec<String>,
+    targets: Vec<String>,
+    /// Schedule specs ("default-nchw", ...); empty = backend default.
+    schedules: Vec<String>,
+    /// Sweep AutoTVM off/on (Table V's paired columns).
+    tuned: Vec<bool>,
+    features: Vec<String>,
+    postprocesses: Vec<String>,
+}
+
+impl RunMatrix {
+    pub fn new() -> RunMatrix {
+        RunMatrix { tuned: vec![false], ..Default::default() }
+    }
+
+    pub fn models<I: IntoIterator<Item = S>, S: Into<String>>(mut self, it: I) -> Self {
+        self.models = it.into_iter().map(Into::into).collect();
+        self
+    }
+    pub fn backends<I: IntoIterator<Item = S>, S: Into<String>>(mut self, it: I) -> Self {
+        self.backends = it.into_iter().map(Into::into).collect();
+        self
+    }
+    pub fn targets<I: IntoIterator<Item = S>, S: Into<String>>(mut self, it: I) -> Self {
+        self.targets = it.into_iter().map(Into::into).collect();
+        self
+    }
+    pub fn schedules<I: IntoIterator<Item = S>, S: Into<String>>(mut self, it: I) -> Self {
+        self.schedules = it.into_iter().map(Into::into).collect();
+        self
+    }
+    /// Sweep untuned and tuned variants (adds the Tune stage).
+    pub fn with_tuning_sweep(mut self) -> Self {
+        self.tuned = vec![false, true];
+        self
+    }
+    pub fn features<I: IntoIterator<Item = S>, S: Into<String>>(mut self, it: I) -> Self {
+        self.features = it.into_iter().map(Into::into).collect();
+        self
+    }
+    pub fn postprocesses<I: IntoIterator<Item = S>, S: Into<String>>(mut self, it: I) -> Self {
+        self.postprocesses = it.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn postprocess_specs(&self) -> &[String] {
+        &self.postprocesses
+    }
+
+    /// Validate and expand into concrete run specs.
+    pub fn expand(&self) -> Result<Vec<RunSpec>> {
+        if self.models.is_empty() || self.backends.is_empty() || self.targets.is_empty() {
+            bail!(
+                "empty run matrix: need at least one model, backend and target \
+                 (got {}/{}/{})",
+                self.models.len(),
+                self.backends.len(),
+                self.targets.len()
+            );
+        }
+        for b in &self.backends {
+            if backends::by_name(b).is_none() {
+                bail!(
+                    "unknown backend '{b}' (known: {:?})",
+                    backends::all_backend_names()
+                );
+            }
+        }
+        for t in &self.targets {
+            if targets::by_name(t).is_none() {
+                bail!("unknown target '{t}'");
+            }
+        }
+        for s in &self.schedules {
+            if crate::schedules::Schedule::parse(s).is_none() {
+                bail!(
+                    "unknown schedule '{s}' (expected family-layout, e.g. \
+                     default-nchw, arm-nhwc)"
+                );
+            }
+        }
+        let features = Features::parse(&self.features)?;
+        let mut specs = Vec::new();
+        let scheds: Vec<Option<String>> = if self.schedules.is_empty() {
+            vec![None]
+        } else {
+            self.schedules.iter().cloned().map(Some).collect()
+        };
+        for model in &self.models {
+            for backend in &self.backends {
+                let supports = backends::by_name(backend)
+                    .unwrap()
+                    .supports_schedules();
+                let backend_scheds: &[Option<String>] = if supports {
+                    &scheds
+                } else {
+                    &[None][..] // schedule axis collapses for TFLM
+                };
+                for target in &self.targets {
+                    for sched in backend_scheds {
+                        for &tuned in &self.tuned {
+                            // tuned runs only make sense for schedule-
+                            // capable backends
+                            if tuned && !supports {
+                                continue;
+                            }
+                            specs.push(RunSpec {
+                                model: model.clone(),
+                                backend: backend.clone(),
+                                target: target.clone(),
+                                schedule: sched.clone(),
+                                tuned,
+                                features: features.clone(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        Ok(specs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_matrix_is_20_runs() {
+        // 4 models × 5 backends × 1 target (Table III: "#Runs 20")
+        let m = RunMatrix::new()
+            .models(["aww", "vww", "resnet", "toycar"])
+            .backends(["tflmi", "tflmc", "tvmaot", "tvmaot+", "tvmrt"])
+            .targets(["etiss"]);
+        assert_eq!(m.expand().unwrap().len(), 20);
+    }
+
+    #[test]
+    fn table5_matrix_shape() {
+        // 4 models × 4 schedules × 4 targets × {untuned, tuned} = 128
+        // run *attempts* (the paper's ~98 results exclude "—" cells,
+        // which our expansion keeps as failed rows)
+        let m = RunMatrix::new()
+            .models(["aww", "vww", "resnet", "toycar"])
+            .backends(["tvmaot"])
+            .targets(["esp32c3", "stm32f4", "stm32f7", "esp32"])
+            .schedules(["default-nhwc", "default-nchw", "arm-nhwc", "arm-nchw"])
+            .with_tuning_sweep();
+        assert_eq!(m.expand().unwrap().len(), 128);
+    }
+
+    #[test]
+    fn schedule_axis_collapses_for_tflm() {
+        let m = RunMatrix::new()
+            .models(["aww"])
+            .backends(["tflmi"])
+            .targets(["etiss"])
+            .schedules(["default-nhwc", "default-nchw"]);
+        assert_eq!(m.expand().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn unknown_components_rejected() {
+        let base = RunMatrix::new().models(["aww"]).targets(["etiss"]);
+        assert!(base.clone().backends(["nope"]).expand().is_err());
+        assert!(base
+            .clone()
+            .backends(["tvmaot"])
+            .schedules(["sideways-chw"])
+            .expand()
+            .is_err());
+        assert!(RunMatrix::new()
+            .models(["aww"])
+            .backends(["tvmaot"])
+            .targets(["gba"])
+            .expand()
+            .is_err());
+    }
+}

@@ -1,0 +1,347 @@
+//! One run: the Load → [Tune] → Build → Compile → Run → Postprocess
+//! stage pipeline, with per-stage host timing, failure capture
+//! (memory-gate errors become "—" rows, exactly Table V) and artifact
+//! emission.
+
+use std::path::PathBuf;
+
+use crate::backends::{self, BackendConfig, BuildMetrics};
+use crate::features::{compare_outputs, Features, Validation};
+use crate::frontends;
+use crate::report::{row, Cell, Row};
+use crate::schedules::Schedule;
+use crate::session::Session;
+use crate::targets::{self, RunOutcome};
+use crate::tuner;
+use crate::util::{Stopwatch, XorShift64};
+
+/// Fully-resolved parameters of one run.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub model: String,
+    pub backend: String,
+    pub target: String,
+    pub schedule: Option<String>,
+    pub tuned: bool,
+    pub features: Features,
+}
+
+impl RunSpec {
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}{}{}",
+            self.model,
+            self.backend,
+            self.target,
+            self.schedule
+                .as_deref()
+                .map(|s| format!("/{s}"))
+                .unwrap_or_default(),
+            if self.tuned { "/tuned" } else { "" }
+        )
+    }
+}
+
+/// Host-side stage durations (Table III columns).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageTimes {
+    pub load_s: f64,
+    pub tune_s: f64,
+    pub build_s: f64,
+    pub compile_s: f64,
+    pub run_s: f64,
+}
+
+impl StageTimes {
+    pub fn total_host(&self) -> f64 {
+        self.load_s + self.tune_s + self.build_s + self.compile_s + self.run_s
+    }
+}
+
+/// Run completion state.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RunStatus {
+    Ok,
+    /// Stage name + error (memory overflow, unsupported tuning, ...).
+    Failed(&'static str, String),
+}
+
+/// Everything recorded about one run.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub spec: RunSpec,
+    pub status: RunStatus,
+    pub stages: StageTimes,
+    pub build: Option<BuildMetrics>,
+    pub outcome: Option<RunOutcome>,
+    pub validation: Validation,
+    pub tune_improvement: Option<f64>,
+}
+
+impl RunRecord {
+    pub fn sim_total_s(&self) -> f64 {
+        self.outcome
+            .as_ref()
+            .map(|o| o.sim_build_s + o.sim_run_s)
+            .unwrap_or(0.0)
+    }
+
+    /// Flatten into a report row. Failed runs keep their identity
+    /// columns and get Missing metric cells ("—").
+    pub fn to_row(&self) -> Row {
+        let mut r = row(vec![
+            ("model", Cell::Str(self.spec.model.clone())),
+            ("backend", Cell::Str(self.spec.backend.clone())),
+            ("target", Cell::Str(self.spec.target.clone())),
+            (
+                "schedule",
+                Cell::Str(
+                    self.spec.schedule.clone().unwrap_or_else(|| "default".into()),
+                ),
+            ),
+            ("tuned", Cell::Str(if self.spec.tuned { "yes" } else { "no" }.into())),
+            (
+                "status",
+                Cell::Str(match &self.status {
+                    RunStatus::Ok => "ok".to_string(),
+                    RunStatus::Failed(stage, _) => format!("failed:{stage}"),
+                }),
+            ),
+        ]);
+        match (&self.status, &self.build, &self.outcome) {
+            (RunStatus::Ok, Some(b), Some(o)) => {
+                r.insert("setup_instr".into(), Cell::Int(o.setup_instructions as i64));
+                r.insert("invoke_instr".into(), Cell::Int(o.invoke_instructions as i64));
+                r.insert("invoke_cycles".into(), Cell::Int(o.invoke_cycles as i64));
+                r.insert("time_s".into(), Cell::Float(o.invoke_seconds));
+                r.insert("rom_b".into(), Cell::Int(b.rom_total() as i64));
+                r.insert("ram_b".into(), Cell::Int(b.ram_total() as i64));
+                r.insert("sim_build_s".into(), Cell::Float(o.sim_build_s));
+                r.insert("sim_run_s".into(), Cell::Float(o.sim_run_s));
+            }
+            _ => {
+                for c in [
+                    "setup_instr", "invoke_instr", "invoke_cycles", "time_s",
+                    "rom_b", "ram_b", "sim_build_s", "sim_run_s",
+                ] {
+                    r.insert(c.into(), Cell::Missing);
+                }
+            }
+        }
+        r.insert("validate".into(), Cell::Str(self.validation.label()));
+        if let Some(imp) = self.tune_improvement {
+            r.insert("tune_gain".into(), Cell::Float(imp));
+        }
+        r
+    }
+}
+
+/// Deterministic input for a run: the golden input vector when the
+/// python build path dumped one, else a seeded pseudo-random tensor.
+fn run_input(session: &Session, model: &str, n: usize) -> Vec<i8> {
+    let path = session
+        .env()
+        .artifacts_dir()
+        .join("golden")
+        .join(format!("{model}.json"));
+    if let Ok(j) = crate::data::Json::parse_file(&path) {
+        if let Some(v) = j.get("input").and_then(|v| v.as_i64_vec()) {
+            if v.len() == n {
+                return v.into_iter().map(|x| x as i8).collect();
+            }
+        }
+    }
+    let mut rng = XorShift64::new(0x5EED ^ n as u64);
+    (0..n).map(|_| (rng.next_u64() & 0xff) as i8).collect()
+}
+
+/// Drive one run through all stages. Never panics; failures are
+/// captured in the record.
+pub fn execute_run(session: &Session, idx: usize, spec: &RunSpec) -> RunRecord {
+    let mut rec = RunRecord {
+        spec: spec.clone(),
+        status: RunStatus::Ok,
+        stages: StageTimes::default(),
+        build: None,
+        outcome: None,
+        validation: Validation::Skipped,
+        tune_improvement: None,
+    };
+    let run_dir = session.dir.join(format!("run_{idx}"));
+    let _ = std::fs::create_dir_all(&run_dir);
+
+    macro_rules! fail {
+        ($stage:expr, $err:expr) => {{
+            rec.status = RunStatus::Failed($stage, $err.to_string());
+            crate::log_debug!("run {}: {} failed: {}", spec.label(), $stage, $err);
+            write_record(&run_dir, &rec);
+            return rec;
+        }};
+    }
+
+    // ---------------------------------------------------------- Load --
+    let watch = Stopwatch::start();
+    let graph = match frontends::load_model(&spec.model, &session.env().model_dirs()) {
+        Ok(g) => g,
+        Err(e) => fail!("load", e),
+    };
+    rec.stages.load_s = watch.elapsed_s();
+
+    let backend = backends::by_name(&spec.backend).expect("validated by matrix");
+    let target = targets::by_name(&spec.target).expect("validated by matrix");
+    let mut schedule: Option<Schedule> =
+        spec.schedule.as_deref().map(|s| Schedule::parse(s).expect("validated"));
+
+    // ---------------------------------------------------------- Tune --
+    if spec.tuned || spec.features.autotvm() {
+        let watch = Stopwatch::start();
+        if !target.supports_tuning() {
+            // the paper's esp32 column: tuning impossible => "—"
+            fail!("tune", format!("target {} does not support AutoTVM", spec.target));
+        }
+        let base = schedule.unwrap_or_else(|| {
+            Schedule::new(
+                crate::schedules::Family::DefaultX86,
+                crate::schedules::Layout::Nchw,
+            )
+        });
+        let trials = session.env().get_i64("tune", "trials", 600) as usize;
+        match tuner::tune(
+            &*backend,
+            &graph,
+            &*target,
+            base,
+            tuner::TuneOpts { trials, seed: session.env().get_i64("run", "seed", 7) as u64 },
+        ) {
+            Ok(t) => {
+                rec.tune_improvement = Some(t.improvement());
+                schedule = Some(t.best);
+            }
+            Err(e) => fail!("tune", e),
+        }
+        rec.stages.tune_s = watch.elapsed_s();
+    }
+
+    // --------------------------------------------------------- Build --
+    let watch = Stopwatch::start();
+    let mut cfg = BackendConfig::default();
+    cfg.schedule = schedule;
+    let build = match backend.build(&graph, &cfg) {
+        Ok(b) => b,
+        Err(e) => fail!("build", e),
+    };
+    rec.stages.build_s = watch.elapsed_s();
+    // reproducibility: program listing artifact
+    let _ = std::fs::write(
+        run_dir.join("program.tir"),
+        crate::tinyir::listing::render(&build.program),
+    );
+    if spec.features.debug_arena() {
+        if let Err(e) = build.program.check_plan() {
+            fail!("build", format!("arena check: {e}"));
+        }
+    }
+    rec.build = Some(build.metrics.clone());
+
+    // ------------------------------------------------------- Compile --
+    let watch = Stopwatch::start();
+    let dep = match target.deploy(&build, backend.framework()) {
+        Ok(d) => d,
+        Err(e) => fail!("compile", e), // flash/RAM overflow => "—"
+    };
+    rec.stages.compile_s = watch.elapsed_s();
+
+    // ----------------------------------------------------------- Run --
+    let watch = Stopwatch::start();
+    let input = run_input(session, &spec.model, graph.tensor(graph.inputs[0]).numel());
+    let outcome = match target.run(&build, &dep, &input, true) {
+        Ok(o) => o,
+        Err(e) => fail!("run", e),
+    };
+    rec.stages.run_s = watch.elapsed_s();
+
+    // -------------------------------------------------- Postprocess --
+    if spec.features.validate() {
+        let atol = session.env().get_i64("run", "validate_atol", 1) as i32;
+        match session.golden().and_then(|g| {
+            g.run_golden(&spec.model, &input, &graph.tensor(graph.inputs[0]).shape)
+        }) {
+            Ok(golden) => {
+                rec.validation = compare_outputs(&outcome.output, &golden, atol);
+            }
+            Err(e) => {
+                crate::log_warn!("validate: golden unavailable: {e}");
+                rec.validation = Validation::Skipped;
+            }
+        }
+    }
+    rec.outcome = Some(outcome);
+    write_record(&run_dir, &rec);
+    rec
+}
+
+/// Per-run artifact: metrics.json (reproducibility).
+fn write_record(dir: &PathBuf, rec: &RunRecord) {
+    use crate::data::Json;
+    let mut pairs = vec![
+        ("label", Json::Str(rec.spec.label())),
+        (
+            "status",
+            Json::Str(match &rec.status {
+                RunStatus::Ok => "ok".into(),
+                RunStatus::Failed(stage, e) => format!("failed:{stage}: {e}"),
+            }),
+        ),
+        ("validate", Json::Str(rec.validation.label())),
+    ];
+    if let Some(o) = &rec.outcome {
+        pairs.push(("invoke_instructions", Json::Num(o.invoke_instructions as f64)));
+        pairs.push(("invoke_seconds", Json::Num(o.invoke_seconds)));
+    }
+    if let Some(b) = &rec.build {
+        pairs.push(("rom_total", Json::Num(b.rom_total() as f64)));
+        pairs.push(("ram_total", Json::Num(b.ram_total() as f64)));
+    }
+    let _ = std::fs::write(dir.join("metrics.json"), Json::obj(pairs).to_string());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_label_format() {
+        let s = RunSpec {
+            model: "aww".into(),
+            backend: "tvmaot".into(),
+            target: "esp32c3".into(),
+            schedule: Some("default-nchw".into()),
+            tuned: true,
+            features: Features::default(),
+        };
+        assert_eq!(s.label(), "aww/tvmaot/esp32c3/default-nchw/tuned");
+    }
+
+    #[test]
+    fn failed_record_renders_missing_cells() {
+        let rec = RunRecord {
+            spec: RunSpec {
+                model: "vww".into(),
+                backend: "tvmaot".into(),
+                target: "esp32".into(),
+                schedule: None,
+                tuned: false,
+                features: Features::default(),
+            },
+            status: RunStatus::Failed("compile", "flash overflow".into()),
+            stages: StageTimes::default(),
+            build: None,
+            outcome: None,
+            validation: Validation::Skipped,
+            tune_improvement: None,
+        };
+        let row = rec.to_row();
+        assert_eq!(row["time_s"], Cell::Missing);
+        assert_eq!(row["status"].render(), "failed:compile");
+    }
+}

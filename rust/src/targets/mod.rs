@@ -1,0 +1,333 @@
+//! Targets (paper §II-B3): the devices/simulators a run executes on.
+//!
+//! * `etiss` — the ETISS instruction-set simulator target (RV32GC):
+//!   reports exact instruction counts, no memory-stall modelling, no
+//!   real memory limits. Used for the Table IV backend comparison.
+//! * `esp32c3`, `stm32f4`, `stm32f7`, `esp32` — the Table II hardware
+//!   targets, reached through the ZephyrSim platform: flash/RAM gates,
+//!   per-ISA cycle accounting, memory-system stalls, UART reporting.
+
+use anyhow::Result;
+
+use crate::backends::BuildResult;
+use crate::isa;
+use crate::mcu::{execute, ExecOpts, McuSpec, MemSystem};
+use crate::platform::{Deployment, ZephyrSim};
+
+/// Everything a run reports back from the target (report columns).
+#[derive(Debug, Clone, Default)]
+pub struct RunOutcome {
+    pub setup_instructions: u64,
+    pub invoke_instructions: u64,
+    pub invoke_cycles: u64,
+    pub invoke_seconds: f64,
+    pub output: Vec<i8>,
+    /// Simulated stage durations (Table III shape).
+    pub sim_build_s: f64,
+    pub sim_flash_s: f64,
+    pub sim_run_s: f64,
+}
+
+/// A benchmark target.
+pub trait Target: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn spec(&self) -> &McuSpec;
+    /// Whether the autotvm feature can measure on this target — the
+    /// paper could not tune on the esp32 (Table V's all-"—" column).
+    fn supports_tuning(&self) -> bool {
+        true
+    }
+    /// Compile stage: link + capacity gates. Errors mean "—" cells.
+    fn deploy(&self, build: &BuildResult, framework: &str) -> Result<Deployment>;
+    /// Run stage.
+    fn run(
+        &self,
+        build: &BuildResult,
+        dep: &Deployment,
+        input: &[i8],
+        compute: bool,
+    ) -> Result<RunOutcome>;
+}
+
+// ---------------------------------------------------------------- ETISS --
+
+/// The ETISS ISS target [paper ref 7]: RV32GC @ 100 MHz, host memory.
+pub struct Etiss {
+    spec: McuSpec,
+}
+
+impl Default for Etiss {
+    fn default() -> Self {
+        Etiss {
+            spec: McuSpec {
+                name: "etiss",
+                isa: &isa::RV32GC,
+                clock_mhz: 100.0,
+                flash_total: 1 << 31,
+                flash_reserved: 0,
+                ram_total: 1 << 31,
+                ram_reserved: 0,
+                memsys: MemSystem::ideal(),
+            },
+        }
+    }
+}
+
+impl Target for Etiss {
+    fn name(&self) -> &'static str {
+        "etiss"
+    }
+    fn spec(&self) -> &McuSpec {
+        &self.spec
+    }
+
+    fn deploy(&self, build: &BuildResult, _framework: &str) -> Result<Deployment> {
+        // ISS: no real flash process; still produce the image for
+        // artifact inspection, without capacity gates.
+        let image = crate::mcu::FlashImage::link(
+            &build.program,
+            build.metrics.rom_code,
+            build.metrics.rom_misc,
+        );
+        Ok(Deployment {
+            rom_total: image.total_bytes(),
+            ram_total: build.metrics.ram_total(),
+            image,
+            sim_build_s: 1.0 + build.program.calls.len() as f64 * 0.02,
+            sim_flash_s: 0.0,
+        })
+    }
+
+    fn run(
+        &self,
+        build: &BuildResult,
+        dep: &Deployment,
+        input: &[i8],
+        compute: bool,
+    ) -> Result<RunOutcome> {
+        let (output, stats) =
+            execute(&build.program, &self.spec, input, ExecOpts { compute })?;
+        Ok(RunOutcome {
+            setup_instructions: build.metrics.setup_instructions,
+            invoke_instructions: stats.ref_instructions,
+            invoke_cycles: stats.total_cycles() as u64,
+            invoke_seconds: stats.seconds(self.spec.clock_mhz),
+            output,
+            sim_build_s: dep.sim_build_s,
+            sim_flash_s: 0.0,
+            // ISS run time scales with simulated instructions
+            // (~30 MIPS simulation speed)
+            sim_run_s: stats.ref_instructions as f64 / 30e6,
+        })
+    }
+}
+
+// ------------------------------------------------------------- hardware --
+
+/// A Table II hardware target behind the ZephyrSim platform.
+pub struct HwTarget {
+    spec: McuSpec,
+    platform: ZephyrSim,
+    tuning: bool,
+}
+
+impl Target for HwTarget {
+    fn name(&self) -> &'static str {
+        self.spec.name
+    }
+    fn spec(&self) -> &McuSpec {
+        &self.spec
+    }
+    fn supports_tuning(&self) -> bool {
+        self.tuning
+    }
+
+    fn deploy(&self, build: &BuildResult, framework: &str) -> Result<Deployment> {
+        self.platform.build(build, &self.spec, framework)
+    }
+
+    fn run(
+        &self,
+        build: &BuildResult,
+        dep: &Deployment,
+        input: &[i8],
+        compute: bool,
+    ) -> Result<RunOutcome> {
+        let (report, sim_run_s) =
+            self.platform
+                .flash_and_run(build, dep, &self.spec, input, compute)?;
+        Ok(RunOutcome {
+            setup_instructions: report.setup_instructions,
+            invoke_instructions: report.invoke_instructions,
+            invoke_cycles: report.invoke_cycles,
+            invoke_seconds: report.invoke_us as f64 / 1e6,
+            output: report.output,
+            sim_build_s: dep.sim_build_s,
+            sim_flash_s: dep.sim_flash_s,
+            sim_run_s,
+        })
+    }
+}
+
+/// Table II: esp32c3 — RV32IMC @ 160 MHz, 2 MB flash (SPI, cached),
+/// 384 kB SRAM.
+pub fn esp32c3() -> HwTarget {
+    HwTarget {
+        spec: McuSpec {
+            name: "esp32c3",
+            isa: &isa::RV32IMC_ESP32C3,
+            clock_mhz: 160.0,
+            flash_total: 2_000_000,
+            flash_reserved: 120_000, // bootloader + partition table
+            ram_total: 384_000,
+            ram_reserved: 50_000, // IDF/Zephyr runtime reserve
+            memsys: MemSystem::esp_spi(),
+        },
+        platform: ZephyrSim,
+        tuning: true,
+    }
+}
+
+/// Table II: stm32f4 — Cortex-M4 @ 100 MHz, 1.5 MB flash, 320 kB RAM.
+pub fn stm32f4() -> HwTarget {
+    HwTarget {
+        spec: McuSpec {
+            name: "stm32f4",
+            isa: &isa::CORTEX_M4,
+            clock_mhz: 100.0,
+            flash_total: 1_500_000,
+            flash_reserved: 60_000,
+            ram_total: 320_000,
+            ram_reserved: 65_000,
+            memsys: MemSystem::stm32_internal(),
+        },
+        platform: ZephyrSim,
+        tuning: true,
+    }
+}
+
+/// Table II: stm32f7 — Cortex-M7 @ 216 MHz (dual issue), 2 MB flash,
+/// 512 kB RAM.
+pub fn stm32f7() -> HwTarget {
+    HwTarget {
+        spec: McuSpec {
+            name: "stm32f7",
+            isa: &isa::CORTEX_M7,
+            clock_mhz: 216.0,
+            flash_total: 2_000_000,
+            flash_reserved: 60_000,
+            ram_total: 512_000,
+            ram_reserved: 40_000,
+            memsys: MemSystem::stm32_internal(),
+        },
+        platform: ZephyrSim,
+        tuning: true,
+    }
+}
+
+/// Table II: esp32 — Xtensa LX6 @ 240 MHz, 448 kB usable flash
+/// partition, 328 kB RAM. MicroTVM cannot tune on this target
+/// (Table V's tuned column is all "—").
+pub fn esp32() -> HwTarget {
+    HwTarget {
+        spec: McuSpec {
+            name: "esp32",
+            isa: &isa::XTENSA_LX6,
+            clock_mhz: 240.0,
+            flash_total: 448_000,
+            flash_reserved: 70_000,
+            ram_total: 328_000,
+            ram_reserved: 60_000,
+            memsys: MemSystem::esp_spi(),
+        },
+        platform: ZephyrSim,
+        tuning: false,
+    }
+}
+
+/// Instantiate a target by name.
+pub fn by_name(name: &str) -> Option<Box<dyn Target>> {
+    match name {
+        "etiss" => Some(Box::new(Etiss::default())),
+        "esp32c3" => Some(Box::new(esp32c3())),
+        "stm32f4" => Some(Box::new(stm32f4())),
+        "stm32f7" => Some(Box::new(stm32f7())),
+        "esp32" => Some(Box::new(esp32())),
+        _ => None,
+    }
+}
+
+/// The Table V hardware target list, in paper column order.
+pub fn table5_targets() -> [&'static str; 4] {
+    ["esp32c3", "stm32f4", "stm32f7", "esp32"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::{by_name as backend, BackendConfig};
+    use crate::graph::model::testutil::tiny_conv;
+
+    #[test]
+    fn registry_and_specs_match_table2() {
+        for (name, clock, flash, ram) in [
+            ("esp32c3", 160.0, 2_000_000u64, 384_000u64),
+            ("stm32f4", 100.0, 1_500_000, 320_000),
+            ("stm32f7", 216.0, 2_000_000, 512_000),
+            ("esp32", 240.0, 448_000, 328_000),
+        ] {
+            let t = by_name(name).unwrap();
+            assert_eq!(t.spec().clock_mhz, clock);
+            assert_eq!(t.spec().flash_total, flash);
+            assert_eq!(t.spec().ram_total, ram);
+        }
+    }
+
+    #[test]
+    fn esp32_cannot_tune() {
+        assert!(!by_name("esp32").unwrap().supports_tuning());
+        assert!(by_name("esp32c3").unwrap().supports_tuning());
+        assert!(by_name("etiss").unwrap().supports_tuning());
+    }
+
+    #[test]
+    fn etiss_runs_without_memory_gates() {
+        let g = tiny_conv();
+        let b = backend("tvmrt").unwrap().build(&g, &BackendConfig::default()).unwrap();
+        let t = by_name("etiss").unwrap();
+        let dep = t.deploy(&b, "tvm").unwrap(); // 1MB pool OK on ISS
+        let out = t.run(&b, &dep, &vec![3i8; 32], true).unwrap();
+        assert_eq!(out.output.len(), 48);
+        assert!(out.invoke_instructions > 0);
+    }
+
+    #[test]
+    fn cross_target_same_numerics() {
+        let g = tiny_conv();
+        let b = backend("tvmaot").unwrap().build(&g, &BackendConfig::default()).unwrap();
+        let input = vec![-5i8; 32];
+        let mut outputs = Vec::new();
+        for name in ["etiss", "esp32c3", "stm32f4", "stm32f7", "esp32"] {
+            let t = by_name(name).unwrap();
+            let dep = t.deploy(&b, "tvm").unwrap();
+            outputs.push(t.run(&b, &dep, &input, true).unwrap().output);
+        }
+        for o in &outputs[1..] {
+            assert_eq!(o, &outputs[0], "targets must agree numerically");
+        }
+    }
+
+    #[test]
+    fn faster_clock_lower_latency_same_isa_family() {
+        let g = tiny_conv();
+        let b = backend("tvmaot").unwrap().build(&g, &BackendConfig::default()).unwrap();
+        let input = vec![0i8; 32];
+        let f4 = by_name("stm32f4").unwrap();
+        let f7 = by_name("stm32f7").unwrap();
+        let d4 = f4.deploy(&b, "tvm").unwrap();
+        let d7 = f7.deploy(&b, "tvm").unwrap();
+        let r4 = f4.run(&b, &d4, &input, true).unwrap();
+        let r7 = f7.run(&b, &d7, &input, true).unwrap();
+        assert!(r7.invoke_seconds < r4.invoke_seconds);
+    }
+}

@@ -1,0 +1,173 @@
+//! Host-side tensor helpers: shapes, strides, and layout transforms
+//! used by the code generators (weight packing) and the golden runtime.
+//! The virtual MCU itself works on raw simulated memory (see `mcu/`).
+
+use anyhow::{bail, Result};
+
+/// Element type of a model tensor. Mirrors python/compile/tmodel.py.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    I8,
+    I16,
+    I32,
+    F32,
+}
+
+impl DType {
+    pub fn from_u8(x: u8) -> Result<DType> {
+        Ok(match x {
+            0 => DType::I8,
+            1 => DType::I16,
+            2 => DType::I32,
+            3 => DType::F32,
+            _ => bail!("unknown dtype tag {x}"),
+        })
+    }
+
+    pub fn size(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::I16 => 2,
+            DType::I32 | DType::F32 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::I8 => "i8",
+            DType::I16 => "i16",
+            DType::I32 => "i32",
+            DType::F32 => "f32",
+        }
+    }
+}
+
+/// Number of elements of a shape.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Row-major (C-order) strides in elements.
+pub fn strides(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * shape[i + 1];
+    }
+    s
+}
+
+/// Flat index of a coordinate under row-major layout.
+pub fn flat_index(shape: &[usize], coord: &[usize]) -> usize {
+    debug_assert_eq!(shape.len(), coord.len());
+    let st = strides(shape);
+    coord.iter().zip(&st).map(|(c, s)| c * s).sum()
+}
+
+/// TF/TFLite SAME padding for one spatial dim: (before, after).
+/// Matches python/compile/kernels/ref.py::same_pads exactly.
+pub fn same_pads(size: usize, k: usize, s: usize) -> (usize, usize) {
+    let out = size.div_ceil(s);
+    let total = ((out - 1) * s + k).saturating_sub(size);
+    (total / 2, total - total / 2)
+}
+
+/// Output spatial size of a conv/pool: SAME (pad=0) or VALID (pad=1).
+pub fn conv_out(size: usize, k: usize, s: usize, padding: u8) -> usize {
+    if padding == 0 {
+        size.div_ceil(s)
+    } else {
+        (size - k) / s + 1
+    }
+}
+
+/// Transpose OHWI conv weights into the (i, j, c)-major GEMM matrix
+/// rows used by NHWC im2col (mirrors kernels/conv2d.py).
+pub fn pack_ohwi_to_hwio_matrix(w: &[i8], o: usize, h: usize, ws: usize, i: usize) -> Vec<i8> {
+    let mut out = vec![0i8; w.len()];
+    // src index [oc, kh, kw, ic]; dst row = ((kh*ws)+kw)*i + ic, col = oc
+    for oc in 0..o {
+        for kh in 0..h {
+            for kw in 0..ws {
+                for ic in 0..i {
+                    let src = ((oc * h + kh) * ws + kw) * i + ic;
+                    let row = (kh * ws + kw) * i + ic;
+                    out[row * o + oc] = w[src];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pack OHWI weights channel-major (c, kh, kw) — the NCHW/OIHW-io
+/// ordering used by the TVM-default schedules.
+pub fn pack_ohwi_to_oihw_matrix(w: &[i8], o: usize, h: usize, ws: usize, i: usize) -> Vec<i8> {
+    let mut out = vec![0i8; w.len()];
+    for oc in 0..o {
+        for kh in 0..h {
+            for kw in 0..ws {
+                for ic in 0..i {
+                    let src = ((oc * h + kh) * ws + kw) * i + ic;
+                    let row = (ic * h + kh) * ws + kw;
+                    out[row * o + oc] = w[src];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides(&[5]), vec![1]);
+        assert!(strides(&[]).is_empty());
+    }
+
+    #[test]
+    fn flat_index_matches_manual() {
+        assert_eq!(flat_index(&[2, 3, 4], &[1, 2, 3]), 12 + 8 + 3);
+    }
+
+    #[test]
+    fn same_pads_matches_python() {
+        // from python tests: (10,3,1)->(1,1), (10,4,2)->(1,1),
+        // (49,10,2)->(4,5), (5,1,1)->(0,0)
+        assert_eq!(same_pads(10, 3, 1), (1, 1));
+        assert_eq!(same_pads(10, 4, 2), (1, 1));
+        assert_eq!(same_pads(49, 10, 2), (4, 5));
+        assert_eq!(same_pads(5, 1, 1), (0, 0));
+    }
+
+    #[test]
+    fn conv_out_same_and_valid() {
+        assert_eq!(conv_out(49, 10, 2, 0), 25);
+        assert_eq!(conv_out(10, 3, 1, 1), 8);
+        assert_eq!(conv_out(32, 3, 2, 0), 16);
+    }
+
+    #[test]
+    fn weight_packing_shapes() {
+        // 2 output channels, 1x1 kernel, 3 input channels
+        let w: Vec<i8> = vec![1, 2, 3, 4, 5, 6]; // [oc=2][1][1][ic=3]
+        let m = pack_ohwi_to_hwio_matrix(&w, 2, 1, 1, 3);
+        // rows = ic (3), cols = oc (2): [[1,4],[2,5],[3,6]]
+        assert_eq!(m, vec![1, 4, 2, 5, 3, 6]);
+        let m2 = pack_ohwi_to_oihw_matrix(&w, 2, 1, 1, 3);
+        assert_eq!(m2, vec![1, 4, 2, 5, 3, 6]); // 1x1: same ordering
+    }
+
+    #[test]
+    fn weight_packing_transposes_kernel_dims() {
+        // oc=1, kh=2, kw=1, ic=2: OHWI = [k0c0, k0c1, k1c0, k1c1]
+        let w: Vec<i8> = vec![10, 11, 20, 21];
+        // hwio rows (i,j,c): (0,0,0),(0,0,1),(1,0,0),(1,0,1)
+        assert_eq!(pack_ohwi_to_hwio_matrix(&w, 1, 2, 1, 2), vec![10, 11, 20, 21]);
+        // oihw rows (c,i,j): (0,0,0),(0,1,0),(1,0,0),(1,1,0)
+        assert_eq!(pack_ohwi_to_oihw_matrix(&w, 1, 2, 1, 2), vec![10, 20, 11, 21]);
+    }
+}

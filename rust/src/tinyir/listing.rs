@@ -1,0 +1,108 @@
+//! Human-readable program listing — written into every run's artifact
+//! directory (paper §II "Reproducibility": all intermediates inspectable).
+
+use super::{KernelKind, Program};
+use crate::util::fmt::human_bytes;
+
+/// Render a TinyIR program as an assembly-like listing.
+pub fn render(p: &Program) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "; TinyIR program '{}'\n; arena {} + workspace {}, consts {}\n",
+        p.name,
+        human_bytes(p.arena_size as u64),
+        human_bytes(p.workspace_size as u64),
+        human_bytes(p.const_bytes() as u64),
+    ));
+    out.push_str(";\n; buffers:\n");
+    for (i, b) in p.buffers.iter().enumerate() {
+        out.push_str(&format!(
+            ";   %{i:<3} {:<24} {:>8} B  @{:<8} live [{}, {}]\n",
+            b.name,
+            b.size,
+            b.offset.map_or("?".to_string(), |o| format!("0x{o:x}")),
+            b.first_use,
+            b.last_use
+        ));
+    }
+    out.push_str(";\n");
+    for (i, c) in p.calls.iter().enumerate() {
+        let dims = match &c.kind {
+            KernelKind::Conv2D { oh, ow, oc, kh, kw, ic, channels_first, .. } => {
+                format!(
+                    "{}x{}x{} k{}x{}x{} {}",
+                    oh, ow, oc, kh, kw, ic,
+                    if *channels_first { "nchw" } else { "nhwc" }
+                )
+            }
+            KernelKind::DwConv2D { oh, ow, c, kh, kw, .. } => {
+                format!("{oh}x{ow}x{c} k{kh}x{kw} dw")
+            }
+            KernelKind::Dense { in_n, out_n, .. } => format!("{in_n}->{out_n}"),
+            KernelKind::AvgPool2D { oh, ow, c, .. } => format!("{oh}x{ow}x{c}"),
+            KernelKind::MaxPool2D { oh, ow, c, .. } => format!("{oh}x{ow}x{c}"),
+            KernelKind::Add { elems, .. }
+            | KernelKind::Copy { elems }
+            | KernelKind::Softmax { elems, .. }
+            | KernelKind::Transform { elems, .. } => format!("{elems} elems"),
+        };
+        out.push_str(&format!(
+            "{i:>4}: {:<10} {:<28} -> %{:<3} ; {} macs, ~{} instr ({})\n",
+            c.kind.name(),
+            dims,
+            c.output,
+            c.cost.macs,
+            c.cost.ref_instructions(),
+            c.origin,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+    use crate::tinyir::*;
+
+    #[test]
+    fn listing_contains_calls_and_buffers() {
+        let p = Program {
+            name: "demo".into(),
+            buffers: vec![BufferDecl {
+                name: "x".into(),
+                size: 64,
+                dtype: DType::I8,
+                offset: Some(0),
+                first_use: 0,
+                last_use: 0,
+            }],
+            consts: vec![],
+            calls: vec![KernelCall {
+                kind: KernelKind::Softmax { elems: 16, s_in: 0.1, zp_in: 0 },
+                inputs: vec![Operand::Buf(0)],
+                consts: vec![],
+                output: 0,
+                cost: LoopCost {
+                    macs: 0,
+                    out_elems: 16,
+                    per_mac: InstrMix::default(),
+                    per_out: InstrMix { alu: 30.0, ..Default::default() },
+                    fixed: 50.0,
+                    weights: WeightStream::none(),
+                    code_bytes: 400,
+                    workspace: 0,
+                },
+                origin: "softmax0".into(),
+            }],
+            input: 0,
+            output: 0,
+            arena_size: 64,
+            workspace_size: 0,
+        };
+        let text = render(&p);
+        assert!(text.contains("softmax"));
+        assert!(text.contains("%0"));
+        assert!(text.contains("demo"));
+    }
+}

@@ -1,0 +1,428 @@
+//! TinyIR — the portable inference-program format emitted by the
+//! backends (Build stage) and executed by the virtual MCU (Run stage).
+//!
+//! This is the substrate standing in for the C code TFLM/TVM generate:
+//! a list of kernel calls over arena buffers and flash constants, each
+//! carrying both *semantics* (shapes, quantization — really executed,
+//! numerically) and a *cost descriptor* (loop structure, instruction
+//! mix, weight-streaming pattern — accounted by the ISA/memory models).
+//! Keeping both on the same object guarantees the numbers the paper
+//! reports (instructions, cycles, ROM, RAM) and the computed tensors
+//! come from the same program.
+
+pub mod listing;
+
+use crate::tensor::DType;
+
+/// Index into `Program::buffers`.
+pub type BufId = usize;
+/// Index into `Program::consts`.
+pub type ConstId = usize;
+
+/// Activation buffer in the RAM arena. `offset` is assigned by the
+/// backend's memory planner; lifetimes are in call indices.
+#[derive(Debug, Clone)]
+pub struct BufferDecl {
+    pub name: String,
+    pub size: usize,
+    pub dtype: DType,
+    /// Arena offset (bytes); None until planned.
+    pub offset: Option<usize>,
+    /// First/last kernel-call index touching this buffer.
+    pub first_use: usize,
+    pub last_use: usize,
+}
+
+/// Constant placed in flash (weights, biases, packed matrices).
+#[derive(Debug, Clone)]
+pub struct ConstDecl {
+    pub name: String,
+    pub data: Vec<u8>,
+    pub dtype: DType,
+}
+
+/// Requantization parameters (float64 multiplier + round-half-even,
+/// identical to python/compile/quant.py).
+#[derive(Debug, Clone, Copy)]
+pub struct Requant {
+    pub multiplier: f64,
+    pub zp_in: i32,
+    pub zp_out: i32,
+    /// 0 = none, 1 = fused ReLU (clamp at zp_out).
+    pub act: i64,
+}
+
+/// Per-unit instruction mix for the cost model (counts per MAC or per
+/// element, depending on context). Fractions allowed — e.g. a loop
+/// branch amortized over an unrolled-by-4 body is 0.25 per element.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct InstrMix {
+    pub alu: f64,
+    pub mul: f64,
+    pub load: f64,
+    pub store: f64,
+    pub branch: f64,
+}
+
+impl InstrMix {
+    pub fn total(&self) -> f64 {
+        self.alu + self.mul + self.load + self.store + self.branch
+    }
+
+    pub fn scale(&self, k: f64) -> InstrMix {
+        InstrMix {
+            alu: self.alu * k,
+            mul: self.mul * k,
+            load: self.load * k,
+            store: self.store * k,
+            branch: self.branch * k,
+        }
+    }
+
+    pub fn add(&self, o: &InstrMix) -> InstrMix {
+        InstrMix {
+            alu: self.alu + o.alu,
+            mul: self.mul + o.mul,
+            load: self.load + o.load,
+            store: self.store + o.store,
+            branch: self.branch + o.branch,
+        }
+    }
+}
+
+/// How a kernel streams its weights from flash — drives the
+/// memory-system stall model that reproduces Table V's NHWC blowups
+/// on SPI-flash targets (see DESIGN.md §1 and mcu/memsys.rs).
+#[derive(Debug, Clone, Copy)]
+pub struct WeightStream {
+    /// Total weight bytes touched per inference (with re-reads):
+    /// bytes_per_pass * passes.
+    pub bytes_streamed: u64,
+    /// Working set that must stay resident for reuse (bytes). If it
+    /// exceeds the target's flash-cache/fast-memory window, every pass
+    /// re-fetches from backing store.
+    pub reuse_window: u64,
+    /// Contiguous (packed NCHWc blocks) vs strided (NHWC walk) access.
+    pub contiguous: bool,
+}
+
+impl WeightStream {
+    pub fn none() -> Self {
+        WeightStream { bytes_streamed: 0, reuse_window: 0, contiguous: true }
+    }
+}
+
+/// Cost descriptor of one kernel call: everything the ISA + memory
+/// models need, derived from the schedule's loop structure.
+#[derive(Debug, Clone)]
+pub struct LoopCost {
+    /// Multiply-accumulates (0 for data-movement ops).
+    pub macs: u64,
+    /// Elements produced (requantize/store cost driver).
+    pub out_elems: u64,
+    /// Instruction mix per MAC (inner loop body).
+    pub per_mac: InstrMix,
+    /// Instruction mix per output element (requant + store + loop tails).
+    pub per_out: InstrMix,
+    /// Fixed per-call instructions (prologue, address setup).
+    pub fixed: f64,
+    /// Weight-streaming pattern.
+    pub weights: WeightStream,
+    /// Estimated code footprint of this kernel's generated body.
+    pub code_bytes: u64,
+    /// Scratch RAM the kernel needs while running (im2col rows, ...).
+    pub workspace: usize,
+}
+
+impl LoopCost {
+    /// Total instruction count on the *reference* scalar ISA
+    /// (RV32GC): the number ETISS reports in Table IV.
+    pub fn ref_instructions(&self) -> u64 {
+        (self.macs as f64 * self.per_mac.total()
+            + self.out_elems as f64 * self.per_out.total()
+            + self.fixed) as u64
+    }
+
+    /// Aggregate load count (memory-stall driver).
+    pub fn loads(&self) -> u64 {
+        (self.macs as f64 * self.per_mac.load
+            + self.out_elems as f64 * self.per_out.load) as u64
+    }
+}
+
+/// Operand of a kernel call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Operand {
+    Buf(BufId),
+    Const(ConstId),
+}
+
+/// Semantic kernel kinds the virtual MCU can execute. Shapes are NHWC.
+#[derive(Debug, Clone)]
+pub enum KernelKind {
+    /// GEMM-ified convolution: input [1,H,W,C] × packed weight matrix.
+    Conv2D {
+        ih: usize, iw: usize, ic: usize,
+        oh: usize, ow: usize, oc: usize,
+        kh: usize, kw: usize,
+        stride: (usize, usize),
+        /// SAME = 0 / VALID = 1.
+        padding: u8,
+        /// Weight matrix rows ordered (i,j,c) for NHWC or (c,i,j) for
+        /// NCHW packing; cols = oc. See tensor::pack_* helpers.
+        channels_first: bool,
+        requant: Requant,
+    },
+    DwConv2D {
+        ih: usize, iw: usize, c: usize,
+        oh: usize, ow: usize,
+        kh: usize, kw: usize,
+        stride: (usize, usize),
+        padding: u8,
+        requant: Requant,
+    },
+    Dense {
+        batch: usize, in_n: usize, out_n: usize,
+        requant: Requant,
+    },
+    AvgPool2D {
+        ih: usize, iw: usize, c: usize,
+        oh: usize, ow: usize,
+        fh: usize, fw: usize,
+        stride: (usize, usize),
+    },
+    MaxPool2D {
+        ih: usize, iw: usize, c: usize,
+        oh: usize, ow: usize,
+        fh: usize, fw: usize,
+        stride: (usize, usize),
+    },
+    Add {
+        elems: usize,
+        s_a: f64, zp_a: i32,
+        s_b: f64, zp_b: i32,
+        s_o: f64, zp_o: i32,
+        act: i64,
+    },
+    /// Byte copy / reinterpret (reshape, identity).
+    Copy { elems: usize },
+    Softmax { elems: usize, s_in: f64, zp_in: i32 },
+    /// Layout/dtype transform inserted by TVM-style backends
+    /// (NHWC i8 <-> NCHWc i16 copies). Numerically value-preserving.
+    Transform { elems: usize, widen: bool },
+}
+
+impl KernelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelKind::Conv2D { .. } => "conv2d",
+            KernelKind::DwConv2D { .. } => "dwconv2d",
+            KernelKind::Dense { .. } => "dense",
+            KernelKind::AvgPool2D { .. } => "avg_pool2d",
+            KernelKind::MaxPool2D { .. } => "max_pool2d",
+            KernelKind::Add { .. } => "add",
+            KernelKind::Copy { .. } => "copy",
+            KernelKind::Softmax { .. } => "softmax",
+            KernelKind::Transform { .. } => "transform",
+        }
+    }
+}
+
+/// One kernel invocation.
+#[derive(Debug, Clone)]
+pub struct KernelCall {
+    pub kind: KernelKind,
+    /// Activation inputs (order is kind-specific; conv: [input]).
+    pub inputs: Vec<Operand>,
+    /// Constant operands (conv: [packed weights, bias, colsums]).
+    pub consts: Vec<ConstId>,
+    pub output: BufId,
+    pub cost: LoopCost,
+    /// Human-readable origin (graph op name) for listings/debug.
+    pub origin: String,
+}
+
+/// A complete generated inference program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    pub buffers: Vec<BufferDecl>,
+    pub consts: Vec<ConstDecl>,
+    pub calls: Vec<KernelCall>,
+    pub input: BufId,
+    pub output: BufId,
+    /// Total planned arena size (bytes); set by the memory planner.
+    pub arena_size: usize,
+    /// Peak workspace requirement on top of the arena.
+    pub workspace_size: usize,
+}
+
+impl Program {
+    /// Total flash bytes of constants.
+    pub fn const_bytes(&self) -> usize {
+        self.consts.iter().map(|c| c.data.len()).sum()
+    }
+
+    /// Total generated-code footprint estimate.
+    pub fn code_bytes(&self) -> u64 {
+        self.calls.iter().map(|c| c.cost.code_bytes).sum()
+    }
+
+    /// Reference-ISA invoke instruction count (Table IV "Invoke").
+    pub fn ref_invoke_instructions(&self) -> u64 {
+        self.calls.iter().map(|c| c.cost.ref_instructions()).sum()
+    }
+
+    /// Recompute buffer lifetimes from the call list. Planner input.
+    pub fn recompute_lifetimes(&mut self) {
+        for b in &mut self.buffers {
+            b.first_use = usize::MAX;
+            b.last_use = 0;
+        }
+        // graph input must be live from the very start; output to end
+        let n = self.calls.len();
+        for (i, call) in self.calls.iter().enumerate() {
+            let mut touch = |id: BufId, bufs: &mut Vec<BufferDecl>| {
+                bufs[id].first_use = bufs[id].first_use.min(i);
+                bufs[id].last_use = bufs[id].last_use.max(i);
+            };
+            for op in &call.inputs {
+                if let Operand::Buf(id) = op {
+                    touch(*id, &mut self.buffers);
+                }
+            }
+            touch(call.output, &mut self.buffers);
+        }
+        self.buffers[self.input].first_use = 0;
+        self.buffers[self.output].last_use = n.saturating_sub(1);
+    }
+
+    /// Sanity-check planned offsets: no live-range overlap in the
+    /// arena. Returns Err with the colliding pair (used by tests and
+    /// the debug-arena feature).
+    pub fn check_plan(&self) -> anyhow::Result<()> {
+        for (i, a) in self.buffers.iter().enumerate() {
+            let ao = a.offset.ok_or_else(|| {
+                anyhow::anyhow!("buffer {} unplanned", a.name)
+            })?;
+            anyhow::ensure!(
+                ao + a.size <= self.arena_size,
+                "buffer {} [{}..{}] exceeds arena {}",
+                a.name, ao, ao + a.size, self.arena_size
+            );
+            for b in self.buffers.iter().skip(i + 1) {
+                let bo = b.offset.unwrap_or(usize::MAX);
+                let lifetimes_overlap =
+                    a.first_use <= b.last_use && b.first_use <= a.last_use;
+                let space_overlap = ao < bo + b.size && bo < ao + a.size;
+                anyhow::ensure!(
+                    !(lifetimes_overlap && space_overlap),
+                    "arena collision: {} [{}..{}] live {}..{} vs {} [{}..{}] live {}..{}",
+                    a.name, ao, ao + a.size, a.first_use, a.last_use,
+                    b.name, bo, bo + b.size, b.first_use, b.last_use
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn buf(name: &str, size: usize) -> BufferDecl {
+        BufferDecl {
+            name: name.into(),
+            size,
+            dtype: DType::I8,
+            offset: None,
+            first_use: 0,
+            last_use: 0,
+        }
+    }
+
+    fn copy_call(src: BufId, dst: BufId, elems: usize) -> KernelCall {
+        KernelCall {
+            kind: KernelKind::Copy { elems },
+            inputs: vec![Operand::Buf(src)],
+            consts: vec![],
+            output: dst,
+            cost: LoopCost {
+                macs: 0,
+                out_elems: elems as u64,
+                per_mac: InstrMix::default(),
+                per_out: InstrMix { load: 1.0, store: 1.0, ..Default::default() },
+                fixed: 10.0,
+                weights: WeightStream::none(),
+                code_bytes: 32,
+                workspace: 0,
+            },
+            origin: "copy".into(),
+        }
+    }
+
+    fn chain3() -> Program {
+        let mut p = Program {
+            name: "t".into(),
+            buffers: vec![buf("a", 16), buf("b", 16), buf("c", 16)],
+            consts: vec![],
+            calls: vec![copy_call(0, 1, 16), copy_call(1, 2, 16)],
+            input: 0,
+            output: 2,
+            arena_size: 0,
+            workspace_size: 0,
+        };
+        p.recompute_lifetimes();
+        p
+    }
+
+    #[test]
+    fn lifetimes_from_calls() {
+        let p = chain3();
+        assert_eq!((p.buffers[0].first_use, p.buffers[0].last_use), (0, 0));
+        assert_eq!((p.buffers[1].first_use, p.buffers[1].last_use), (0, 1));
+        assert_eq!((p.buffers[2].first_use, p.buffers[2].last_use), (1, 1));
+    }
+
+    #[test]
+    fn plan_check_catches_overlap() {
+        let mut p = chain3();
+        // a and b are simultaneously live at call 0 — same offset must fail
+        p.buffers[0].offset = Some(0);
+        p.buffers[1].offset = Some(0);
+        p.buffers[2].offset = Some(16);
+        p.arena_size = 32;
+        assert!(p.check_plan().is_err());
+        // disjoint offsets pass; a and c may alias (disjoint lifetimes)
+        p.buffers[1].offset = Some(16);
+        p.buffers[2].offset = Some(0);
+        p.check_plan().unwrap();
+    }
+
+    #[test]
+    fn plan_check_catches_arena_overflow() {
+        let mut p = chain3();
+        p.buffers[0].offset = Some(0);
+        p.buffers[1].offset = Some(16);
+        p.buffers[2].offset = Some(0);
+        p.arena_size = 20; // b sticks out
+        assert!(p.check_plan().is_err());
+    }
+
+    #[test]
+    fn instruction_accounting() {
+        let p = chain3();
+        // per copy: 16 elems * (1 load + 1 store) + 10 fixed = 42
+        assert_eq!(p.ref_invoke_instructions(), 84);
+        assert_eq!(p.code_bytes(), 64);
+    }
+
+    #[test]
+    fn instr_mix_algebra() {
+        let a = InstrMix { alu: 1.0, mul: 2.0, load: 3.0, store: 0.0, branch: 0.5 };
+        assert_eq!(a.total(), 6.5);
+        assert_eq!(a.scale(2.0).mul, 4.0);
+        assert_eq!(a.add(&a).load, 6.0);
+    }
+}

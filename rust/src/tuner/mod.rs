@@ -1,0 +1,227 @@
+//! AutoTVM-style tuner (paper §III-C, the Tune stage).
+//!
+//! For each tunable op class in the model, the tuner enumerates the
+//! schedule's knob space and *measures each candidate on the target*
+//! — rebuild, deploy, run — exactly MicroTVM's measure loop (the paper
+//! notes this needs a flash+run per iteration, which is why tuning is
+//! slow and wears out flash on real boards; our virtual targets make
+//! it cheap, but the code path is the same). The measured objective is
+//! invoke latency; candidates that fail to deploy (workspace blows the
+//! RAM budget) are rejected, mirroring AutoTVM's error states.
+
+use anyhow::Result;
+
+use crate::backends::{Backend, BackendConfig};
+use crate::graph::Graph;
+use crate::schedules::{Knobs, Schedule};
+use crate::targets::Target;
+use crate::util::XorShift64;
+
+/// Outcome of a tuning session for one (model, schedule, target).
+#[derive(Debug, Clone)]
+pub struct TuneResult {
+    pub best: Schedule,
+    pub best_seconds: f64,
+    pub baseline_seconds: f64,
+    pub trials: usize,
+    /// (trial index, seconds) history for ablation plots.
+    pub history: Vec<(usize, f64)>,
+}
+
+impl TuneResult {
+    pub fn improvement(&self) -> f64 {
+        if self.baseline_seconds > 0.0 {
+            1.0 - self.best_seconds / self.baseline_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Tuning options.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneOpts {
+    /// Measurement budget (paper: "at least 600 iterations").
+    pub trials: usize,
+    pub seed: u64,
+}
+
+impl Default for TuneOpts {
+    fn default() -> Self {
+        TuneOpts { trials: crate::calib::PAPER_TUNING_ITERATIONS, seed: 0xA57 }
+    }
+}
+
+/// Measure one schedule candidate end-to-end on the target
+/// (build → deploy → run in cost-only mode). Returns invoke seconds.
+fn measure(
+    backend: &dyn Backend,
+    graph: &Graph,
+    target: &dyn Target,
+    schedule: Schedule,
+) -> Result<f64> {
+    let mut cfg = BackendConfig::default();
+    cfg.schedule = Some(schedule);
+    let build = backend.build(graph, &cfg)?;
+    let dep = target.deploy(&build, backend.framework())?;
+    let input = vec![0i8; graph.tensor(graph.inputs[0]).numel()];
+    let out = target.run(&build, &dep, &input, false)?;
+    Ok(out.invoke_seconds)
+}
+
+/// Tune the schedule's knobs for `graph` on `target`.
+///
+/// Search: random sampling over the joint (conv, dense) knob space
+/// with greedy keep-best — AutoTVM's default random tuner. The knob
+/// space is per-schedule: untunable templates have singleton spaces,
+/// reproducing Table V's "no improvement" cells.
+pub fn tune(
+    backend: &dyn Backend,
+    graph: &Graph,
+    target: &dyn Target,
+    base: Schedule,
+    opts: TuneOpts,
+) -> Result<TuneResult> {
+    anyhow::ensure!(
+        target.supports_tuning(),
+        "target {} does not support AutoTVM measurement",
+        target.name()
+    );
+    let baseline = measure(backend, graph, target, base)?;
+    // joint space: conv knobs × dense unroll — sampled, not exhaustive
+    let max_oc = graph
+        .ops
+        .iter()
+        .filter(|o| o.opcode == crate::graph::OpCode::Conv2D)
+        .map(|o| graph.tensor(o.inputs[1]).shape[0])
+        .max()
+        .unwrap_or(8);
+    // only op classes actually present in the model contribute
+    // templates (AutoTVM extracts tasks from the graph)
+    let has_conv = graph.ops.iter().any(|o| {
+        matches!(
+            o.opcode,
+            crate::graph::OpCode::Conv2D | crate::graph::OpCode::DepthwiseConv2D
+        )
+    });
+    let has_dense = graph
+        .ops
+        .iter()
+        .any(|o| o.opcode == crate::graph::OpCode::FullyConnected);
+    let conv_space = if has_conv {
+        base.conv_knob_space(max_oc)
+    } else {
+        vec![base.knobs]
+    };
+    let dense_space = if has_dense {
+        base.dense_knob_space()
+    } else {
+        vec![base.knobs]
+    };
+    let mut rng = XorShift64::new(opts.seed);
+    let mut best = base;
+    let mut best_s = baseline;
+    let mut history = Vec::new();
+    let singleton = conv_space.len() == 1 && dense_space.len() == 1;
+    let trials = if singleton { 1 } else { opts.trials };
+    for t in 0..trials {
+        let knobs: Knobs = if singleton {
+            base.knobs
+        } else {
+            // dense unroll shares the knob struct's unroll field; a
+            // candidate is one joint assignment
+            let c = *rng.choose(&conv_space);
+            let d = *rng.choose(&dense_space);
+            Knobs { unroll: if dense_space.len() > 1 { d.unroll } else { c.unroll }, ..c }
+        };
+        let cand = base.with_knobs(knobs);
+        match measure(backend, graph, target, cand) {
+            Ok(s) => {
+                if s < best_s {
+                    best_s = s;
+                    best = cand;
+                }
+                history.push((t, best_s));
+            }
+            Err(_) => {
+                // deploy failure (e.g. workspace OOM) — rejected trial
+                history.push((t, best_s));
+            }
+        }
+    }
+    Ok(TuneResult {
+        best,
+        best_seconds: best_s,
+        baseline_seconds: baseline,
+        trials,
+        history,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends;
+    use crate::graph::model::testutil::tiny_conv;
+    use crate::schedules::{Family, Layout};
+    use crate::targets;
+
+    fn quick(trials: usize) -> TuneOpts {
+        TuneOpts { trials, seed: 7 }
+    }
+
+    #[test]
+    fn tuning_never_worse_than_baseline() {
+        let g = tiny_conv();
+        let b = backends::by_name("tvmaot").unwrap();
+        let t = targets::by_name("stm32f7").unwrap();
+        let base = Schedule::new(Family::DefaultX86, Layout::Nchw);
+        let r = tune(&*b, &g, &*t, base, quick(40)).unwrap();
+        assert!(r.best_seconds <= r.baseline_seconds);
+        assert!(r.improvement() >= 0.0);
+    }
+
+    #[test]
+    fn nchw_tuning_improves() {
+        let g = tiny_conv();
+        let b = backends::by_name("tvmaot").unwrap();
+        let t = targets::by_name("esp32c3").unwrap();
+        let base = Schedule::new(Family::DefaultX86, Layout::Nchw);
+        let r = tune(&*b, &g, &*t, base, quick(60)).unwrap();
+        // tunable conv template: some gain expected (paper: 10-35 %)
+        assert!(r.improvement() > 0.0, "improvement {}", r.improvement());
+    }
+
+    #[test]
+    fn x86_nhwc_conv_only_model_sees_no_gain() {
+        let g = tiny_conv(); // conv-only graph, no dense
+        let b = backends::by_name("tvmaot").unwrap();
+        let t = targets::by_name("stm32f4").unwrap();
+        let base = Schedule::new(Family::DefaultX86, Layout::Nhwc);
+        let r = tune(&*b, &g, &*t, base, quick(30)).unwrap();
+        // conv untunable + no dense layer => singleton space
+        assert_eq!(r.trials, 1);
+        assert!(r.improvement().abs() < 1e-12);
+    }
+
+    #[test]
+    fn esp32_refuses_tuning() {
+        let g = tiny_conv();
+        let b = backends::by_name("tvmaot").unwrap();
+        let t = targets::by_name("esp32").unwrap();
+        let base = Schedule::new(Family::DefaultX86, Layout::Nchw);
+        assert!(tune(&*b, &g, &*t, base, quick(5)).is_err());
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let g = tiny_conv();
+        let b = backends::by_name("tvmaot").unwrap();
+        let t = targets::by_name("stm32f7").unwrap();
+        let base = Schedule::new(Family::DefaultX86, Layout::Nchw);
+        let a = tune(&*b, &g, &*t, base, quick(25)).unwrap();
+        let c = tune(&*b, &g, &*t, base, quick(25)).unwrap();
+        assert_eq!(a.best_seconds, c.best_seconds);
+        assert_eq!(a.best.knobs, c.best.knobs);
+    }
+}

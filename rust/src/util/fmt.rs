@@ -1,0 +1,65 @@
+//! Human-readable formatting used by reports and the CLI.
+
+/// Bytes -> "37.2 kB" / "1.5 MB" (decimal, like the paper's tables).
+pub fn human_bytes(n: u64) -> String {
+    if n >= 1_000_000 {
+        format!("{:.1} MB", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.1} kB", n as f64 / 1e3)
+    } else {
+        format!("{n} B")
+    }
+}
+
+/// Instruction counts -> "153.144 M" style (Table IV uses ×10^6).
+pub fn human_count(n: u64) -> String {
+    if n >= 1_000_000 {
+        format!("{:.3} M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.1} k", n as f64 / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// Seconds -> "0.113 s" / "43.2 min" (Table III/V style).
+pub fn human_secs(s: f64) -> String {
+    if s >= 120.0 {
+        format!("{:.1} min", s / 60.0)
+    } else if s >= 0.001 {
+        format!("{s:.3} s")
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+/// Fixed-width right-aligned cell for plain-text tables.
+pub fn cell(s: &str, w: usize) -> String {
+    format!("{s:>w$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(37_200), "37.2 kB");
+        assert_eq!(human_bytes(1_500_000), "1.5 MB");
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(human_count(153_144_000), "153.144 M");
+        assert_eq!(human_count(2_500), "2.5 k");
+        assert_eq!(human_count(42), "42");
+    }
+
+    #[test]
+    fn secs() {
+        assert_eq!(human_secs(0.113), "0.113 s");
+        assert_eq!(human_secs(2580.0), "43.0 min");
+        assert_eq!(human_secs(0.0000005), "0.5 us");
+    }
+}

@@ -1,0 +1,78 @@
+//! Small shared utilities: seeded RNG, logging, formatting helpers.
+//!
+//! Nothing beyond `xla` and `anyhow` is reachable offline in this
+//! environment, so these substitute for the usual `rand`/`log` crates.
+
+pub mod rng;
+pub mod log;
+pub mod fmt;
+
+pub use rng::XorShift64;
+
+/// Monotonic stopwatch for stage timing (Table III reproduction).
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(std::time::Instant::now())
+    }
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Integer ceiling division (used throughout shape/padding math).
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Round-half-to-even on f64 — IEEE `roundTiesToEven`, matching
+/// `np.round`/`jnp.round` so requantization is bit-identical to the
+/// python golden path (see python/compile/quant.py).
+pub fn round_half_even(x: f64) -> f64 {
+    let r = x.round(); // half away from zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        if r % 2.0 == 0.0 {
+            r
+        } else {
+            r - (r - x).signum()
+        }
+    } else {
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_half_even_matches_numpy() {
+        // np.round([0.5, 1.5, 2.5, -0.5, -1.5, -2.5]) = [0,2,2,-0,-2,-2]
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(-2.5), -2.0);
+        assert_eq!(round_half_even(3.7), 4.0);
+        assert_eq!(round_half_even(-3.7), -4.0);
+        assert_eq!(round_half_even(2.0), 2.0);
+        assert_eq!(round_half_even(1234567.5), 1234568.0);
+        assert_eq!(round_half_even(1234566.5), 1234566.0);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 8), 1);
+        assert_eq!(ceil_div(0, 8), 0);
+    }
+}

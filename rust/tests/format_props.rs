@@ -1,0 +1,112 @@
+//! Property tests on the data-format substrates: TModel parsing never
+//! panics on corrupted bytes, MLIF round-trips arbitrary reports, JSON
+//! round-trips arbitrary golden vectors, CSV round-trips arbitrary
+//! cells.
+
+use mlonmcu::data::csv::{parse_csv, to_csv};
+use mlonmcu::data::Json;
+use mlonmcu::frontends::tmodel;
+use mlonmcu::platform::mlif::{self, MlifReport};
+use mlonmcu::prop::{check, no_shrink, Config};
+use mlonmcu::util::XorShift64;
+
+#[test]
+fn tmodel_parser_never_panics_on_fuzz() {
+    check(
+        Config { cases: 300, seed: 0xF122 },
+        |rng: &mut XorShift64| {
+            let n = rng.range(0, 300);
+            let mut v: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            // half the cases: corrupt a valid-ish header instead
+            if rng.f64() < 0.5 {
+                let mut h = b"TMDL".to_vec();
+                h.extend(1u32.to_le_bytes());
+                h.extend(v.clone());
+                v = h;
+            }
+            v
+        },
+        no_shrink,
+        |bytes| {
+            // must return Err or Ok, never panic
+            let _ = tmodel::parse(bytes);
+            true
+        },
+    );
+}
+
+#[test]
+fn mlif_roundtrip_arbitrary_reports() {
+    check(
+        Config { cases: 200, seed: 0x3117 },
+        |rng: &mut XorShift64| MlifReport {
+            model: format!("m{}", rng.range(0, 999)),
+            setup_instructions: rng.next_u64() >> 20,
+            invoke_instructions: rng.next_u64() >> 20,
+            invoke_cycles: rng.next_u64() >> 20,
+            invoke_us: rng.next_u64() >> 30,
+            output: (0..rng.range(0, 64))
+                .map(|_| rng.next_u64() as i8)
+                .collect(),
+        },
+        no_shrink,
+        |r| mlif::parse(&mlif::render(r)).map(|p| p == *r).unwrap_or(false),
+    );
+}
+
+#[test]
+fn json_roundtrip_i64_vectors() {
+    check(
+        Config { cases: 200, seed: 0x7E57 },
+        |rng: &mut XorShift64| {
+            (0..rng.range(0, 80))
+                .map(|_| (rng.next_u64() as i8) as i64)
+                .collect::<Vec<i64>>()
+        },
+        mlonmcu::prop::shrink_vec,
+        |v| {
+            let j = Json::obj(vec![("output", Json::from_i64s(v))]);
+            Json::parse(&j.to_string())
+                .ok()
+                .and_then(|p| p.get("output").and_then(|o| o.as_i64_vec()))
+                .map(|got| got == *v)
+                .unwrap_or(false)
+        },
+    );
+}
+
+#[test]
+fn csv_roundtrip_arbitrary_cells() {
+    let charset: Vec<char> =
+        "abc,\"\n x-7".chars().collect();
+    check(
+        Config { cases: 200, seed: 0xC54 },
+        |rng: &mut XorShift64| {
+            let cols = rng.range(1, 5);
+            let rows = rng.range(0, 6);
+            let cell = |rng: &mut XorShift64| -> String {
+                (0..rng.range(0, 8))
+                    .map(|_| charset[rng.range(0, charset.len() - 1)])
+                    .collect()
+            };
+            let headers: Vec<String> =
+                (0..cols).map(|i| format!("h{i}{}", cell(rng))).collect();
+            let data: Vec<Vec<String>> = (0..rows)
+                .map(|_| (0..cols).map(|_| cell(rng)).collect())
+                .collect();
+            (headers, data)
+        },
+        no_shrink,
+        |(headers, data)| {
+            let text = to_csv(headers, data);
+            let parsed = parse_csv(&text);
+            if parsed.is_empty() {
+                return data.is_empty() && headers.iter().all(String::is_empty);
+            }
+            let hdr_ok = parsed[0] == *headers;
+            let rows_ok = parsed[1..].len() == data.len()
+                && parsed[1..].iter().zip(data).all(|(a, b)| a == b);
+            hdr_ok && rows_ok
+        },
+    );
+}

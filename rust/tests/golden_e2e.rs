@@ -1,0 +1,109 @@
+//! Cross-language golden validation (DESIGN.md experiment V1): the
+//! virtual MCU's int8 outputs must match the JAX/Pallas golden path —
+//! both via the pre-dumped golden JSON vectors and via live PJRT
+//! execution of the AOT-lowered HLO. Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use mlonmcu::backends::{by_name, BackendConfig};
+use mlonmcu::features::{compare_outputs, Validation};
+use mlonmcu::frontends::load_model;
+use mlonmcu::runtime::GoldenRuntime;
+use mlonmcu::targets;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("models/aww.tmodel").is_file() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn device_output(model: &str, input: &[i8], backend: &str) -> Vec<i8> {
+    let dir = artifacts().unwrap();
+    let g = load_model(model, &[dir.join("models")]).unwrap();
+    let b = by_name(backend).unwrap();
+    let build = b.build(&g, &BackendConfig::default()).unwrap();
+    let t = targets::by_name("etiss").unwrap();
+    let dep = t.deploy(&build, b.framework()).unwrap();
+    t.run(&build, &dep, input, true).unwrap().output
+}
+
+#[test]
+fn mcu_outputs_match_dumped_goldens_all_models_all_backends() {
+    let Some(dir) = artifacts() else { return };
+    for model in ["aww", "resnet", "toycar"] {
+        let path = dir.join("golden").join(format!("{model}.json"));
+        let j = mlonmcu::data::Json::parse_file(&path).unwrap();
+        let input: Vec<i8> = j
+            .get("input")
+            .unwrap()
+            .as_i64_vec()
+            .unwrap()
+            .into_iter()
+            .map(|x| x as i8)
+            .collect();
+        let golden: Vec<i8> = j
+            .get("output")
+            .unwrap()
+            .as_i64_vec()
+            .unwrap()
+            .into_iter()
+            .map(|x| x as i8)
+            .collect();
+        for backend in ["tflmi", "tflmc", "tvmaot", "tvmaot+", "tvmrt"] {
+            let out = device_output(model, &input, backend);
+            match compare_outputs(&out, &golden, 1) {
+                Validation::Pass { max_diff } => {
+                    assert!(max_diff <= 1, "{model}/{backend}: diff {max_diff}");
+                }
+                v => panic!("{model}/{backend}: validation failed: {v:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_golden_matches_dumped_golden() {
+    let Some(dir) = artifacts() else { return };
+    let rt = match GoldenRuntime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: PJRT unavailable: {e}");
+            return;
+        }
+    };
+    for model in ["toycar", "aww"] {
+        let (input, golden, shape) = rt.load_golden_json(model).unwrap();
+        let out = rt.run_golden(model, &input, &shape).unwrap();
+        assert_eq!(
+            out, golden,
+            "{model}: PJRT execution disagrees with aot.py dump"
+        );
+    }
+}
+
+#[test]
+fn live_pjrt_vs_virtual_mcu_fresh_input() {
+    let Some(dir) = artifacts() else { return };
+    let rt = match GoldenRuntime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping: PJRT unavailable: {e}");
+            return;
+        }
+    };
+    // an input the python side never saw: full cross-language check
+    let g = load_model("toycar", &[dir.join("models")]).unwrap();
+    let shape = g.tensor(g.inputs[0]).shape.clone();
+    let n: usize = shape.iter().product();
+    let input: Vec<i8> = (0..n).map(|i| ((i * 37 + 11) % 251) as u8 as i8).collect();
+    let golden = rt.run_golden("toycar", &input, &shape).unwrap();
+    let device = device_output("toycar", &input, "tvmaot");
+    match compare_outputs(&device, &golden, 1) {
+        Validation::Pass { .. } => {}
+        v => panic!("fresh-input validation failed: {v:?}"),
+    }
+}

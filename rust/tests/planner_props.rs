@@ -1,0 +1,142 @@
+//! Property tests (in-repo prop framework) on coordinator invariants:
+//! memory planners never produce colliding plans, USMP dominates
+//! storage-tokens, greedy never exceeds no-reuse, and lifetimes are
+//! respected for arbitrary DAG-shaped programs.
+
+use mlonmcu::backends::planner::{plan, PlannerKind};
+use mlonmcu::kernels::copy_cost;
+use mlonmcu::prop::{check, no_shrink, Config};
+use mlonmcu::tensor::DType;
+use mlonmcu::tinyir::*;
+use mlonmcu::util::XorShift64;
+
+/// Generate a random (but valid) program: a DAG where each call reads
+/// 1-2 earlier buffers and writes a fresh one.
+fn random_program(rng: &mut XorShift64) -> Program {
+    let n_calls = rng.range(1, 24);
+    let mut buffers = vec![BufferDecl {
+        name: "input".into(),
+        size: rng.range(1, 4096),
+        dtype: DType::I8,
+        offset: None,
+        first_use: 0,
+        last_use: 0,
+    }];
+    let mut calls = Vec::new();
+    for i in 0..n_calls {
+        let src = rng.range(0, buffers.len() - 1);
+        let elems = rng.range(1, 4096);
+        buffers.push(BufferDecl {
+            name: format!("b{i}"),
+            size: elems,
+            dtype: DType::I8,
+            offset: None,
+            first_use: 0,
+            last_use: 0,
+        });
+        let dst = buffers.len() - 1;
+        let mut inputs = vec![Operand::Buf(src)];
+        if rng.f64() < 0.3 && buffers.len() > 2 {
+            inputs.push(Operand::Buf(rng.range(0, buffers.len() - 2)));
+        }
+        calls.push(KernelCall {
+            kind: KernelKind::Copy { elems },
+            inputs,
+            consts: vec![],
+            output: dst,
+            cost: copy_cost(elems as u64),
+            origin: format!("c{i}"),
+        });
+    }
+    let out = buffers.len() - 1;
+    let mut p = Program {
+        name: "prop".into(),
+        buffers,
+        consts: vec![],
+        calls,
+        input: 0,
+        output: out,
+        arena_size: 0,
+        workspace_size: 0,
+    };
+    p.recompute_lifetimes();
+    p
+}
+
+#[test]
+fn all_planners_always_produce_valid_plans() {
+    for kind in [
+        PlannerKind::GreedyArena,
+        PlannerKind::StorageTokens,
+        PlannerKind::UsmpInterval,
+        PlannerKind::NoReuse,
+    ] {
+        check(
+            Config { cases: 150, seed: 0xC0FFEE },
+            random_program,
+            no_shrink,
+            |p| {
+                let mut p = p.clone();
+                plan(&mut p, kind);
+                p.check_plan().is_ok()
+            },
+        );
+    }
+}
+
+#[test]
+fn usmp_never_worse_than_tokens_or_noreuse() {
+    check(
+        Config { cases: 150, seed: 0xBEEF },
+        random_program,
+        no_shrink,
+        |p| {
+            let mut a = p.clone();
+            let mut b = p.clone();
+            let mut c = p.clone();
+            let usmp = plan(&mut a, PlannerKind::UsmpInterval);
+            let tok = plan(&mut b, PlannerKind::StorageTokens);
+            let none = plan(&mut c, PlannerKind::NoReuse);
+            usmp <= tok && tok <= none
+        },
+    );
+}
+
+#[test]
+fn arena_always_fits_largest_live_set_lower_bound() {
+    // the arena can never be smaller than the largest single buffer
+    check(
+        Config { cases: 100, seed: 0xA11CE },
+        random_program,
+        no_shrink,
+        |p| {
+            let mut q = p.clone();
+            let arena = plan(&mut q, PlannerKind::UsmpInterval);
+            let max_buf = q.buffers.iter().map(|b| b.size).max().unwrap_or(0);
+            arena >= max_buf
+        },
+    );
+}
+
+#[test]
+fn lifetimes_cover_all_uses() {
+    check(
+        Config { cases: 100, seed: 0xD00D },
+        random_program,
+        no_shrink,
+        |p| {
+            p.calls.iter().enumerate().all(|(i, c)| {
+                let out = &p.buffers[c.output];
+                let out_ok = out.first_use <= i && i <= out.last_use;
+                let ins_ok = c.inputs.iter().all(|op| match op {
+                    Operand::Buf(id) => {
+                        let b = &p.buffers[*id];
+                        b.first_use <= i && i <= b.last_use
+                    }
+                    _ => true,
+                });
+                out_ok && ins_ok
+            })
+        },
+    );
+}

@@ -1,0 +1,135 @@
+//! Session-level integration: full Load→Build→Compile→Run flows over
+//! the real zoo models (requires `make artifacts`), exercising the
+//! run matrix, parallel executor, failure capture and report pipeline.
+
+use std::path::PathBuf;
+
+use mlonmcu::config::Environment;
+use mlonmcu::report::Cell;
+use mlonmcu::session::{RunMatrix, Session};
+
+/// Environment rooted at the repo checkout (artifacts/ present) but
+/// with sessions redirected to a temp dir.
+fn repo_env(tag: &str) -> Option<Environment> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if !root.join("artifacts/models/aww.tmodel").is_file() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let sdir = std::env::temp_dir().join(format!("mlonmcu_e2e_{tag}"));
+    let _ = std::fs::remove_dir_all(&sdir);
+    let env = Environment::load(&root)
+        .or_else(|_| {
+            // no environment.toml at repo root: use implicit default
+            std::env::set_var("MLONMCU_UNUSED", "1");
+            Ok::<_, anyhow::Error>(Environment {
+                root: root.clone(),
+                doc: mlonmcu::data::toml::TomlDoc::parse(
+                    mlonmcu::config::DEFAULT_TEMPLATE,
+                )
+                .unwrap(),
+                overrides: Default::default(),
+            })
+        })
+        .ok()?;
+    env.with_overrides(&[format!("paths.sessions={}", sdir.display())])
+        .ok()
+}
+
+#[test]
+fn single_run_aww_tvmaot_etiss() {
+    let Some(env) = repo_env("single") else { return };
+    let s = Session::new(&env).unwrap();
+    let m = RunMatrix::new()
+        .models(["aww"])
+        .backends(["tvmaot"])
+        .targets(["etiss"]);
+    let report = s.run_matrix(&m, 1).unwrap();
+    assert_eq!(report.len(), 1);
+    let row = &report.rows[0];
+    assert_eq!(row["status"].render(), "ok");
+    // Table IV ballpark: aww tvmaot invoke ~30M ref instructions ±40%
+    let invoke = row["invoke_instr"].as_f64().unwrap();
+    assert!(
+        (18e6..45e6).contains(&invoke),
+        "aww/tvmaot invoke {invoke} out of Table IV ballpark"
+    );
+    // run artifacts exist (reproducibility)
+    assert!(s.dir.join("run_0/program.tir").is_file());
+    assert!(s.dir.join("run_0/metrics.json").is_file());
+    assert!(s.dir.join("report.csv").is_file());
+}
+
+#[test]
+fn parallel_matches_serial_results() {
+    let Some(env) = repo_env("par") else { return };
+    let m = RunMatrix::new()
+        .models(["aww", "toycar"])
+        .backends(["tflmi", "tvmaot"])
+        .targets(["etiss", "stm32f7"]);
+    let s1 = Session::new(&env).unwrap();
+    let r1 = s1.run_matrix(&m, 1).unwrap();
+    let s2 = Session::new(&env).unwrap();
+    let r2 = s2.run_matrix(&m, 4).unwrap();
+    assert_eq!(r1.len(), r2.len());
+    for (a, b) in r1.rows.iter().zip(&r2.rows) {
+        for col in ["model", "backend", "target", "status", "invoke_instr", "time_s"] {
+            assert_eq!(a.get(col), b.get(col), "col {col} differs");
+        }
+    }
+}
+
+#[test]
+fn memory_gate_failures_become_missing_rows() {
+    let Some(env) = repo_env("gates") else { return };
+    let s = Session::new(&env).unwrap();
+    // vww on esp32: must fail the flash gate (Table V "—")
+    let m = RunMatrix::new()
+        .models(["vww"])
+        .backends(["tvmaot"])
+        .targets(["esp32"]);
+    let report = s.run_matrix(&m, 1).unwrap();
+    let row = &report.rows[0];
+    assert!(row["status"].render().starts_with("failed:"));
+    assert_eq!(row["time_s"], Cell::Missing);
+}
+
+#[test]
+fn esp32_tuned_runs_fail_as_in_table5() {
+    let Some(env) = repo_env("tunegate") else { return };
+    let env = env.with_overrides(&["tune.trials=5".into()]).unwrap();
+    let s = Session::new(&env).unwrap();
+    let m = RunMatrix::new()
+        .models(["toycar"])
+        .backends(["tvmaot"])
+        .targets(["esp32"])
+        .schedules(["arm-nhwc"])
+        .with_tuning_sweep();
+    let report = s.run_matrix(&m, 1).unwrap();
+    assert_eq!(report.len(), 2);
+    let untuned = &report.rows[0];
+    let tuned = &report.rows[1];
+    assert_eq!(untuned["status"].render(), "ok");
+    assert_eq!(tuned["status"].render(), "failed:tune");
+}
+
+#[test]
+fn table4_campaign_all_green_on_etiss() {
+    let Some(env) = repo_env("t4") else { return };
+    let s = Session::new(&env).unwrap();
+    let m = RunMatrix::new()
+        .models(["aww", "vww", "resnet", "toycar"])
+        .backends(["tflmi", "tflmc", "tvmaot", "tvmaot+", "tvmrt"])
+        .targets(["etiss"]);
+    let report = s.run_matrix(&m, 2).unwrap();
+    assert_eq!(report.len(), 20);
+    for row in &report.rows {
+        assert_eq!(
+            row["status"].render(),
+            "ok",
+            "{}/{} failed",
+            row["model"].render(),
+            row["backend"].render()
+        );
+    }
+}
