@@ -35,17 +35,18 @@ fn main() {
 
     println!("== Table III: benchmark runtime summary ==");
     println!(
-        "{:<10} {:>6} {:>18} {:>18} {:>20}",
+        "{:<10} {:>6} {:>18} {:>18} {:>20} {:>16} {:>14}",
         "benchmark", "#runs", "host load-compile", "host load-run",
-        "simulated device"
+        "simulated device", "cache hit/miss", "builds run"
     );
     for (name, t, paper_lc, paper_lr) in [
         ("III-B", t_b, 340.0, 350.0),
         ("III-C", t_c, 960.0, 2580.0),
     ] {
         println!(
-            "{:<10} {:>6} {:>16.2} s {:>16.2} s {:>18.1} s   (paper: {} s / {} s)",
+            "{:<10} {:>6} {:>16.2} s {:>16.2} s {:>18.1} s {:>11}/{:<4} {:>14}   (paper: {} s / {} s)",
             name, t.runs, t.load_compile_s, t.load_run_s, t.sim_s,
+            t.cache_hits, t.cache_misses, t.stage_execs.builds,
             paper_lc, paper_lr
         );
     }
@@ -79,6 +80,19 @@ fn main() {
          (sim {:.1}s vs host {:.1}s)",
         t_c.sim_s,
         t_c.load_run_s
+    );
+    // (3) the stage scheduler deduplicates shared prefixes: III-C is
+    // 4 models × 4 schedules over 4 targets, so 16 distinct untuned
+    // builds serve all 64 runs
+    assert_eq!(
+        t_c.stage_execs.builds, 16,
+        "III-C must build one artifact per (model, schedule) prefix"
+    );
+    assert!(
+        t_c.cache_hits >= 48,
+        "III-C target sweep must reuse builds across targets \
+         ({} hits)",
+        t_c.cache_hits
     );
     println!("\nTable III shape checks PASSED");
 }

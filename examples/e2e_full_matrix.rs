@@ -88,6 +88,15 @@ fn main() -> anyhow::Result<()> {
         timing_b.sim_s + timing_c.sim_s,
     );
     println!(
+        "artifact cache: {} stage executions avoided ({} + {} hits), \
+         {} + {} builds actually run",
+        timing_b.cache_hits + timing_c.cache_hits,
+        timing_b.cache_hits,
+        timing_c.cache_hits,
+        timing_b.stage_execs.builds,
+        timing_c.stage_execs.builds,
+    );
+    println!(
         "reports: {} and {}",
         session_b.dir.join("report.md").display(),
         session_c.dir.join("report.md").display()

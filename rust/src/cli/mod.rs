@@ -17,7 +17,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::Environment;
 use crate::postprocess;
-use crate::session::{RunMatrix, Session};
+use crate::session::{RunMatrix, RunOptions, Session};
 
 use args::Parsed;
 
@@ -32,8 +32,12 @@ USAGE:
   mlonmcu flow run -m M [-m M2..] -b B.. -t T..
           [--schedule default-nchw ..] [--tune]
           [-f validate ..] [--parallel N] [-c key=val ..]
-          [--postprocess filter_cols:a,b ..]
+          [--postprocess filter_cols:a,b ..] [--no-cache]
   mlonmcu report [--session N]            reprint a session report
+
+FLAGS:
+  --no-cache    disable the session artifact cache: every run executes
+                every stage itself (no Load/Tune/Build deduplication)
 ";
 
 /// Entry point for the binary.
@@ -140,6 +144,7 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
             ("--postprocess", true),
             ("--parallel", true),
             ("--tune", false),
+            ("--no-cache", false),
         ],
     )?;
     let models = p.all(&["-m", "--model"]);
@@ -168,7 +173,11 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
     }
 
     let session = Session::new(&env)?;
-    let mut report = session.run_matrix(&matrix, parallel)?;
+    let opts = RunOptions {
+        parallel,
+        use_cache: !p.flag("--no-cache"),
+    };
+    let mut report = session.run_matrix_opts(&matrix, opts)?;
     let artifacts =
         postprocess::apply_all(matrix.postprocess_specs(), &mut report)?;
     for (name, text) in &artifacts {
@@ -186,6 +195,21 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
         t.sim_s,
         session.dir.display()
     );
+    if opts.use_cache {
+        println!(
+            "artifact cache: {} hit(s), {} miss(es), {} eviction(s); \
+             executed {} load / {} tune / {} build stage(s) for {} runs",
+            t.cache_hits,
+            t.cache_misses,
+            t.cache_evictions,
+            t.stage_execs.loads,
+            t.stage_execs.tunes,
+            t.stage_execs.builds,
+            t.runs
+        );
+    } else {
+        println!("artifact cache: disabled (--no-cache)");
+    }
     Ok(0)
 }
 

@@ -21,6 +21,18 @@ pub fn load_model(name_or_path: &str, model_dirs: &[PathBuf]) -> Result<Graph> {
     Ok(graph)
 }
 
+/// Parse + validate a model from already-read .tmodel bytes. The
+/// session scheduler fingerprints the file contents for its cache
+/// keys and hands the same bytes to the Load stage, so each model
+/// file is read exactly once and the loaded graph always matches the
+/// fingerprinted content.
+pub fn load_model_from_bytes(raw: &[u8], origin: &str) -> Result<Graph> {
+    let graph =
+        tmodel::parse(raw).with_context(|| format!("loading {origin}"))?;
+    graph.validate()?;
+    Ok(graph)
+}
+
 /// Model lookup: explicit path wins; otherwise `<dir>/<name>.tmodel`
 /// over the search path.
 pub fn resolve(name_or_path: &str, model_dirs: &[PathBuf]) -> Result<PathBuf> {

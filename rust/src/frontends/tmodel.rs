@@ -88,6 +88,95 @@ pub fn parse(raw: &[u8]) -> Result<Graph> {
     Ok(Graph { name, tensors, ops, inputs, outputs })
 }
 
+/// Serialize a graph to .tmodel bytes — the exact inverse of `parse`,
+/// byte-compatible with the python writer (tmodel.py). Lets rust-side
+/// tests and tools generate model files without the python toolchain.
+///
+/// Panics if a count exceeds its on-disk field width (u8 for rank,
+/// op arity and attr keys) — better a writer assert naming the
+/// problem than a truncated file the parser rejects obscurely.
+pub fn write(g: &Graph) -> Vec<u8> {
+    for t in &g.tensors {
+        assert!(t.shape.len() <= u8::MAX as usize, "{}: rank > 255", t.name);
+    }
+    for op in &g.ops {
+        assert!(
+            op.inputs.len() <= u8::MAX as usize
+                && op.outputs.len() <= u8::MAX as usize
+                && op.attrs.len() <= u8::MAX as usize,
+            "{}: op arity/attrs > 255",
+            op.name
+        );
+        for k in op.attrs.keys() {
+            assert!(k.len() <= u8::MAX as usize, "{}: attr key > 255 B", op.name);
+        }
+    }
+    let mut v = Vec::new();
+    v.extend(MAGIC);
+    v.extend(VERSION.to_le_bytes());
+    put_string(&mut v, &g.name);
+    v.extend((g.tensors.len() as u32).to_le_bytes());
+    v.extend((g.ops.len() as u32).to_le_bytes());
+    v.extend((g.inputs.len() as u32).to_le_bytes());
+    for &i in &g.inputs {
+        v.extend((i as u32).to_le_bytes());
+    }
+    v.extend((g.outputs.len() as u32).to_le_bytes());
+    for &o in &g.outputs {
+        v.extend((o as u32).to_le_bytes());
+    }
+    for t in &g.tensors {
+        put_string(&mut v, &t.name);
+        v.push(t.dtype.to_u8());
+        v.push(t.shape.len() as u8);
+        for &d in &t.shape {
+            v.extend((d as u32).to_le_bytes());
+        }
+        v.extend(t.scale.to_le_bytes());
+        v.extend(t.zero_point.to_le_bytes());
+        match &t.data {
+            Some(d) => {
+                v.push(1);
+                v.extend((d.len() as u64).to_le_bytes());
+                v.extend(d);
+            }
+            None => v.push(0),
+        }
+    }
+    for op in &g.ops {
+        v.push(op.opcode.to_u8());
+        put_string(&mut v, &op.name);
+        v.push(op.inputs.len() as u8);
+        for &i in &op.inputs {
+            v.extend((i as u32).to_le_bytes());
+        }
+        v.push(op.outputs.len() as u8);
+        for &o in &op.outputs {
+            v.extend((o as u32).to_le_bytes());
+        }
+        v.push(op.attrs.len() as u8);
+        for (k, &val) in &op.attrs {
+            v.push(k.len() as u8);
+            v.extend(k.as_bytes());
+            v.extend(val.to_le_bytes());
+        }
+    }
+    v
+}
+
+pub fn write_file(g: &Graph, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, write(g))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+fn put_string(v: &mut Vec<u8>, s: &str) {
+    v.extend((s.len() as u32).to_le_bytes());
+    v.extend(s.as_bytes());
+}
+
 struct Reader<'a> {
     b: &'a [u8],
     i: usize,
@@ -216,5 +305,24 @@ mod tests {
         let mut v = tiny_bytes();
         v.push(0);
         assert!(parse(&v).is_err());
+    }
+
+    #[test]
+    fn write_parse_roundtrip_hand_built() {
+        // writer must emit exactly the hand-serialized reference bytes
+        let g = parse(&tiny_bytes()).unwrap();
+        assert_eq!(write(&g), tiny_bytes());
+    }
+
+    #[test]
+    fn write_parse_roundtrip_conv_graph() {
+        let g = crate::graph::model::testutil::tiny_conv();
+        let bytes = write(&g);
+        let back = parse(&bytes).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.name, g.name);
+        assert_eq!(back.tensors.len(), g.tensors.len());
+        assert_eq!(back.ops[0].attrs, g.ops[0].attrs);
+        assert_eq!(back.content_hash(), g.content_hash());
     }
 }

@@ -247,6 +247,58 @@ impl Graph {
             .filter(|&i| !self.tensors[i].is_const())
             .collect()
     }
+
+    /// Stable content hash over everything a backend can observe:
+    /// tensors (shape, dtype, quant params, constant data) and ops
+    /// (opcode, wiring, attributes). Two graphs with the same hash
+    /// build identical programs. Note: the session's cache keys hash
+    /// the *model file bytes* (scheduler::model_fingerprint), not this
+    /// — this in-memory fingerprint is recorded in the cache's
+    /// graph.json metadata and checks serializer round-trips.
+    pub fn content_hash(&self) -> u64 {
+        let mut h = crate::util::StableHasher::new();
+        h.write_str(&self.name);
+        for t in &self.tensors {
+            h.write_str(&t.name);
+            h.write_u64(t.shape.len() as u64);
+            for &d in &t.shape {
+                h.write_u64(d as u64);
+            }
+            h.write_u8(t.dtype as u8);
+            h.write_f32(t.scale);
+            h.write_i64(t.zero_point as i64);
+            match &t.data {
+                Some(d) => h.write_bool(true).write_bytes(d),
+                None => h.write_bool(false),
+            };
+        }
+        for op in &self.ops {
+            h.write_str(op.opcode.name());
+            h.write_str(&op.name);
+            h.write_u64(op.inputs.len() as u64);
+            for &i in &op.inputs {
+                h.write_u64(i as u64);
+            }
+            h.write_u64(op.outputs.len() as u64);
+            for &o in &op.outputs {
+                h.write_u64(o as u64);
+            }
+            h.write_u64(op.attrs.len() as u64);
+            for (k, &v) in &op.attrs {
+                h.write_str(k);
+                h.write_i64(v);
+            }
+        }
+        h.write_u64(self.inputs.len() as u64);
+        for &i in &self.inputs {
+            h.write_u64(i as u64);
+        }
+        h.write_u64(self.outputs.len() as u64);
+        for &o in &self.outputs {
+            h.write_u64(o as u64);
+        }
+        h.finish()
+    }
 }
 
 #[cfg(test)]

@@ -38,6 +38,20 @@ impl OpCode {
         })
     }
 
+    /// Inverse of `from_u8` (the on-disk .tmodel tag).
+    pub fn to_u8(self) -> u8 {
+        match self {
+            OpCode::Conv2D => 0,
+            OpCode::DepthwiseConv2D => 1,
+            OpCode::FullyConnected => 2,
+            OpCode::AvgPool2D => 3,
+            OpCode::MaxPool2D => 4,
+            OpCode::Add => 5,
+            OpCode::Reshape => 6,
+            OpCode::Softmax => 7,
+        }
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             OpCode::Conv2D => "CONV_2D",

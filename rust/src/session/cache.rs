@@ -1,0 +1,481 @@
+//! Content-addressed artifact cache for the stage scheduler.
+//!
+//! Every cacheable stage output (Load → `Graph`, Tune → best
+//! `Schedule`, Build → `BuildResult`) is keyed by a stable FNV-1a hash
+//! of the *upstream spec slice* that fully determines it — model file
+//! contents, backend, schedule, tuning inputs, feature set. Runs whose
+//! prefixes agree share one execution: the paper's "large number of
+//! configurations in a low amount of time" claim hinges on exactly
+//! this reuse (MLonMCU §II "Parallelism"/"Reproducibility").
+//!
+//! Two tiers:
+//! * **memory** — `Arc`-shared live artifacts with LRU eviction;
+//!   this is what the scheduler deduplicates against, within and
+//!   across `run_matrix` calls on the same session.
+//! * **disk** — a per-session `cache/` directory holding an
+//!   `index.json` (keys, stages, labels, hit/miss/eviction counters)
+//!   plus small per-entry artifacts (program listing, tuned
+//!   schedule). This records *what* was reused for reproducibility
+//!   and is the anchor point for a future persistent cross-session
+//!   cache (ROADMAP open item).
+//!
+//! `--no-cache` disables both tiers: every run then executes every
+//! stage itself and all counters stay zero.
+
+use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::backends::BuildResult;
+use crate::data::Json;
+use crate::graph::Graph;
+use crate::schedules::Schedule;
+use crate::session::run::RunSpec;
+use crate::util::StableHasher;
+
+/// A stable 64-bit content key for one stage output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StageKey(pub u64);
+
+impl StageKey {
+    /// Fixed-width hex form used for directory names and the index.
+    pub fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// Cacheable stages of the run pipeline. Compile/Run/Postprocess stay
+/// per-run: their identity includes the full spec, so two distinct
+/// runs can never share them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachedStage {
+    Load,
+    Tune,
+    Build,
+}
+
+impl CachedStage {
+    pub fn name(self) -> &'static str {
+        match self {
+            CachedStage::Load => "load",
+            CachedStage::Tune => "tune",
+            CachedStage::Build => "build",
+        }
+    }
+}
+
+/// Tune-stage output: the winning schedule plus the improvement ratio
+/// reported in Table V.
+#[derive(Debug, Clone, Copy)]
+pub struct TuneOutcome {
+    pub schedule: Schedule,
+    pub improvement: f64,
+}
+
+/// A shared stage artifact held by the memory tier.
+#[derive(Debug, Clone)]
+pub enum Artifact {
+    Graph(Arc<Graph>),
+    Tune(TuneOutcome),
+    Build(Arc<BuildResult>),
+}
+
+impl Artifact {
+    fn stage(&self) -> CachedStage {
+        match self {
+            Artifact::Graph(_) => CachedStage::Load,
+            Artifact::Tune(_) => CachedStage::Tune,
+            Artifact::Build(_) => CachedStage::Build,
+        }
+    }
+}
+
+/// Tuning inputs that flow into Tune/Build keys (from the
+/// environment, not the spec).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TuneParams {
+    pub trials: usize,
+    pub seed: u64,
+}
+
+/// Key of the Load stage: the model file contents alone.
+pub fn load_key(model_fingerprint: u64) -> StageKey {
+    let mut h = StableHasher::new();
+    h.write_str("load").write_u64(model_fingerprint);
+    StageKey(h.finish())
+}
+
+/// Key of the Tune stage: model content + backend + base schedule +
+/// target (measurements run on the target) + tuning budget/seed.
+pub fn tune_key(model_fingerprint: u64, spec: &RunSpec, tune: TuneParams) -> StageKey {
+    let mut h = StableHasher::new();
+    h.write_str("tune")
+        .write_u64(model_fingerprint)
+        .write_str(&spec.backend)
+        .write_str(spec.schedule.as_deref().unwrap_or(""))
+        .write_str(&spec.target)
+        .write_u64(tune.trials as u64)
+        .write_u64(tune.seed);
+    StageKey(h.finish())
+}
+
+/// Key of the Build stage: model content + backend + schedule + tuned
+/// flag + feature set. Untuned builds are target-independent — that is
+/// the dedup the paper's matrix sweeps exploit (1 model × 2 backends ×
+/// 5 targets ⇒ 2 builds). Tuned builds consume a target-measured
+/// schedule, so the tune key (which includes the target) folds in.
+pub fn build_key(model_fingerprint: u64, spec: &RunSpec, tune: TuneParams) -> StageKey {
+    let mut h = StableHasher::new();
+    h.write_str("build")
+        .write_u64(model_fingerprint)
+        .write_str(&spec.backend)
+        .write_str(spec.schedule.as_deref().unwrap_or(""))
+        .write_bool(spec.tuned);
+    for f in spec.features.names() {
+        h.write_str(&f);
+    }
+    if spec.needs_tune() {
+        h.write_u64(tune_key(model_fingerprint, spec, tune).0);
+    }
+    StageKey(h.finish())
+}
+
+/// Counters surfaced in `SessionTiming`, the report and `cache.json`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub inserts: usize,
+    pub evictions: usize,
+    /// Live entries in the memory tier.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Counter delta since `earlier` (entries is a level, not a
+    /// counter, so it is reported as-is).
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            inserts: self.inserts - earlier.inserts,
+            evictions: self.evictions - earlier.evictions,
+            entries: self.entries,
+        }
+    }
+}
+
+struct Inner {
+    map: HashMap<u64, Artifact>,
+    /// LRU order, least-recent first. Touched on hit and insert.
+    lru: VecDeque<u64>,
+    stats: CacheStats,
+}
+
+/// The two-tier artifact cache owned by a `Session`.
+pub struct ArtifactCache {
+    enabled: bool,
+    capacity: usize,
+    disk_dir: Option<PathBuf>,
+    inner: Mutex<Inner>,
+}
+
+pub const DEFAULT_CAPACITY: usize = 256;
+
+impl ArtifactCache {
+    pub fn new(capacity: usize, disk_dir: Option<PathBuf>) -> ArtifactCache {
+        ArtifactCache {
+            enabled: true,
+            capacity: capacity.max(1),
+            disk_dir,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                lru: VecDeque::new(),
+                stats: CacheStats::default(),
+            }),
+        }
+    }
+
+    /// A cache that never stores or counts anything (`--no-cache`).
+    pub fn disabled() -> ArtifactCache {
+        ArtifactCache {
+            enabled: false,
+            capacity: 1,
+            disk_dir: None,
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                lru: VecDeque::new(),
+                stats: CacheStats::default(),
+            }),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Look up a stage artifact, counting a hit or miss.
+    pub fn lookup(&self, key: StageKey) -> Option<Artifact> {
+        if !self.enabled {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        match inner.map.get(&key.0).cloned() {
+            Some(a) => {
+                inner.stats.hits += 1;
+                touch(&mut inner.lru, key.0);
+                Some(a)
+            }
+            None => {
+                inner.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly computed artifact, evicting the least-recently
+    /// used entry when over capacity. `label` names the producing run
+    /// in the on-disk index.
+    pub fn insert(&self, key: StageKey, artifact: Artifact, label: &str) {
+        if !self.enabled {
+            return;
+        }
+        self.persist(key, &artifact, label);
+        let mut inner = self.inner.lock().unwrap();
+        if inner.map.insert(key.0, artifact).is_none() {
+            touch(&mut inner.lru, key.0);
+            inner.stats.inserts += 1;
+            while inner.map.len() > self.capacity {
+                if let Some(old) = inner.lru.pop_front() {
+                    inner.map.remove(&old);
+                    inner.stats.evictions += 1;
+                } else {
+                    break;
+                }
+            }
+        }
+        inner.stats.entries = inner.map.len();
+    }
+
+    /// Count `n` extra hits for consumers that shared one deduplicated
+    /// stage execution (the scheduler merges identical stage tasks, so
+    /// only one of them performs the `lookup`).
+    pub fn note_shared_hits(&self, n: usize) {
+        if !self.enabled || n == 0 {
+            return;
+        }
+        self.inner.lock().unwrap().stats.hits += n;
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats.entries = inner.map.len();
+        inner.stats
+    }
+
+    /// Disk tier: write small reproducibility artifacts for an entry.
+    /// Failures are non-fatal (the memory tier is authoritative).
+    fn persist(&self, key: StageKey, artifact: &Artifact, label: &str) {
+        let Some(root) = &self.disk_dir else { return };
+        let dir = root.join(artifact.stage().name()).join(key.hex());
+        if std::fs::create_dir_all(&dir).is_err() {
+            return;
+        }
+        let _ = std::fs::write(dir.join("producer.txt"), label);
+        match artifact {
+            Artifact::Graph(g) => {
+                let meta = Json::obj(vec![
+                    ("model", Json::Str(g.name.clone())),
+                    ("params", Json::Num(g.param_count() as f64)),
+                    ("weight_bytes", Json::Num(g.weight_bytes() as f64)),
+                    ("macs", Json::Num(g.macs() as f64)),
+                    ("content_hash", Json::Str(format!("{:016x}", g.content_hash()))),
+                ]);
+                let _ = std::fs::write(dir.join("graph.json"), meta.to_string());
+            }
+            Artifact::Tune(t) => {
+                let meta = Json::obj(vec![
+                    ("schedule", Json::Str(t.schedule.label())),
+                    ("tile_oc", Json::Num(t.schedule.knobs.tile_oc as f64)),
+                    ("tile_oh", Json::Num(t.schedule.knobs.tile_oh as f64)),
+                    ("unroll", Json::Num(t.schedule.knobs.unroll as f64)),
+                    ("improvement", Json::Num(t.improvement)),
+                ]);
+                let _ = std::fs::write(dir.join("tune.json"), meta.to_string());
+            }
+            Artifact::Build(b) => {
+                let _ = std::fs::write(
+                    dir.join("program.tir"),
+                    crate::tinyir::listing::render(&b.program),
+                );
+                let meta = Json::obj(vec![
+                    ("rom_total", Json::Num(b.metrics.rom_total() as f64)),
+                    ("ram_total", Json::Num(b.metrics.ram_total() as f64)),
+                    ("setup_instructions", Json::Num(b.metrics.setup_instructions as f64)),
+                ]);
+                let _ = std::fs::write(dir.join("metrics.json"), meta.to_string());
+            }
+        }
+    }
+
+    /// Write the disk index: counters plus the live key set. Called at
+    /// the end of every `run_matrix`.
+    pub fn write_index(&self) -> Result<()> {
+        let Some(root) = &self.disk_dir else {
+            return Ok(());
+        };
+        let stats = self.stats();
+        let inner = self.inner.lock().unwrap();
+        let mut entries: Vec<Json> = Vec::new();
+        for (&k, a) in &inner.map {
+            entries.push(Json::obj(vec![
+                ("key", Json::Str(StageKey(k).hex())),
+                ("stage", Json::Str(a.stage().name().into())),
+            ]));
+        }
+        drop(inner);
+        std::fs::create_dir_all(root)?;
+        let doc = Json::obj(vec![
+            ("hits", Json::Num(stats.hits as f64)),
+            ("misses", Json::Num(stats.misses as f64)),
+            ("inserts", Json::Num(stats.inserts as f64)),
+            ("evictions", Json::Num(stats.evictions as f64)),
+            ("entries", Json::Num(stats.entries as f64)),
+            ("artifacts", Json::Arr(entries)),
+        ]);
+        std::fs::write(root.join("index.json"), doc.to_string())?;
+        Ok(())
+    }
+}
+
+fn touch(lru: &mut VecDeque<u64>, key: u64) {
+    if let Some(pos) = lru.iter().position(|&k| k == key) {
+        lru.remove(pos);
+    }
+    lru.push_back(key);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::Features;
+    use crate::graph::model::testutil::tiny_conv;
+
+    fn spec() -> RunSpec {
+        RunSpec {
+            model: "aww".into(),
+            backend: "tvmaot".into(),
+            target: "etiss".into(),
+            schedule: Some("default-nchw".into()),
+            tuned: false,
+            features: Features::default(),
+        }
+    }
+
+    const TP: TuneParams = TuneParams { trials: 600, seed: 7 };
+
+    #[test]
+    fn same_spec_same_key() {
+        assert_eq!(build_key(1, &spec(), TP), build_key(1, &spec(), TP));
+        assert_eq!(tune_key(1, &spec(), TP), tune_key(1, &spec(), TP));
+        assert_eq!(load_key(1), load_key(1));
+    }
+
+    #[test]
+    fn any_field_change_changes_build_key() {
+        let base = build_key(1, &spec(), TP);
+        assert_ne!(build_key(2, &spec(), TP), base, "model content");
+        let mut s = spec();
+        s.backend = "tflmi".into();
+        assert_ne!(build_key(1, &s, TP), base, "backend");
+        let mut s = spec();
+        s.schedule = Some("arm-nhwc".into());
+        assert_ne!(build_key(1, &s, TP), base, "schedule");
+        let mut s = spec();
+        s.schedule = None;
+        assert_ne!(build_key(1, &s, TP), base, "schedule presence");
+        let mut s = spec();
+        s.tuned = true;
+        assert_ne!(build_key(1, &s, TP), base, "tuned flag");
+        let mut s = spec();
+        s.features = Features::parse(&["validate".into()]).unwrap();
+        assert_ne!(build_key(1, &s, TP), base, "features");
+    }
+
+    #[test]
+    fn untuned_build_key_ignores_target_tuned_does_not() {
+        let mut a = spec();
+        let mut b = spec();
+        a.target = "esp32c3".into();
+        b.target = "stm32f7".into();
+        assert_eq!(build_key(1, &a, TP), build_key(1, &b, TP));
+        a.tuned = true;
+        b.tuned = true;
+        assert_ne!(build_key(1, &a, TP), build_key(1, &b, TP));
+    }
+
+    #[test]
+    fn tune_budget_changes_tune_and_tuned_build_keys() {
+        let mut s = spec();
+        s.tuned = true;
+        let more = TuneParams { trials: 1200, seed: 7 };
+        assert_ne!(tune_key(1, &s, TP), tune_key(1, &s, more));
+        assert_ne!(build_key(1, &s, TP), build_key(1, &s, more));
+        // untuned builds never see the budget
+        let u = spec();
+        assert_eq!(build_key(1, &u, TP), build_key(1, &u, more));
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let cache = ArtifactCache::new(8, None);
+        let key = load_key(42);
+        assert!(cache.lookup(key).is_none());
+        cache.insert(key, Artifact::Graph(Arc::new(tiny_conv())), "t");
+        assert!(cache.lookup(key).is_some());
+        assert!(cache.lookup(load_key(43)).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.inserts, s.entries), (1, 2, 1, 1));
+    }
+
+    #[test]
+    fn lru_eviction_over_capacity() {
+        let cache = ArtifactCache::new(2, None);
+        let g = Arc::new(tiny_conv());
+        for fp in 0..3u64 {
+            cache.insert(load_key(fp), Artifact::Graph(g.clone()), "t");
+        }
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.entries, 2);
+        // key 0 was least recently used => evicted
+        assert!(cache.lookup(load_key(0)).is_none());
+        assert!(cache.lookup(load_key(2)).is_some());
+    }
+
+    #[test]
+    fn disabled_cache_stores_and_counts_nothing() {
+        let cache = ArtifactCache::disabled();
+        let key = load_key(1);
+        assert!(cache.lookup(key).is_none());
+        cache.insert(key, Artifact::Graph(Arc::new(tiny_conv())), "t");
+        assert!(cache.lookup(key).is_none());
+        assert_eq!(cache.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn disk_tier_persists_index_and_artifacts() {
+        let dir = std::env::temp_dir().join("mlonmcu_cache_disk_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ArtifactCache::new(8, Some(dir.clone()));
+        let key = load_key(7);
+        cache.insert(key, Artifact::Graph(Arc::new(tiny_conv())), "aww/tvmaot");
+        cache.write_index().unwrap();
+        assert!(dir.join("load").join(key.hex()).join("graph.json").is_file());
+        let idx = Json::parse_file(&dir.join("index.json")).unwrap();
+        assert_eq!(idx.get("inserts").unwrap().as_i64(), Some(1));
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+}

@@ -73,26 +73,42 @@ impl RunMatrix {
                 self.targets.len()
             );
         }
+        // collect *every* invalid component so one CI pass over a bad
+        // bench config reports the full fix list, not just the first
+        let mut errors: Vec<String> = Vec::new();
         for b in &self.backends {
             if backends::by_name(b).is_none() {
-                bail!(
+                errors.push(format!(
                     "unknown backend '{b}' (known: {:?})",
                     backends::all_backend_names()
-                );
+                ));
             }
         }
         for t in &self.targets {
             if targets::by_name(t).is_none() {
-                bail!("unknown target '{t}'");
+                errors.push(format!("unknown target '{t}'"));
             }
         }
         for s in &self.schedules {
             if crate::schedules::Schedule::parse(s).is_none() {
-                bail!(
+                errors.push(format!(
                     "unknown schedule '{s}' (expected family-layout, e.g. \
                      default-nchw, arm-nhwc)"
-                );
+                ));
             }
+        }
+        for f in &self.features {
+            if let Err(e) = Features::parse(std::slice::from_ref(f)) {
+                errors.push(e.to_string());
+            }
+        }
+        if !errors.is_empty() {
+            bail!(
+                "invalid run matrix ({} problem{}):\n  - {}",
+                errors.len(),
+                if errors.len() == 1 { "" } else { "s" },
+                errors.join("\n  - ")
+            );
         }
         let features = Features::parse(&self.features)?;
         let mut specs = Vec::new();
@@ -172,6 +188,24 @@ mod tests {
             .targets(["etiss"])
             .schedules(["default-nhwc", "default-nchw"]);
         assert_eq!(m.expand().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn all_invalid_components_reported_at_once() {
+        let err = RunMatrix::new()
+            .models(["aww"])
+            .backends(["nope", "tvmaot"])
+            .targets(["gba", "etiss"])
+            .schedules(["sideways-chw"])
+            .features(["warp-drive"])
+            .expand()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("4 problems"), "{err}");
+        assert!(err.contains("unknown backend 'nope'"), "{err}");
+        assert!(err.contains("unknown target 'gba'"), "{err}");
+        assert!(err.contains("unknown schedule 'sideways-chw'"), "{err}");
+        assert!(err.contains("unknown feature 'warp-drive'"), "{err}");
     }
 
     #[test]

@@ -7,17 +7,24 @@
 //! Load → [Tune] → Build → Compile → Run → Postprocess
 //! ```
 //!
-//! It executes independent
-//! runs on a fixed thread pool (paper §II "Parallelism"), writes
-//! every intermediate artifact into an isolated
-//! per-session directory ("Isolation", "Reproducibility"), and
+//! Runs are decomposed into stage tasks executed by a shared worker
+//! pool (paper §II "Parallelism"); stage outputs are content-addressed
+//! in the session's artifact cache so identical (model, backend,
+//! schedule) prefixes across the matrix — and across repeated
+//! `run_matrix` calls — execute exactly once ("fast retargeting").
+//! Every intermediate artifact lands in an isolated per-session
+//! directory ("Isolation", "Reproducibility"), and the session
 //! produces the report.
 
+pub mod cache;
 pub mod matrix;
 pub mod run;
+pub mod scheduler;
 
+pub use cache::{ArtifactCache, CacheStats};
 pub use matrix::RunMatrix;
 pub use run::{RunRecord, RunSpec, RunStatus, StageTimes};
+pub use scheduler::{RunOptions, StageExecCounts};
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -35,12 +42,16 @@ pub struct Session {
     pub dir: PathBuf,
     env: Environment,
     golden: Mutex<Option<Arc<GoldenRuntime>>>,
+    /// Content-addressed stage-artifact cache, shared by every
+    /// `run_matrix` call on this session.
+    cache: ArtifactCache,
     /// Total wall-clock of the last run_matrix call, split by stage
     /// boundary (Table III's Load–Compile vs Load–Run distinction).
     pub last_timing: Mutex<SessionTiming>,
 }
 
-/// Aggregated session timing (Table III).
+/// Aggregated session timing (Table III), including the cache and
+/// scheduler counters of the last `run_matrix` call.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SessionTiming {
     pub runs: usize,
@@ -51,6 +62,15 @@ pub struct SessionTiming {
     pub load_run_s: f64,
     /// Σ simulated device seconds (build+flash+run latency models).
     pub sim_s: f64,
+    /// Artifact-cache hits during this call (stage outputs served
+    /// from cache or shared across runs instead of re-executing).
+    pub cache_hits: usize,
+    /// Artifact-cache misses during this call.
+    pub cache_misses: usize,
+    /// Memory-tier evictions during this call.
+    pub cache_evictions: usize,
+    /// Load/Tune/Build stage executions that actually ran.
+    pub stage_execs: StageExecCounts,
 }
 
 impl Session {
@@ -65,17 +85,29 @@ impl Session {
         }
         let dir = sessions.join(format!("{id}"));
         std::fs::create_dir_all(&dir)?;
+        // clamp before the cast: a negative value must not wrap into
+        // a huge capacity that silently disables eviction
+        let capacity = env
+            .get_i64("cache", "capacity", cache::DEFAULT_CAPACITY as i64)
+            .max(1) as usize;
+        let cache = ArtifactCache::new(capacity, Some(dir.join("cache")));
         Ok(Session {
             id,
             dir,
             env: env.clone(),
             golden: Mutex::new(None),
+            cache,
             last_timing: Mutex::new(SessionTiming::default()),
         })
     }
 
     pub fn env(&self) -> &Environment {
         &self.env
+    }
+
+    /// Cumulative artifact-cache statistics of this session.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
     }
 
     /// Lazily create the PJRT golden runtime (only when a run actually
@@ -97,40 +129,41 @@ impl Session {
     /// return the report. Failed runs produce rows with Missing cells
     /// (Table V "—"), not errors.
     pub fn run_matrix(&self, matrix: &RunMatrix, parallel: usize) -> Result<Report> {
+        self.run_matrix_opts(matrix, RunOptions::with_parallel(parallel))
+    }
+
+    /// `run_matrix` with explicit options (`--no-cache`, ...).
+    pub fn run_matrix_opts(
+        &self,
+        matrix: &RunMatrix,
+        opts: RunOptions,
+    ) -> Result<Report> {
         let specs = matrix.expand()?;
         let total = specs.len();
         crate::log_info!(
-            "session {}: {} runs, {} worker(s)",
+            "session {}: {} runs, {} worker(s), cache {}",
             self.id,
             total,
-            parallel.max(1)
+            opts.parallel.max(1),
+            if opts.use_cache { "on" } else { "off" }
         );
         let watch = Stopwatch::start();
-        let queue: Mutex<std::collections::VecDeque<(usize, RunSpec)>> =
-            Mutex::new(specs.into_iter().enumerate().collect());
-        let records: Mutex<Vec<(usize, RunRecord)>> = Mutex::new(Vec::new());
+        let stats_before = self.cache.stats();
+        // --no-cache: a throwaway disabled cache keeps the session
+        // tier untouched and all counters at zero
+        let bypass = ArtifactCache::disabled();
+        let cache = if opts.use_cache { &self.cache } else { &bypass };
+        let (records, execs) = scheduler::execute_matrix(self, &specs, cache, opts)?;
 
-        let workers = parallel.max(1).min(total.max(1));
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let job = queue.lock().unwrap().pop_front();
-                    let Some((idx, spec)) = job else { break };
-                    let rec = run::execute_run(self, idx, &spec);
-                    records.lock().unwrap().push((idx, rec));
-                });
-            }
-        });
-
-        let mut records = records.into_inner().unwrap();
-        records.sort_by_key(|(i, _)| *i);
-        let records: Vec<RunRecord> =
-            records.into_iter().map(|(_, r)| r).collect();
-
-        // session timing aggregate (Table III)
+        // session timing aggregate (Table III + cache counters)
+        let stats = self.cache.stats().since(&stats_before);
         let mut timing = SessionTiming {
             runs: total,
             wall_s: watch.elapsed_s(),
+            cache_hits: stats.hits,
+            cache_misses: stats.misses,
+            cache_evictions: stats.evictions,
+            stage_execs: execs,
             ..Default::default()
         };
         for r in &records {
@@ -140,6 +173,17 @@ impl Session {
             timing.sim_s += r.sim_total_s();
         }
         *self.last_timing.lock().unwrap() = timing;
+        crate::log_info!(
+            "session {}: cache {} hit(s) / {} miss(es); executed {} load, \
+             {} tune, {} build stage(s) for {} run(s)",
+            self.id,
+            stats.hits,
+            stats.misses,
+            execs.loads,
+            execs.tunes,
+            execs.builds,
+            total
+        );
 
         // build the report + write session artifacts
         let mut report = Report::default();
@@ -148,6 +192,11 @@ impl Session {
         }
         std::fs::write(self.dir.join("report.csv"), report.to_csv())?;
         std::fs::write(self.dir.join("report.md"), report.to_markdown())?;
+        // disk tier is best-effort everywhere: the memory tier is
+        // authoritative and the runs already succeeded
+        if let Err(e) = self.cache.write_index() {
+            crate::log_warn!("cache index not written: {e}");
+        }
         Ok(report)
     }
 }
@@ -173,14 +222,23 @@ mod tests {
         std::fs::remove_dir_all(dir).unwrap();
     }
 
-    // full matrix execution is covered by tests/session_e2e.rs with
-    // generated models; here we exercise the empty-matrix edge
+    // full matrix execution is covered by tests/session_e2e.rs and
+    // tests/cache_dedup.rs with generated models; here we exercise the
+    // empty-matrix edge
     #[test]
     fn empty_matrix_is_error() {
         let (env, dir) = test_env("empty");
         let s = Session::new(&env).unwrap();
         let err = s.run_matrix(&RunMatrix::new(), 2).unwrap_err();
         assert!(err.to_string().contains("empty"), "{err}");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn fresh_session_has_empty_cache_stats() {
+        let (env, dir) = test_env("stats");
+        let s = Session::new(&env).unwrap();
+        assert_eq!(s.cache_stats(), CacheStats::default());
         std::fs::remove_dir_all(dir).unwrap();
     }
 }

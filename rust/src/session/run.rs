@@ -2,14 +2,25 @@
 //! stage pipeline, with per-stage host timing, failure capture
 //! (memory-gate errors become "—" rows, exactly Table V) and artifact
 //! emission.
+//!
+//! The stages are exposed as standalone functions so the session's
+//! stage scheduler (`scheduler.rs`) can deduplicate shared prefixes
+//! across the run matrix: Load depends only on the model, Tune on
+//! (model, backend, schedule, target, budget), Build on everything up
+//! to the schedule — Compile/Run/Postprocess are always per-run.
 
-use std::path::PathBuf;
+use std::path::Path;
+use std::sync::Arc;
 
-use crate::backends::{self, BackendConfig, BuildMetrics};
+use anyhow::Result;
+
+use crate::backends::{self, BackendConfig, BuildMetrics, BuildResult};
 use crate::features::{compare_outputs, Features, Validation};
 use crate::frontends;
+use crate::graph::Graph;
 use crate::report::{row, Cell, Row};
 use crate::schedules::Schedule;
+use crate::session::cache::{TuneOutcome, TuneParams};
 use crate::session::Session;
 use crate::targets::{self, RunOutcome};
 use crate::tuner;
@@ -40,9 +51,17 @@ impl RunSpec {
             if self.tuned { "/tuned" } else { "" }
         )
     }
+
+    /// Does this run go through the Tune stage?
+    pub fn needs_tune(&self) -> bool {
+        self.tuned || self.features.autotvm()
+    }
 }
 
-/// Host-side stage durations (Table III columns).
+/// Host-side stage durations (Table III columns). Under the stage
+/// scheduler a shared stage's cost is charged to exactly one consumer
+/// run (the lowest run index), so summing over records still equals
+/// the host seconds actually spent.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StageTimes {
     pub load_s: f64,
@@ -76,6 +95,9 @@ pub struct RunRecord {
     pub outcome: Option<RunOutcome>,
     pub validation: Validation,
     pub tune_improvement: Option<f64>,
+    /// Stages this run reused from the artifact cache instead of
+    /// executing ("load", "tune", "build").
+    pub reused: Vec<&'static str>,
 }
 
 impl RunRecord {
@@ -129,6 +151,14 @@ impl RunRecord {
             }
         }
         r.insert("validate".into(), Cell::Str(self.validation.label()));
+        r.insert(
+            "cached_stages".into(),
+            Cell::Str(if self.reused.is_empty() {
+                "-".to_string()
+            } else {
+                self.reused.join("+")
+            }),
+        );
         if let Some(imp) = self.tune_improvement {
             r.insert("tune_gain".into(), Cell::Float(imp));
         }
@@ -155,108 +185,117 @@ fn run_input(session: &Session, model: &str, n: usize) -> Vec<i8> {
     (0..n).map(|_| (rng.next_u64() & 0xff) as i8).collect()
 }
 
-/// Drive one run through all stages. Never panics; failures are
-/// captured in the record.
-pub fn execute_run(session: &Session, idx: usize, spec: &RunSpec) -> RunRecord {
-    let mut rec = RunRecord {
-        spec: spec.clone(),
-        status: RunStatus::Ok,
-        stages: StageTimes::default(),
-        build: None,
-        outcome: None,
-        validation: Validation::Skipped,
-        tune_improvement: None,
-    };
-    let run_dir = session.dir.join(format!("run_{idx}"));
-    let _ = std::fs::create_dir_all(&run_dir);
+// ------------------------------------------------------------- stages --
 
-    macro_rules! fail {
-        ($stage:expr, $err:expr) => {{
-            rec.status = RunStatus::Failed($stage, $err.to_string());
-            crate::log_debug!("run {}: {} failed: {}", spec.label(), $stage, $err);
-            write_record(&run_dir, &rec);
-            return rec;
-        }};
-    }
+/// Load stage: resolve + parse + validate the model.
+pub fn stage_load(session: &Session, spec: &RunSpec) -> Result<Graph> {
+    frontends::load_model(&spec.model, &session.env().model_dirs())
+}
 
-    // ---------------------------------------------------------- Load --
-    let watch = Stopwatch::start();
-    let graph = match frontends::load_model(&spec.model, &session.env().model_dirs()) {
-        Ok(g) => g,
-        Err(e) => fail!("load", e),
-    };
-    rec.stages.load_s = watch.elapsed_s();
-
+/// Tune stage: AutoTVM-style schedule search on the target.
+pub fn stage_tune(
+    spec: &RunSpec,
+    graph: &Graph,
+    tune: TuneParams,
+) -> Result<TuneOutcome> {
     let backend = backends::by_name(&spec.backend).expect("validated by matrix");
     let target = targets::by_name(&spec.target).expect("validated by matrix");
-    let mut schedule: Option<Schedule> =
-        spec.schedule.as_deref().map(|s| Schedule::parse(s).expect("validated"));
-
-    // ---------------------------------------------------------- Tune --
-    if spec.tuned || spec.features.autotvm() {
-        let watch = Stopwatch::start();
-        if !target.supports_tuning() {
-            // the paper's esp32 column: tuning impossible => "—"
-            fail!("tune", format!("target {} does not support AutoTVM", spec.target));
-        }
-        let base = schedule.unwrap_or_else(|| {
+    if !target.supports_tuning() {
+        // the paper's esp32 column: tuning impossible => "—"
+        anyhow::bail!("target {} does not support AutoTVM", spec.target);
+    }
+    let base = spec
+        .schedule
+        .as_deref()
+        .map(|s| Schedule::parse(s).expect("validated"))
+        .unwrap_or_else(|| {
             Schedule::new(
                 crate::schedules::Family::DefaultX86,
                 crate::schedules::Layout::Nchw,
             )
         });
-        let trials = session.env().get_i64("tune", "trials", 600) as usize;
-        match tuner::tune(
-            &*backend,
-            &graph,
-            &*target,
-            base,
-            tuner::TuneOpts { trials, seed: session.env().get_i64("run", "seed", 7) as u64 },
-        ) {
-            Ok(t) => {
-                rec.tune_improvement = Some(t.improvement());
-                schedule = Some(t.best);
-            }
-            Err(e) => fail!("tune", e),
-        }
-        rec.stages.tune_s = watch.elapsed_s();
-    }
+    let t = tuner::tune(
+        &*backend,
+        graph,
+        &*target,
+        base,
+        tuner::TuneOpts { trials: tune.trials, seed: tune.seed },
+    )?;
+    Ok(TuneOutcome { schedule: t.best, improvement: t.improvement() })
+}
 
-    // --------------------------------------------------------- Build --
-    let watch = Stopwatch::start();
-    let mut cfg = BackendConfig::default();
-    cfg.schedule = schedule;
-    let build = match backend.build(&graph, &cfg) {
-        Ok(b) => b,
-        Err(e) => fail!("build", e),
-    };
-    rec.stages.build_s = watch.elapsed_s();
+/// Build stage: lower the graph through the backend, including the
+/// debug-arena plan check when that feature is on.
+pub fn stage_build(
+    spec: &RunSpec,
+    graph: &Graph,
+    tuned_schedule: Option<Schedule>,
+) -> Result<BuildResult> {
+    let backend = backends::by_name(&spec.backend).expect("validated by matrix");
+    let schedule = tuned_schedule.or_else(|| {
+        spec.schedule
+            .as_deref()
+            .map(|s| Schedule::parse(s).expect("validated"))
+    });
+    let cfg = BackendConfig { schedule, ..Default::default() };
+    let build = backend.build(graph, &cfg)?;
+    if spec.features.debug_arena() {
+        build
+            .program
+            .check_plan()
+            .map_err(|e| anyhow::anyhow!("arena check: {e}"))?;
+    }
+    Ok(build)
+}
+
+/// Compile + Run + Postprocess: the per-run tail of the pipeline.
+/// Consumes the shared Load/Build artifacts, fills in the record and
+/// writes the per-run artifacts. Never panics; failures are captured.
+pub fn stage_tail(
+    session: &Session,
+    idx: usize,
+    rec: &mut RunRecord,
+    graph: &Graph,
+    build: &Arc<BuildResult>,
+) {
+    let spec = rec.spec.clone();
+    let run_dir = session.dir.join(format!("run_{idx}"));
+    let _ = std::fs::create_dir_all(&run_dir);
     // reproducibility: program listing artifact
     let _ = std::fs::write(
         run_dir.join("program.tir"),
         crate::tinyir::listing::render(&build.program),
     );
-    if spec.features.debug_arena() {
-        if let Err(e) = build.program.check_plan() {
-            fail!("build", format!("arena check: {e}"));
-        }
-    }
     rec.build = Some(build.metrics.clone());
+
+    let target = targets::by_name(&spec.target).expect("validated by matrix");
+    let backend = backends::by_name(&spec.backend).expect("validated by matrix");
 
     // ------------------------------------------------------- Compile --
     let watch = Stopwatch::start();
-    let dep = match target.deploy(&build, backend.framework()) {
+    let dep = match target.deploy(build, backend.framework()) {
         Ok(d) => d,
-        Err(e) => fail!("compile", e), // flash/RAM overflow => "—"
+        Err(e) => {
+            // flash/RAM overflow => "—"
+            rec.status = RunStatus::Failed("compile", e.to_string());
+            crate::log_debug!("run {}: compile failed: {}", spec.label(), e);
+            write_record(&run_dir, rec);
+            return;
+        }
     };
     rec.stages.compile_s = watch.elapsed_s();
 
     // ----------------------------------------------------------- Run --
     let watch = Stopwatch::start();
     let input = run_input(session, &spec.model, graph.tensor(graph.inputs[0]).numel());
-    let outcome = match target.run(&build, &dep, &input, true) {
+    let outcome = match target.run(build, &dep, &input, true) {
         Ok(o) => o,
-        Err(e) => fail!("run", e),
+        Err(e) => {
+            rec.status = RunStatus::Failed("run", e.to_string());
+            crate::log_debug!("run {}: run failed: {}", spec.label(), e);
+            write_record(&run_dir, rec);
+            return;
+        }
     };
     rec.stages.run_s = watch.elapsed_s();
 
@@ -276,12 +315,41 @@ pub fn execute_run(session: &Session, idx: usize, spec: &RunSpec) -> RunRecord {
         }
     }
     rec.outcome = Some(outcome);
-    write_record(&run_dir, &rec);
-    rec
+    write_record(&run_dir, rec);
+}
+
+/// A blank record for `spec`, before any stage has run.
+pub fn blank_record(spec: &RunSpec) -> RunRecord {
+    RunRecord {
+        spec: spec.clone(),
+        status: RunStatus::Ok,
+        stages: StageTimes::default(),
+        build: None,
+        outcome: None,
+        validation: Validation::Skipped,
+        tune_improvement: None,
+        reused: Vec::new(),
+    }
+}
+
+/// Record a stage failure into `rec` and emit the per-run artifact,
+/// mirroring what a successful tail would have written.
+pub fn fail_record(
+    session: &Session,
+    idx: usize,
+    rec: &mut RunRecord,
+    stage: &'static str,
+    err: &str,
+) {
+    rec.status = RunStatus::Failed(stage, err.to_string());
+    crate::log_debug!("run {}: {} failed: {}", rec.spec.label(), stage, err);
+    let run_dir = session.dir.join(format!("run_{idx}"));
+    let _ = std::fs::create_dir_all(&run_dir);
+    write_record(&run_dir, rec);
 }
 
 /// Per-run artifact: metrics.json (reproducibility).
-fn write_record(dir: &PathBuf, rec: &RunRecord) {
+fn write_record(dir: &Path, rec: &RunRecord) {
     use crate::data::Json;
     let mut pairs = vec![
         ("label", Json::Str(rec.spec.label())),
@@ -293,6 +361,15 @@ fn write_record(dir: &PathBuf, rec: &RunRecord) {
             }),
         ),
         ("validate", Json::Str(rec.validation.label())),
+        (
+            "cached_stages",
+            Json::Arr(
+                rec.reused
+                    .iter()
+                    .map(|s| Json::Str(s.to_string()))
+                    .collect(),
+            ),
+        ),
     ];
     if let Some(o) = &rec.outcome {
         pairs.push(("invoke_instructions", Json::Num(o.invoke_instructions as f64)));
@@ -320,28 +397,37 @@ mod tests {
             features: Features::default(),
         };
         assert_eq!(s.label(), "aww/tvmaot/esp32c3/default-nchw/tuned");
+        assert!(s.needs_tune());
     }
 
     #[test]
     fn failed_record_renders_missing_cells() {
-        let rec = RunRecord {
-            spec: RunSpec {
-                model: "vww".into(),
-                backend: "tvmaot".into(),
-                target: "esp32".into(),
-                schedule: None,
-                tuned: false,
-                features: Features::default(),
-            },
-            status: RunStatus::Failed("compile", "flash overflow".into()),
-            stages: StageTimes::default(),
-            build: None,
-            outcome: None,
-            validation: Validation::Skipped,
-            tune_improvement: None,
-        };
+        let mut rec = blank_record(&RunSpec {
+            model: "vww".into(),
+            backend: "tvmaot".into(),
+            target: "esp32".into(),
+            schedule: None,
+            tuned: false,
+            features: Features::default(),
+        });
+        rec.status = RunStatus::Failed("compile", "flash overflow".into());
         let row = rec.to_row();
         assert_eq!(row["time_s"], Cell::Missing);
         assert_eq!(row["status"].render(), "failed:compile");
+        assert_eq!(row["cached_stages"].render(), "-");
+    }
+
+    #[test]
+    fn reused_stages_render_joined() {
+        let mut rec = blank_record(&RunSpec {
+            model: "aww".into(),
+            backend: "tflmi".into(),
+            target: "etiss".into(),
+            schedule: None,
+            tuned: false,
+            features: Features::default(),
+        });
+        rec.reused = vec!["load", "build"];
+        assert_eq!(rec.to_row()["cached_stages"].render(), "load+build");
     }
 }

@@ -1,0 +1,523 @@
+//! Stage-level scheduler: decomposes every run of the matrix into
+//! stage tasks (Load → [Tune] → Build → per-run tail), deduplicates
+//! tasks whose content key matches across the matrix, and executes the
+//! resulting DAG on a shared ready-queue worker pool.
+//!
+//! This replaces the seed's whole-run thread pool: with 1 model ×
+//! 2 backends × 5 targets the seed executed 10 Loads and 10 Builds;
+//! the scheduler executes 1 Load and 2 Builds and shares the
+//! artifacts through the session's content-addressed cache
+//! (`cache.rs`). Workers pull ready tasks from a shared deque and
+//! push tasks whose dependencies just resolved — idle workers thereby
+//! "steal" whatever becomes runnable, so one slow Tune cannot stall
+//! unrelated pipelines.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::session::cache::{
+    self, Artifact, ArtifactCache, StageKey, TuneParams,
+};
+use crate::session::run::{self, RunRecord, RunSpec};
+use crate::session::Session;
+use crate::util::Stopwatch;
+
+/// Options of one `run_matrix` invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct RunOptions {
+    /// Worker count of the stage scheduler.
+    pub parallel: usize,
+    /// `false` = `--no-cache`: no artifact reuse, no dedup — every run
+    /// executes every stage itself (the seed behaviour).
+    pub use_cache: bool,
+}
+
+impl RunOptions {
+    pub fn with_parallel(parallel: usize) -> RunOptions {
+        RunOptions { parallel, use_cache: true }
+    }
+}
+
+/// How many stage executions actually ran (vs. being served from the
+/// cache or shared across runs). Surfaced in `SessionTiming`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageExecCounts {
+    pub loads: usize,
+    pub tunes: usize,
+    pub builds: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Load,
+    Tune,
+    Build,
+    Tail,
+}
+
+impl Kind {
+    fn stage_name(self) -> &'static str {
+        match self {
+            Kind::Load => "load",
+            Kind::Tune => "tune",
+            Kind::Build => "build",
+            Kind::Tail => "tail",
+        }
+    }
+}
+
+struct Task {
+    kind: Kind,
+    /// Representative run whose spec parameterizes this stage (for
+    /// shared tasks, the lowest consuming run index).
+    spec_idx: usize,
+    /// Cache key; `None` under `--no-cache`.
+    key: Option<StageKey>,
+    deps: Vec<usize>,
+    dependents: Vec<usize>,
+    /// Consuming run indices (tails: exactly their own run).
+    consumers: Vec<usize>,
+}
+
+/// Result slot of a finished task.
+enum Output {
+    /// Artifact + host seconds spent (0.0 when served from cache) +
+    /// whether this task actually executed the stage.
+    Done(Artifact, f64, bool),
+    /// Stage name + error message; propagated to dependents.
+    Failed(&'static str, String),
+    /// Tails write their record elsewhere.
+    Tail,
+    /// Artifact released after the last dependent consumed it, so
+    /// peak memory stays O(live tasks), not O(matrix size).
+    Consumed,
+}
+
+struct SchedState {
+    ready: VecDeque<usize>,
+    pending: Vec<usize>,
+    /// Dependents yet to consume each task's output; at 0 the slot is
+    /// replaced with `Consumed` to drop the artifact.
+    remaining: Vec<usize>,
+    outputs: Vec<Option<Output>>,
+    completed: usize,
+}
+
+/// Lock that shrugs off poisoning: a panicked worker must not wedge
+/// the whole scheduler (the panic itself is surfaced as a failed
+/// stage by the catch_unwind in the worker loop).
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Execute all `specs` and return the records (in spec order) plus
+/// the stage-execution counters for this invocation.
+pub fn execute_matrix(
+    session: &Session,
+    specs: &[RunSpec],
+    cache: &ArtifactCache,
+    opts: RunOptions,
+) -> Result<(Vec<RunRecord>, StageExecCounts)> {
+    let tune = TuneParams {
+        trials: session.env().get_i64("tune", "trials", 600) as usize,
+        seed: session.env().get_i64("run", "seed", 7) as u64,
+    };
+
+    // model name -> content fingerprint (+ the bytes it was computed
+    // over, reused by the Load stage so each file is read once and
+    // fingerprint/graph can never diverge)
+    let mut model_fp: HashMap<String, u64> = HashMap::new();
+    let mut model_bytes: HashMap<String, Arc<Vec<u8>>> = HashMap::new();
+    for s in specs {
+        if !model_fp.contains_key(&s.model) {
+            let (fp, bytes) = model_fingerprint(session, &s.model);
+            model_fp.insert(s.model.clone(), fp);
+            if let Some(b) = bytes {
+                model_bytes.insert(s.model.clone(), b);
+            }
+        }
+    }
+
+    // ---------------------------------------------- task graph build --
+    let mut tasks: Vec<Task> = Vec::new();
+    // (kind, key) -> task id, for prefix dedup
+    let mut dedup: HashMap<(Kind, u64), usize> = HashMap::new();
+    let mut shared_or_new = |tasks: &mut Vec<Task>,
+                             dedup: &mut HashMap<(Kind, u64), usize>,
+                             kind: Kind,
+                             key: StageKey,
+                             run_idx: usize,
+                             deps: Vec<usize>|
+     -> usize {
+        if opts.use_cache {
+            if let Some(&id) = dedup.get(&(kind, key.0)) {
+                tasks[id].consumers.push(run_idx);
+                return id;
+            }
+        }
+        let id = tasks.len();
+        tasks.push(Task {
+            kind,
+            spec_idx: run_idx,
+            key: opts.use_cache.then_some(key),
+            deps,
+            dependents: Vec::new(),
+            consumers: vec![run_idx],
+        });
+        if opts.use_cache {
+            dedup.insert((kind, key.0), id);
+        }
+        id
+    };
+
+    for (i, spec) in specs.iter().enumerate() {
+        let fp = model_fp[&spec.model];
+        let load_id = shared_or_new(
+            &mut tasks,
+            &mut dedup,
+            Kind::Load,
+            cache::load_key(fp),
+            i,
+            Vec::new(),
+        );
+        let tune_id = spec.needs_tune().then(|| {
+            shared_or_new(
+                &mut tasks,
+                &mut dedup,
+                Kind::Tune,
+                cache::tune_key(fp, spec, tune),
+                i,
+                vec![load_id],
+            )
+        });
+        let mut build_deps = vec![load_id];
+        build_deps.extend(tune_id);
+        let build_id = shared_or_new(
+            &mut tasks,
+            &mut dedup,
+            Kind::Build,
+            cache::build_key(fp, spec, tune),
+            i,
+            build_deps,
+        );
+        let mut tail_deps = vec![load_id, build_id];
+        tail_deps.extend(tune_id);
+        tasks.push(Task {
+            kind: Kind::Tail,
+            spec_idx: i,
+            key: None,
+            deps: tail_deps,
+            dependents: Vec::new(),
+            consumers: vec![i],
+        });
+    }
+    // wire dependents + initial pending counts (deps are deduplicated
+    // per task so a shared dep is only counted once)
+    let mut pending = vec![0usize; tasks.len()];
+    for id in 0..tasks.len() {
+        let mut deps = tasks[id].deps.clone();
+        deps.sort_unstable();
+        deps.dedup();
+        tasks[id].deps = deps.clone();
+        pending[id] = deps.len();
+        for d in deps {
+            tasks[d].dependents.push(id);
+        }
+    }
+
+    // --------------------------------------------------- execution --
+    let ready: VecDeque<usize> = (0..tasks.len()).filter(|&i| pending[i] == 0).collect();
+    let n_tasks = tasks.len();
+    let remaining: Vec<usize> = tasks.iter().map(|t| t.dependents.len()).collect();
+    let state = Mutex::new(SchedState {
+        ready,
+        pending,
+        remaining,
+        outputs: (0..n_tasks).map(|_| None).collect(),
+        completed: 0,
+    });
+    let cond = Condvar::new();
+    let records: Mutex<Vec<Option<RunRecord>>> =
+        Mutex::new((0..specs.len()).map(|_| None).collect());
+    let execs = Mutex::new(StageExecCounts::default());
+    let tasks = &tasks; // shared immutably across workers
+
+    let workers = opts.parallel.max(1).min(n_tasks.max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let task_id = {
+                    let mut st = lock(&state);
+                    loop {
+                        if let Some(id) = st.ready.pop_front() {
+                            break id;
+                        }
+                        if st.completed == n_tasks {
+                            return;
+                        }
+                        st = cond.wait(st).unwrap_or_else(|e| e.into_inner());
+                    }
+                };
+                // a panicking stage (backend bug, poisoned lock) must
+                // become a failed run, not a wedged scheduler
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || {
+                        run_task(
+                            session, specs, tasks, task_id, cache, tune,
+                            &model_bytes, &state, &records, &execs,
+                        )
+                    },
+                ))
+                .unwrap_or_else(|p| {
+                    let msg = format!("stage panicked: {}", panic_msg(&p));
+                    let task = &tasks[task_id];
+                    if task.kind == Kind::Tail {
+                        let mut recs = lock(&records);
+                        if recs[task.spec_idx].is_none() {
+                            let mut rec = run::blank_record(&specs[task.spec_idx]);
+                            rec.status = run::RunStatus::Failed("run", msg);
+                            recs[task.spec_idx] = Some(rec);
+                        }
+                        Output::Tail
+                    } else {
+                        Output::Failed(task.kind.stage_name(), msg)
+                    }
+                });
+                let mut st = lock(&state);
+                st.outputs[task_id] = Some(out);
+                st.completed += 1;
+                // release dep artifacts this task was the last to use
+                for &d in &tasks[task_id].deps {
+                    st.remaining[d] -= 1;
+                    if st.remaining[d] == 0 {
+                        st.outputs[d] = Some(Output::Consumed);
+                    }
+                }
+                for &dep in &tasks[task_id].dependents {
+                    st.pending[dep] -= 1;
+                    if st.pending[dep] == 0 {
+                        st.ready.push_back(dep);
+                    }
+                }
+                cond.notify_all();
+            });
+        }
+    });
+
+    let records = records
+        .into_inner()
+        .unwrap_or_else(|e| e.into_inner())
+        .into_iter()
+        .map(|r| r.expect("every run produced a record"))
+        .collect();
+    Ok((records, execs.into_inner().unwrap_or_else(|e| e.into_inner())))
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+/// Clone the finished outputs of `ids` out of the state (cheap: Arcs).
+fn dep_outputs(
+    state: &Mutex<SchedState>,
+    ids: &[usize],
+) -> Vec<Result<(Artifact, f64, bool), (&'static str, String)>> {
+    let st = lock(state);
+    ids.iter()
+        .map(|&d| match st.outputs[d].as_ref().expect("dep finished") {
+            Output::Done(a, secs, executed) => Ok((a.clone(), *secs, *executed)),
+            Output::Failed(stage, e) => Err((*stage, e.clone())),
+            Output::Tail | Output::Consumed => {
+                unreachable!("dep output consumed before its dependents ran")
+            }
+        })
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_task(
+    session: &Session,
+    specs: &[RunSpec],
+    tasks: &[Task],
+    task_id: usize,
+    cache: &ArtifactCache,
+    tune: TuneParams,
+    model_bytes: &HashMap<String, Arc<Vec<u8>>>,
+    state: &Mutex<SchedState>,
+    records: &Mutex<Vec<Option<RunRecord>>>,
+    execs: &Mutex<StageExecCounts>,
+) -> Output {
+    let task = &tasks[task_id];
+    let spec = &specs[task.spec_idx];
+    let deps = dep_outputs(state, &task.deps);
+
+    if task.kind == Kind::Tail {
+        return run_tail(session, specs, tasks, task_id, &deps, records);
+    }
+
+    // failed upstream stage: propagate without executing
+    if let Some(Err((stage, e))) = deps.iter().find(|d| d.is_err()).cloned() {
+        return Output::Failed(stage, e);
+    }
+
+    // cache tier: shared consumers beyond the first each count a hit
+    if let Some(key) = task.key {
+        if let Some(artifact) = cache.lookup(key) {
+            cache.note_shared_hits(task.consumers.len() - 1);
+            return Output::Done(artifact, 0.0, false);
+        }
+    }
+
+    let graph = deps.iter().find_map(|d| match d {
+        Ok((Artifact::Graph(g), _, _)) => Some(g.clone()),
+        _ => None,
+    });
+    let tuned = deps.iter().find_map(|d| match d {
+        Ok((Artifact::Tune(t), _, _)) => Some(*t),
+        _ => None,
+    });
+
+    let watch = Stopwatch::start();
+    let result: Result<Artifact> = match task.kind {
+        Kind::Load => match model_bytes.get(&spec.model) {
+            Some(bytes) => {
+                crate::frontends::load_model_from_bytes(bytes, &spec.model)
+            }
+            None => run::stage_load(session, spec),
+        }
+        .map(|g| Artifact::Graph(Arc::new(g))),
+        Kind::Tune => {
+            run::stage_tune(spec, &graph.expect("load is a dep"), tune)
+                .map(Artifact::Tune)
+        }
+        Kind::Build => run::stage_build(
+            spec,
+            &graph.expect("load is a dep"),
+            tuned.map(|t| t.schedule),
+        )
+        .map(|b| Artifact::Build(Arc::new(b))),
+        Kind::Tail => unreachable!(),
+    };
+    let secs = watch.elapsed_s();
+    match result {
+        Ok(artifact) => {
+            {
+                let mut e = lock(execs);
+                match task.kind {
+                    Kind::Load => e.loads += 1,
+                    Kind::Tune => e.tunes += 1,
+                    Kind::Build => e.builds += 1,
+                    Kind::Tail => {}
+                }
+            }
+            if let Some(key) = task.key {
+                cache.insert(key, artifact.clone(), &spec.label());
+                // runs sharing this execution avoided their own one
+                cache.note_shared_hits(task.consumers.len() - 1);
+            }
+            Output::Done(artifact, secs, true)
+        }
+        Err(e) => Output::Failed(task.kind.stage_name(), e.to_string()),
+    }
+}
+
+/// Per-run tail: assemble the record from the shared stage artifacts,
+/// charge stage times to the lowest consumer, then Compile/Run/Post.
+fn run_tail(
+    session: &Session,
+    specs: &[RunSpec],
+    tasks: &[Task],
+    task_id: usize,
+    deps: &[Result<(Artifact, f64, bool), (&'static str, String)>],
+    records: &Mutex<Vec<Option<RunRecord>>>,
+) -> Output {
+    let task = &tasks[task_id];
+    let run_idx = task.spec_idx;
+    let spec = &specs[run_idx];
+    let mut rec = run::blank_record(spec);
+
+    let mut graph = None;
+    let mut build = None;
+    let mut failure: Option<(&'static str, String)> = None;
+    for (pos, dep) in deps.iter().enumerate() {
+        let dep_task = &tasks[task.deps[pos]];
+        // charge the stage's host seconds to its lowest consumer run;
+        // everyone else reused the shared artifact
+        let charged = dep_task.consumers.iter().copied().min() == Some(run_idx);
+        match dep {
+            Ok((artifact, secs, executed)) => {
+                let secs = if charged && *executed { *secs } else { 0.0 };
+                if !(charged && *executed) && dep_task.kind != Kind::Tail {
+                    rec.reused.push(dep_task.kind.stage_name());
+                }
+                match artifact {
+                    Artifact::Graph(g) => {
+                        rec.stages.load_s = secs;
+                        graph = Some(g.clone());
+                    }
+                    Artifact::Tune(t) => {
+                        rec.stages.tune_s = secs;
+                        rec.tune_improvement = Some(t.improvement);
+                    }
+                    Artifact::Build(b) => {
+                        rec.stages.build_s = secs;
+                        build = Some(b.clone());
+                    }
+                }
+            }
+            Err((stage, e)) => {
+                // keep the earliest stage's failure (load before tune
+                // before build)
+                let rank = |s: &str| match s {
+                    "load" => 0,
+                    "tune" => 1,
+                    _ => 2,
+                };
+                if failure
+                    .as_ref()
+                    .map(|(s, _)| rank(stage) < rank(s))
+                    .unwrap_or(true)
+                {
+                    failure = Some((*stage, e.clone()));
+                }
+            }
+        }
+    }
+
+    if let Some((stage, e)) = failure {
+        run::fail_record(session, run_idx, &mut rec, stage, &e);
+    } else {
+        let graph = graph.expect("load artifact present");
+        let build = build.expect("build artifact present");
+        run::stage_tail(session, run_idx, &mut rec, &graph, &build);
+    }
+    lock(records)[run_idx] = Some(rec);
+    Output::Tail
+}
+
+/// Content fingerprint of a model reference: the file bytes when
+/// resolvable (content-addressing — renaming a file or regenerating
+/// identical bytes keys the same), else a hash of the name alone and
+/// no bytes (the Load stage then resolves itself and fails with the
+/// real error).
+fn model_fingerprint(session: &Session, model: &str) -> (u64, Option<Arc<Vec<u8>>>) {
+    let dirs = session.env().model_dirs();
+    match crate::frontends::resolve(model, &dirs)
+        .and_then(|p| Ok(std::fs::read(p)?))
+    {
+        Ok(bytes) => (crate::util::fnv1a64(&bytes), Some(Arc::new(bytes))),
+        Err(_) => {
+            let mut h = crate::util::StableHasher::new();
+            h.write_str("unresolved").write_str(model);
+            (h.finish(), None)
+        }
+    }
+}

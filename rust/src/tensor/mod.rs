@@ -24,6 +24,16 @@ impl DType {
         })
     }
 
+    /// Inverse of `from_u8` (the on-disk .tmodel tag).
+    pub fn to_u8(self) -> u8 {
+        match self {
+            DType::I8 => 0,
+            DType::I16 => 1,
+            DType::I32 => 2,
+            DType::F32 => 3,
+        }
+    }
+
     pub fn size(self) -> usize {
         match self {
             DType::I8 => 1,

@@ -1,0 +1,131 @@
+//! Stable content hashing (FNV-1a, 64-bit) for the artifact cache.
+//!
+//! `std::hash::Hasher` implementations are allowed to vary between
+//! releases and processes; cache keys are persisted to disk and must
+//! be reproducible byte-for-byte across runs, so we fix the function
+//! here. FNV-1a is tiny, dependency-free and good enough for
+//! content-addressing a few thousand artifacts.
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a hasher with typed, length-prefixed writes so
+/// that field boundaries cannot alias (`"ab","c"` != `"a","bc"`).
+#[derive(Debug, Clone, Copy)]
+pub struct StableHasher {
+    state: u64,
+}
+
+impl Default for StableHasher {
+    fn default() -> Self {
+        StableHasher::new()
+    }
+}
+
+impl StableHasher {
+    pub fn new() -> StableHasher {
+        StableHasher { state: FNV_OFFSET }
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) -> &mut Self {
+        self.write_raw(&(bytes.len() as u64).to_le_bytes());
+        self.write_raw(bytes);
+        self
+    }
+
+    pub fn write_str(&mut self, s: &str) -> &mut Self {
+        self.write_bytes(s.as_bytes())
+    }
+
+    pub fn write_u64(&mut self, x: u64) -> &mut Self {
+        self.write_raw(&x.to_le_bytes());
+        self
+    }
+
+    pub fn write_i64(&mut self, x: i64) -> &mut Self {
+        self.write_raw(&x.to_le_bytes());
+        self
+    }
+
+    pub fn write_u8(&mut self, x: u8) -> &mut Self {
+        self.write_raw(&[x]);
+        self
+    }
+
+    pub fn write_bool(&mut self, x: bool) -> &mut Self {
+        self.write_u8(x as u8)
+    }
+
+    /// f32 by bit pattern (scales/quant params are exact artifacts of
+    /// the python build, never NaN-compared).
+    pub fn write_f32(&mut self, x: f32) -> &mut Self {
+        self.write_raw(&x.to_bits().to_le_bytes());
+        self
+    }
+
+    fn write_raw(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state ^= b as u64;
+            self.state = self.state.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+/// One-shot hash of a byte slice (model file contents).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut state = FNV_OFFSET;
+    for &b in bytes {
+        state ^= b as u64;
+        state = state.wrapping_mul(FNV_PRIME);
+    }
+    state
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector() {
+        // FNV-1a("") is the offset basis; "a" is a published vector.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = StableHasher::new();
+        a.write_str("model").write_u64(42).write_bool(true);
+        let mut b = StableHasher::new();
+        b.write_str("model").write_u64(42).write_bool(true);
+        assert_eq!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn field_boundaries_do_not_alias() {
+        let mut a = StableHasher::new();
+        a.write_str("ab").write_str("c");
+        let mut b = StableHasher::new();
+        b.write_str("a").write_str("bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn any_field_change_changes_hash() {
+        let base = {
+            let mut h = StableHasher::new();
+            h.write_str("aww").write_str("tvmaot").write_bool(false);
+            h.finish()
+        };
+        let tuned = {
+            let mut h = StableHasher::new();
+            h.write_str("aww").write_str("tvmaot").write_bool(true);
+            h.finish()
+        };
+        assert_ne!(base, tuned);
+    }
+}

@@ -6,7 +6,9 @@
 pub mod rng;
 pub mod log;
 pub mod fmt;
+pub mod hash;
 
+pub use hash::{fnv1a64, StableHasher};
 pub use rng::XorShift64;
 
 /// Monotonic stopwatch for stage timing (Table III reproduction).

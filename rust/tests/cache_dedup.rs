@@ -1,0 +1,213 @@
+//! Artifact-cache + stage-scheduler integration: a matrix whose runs
+//! share (model, backend, schedule) prefixes must execute each
+//! distinct Load/Build stage exactly once, reusing the artifacts for
+//! every other run — the paper's "benchmark a large number of
+//! configurations in a low amount of time" mechanism. Uses a
+//! rust-generated .tmodel, so no `make artifacts` is needed.
+
+use std::path::PathBuf;
+
+use mlonmcu::config::Environment;
+use mlonmcu::frontends::tmodel;
+use mlonmcu::graph::{Graph, OpNode, TensorInfo};
+use mlonmcu::graph::{OpCode, ACT_RELU, PAD_SAME};
+use mlonmcu::session::{RunMatrix, RunOptions, Session};
+use mlonmcu::tensor::DType;
+
+/// input[1,4,4,2] -> conv 3ch 3x3 SAME relu -> out[1,4,4,3]; small
+/// enough to pass every hardware target's memory gates.
+fn tiny_conv_graph() -> Graph {
+    let mut attrs = std::collections::BTreeMap::new();
+    attrs.insert("stride_h".to_string(), 1);
+    attrs.insert("stride_w".to_string(), 1);
+    attrs.insert("padding".to_string(), PAD_SAME);
+    attrs.insert("fused_act".to_string(), ACT_RELU);
+    Graph {
+        name: "tinyconv".into(),
+        tensors: vec![
+            TensorInfo {
+                name: "input".into(),
+                shape: vec![1, 4, 4, 2],
+                dtype: DType::I8,
+                scale: 0.5,
+                zero_point: 0,
+                data: None,
+            },
+            TensorInfo {
+                name: "w".into(),
+                shape: vec![3, 3, 3, 2],
+                dtype: DType::I8,
+                scale: 0.01,
+                zero_point: 0,
+                data: Some((0..54).map(|x| (x % 7) as u8).collect()),
+            },
+            TensorInfo {
+                name: "b".into(),
+                shape: vec![3],
+                dtype: DType::I32,
+                scale: 0.005,
+                zero_point: 0,
+                data: Some(vec![0; 12]),
+            },
+            TensorInfo {
+                name: "out".into(),
+                shape: vec![1, 4, 4, 3],
+                dtype: DType::I8,
+                scale: 0.25,
+                zero_point: -128,
+                data: None,
+            },
+        ],
+        ops: vec![OpNode {
+            opcode: OpCode::Conv2D,
+            name: "conv0".into(),
+            inputs: vec![0, 1, 2],
+            outputs: vec![3],
+            attrs,
+        }],
+        inputs: vec![0],
+        outputs: vec![3],
+    }
+}
+
+/// Fresh environment in a temp dir with the generated model in place.
+fn cache_env(tag: &str) -> (Environment, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("mlonmcu_cachededup_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let env = Environment::init(&dir).unwrap();
+    let model_path = dir.join("artifacts/models/tinyconv.tmodel");
+    tmodel::write_file(&tiny_conv_graph(), &model_path).unwrap();
+    (env, dir)
+}
+
+fn matrix() -> RunMatrix {
+    // 1 model × 2 backends × 5 targets = 10 runs sharing 2 distinct
+    // (model, backend, schedule) build prefixes
+    RunMatrix::new()
+        .models(["tinyconv"])
+        .backends(["tflmi", "tvmaot"])
+        .targets(["etiss", "esp32c3", "stm32f4", "stm32f7", "esp32"])
+}
+
+#[test]
+fn shared_prefixes_build_exactly_once() {
+    let (env, dir) = cache_env("dedup");
+    let session = Session::new(&env).unwrap();
+    let report = session.run_matrix(&matrix(), 4).unwrap();
+    assert_eq!(report.len(), 10);
+    for row in &report.rows {
+        assert_eq!(
+            row["status"].render(),
+            "ok",
+            "{}/{} failed",
+            row["backend"].render(),
+            row["target"].render()
+        );
+    }
+
+    let t = *session.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs.builds, 2, "one build per distinct prefix");
+    assert_eq!(t.stage_execs.loads, 1, "one load per distinct model");
+    assert_eq!(t.stage_execs.tunes, 0);
+    // 3 unique stage tasks miss; the 7 sharing runs count 9 + 8 hits
+    // (9 shared loads, 4 shared builds per backend)
+    assert_eq!(t.cache_misses, 3);
+    assert_eq!(t.cache_hits, 17);
+    assert_eq!(t.cache_evictions, 0);
+
+    // the report says which runs reused which stages: run 0 executed
+    // load+build, run 5 (first tvmaot run) only built, the rest reused
+    // everything
+    assert_eq!(report.rows[0]["cached_stages"].render(), "-");
+    assert_eq!(report.rows[1]["cached_stages"].render(), "load+build");
+    assert_eq!(report.rows[5]["cached_stages"].render(), "load");
+
+    // disk tier: index + per-entry artifacts under the session dir
+    assert!(session.dir.join("cache/index.json").is_file());
+    assert!(session.dir.join("cache/build").is_dir());
+
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn second_run_matrix_is_all_hits() {
+    let (env, dir) = cache_env("rerun");
+    let session = Session::new(&env).unwrap();
+    session.run_matrix(&matrix(), 2).unwrap();
+    let first = *session.last_timing.lock().unwrap();
+    assert_eq!(first.stage_execs.builds, 2);
+
+    let report = session.run_matrix(&matrix(), 2).unwrap();
+    assert_eq!(report.len(), 10);
+    let second = *session.last_timing.lock().unwrap();
+    assert_eq!(second.stage_execs.builds, 0, "all builds served from cache");
+    assert_eq!(second.stage_execs.loads, 0);
+    assert_eq!(second.cache_misses, 0);
+    assert_eq!(second.cache_hits, 20);
+    // every run reused its whole prefix this time
+    for row in &report.rows {
+        assert_eq!(row["cached_stages"].render(), "load+build");
+    }
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn no_cache_executes_every_stage_per_run() {
+    let (env, dir) = cache_env("nocache");
+    let session = Session::new(&env).unwrap();
+    let opts = RunOptions { parallel: 4, use_cache: false };
+    let report = session.run_matrix_opts(&matrix(), opts).unwrap();
+    assert_eq!(report.len(), 10);
+    for row in &report.rows {
+        assert_eq!(row["status"].render(), "ok");
+        assert_eq!(row["cached_stages"].render(), "-");
+    }
+    let t = *session.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs.builds, 10, "no dedup under --no-cache");
+    assert_eq!(t.stage_execs.loads, 10);
+    assert_eq!((t.cache_hits, t.cache_misses), (0, 0));
+    // the session cache itself stays untouched
+    assert_eq!(session.cache_stats(), mlonmcu::session::CacheStats::default());
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn cached_and_uncached_reports_agree() {
+    let (env, dir) = cache_env("agree");
+    let cached = Session::new(&env).unwrap();
+    let r1 = cached.run_matrix(&matrix(), 4).unwrap();
+    let uncached = Session::new(&env).unwrap();
+    let r2 = uncached
+        .run_matrix_opts(&matrix(), RunOptions { parallel: 1, use_cache: false })
+        .unwrap();
+    assert_eq!(r1.len(), r2.len());
+    for (a, b) in r1.rows.iter().zip(&r2.rows) {
+        for col in [
+            "model", "backend", "target", "status", "invoke_instr", "time_s",
+            "rom_b", "ram_b",
+        ] {
+            assert_eq!(a.get(col), b.get(col), "col {col} differs");
+        }
+    }
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn model_content_change_invalidates_cache_keys() {
+    let (env, dir) = cache_env("invalidate");
+    let session = Session::new(&env).unwrap();
+    session.run_matrix(&matrix(), 2).unwrap();
+    assert_eq!(session.last_timing.lock().unwrap().stage_execs.builds, 2);
+
+    // regenerate the model with different weights: same name, new
+    // content => new keys => stages re-execute
+    let mut g = tiny_conv_graph();
+    g.tensors[1].data = Some((0..54).map(|x| (x % 5) as u8).collect());
+    tmodel::write_file(&g, &dir.join("artifacts/models/tinyconv.tmodel")).unwrap();
+
+    session.run_matrix(&matrix(), 2).unwrap();
+    let t = *session.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs.builds, 2, "content change must rebuild");
+    assert_eq!(t.stage_execs.loads, 1);
+    std::fs::remove_dir_all(dir).unwrap();
+}
