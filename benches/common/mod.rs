@@ -67,8 +67,13 @@ pub fn load_or_exit(env: &Environment, name: &str) -> Graph {
 }
 
 /// Environment rooted at the repo (artifacts/ beside Cargo.toml).
+/// The persistent environment cache is disabled: benches measure cold
+/// stage execution, and a warm store would (a) skew iteration timing
+/// and (b) break repeat-run assertions on executed-stage counts.
 pub fn bench_env() -> Environment {
-    Environment::discover().expect("environment")
+    Environment::discover()
+        .and_then(|e| e.with_overrides(&["cache.persist=false".into()]))
+        .expect("environment")
 }
 
 /// Render a ratio vs the paper's value.

@@ -1,0 +1,88 @@
+//! Generate a tiny self-contained `.tmodel` file with the rust-side
+//! writer — no python toolchain needed. Used by the CI
+//! `cache-persistence` job to seed an environment's model zoo before
+//! driving the CLI, and handy for local smoke tests:
+//!
+//! ```sh
+//! cargo run --release --example gen_model -- path/to/tinyconv.tmodel
+//! ```
+//!
+//! The graph (input[1,4,4,2] → conv 3ch 3×3 SAME relu → out[1,4,4,3])
+//! is small enough to pass every hardware target's memory gates.
+
+use std::path::PathBuf;
+
+use mlonmcu::frontends::tmodel;
+use mlonmcu::graph::{Graph, OpCode, OpNode, TensorInfo, ACT_RELU, PAD_SAME};
+use mlonmcu::tensor::DType;
+
+fn tiny_conv_graph() -> Graph {
+    let mut attrs = std::collections::BTreeMap::new();
+    attrs.insert("stride_h".to_string(), 1);
+    attrs.insert("stride_w".to_string(), 1);
+    attrs.insert("padding".to_string(), PAD_SAME);
+    attrs.insert("fused_act".to_string(), ACT_RELU);
+    Graph {
+        name: "tinyconv".into(),
+        tensors: vec![
+            TensorInfo {
+                name: "input".into(),
+                shape: vec![1, 4, 4, 2],
+                dtype: DType::I8,
+                scale: 0.5,
+                zero_point: 0,
+                data: None,
+            },
+            TensorInfo {
+                name: "w".into(),
+                shape: vec![3, 3, 3, 2],
+                dtype: DType::I8,
+                scale: 0.01,
+                zero_point: 0,
+                data: Some((0..54).map(|x| (x % 7) as u8).collect()),
+            },
+            TensorInfo {
+                name: "b".into(),
+                shape: vec![3],
+                dtype: DType::I32,
+                scale: 0.005,
+                zero_point: 0,
+                data: Some(vec![0; 12]),
+            },
+            TensorInfo {
+                name: "out".into(),
+                shape: vec![1, 4, 4, 3],
+                dtype: DType::I8,
+                scale: 0.25,
+                zero_point: -128,
+                data: None,
+            },
+        ],
+        ops: vec![OpNode {
+            opcode: OpCode::Conv2D,
+            name: "conv0".into(),
+            inputs: vec![0, 1, 2],
+            outputs: vec![3],
+            attrs,
+        }],
+        inputs: vec![0],
+        outputs: vec![3],
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let path = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("tinyconv.tmodel"));
+    let graph = tiny_conv_graph();
+    graph.validate()?;
+    tmodel::write_file(&graph, &path)?;
+    println!(
+        "wrote {} ({} params, {} MACs)",
+        path.display(),
+        graph.param_count(),
+        graph.macs()
+    );
+    Ok(())
+}

@@ -7,6 +7,7 @@
 //! mlonmcu models ls
 //! mlonmcu flow run -m M.. -b B.. -t T.. [--schedule S..] [--tune]
 //!         [-f FEAT..] [--parallel N] [-c k=v..] [--postprocess P..]
+//! mlonmcu cache stats | gc | clear
 //! mlonmcu report [--session N]
 //! mlonmcu targets ls | backends ls
 //! ```
@@ -17,7 +18,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::Environment;
 use crate::postprocess;
-use crate::session::{RunMatrix, RunOptions, Session};
+use crate::session::{EnvStore, RunMatrix, RunOptions, Session};
+use crate::util::fmt::human_bytes;
 
 use args::Parsed;
 
@@ -33,11 +35,18 @@ USAGE:
           [--schedule default-nchw ..] [--tune]
           [-f validate ..] [--parallel N] [-c key=val ..]
           [--postprocess filter_cols:a,b ..] [--no-cache]
+          [--cache-dir DIR] [--cache-budget MB]
+  mlonmcu cache stats|gc|clear            manage the environment cache
+          [--cache-dir DIR] [--cache-budget MB] [-c key=val ..]
   mlonmcu report [--session N]            reprint a session report
 
 FLAGS:
-  --no-cache    disable the session artifact cache: every run executes
-                every stage itself (no Load/Tune/Build deduplication)
+  --no-cache       disable all artifact-cache tiers: every run executes
+                   every stage itself (no Load/Tune/Build deduplication)
+  --cache-dir      environment artifact-store directory
+                   (default: $ENV/cache, config key paths.cache)
+  --cache-budget   store size budget in MB before LRU GC
+                   (default: 512, config key cache.budget_mb)
 ";
 
 /// Entry point for the binary.
@@ -54,6 +63,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         "backends" => cmd_backends(),
         "targets" => cmd_targets(),
         "flow" => cmd_flow(&rest),
+        "cache" => cmd_cache(&rest),
         "report" => cmd_report(&rest),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -145,6 +155,8 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
             ("--parallel", true),
             ("--tune", false),
             ("--no-cache", false),
+            ("--cache-dir", true),
+            ("--cache-budget", true),
         ],
     )?;
     let models = p.all(&["-m", "--model"]);
@@ -153,8 +165,7 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
     if models.is_empty() || backends.is_empty() || targets.is_empty() {
         bail!("flow run needs at least -m, -b and -t\n{USAGE}");
     }
-    let env = Environment::discover()?
-        .with_overrides(&p.all(&["-c", "--config"]))?;
+    let env = env_with_cache_flags(&p)?;
     let parallel = p
         .one("--parallel")
         .map(|s| s.parse::<usize>().context("--parallel"))
@@ -197,11 +208,14 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
     );
     if opts.use_cache {
         println!(
-            "artifact cache: {} hit(s), {} miss(es), {} eviction(s); \
+            "artifact cache: {} hit(s) ({} from env store), {} miss(es), \
+             {} eviction(s), {} verify failure(s); \
              executed {} load / {} tune / {} build stage(s) for {} runs",
             t.cache_hits,
+            t.disk_hits,
             t.cache_misses,
             t.cache_evictions,
+            t.verify_fails,
             t.stage_execs.loads,
             t.stage_execs.tunes,
             t.stage_execs.builds,
@@ -209,6 +223,78 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
         );
     } else {
         println!("artifact cache: disabled (--no-cache)");
+    }
+    Ok(0)
+}
+
+/// Resolve the environment with `-c` overrides plus the cache flags
+/// (`--cache-dir` / `--cache-budget` are sugar for the `paths.cache` /
+/// `cache.budget_mb` config keys, so precedence stays in one place).
+fn env_with_cache_flags(p: &Parsed) -> Result<Environment> {
+    let mut overrides = p.all(&["-c", "--config"]);
+    if let Some(dir) = p.one("--cache-dir") {
+        overrides.push(format!("paths.cache={dir}"));
+    }
+    if let Some(mb) = p.one("--cache-budget") {
+        mb.parse::<u64>().context("--cache-budget (MB)")?;
+        overrides.push(format!("cache.budget_mb={mb}"));
+    }
+    Environment::discover()?.with_overrides(&overrides)
+}
+
+/// `mlonmcu cache stats|gc|clear` — manage the environment-level
+/// artifact store without running anything.
+fn cmd_cache(rest: &[String]) -> Result<i32> {
+    let usage = "usage: mlonmcu cache stats|gc|clear \
+                 [--cache-dir DIR] [--cache-budget MB] [-c key=val ..]";
+    let Some(action) = rest.first().map(String::as_str) else {
+        bail!("{usage}");
+    };
+    let p = Parsed::parse(
+        &rest[1..],
+        &[
+            ("--cache-dir", true),
+            ("--cache-budget", true),
+            ("-c", true),
+            ("--config", true),
+        ],
+    )?;
+    let env = env_with_cache_flags(&p)?;
+    let store = EnvStore::open(&env.cache_dir(), env.cache_budget_bytes())?;
+    match action {
+        "stats" => {
+            let s = store.stats();
+            println!("environment cache at {}", store.root().display());
+            println!(
+                "  entries: {} ({} load / {} tune / {} build)",
+                s.entries, s.loads, s.tunes, s.builds
+            );
+            println!(
+                "  size:    {} of {} budget",
+                human_bytes(s.total_bytes),
+                human_bytes(store.budget_bytes())
+            );
+        }
+        "gc" => {
+            let (evicted, freed) = store.gc()?;
+            println!(
+                "evicted {} entries, freed {}; {} remaining",
+                evicted,
+                human_bytes(freed),
+                store.stats().entries
+            );
+        }
+        "clear" => {
+            let before = store.stats();
+            store.clear()?;
+            println!(
+                "cleared {} entries ({}) from {}",
+                before.entries,
+                human_bytes(before.total_bytes),
+                store.root().display()
+            );
+        }
+        other => bail!("unknown cache action '{other}'\n{usage}"),
     }
     Ok(0)
 }
@@ -253,6 +339,26 @@ mod tests {
     fn backends_and_targets_ls() {
         assert_eq!(main_with_args(&["backends".into()]).unwrap(), 0);
         assert_eq!(main_with_args(&["targets".into()]).unwrap(), 0);
+    }
+
+    #[test]
+    fn cache_subcommand_stats_gc_clear() {
+        let dir = std::env::temp_dir().join("mlonmcu_cli_cache_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let args = |a: &str| {
+            vec![
+                "cache".to_string(),
+                a.to_string(),
+                "--cache-dir".to_string(),
+                dir.display().to_string(),
+            ]
+        };
+        assert_eq!(main_with_args(&args("stats")).unwrap(), 0);
+        assert_eq!(main_with_args(&args("gc")).unwrap(), 0);
+        assert_eq!(main_with_args(&args("clear")).unwrap(), 0);
+        assert!(main_with_args(&args("frobnicate")).is_err());
+        assert!(main_with_args(&["cache".into()]).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -27,6 +27,11 @@ name = "default"
 artifacts = "artifacts"
 models = "artifacts/models"
 sessions = "artifacts/sessions"
+cache = "cache"
+
+[cache]
+capacity = 256
+budget_mb = 512
 
 [run]
 parallel = 2
@@ -135,6 +140,33 @@ impl Environment {
         self.root
             .join(self.get_str("paths", "sessions", "artifacts/sessions"))
     }
+
+    /// Environment-level artifact store directory (`paths.cache`, or
+    /// the `--cache-dir` CLI flag via an override). Relative paths are
+    /// rooted at the environment; absolute paths win the join.
+    pub fn cache_dir(&self) -> PathBuf {
+        self.root.join(self.get_str("paths", "cache", "cache"))
+    }
+
+    /// Whether sessions open the persistent environment store at all
+    /// (`cache.persist`, default true). Benchmarks measuring cold
+    /// stage execution turn this off so repeated sessions stay cold.
+    pub fn cache_persist(&self) -> bool {
+        match self.raw("cache", "persist") {
+            Some(TomlValue::Bool(b)) => b,
+            Some(TomlValue::Str(s)) => !matches!(s.as_str(), "false" | "0" | "no"),
+            Some(_) | None => true,
+        }
+    }
+
+    /// Size budget of the environment store in bytes
+    /// (`cache.budget_mb`, or `--cache-budget` via an override).
+    pub fn cache_budget_bytes(&self) -> u64 {
+        let mb = self
+            .get_i64("cache", "budget_mb", crate::session::store::DEFAULT_BUDGET_MB as i64)
+            .max(1) as u64;
+        mb * 1024 * 1024
+    }
 }
 
 #[cfg(test)]
@@ -172,6 +204,26 @@ mod tests {
             overrides: BTreeMap::new(),
         };
         assert!(env.with_overrides(&["no-equals".into()]).is_err());
+    }
+
+    #[test]
+    fn cache_dir_and_budget_resolve_with_overrides() {
+        let env = Environment {
+            root: PathBuf::from("/x"),
+            doc: TomlDoc::parse(DEFAULT_TEMPLATE).unwrap(),
+            overrides: BTreeMap::new(),
+        };
+        assert_eq!(env.cache_dir(), PathBuf::from("/x/cache"));
+        assert_eq!(env.cache_budget_bytes(), 512 * 1024 * 1024);
+        let env = env
+            .with_overrides(&[
+                "paths.cache=/abs/store".into(),
+                "cache.budget_mb=2".into(),
+            ])
+            .unwrap();
+        // an absolute --cache-dir wins the join; budget is in MB
+        assert_eq!(env.cache_dir(), PathBuf::from("/abs/store"));
+        assert_eq!(env.cache_budget_bytes(), 2 * 1024 * 1024);
     }
 
     #[test]

@@ -51,6 +51,10 @@ pub struct Report {
     /// Column order (columns appear as first encountered).
     pub columns: Vec<String>,
     pub rows: Vec<Row>,
+    /// Session-level footer lines (cache summary, ...); rendered by
+    /// the markdown/text writers, excluded from CSV (whose consumers
+    /// expect pure tabular data).
+    pub notes: Vec<String>,
 }
 
 impl Report {
@@ -67,6 +71,7 @@ impl Report {
         for row in other.rows {
             self.push(row);
         }
+        self.notes.extend(other.notes);
     }
 
     pub fn len(&self) -> usize {
@@ -94,7 +99,7 @@ impl Report {
                     .collect()
             })
             .collect();
-        Report { columns, rows }
+        Report { columns, rows, notes: self.notes.clone() }
     }
 
     fn cell(&self, row: &Row, col: &str) -> String {
@@ -119,6 +124,9 @@ impl Report {
                 s.push_str(&format!(" {} |", self.cell(row, c)));
             }
             s.push('\n');
+        }
+        for n in &self.notes {
+            s.push_str(&format!("\n> {n}\n"));
         }
         s
     }
@@ -158,6 +166,9 @@ impl Report {
             }
             s.push('\n');
         }
+        for n in &self.notes {
+            s.push_str(&format!("{n}\n"));
+        }
         s
     }
 }
@@ -192,6 +203,16 @@ mod tests {
         assert!(md.contains("—"));
         let txt = r.to_text();
         assert!(txt.contains("aww"));
+    }
+
+    #[test]
+    fn notes_render_in_markdown_and_text_not_csv() {
+        let mut r = sample();
+        r.notes.push("cache: 3 hits".into());
+        assert!(r.to_markdown().contains("> cache: 3 hits"));
+        assert!(r.to_text().contains("cache: 3 hits"));
+        assert!(!r.to_csv().contains("cache: 3 hits"));
+        assert_eq!(r.select(&["model"]).notes.len(), 1);
     }
 
     #[test]

@@ -8,18 +8,26 @@
 //! configurations in a low amount of time" claim hinges on exactly
 //! this reuse (MLonMCU §II "Parallelism"/"Reproducibility").
 //!
-//! Two tiers:
+//! Three tiers:
 //! * **memory** — `Arc`-shared live artifacts with LRU eviction;
 //!   this is what the scheduler deduplicates against, within and
 //!   across `run_matrix` calls on the same session.
-//! * **disk** — a per-session `cache/` directory holding an
+//! * **environment store** — the persistent `$ENV/cache/` tier shared
+//!   by every session of an environment (`store.rs`): serialized
+//!   artifacts (`persist.rs`) verified by key + payload hash on load,
+//!   with a size budget and LRU GC. This is what makes a *second CLI
+//!   invocation* as fast as a second `run_matrix` call. Lookups fall
+//!   through memory → store → execute; corrupt entries count as
+//!   `verify_fails` and are recomputed, never fatal.
+//! * **session disk** — a per-session `cache/` directory holding an
 //!   `index.json` (keys, stages, labels, hit/miss/eviction counters)
-//!   plus small per-entry artifacts (program listing, tuned
-//!   schedule). This records *what* was reused for reproducibility
-//!   and is the anchor point for a future persistent cross-session
-//!   cache (ROADMAP open item).
+//!   plus small human-readable per-entry artifacts (program listing,
+//!   tuned schedule). This records *what* was reused for
+//!   reproducibility; a pre-existing index is loaded and validated at
+//!   construction so re-opening a directory never silently truncates
+//!   its history.
 //!
-//! `--no-cache` disables both tiers: every run then executes every
+//! `--no-cache` disables all tiers: every run then executes every
 //! stage itself and all counters stay zero.
 
 use std::collections::{HashMap, VecDeque};
@@ -33,6 +41,7 @@ use crate::data::Json;
 use crate::graph::Graph;
 use crate::schedules::Schedule;
 use crate::session::run::RunSpec;
+use crate::session::store::{EnvStore, StoreLookup};
 use crate::util::StableHasher;
 
 /// A stable 64-bit content key for one stage output.
@@ -64,6 +73,13 @@ impl CachedStage {
             CachedStage::Build => "build",
         }
     }
+
+    /// Inverse of `name` (parsing persisted indexes).
+    pub fn from_name(name: &str) -> Option<CachedStage> {
+        [CachedStage::Load, CachedStage::Tune, CachedStage::Build]
+            .into_iter()
+            .find(|s| s.name() == name)
+    }
 }
 
 /// Tune-stage output: the winning schedule plus the improvement ratio
@@ -83,7 +99,8 @@ pub enum Artifact {
 }
 
 impl Artifact {
-    fn stage(&self) -> CachedStage {
+    /// The pipeline stage that produces this artifact kind.
+    pub fn stage(&self) -> CachedStage {
         match self {
             Artifact::Graph(_) => CachedStage::Load,
             Artifact::Tune(_) => CachedStage::Tune,
@@ -145,12 +162,23 @@ pub fn build_key(model_fingerprint: u64, spec: &RunSpec, tune: TuneParams) -> St
 /// Counters surfaced in `SessionTiming`, the report and `cache.json`.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Artifacts served without execution (memory tier, env store, or
+    /// shared across runs by the scheduler).
     pub hits: usize,
     pub misses: usize,
     pub inserts: usize,
     pub evictions: usize,
     /// Live entries in the memory tier.
     pub entries: usize,
+    /// Subset of `hits` served by the environment store (a different
+    /// process or session computed the artifact).
+    pub disk_hits: usize,
+    /// Env-store consultations that found nothing.
+    pub disk_misses: usize,
+    /// Env-store entries that failed key/hash verification and were
+    /// recomputed (corruption or a stale format — a miss, not an
+    /// error).
+    pub verify_fails: usize,
 }
 
 impl CacheStats {
@@ -163,6 +191,9 @@ impl CacheStats {
             inserts: self.inserts - earlier.inserts,
             evictions: self.evictions - earlier.evictions,
             entries: self.entries,
+            disk_hits: self.disk_hits - earlier.disk_hits,
+            disk_misses: self.disk_misses - earlier.disk_misses,
+            verify_fails: self.verify_fails - earlier.verify_fails,
         }
     }
 }
@@ -172,13 +203,18 @@ struct Inner {
     /// LRU order, least-recent first. Touched on hit and insert.
     lru: VecDeque<u64>,
     stats: CacheStats,
+    /// Entries a previous process recorded in this directory's
+    /// `index.json`, validated at construction. `write_index` keeps
+    /// them, so re-opening a session dir never silently drops history.
+    persisted: Vec<(u64, CachedStage)>,
 }
 
-/// The two-tier artifact cache owned by a `Session`.
+/// The tiered artifact cache owned by a `Session`.
 pub struct ArtifactCache {
     enabled: bool,
     capacity: usize,
     disk_dir: Option<PathBuf>,
+    store: Option<Arc<EnvStore>>,
     inner: Mutex<Inner>,
 }
 
@@ -186,16 +222,25 @@ pub const DEFAULT_CAPACITY: usize = 256;
 
 impl ArtifactCache {
     pub fn new(capacity: usize, disk_dir: Option<PathBuf>) -> ArtifactCache {
+        let persisted = disk_dir.as_deref().map(load_session_index).unwrap_or_default();
         ArtifactCache {
             enabled: true,
             capacity: capacity.max(1),
             disk_dir,
+            store: None,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 lru: VecDeque::new(),
                 stats: CacheStats::default(),
+                persisted,
             }),
         }
+    }
+
+    /// Attach the environment-level store tier.
+    pub fn with_store(mut self, store: Option<Arc<EnvStore>>) -> ArtifactCache {
+        self.store = store;
+        self
     }
 
     /// A cache that never stores or counts anything (`--no-cache`).
@@ -204,10 +249,12 @@ impl ArtifactCache {
             enabled: false,
             capacity: 1,
             disk_dir: None,
+            store: None,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 lru: VecDeque::new(),
                 stats: CacheStats::default(),
+                persisted: Vec::new(),
             }),
         }
     }
@@ -216,17 +263,46 @@ impl ArtifactCache {
         self.enabled
     }
 
-    /// Look up a stage artifact, counting a hit or miss.
-    pub fn lookup(&self, key: StageKey) -> Option<Artifact> {
+    pub fn env_store(&self) -> Option<&Arc<EnvStore>> {
+        self.store.as_ref()
+    }
+
+    /// Look up a stage artifact: memory tier, then the environment
+    /// store. Counts a hit (plus `disk_hits` when the store served
+    /// it), a miss, or a `verify_fails` for a corrupt store entry.
+    pub fn lookup(&self, key: StageKey, stage: CachedStage) -> Option<Artifact> {
         if !self.enabled {
             return None;
         }
-        let mut inner = self.inner.lock().unwrap();
-        match inner.map.get(&key.0).cloned() {
-            Some(a) => {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if let Some(a) = inner.map.get(&key.0).cloned() {
                 inner.stats.hits += 1;
                 touch(&mut inner.lru, key.0);
-                Some(a)
+                return Some(a);
+            }
+        }
+        // fall through to the env store (if attached), promoting hits
+        // into the memory tier — the file is decoded at most once per
+        // process
+        let looked_up = self.store.as_ref().map(|s| s.load(key, stage));
+        let mut inner = self.inner.lock().unwrap();
+        match looked_up {
+            Some(StoreLookup::Hit(artifact)) => {
+                inner.stats.hits += 1;
+                inner.stats.disk_hits += 1;
+                insert_mem(&mut inner, self.capacity, key, artifact.clone());
+                Some(artifact)
+            }
+            Some(StoreLookup::Corrupt) => {
+                inner.stats.misses += 1;
+                inner.stats.verify_fails += 1;
+                None
+            }
+            Some(StoreLookup::Miss) => {
+                inner.stats.misses += 1;
+                inner.stats.disk_misses += 1;
+                None
             }
             None => {
                 inner.stats.misses += 1;
@@ -236,25 +312,23 @@ impl ArtifactCache {
     }
 
     /// Insert a freshly computed artifact, evicting the least-recently
-    /// used entry when over capacity. `label` names the producing run
-    /// in the on-disk index.
+    /// used memory entry when over capacity and persisting to the env
+    /// store. `label` names the producing run in the on-disk index.
     pub fn insert(&self, key: StageKey, artifact: Artifact, label: &str) {
         if !self.enabled {
             return;
         }
-        self.persist(key, &artifact, label);
-        let mut inner = self.inner.lock().unwrap();
-        if inner.map.insert(key.0, artifact).is_none() {
-            touch(&mut inner.lru, key.0);
-            inner.stats.inserts += 1;
-            while inner.map.len() > self.capacity {
-                if let Some(old) = inner.lru.pop_front() {
-                    inner.map.remove(&old);
-                    inner.stats.evictions += 1;
-                } else {
-                    break;
-                }
+        self.persist_meta(key, &artifact, label);
+        if let Some(store) = &self.store {
+            // best-effort: the memory tier is authoritative
+            if let Err(e) = store.save(key, &artifact) {
+                crate::log_warn!("env cache: entry {} not saved: {e}", key.hex());
             }
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.map.contains_key(&key.0) {
+            insert_mem(&mut inner, self.capacity, key, artifact);
+            inner.stats.inserts += 1;
         }
         inner.stats.entries = inner.map.len();
     }
@@ -277,7 +351,7 @@ impl ArtifactCache {
 
     /// Disk tier: write small reproducibility artifacts for an entry.
     /// Failures are non-fatal (the memory tier is authoritative).
-    fn persist(&self, key: StageKey, artifact: &Artifact, label: &str) {
+    fn persist_meta(&self, key: StageKey, artifact: &Artifact, label: &str) {
         let Some(root) = &self.disk_dir else { return };
         let dir = root.join(artifact.stage().name()).join(key.hex());
         if std::fs::create_dir_all(&dir).is_err() {
@@ -320,7 +394,8 @@ impl ArtifactCache {
         }
     }
 
-    /// Write the disk index: counters plus the live key set. Called at
+    /// Write the disk index: counters plus the live key set, unioned
+    /// with the validated entries of any pre-existing index. Called at
     /// the end of every `run_matrix`.
     pub fn write_index(&self) -> Result<()> {
         let Some(root) = &self.disk_dir else {
@@ -329,6 +404,14 @@ impl ArtifactCache {
         let stats = self.stats();
         let inner = self.inner.lock().unwrap();
         let mut entries: Vec<Json> = Vec::new();
+        for &(k, stage) in &inner.persisted {
+            if !inner.map.contains_key(&k) {
+                entries.push(Json::obj(vec![
+                    ("key", Json::Str(StageKey(k).hex())),
+                    ("stage", Json::Str(stage.name().into())),
+                ]));
+            }
+        }
         for (&k, a) in &inner.map {
             entries.push(Json::obj(vec![
                 ("key", Json::Str(StageKey(k).hex())),
@@ -342,12 +425,58 @@ impl ArtifactCache {
             ("misses", Json::Num(stats.misses as f64)),
             ("inserts", Json::Num(stats.inserts as f64)),
             ("evictions", Json::Num(stats.evictions as f64)),
-            ("entries", Json::Num(stats.entries as f64)),
+            ("entries", Json::Num(entries.len() as f64)),
+            ("disk_hits", Json::Num(stats.disk_hits as f64)),
+            ("disk_misses", Json::Num(stats.disk_misses as f64)),
+            ("verify_fails", Json::Num(stats.verify_fails as f64)),
             ("artifacts", Json::Arr(entries)),
         ]);
         std::fs::write(root.join("index.json"), doc.to_string())?;
         Ok(())
     }
+}
+
+/// Memory-tier insert with LRU eviction; shared by fresh inserts and
+/// store-hit promotion (which must not count as an `insert`).
+fn insert_mem(inner: &mut Inner, capacity: usize, key: StageKey, artifact: Artifact) {
+    if inner.map.insert(key.0, artifact).is_none() {
+        touch(&mut inner.lru, key.0);
+        while inner.map.len() > capacity {
+            if let Some(old) = inner.lru.pop_front() {
+                inner.map.remove(&old);
+                inner.stats.evictions += 1;
+            } else {
+                break;
+            }
+        }
+    }
+    inner.stats.entries = inner.map.len();
+}
+
+/// Load + validate a previously written session `index.json`: keep
+/// entries whose stage is known, whose key parses, and whose artifact
+/// directory still exists; drop the rest. A missing or malformed
+/// index is an empty history, never an error.
+fn load_session_index(root: &std::path::Path) -> Vec<(u64, CachedStage)> {
+    let Ok(doc) = Json::parse_file(&root.join("index.json")) else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    let artifacts = doc.get("artifacts").and_then(Json::as_arr);
+    for e in artifacts.unwrap_or(&[]) {
+        let key = e.get("key").and_then(Json::as_str);
+        let Some(key) = key.and_then(|k| u64::from_str_radix(k, 16).ok()) else {
+            continue;
+        };
+        let stage = e.get("stage").and_then(Json::as_str);
+        let Some(stage) = stage.and_then(CachedStage::from_name) else {
+            continue;
+        };
+        if root.join(stage.name()).join(StageKey(key).hex()).is_dir() {
+            out.push((key, stage));
+        }
+    }
+    out
 }
 
 fn touch(lru: &mut VecDeque<u64>, key: u64) {
@@ -432,12 +561,14 @@ mod tests {
     fn hit_miss_accounting() {
         let cache = ArtifactCache::new(8, None);
         let key = load_key(42);
-        assert!(cache.lookup(key).is_none());
+        assert!(cache.lookup(key, CachedStage::Load).is_none());
         cache.insert(key, Artifact::Graph(Arc::new(tiny_conv())), "t");
-        assert!(cache.lookup(key).is_some());
-        assert!(cache.lookup(load_key(43)).is_none());
+        assert!(cache.lookup(key, CachedStage::Load).is_some());
+        assert!(cache.lookup(load_key(43), CachedStage::Load).is_none());
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.inserts, s.entries), (1, 2, 1, 1));
+        // no store attached: the disk counters stay zero
+        assert_eq!((s.disk_hits, s.disk_misses, s.verify_fails), (0, 0, 0));
     }
 
     #[test]
@@ -451,17 +582,17 @@ mod tests {
         assert_eq!(s.evictions, 1);
         assert_eq!(s.entries, 2);
         // key 0 was least recently used => evicted
-        assert!(cache.lookup(load_key(0)).is_none());
-        assert!(cache.lookup(load_key(2)).is_some());
+        assert!(cache.lookup(load_key(0), CachedStage::Load).is_none());
+        assert!(cache.lookup(load_key(2), CachedStage::Load).is_some());
     }
 
     #[test]
     fn disabled_cache_stores_and_counts_nothing() {
         let cache = ArtifactCache::disabled();
         let key = load_key(1);
-        assert!(cache.lookup(key).is_none());
+        assert!(cache.lookup(key, CachedStage::Load).is_none());
         cache.insert(key, Artifact::Graph(Arc::new(tiny_conv())), "t");
-        assert!(cache.lookup(key).is_none());
+        assert!(cache.lookup(key, CachedStage::Load).is_none());
         assert_eq!(cache.stats(), CacheStats::default());
     }
 
@@ -476,6 +607,78 @@ mod tests {
         assert!(dir.join("load").join(key.hex()).join("graph.json").is_file());
         let idx = Json::parse_file(&dir.join("index.json")).unwrap();
         assert_eq!(idx.get("inserts").unwrap().as_i64(), Some(1));
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn preexisting_index_is_loaded_and_preserved() {
+        let dir = std::env::temp_dir().join("mlonmcu_cache_index_reload");
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = load_key(7);
+        {
+            let cache = ArtifactCache::new(8, Some(dir.clone()));
+            cache.insert(a, Artifact::Graph(Arc::new(tiny_conv())), "first");
+            cache.write_index().unwrap();
+        }
+        // a fresh cache on the same directory must read the index back
+        // (the old behaviour silently started empty and truncated it)
+        let cache = ArtifactCache::new(8, Some(dir.clone()));
+        let b = load_key(8);
+        cache.insert(b, Artifact::Graph(Arc::new(tiny_conv())), "second");
+        cache.write_index().unwrap();
+        let idx = Json::parse_file(&dir.join("index.json")).unwrap();
+        let keys: Vec<String> = idx
+            .get("artifacts")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("key").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert!(keys.contains(&a.hex()), "prior entry kept: {keys:?}");
+        assert!(keys.contains(&b.hex()), "new entry present: {keys:?}");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn malformed_or_stale_index_entries_are_dropped() {
+        let dir = std::env::temp_dir().join("mlonmcu_cache_index_bad");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // entry with no artifact dir + garbage rows: all dropped
+        std::fs::write(
+            dir.join("index.json"),
+            r#"{"artifacts":[{"key":"00000000000000ff","stage":"load"},
+                {"key":"zzz","stage":"load"},{"key":"01","stage":"wat"}]}"#,
+        )
+        .unwrap();
+        let cache = ArtifactCache::new(8, Some(dir.clone()));
+        cache.write_index().unwrap();
+        let idx = Json::parse_file(&dir.join("index.json")).unwrap();
+        assert_eq!(idx.get("artifacts").unwrap().as_arr().unwrap().len(), 0);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn store_tier_fallthrough_counts_disk_hits() {
+        let dir = std::env::temp_dir().join("mlonmcu_cache_store_tier");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store =
+            Arc::new(EnvStore::open(&dir.join("cache"), u64::MAX).unwrap());
+        let key = load_key(11);
+        // first cache computes + persists
+        let a = ArtifactCache::new(8, None).with_store(Some(store.clone()));
+        assert!(a.lookup(key, CachedStage::Load).is_none());
+        a.insert(key, Artifact::Graph(Arc::new(tiny_conv())), "t");
+        assert_eq!(a.stats().disk_misses, 1);
+        // second cache (fresh memory tier) is served by the store
+        let b = ArtifactCache::new(8, None).with_store(Some(store));
+        assert!(b.lookup(key, CachedStage::Load).is_some());
+        let s = b.stats();
+        assert_eq!((s.hits, s.disk_hits, s.misses), (1, 1, 0));
+        // promoted into memory: second lookup does not touch the disk
+        assert!(b.lookup(key, CachedStage::Load).is_some());
+        assert_eq!(b.stats().disk_hits, 1);
         std::fs::remove_dir_all(dir).unwrap();
     }
 }

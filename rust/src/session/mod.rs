@@ -18,13 +18,16 @@
 
 pub mod cache;
 pub mod matrix;
+pub mod persist;
 pub mod run;
 pub mod scheduler;
+pub mod store;
 
 pub use cache::{ArtifactCache, CacheStats};
 pub use matrix::RunMatrix;
 pub use run::{RunRecord, RunSpec, RunStatus, StageTimes};
 pub use scheduler::{RunOptions, StageExecCounts};
+pub use store::{EnvStore, StoreStats};
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
@@ -69,6 +72,14 @@ pub struct SessionTiming {
     pub cache_misses: usize,
     /// Memory-tier evictions during this call.
     pub cache_evictions: usize,
+    /// Subset of `cache_hits` served by the environment store (i.e.
+    /// computed by an earlier session or CLI invocation).
+    pub disk_hits: usize,
+    /// Environment-store consultations that found nothing.
+    pub disk_misses: usize,
+    /// Environment-store entries that failed verification and were
+    /// recomputed.
+    pub verify_fails: usize,
     /// Load/Tune/Build stage executions that actually ran.
     pub stage_execs: StageExecCounts,
 }
@@ -90,7 +101,25 @@ impl Session {
         let capacity = env
             .get_i64("cache", "capacity", cache::DEFAULT_CAPACITY as i64)
             .max(1) as usize;
+        // the shared environment store makes a second CLI invocation
+        // as cheap as a second run_matrix call; failing to open it
+        // degrades to session-local caching, never to an error
+        let store = if env.cache_persist() {
+            match EnvStore::open(&env.cache_dir(), env.cache_budget_bytes()) {
+                Ok(s) => Some(Arc::new(s)),
+                Err(e) => {
+                    crate::log_warn!(
+                        "env cache at {} unavailable ({e}); continuing without it",
+                        env.cache_dir().display()
+                    );
+                    None
+                }
+            }
+        } else {
+            None
+        };
         let cache = ArtifactCache::new(capacity, Some(dir.join("cache")));
+        let cache = cache.with_store(store);
         Ok(Session {
             id,
             dir,
@@ -108,6 +137,11 @@ impl Session {
     /// Cumulative artifact-cache statistics of this session.
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// The shared environment-level artifact store, when it opened.
+    pub fn env_store(&self) -> Option<&Arc<EnvStore>> {
+        self.cache.env_store()
     }
 
     /// Lazily create the PJRT golden runtime (only when a run actually
@@ -163,6 +197,9 @@ impl Session {
             cache_hits: stats.hits,
             cache_misses: stats.misses,
             cache_evictions: stats.evictions,
+            disk_hits: stats.disk_hits,
+            disk_misses: stats.disk_misses,
+            verify_fails: stats.verify_fails,
             stage_execs: execs,
             ..Default::default()
         };
@@ -174,11 +211,14 @@ impl Session {
         }
         *self.last_timing.lock().unwrap() = timing;
         crate::log_info!(
-            "session {}: cache {} hit(s) / {} miss(es); executed {} load, \
-             {} tune, {} build stage(s) for {} run(s)",
+            "session {}: cache {} hit(s) ({} from env store) / {} miss(es), \
+             {} verify failure(s); executed {} load, {} tune, {} build \
+             stage(s) for {} run(s)",
             self.id,
             stats.hits,
+            stats.disk_hits,
             stats.misses,
+            stats.verify_fails,
             execs.loads,
             execs.tunes,
             execs.builds,
@@ -189,6 +229,21 @@ impl Session {
         let mut report = Report::default();
         for r in &records {
             report.push(r.to_row());
+        }
+        if opts.use_cache {
+            report.notes.push(format!(
+                "artifact cache: {} hit(s) ({} from env store), {} miss(es), \
+                 {} verify failure(s); executed {} load / {} tune / {} build \
+                 stage(s) for {} run(s)",
+                stats.hits,
+                stats.disk_hits,
+                stats.misses,
+                stats.verify_fails,
+                execs.loads,
+                execs.tunes,
+                execs.builds,
+                total
+            ));
         }
         std::fs::write(self.dir.join("report.csv"), report.to_csv())?;
         std::fs::write(self.dir.join("report.md"), report.to_markdown())?;

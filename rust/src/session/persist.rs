@@ -1,0 +1,738 @@
+//! Versioned on-disk serialization of cache artifacts.
+//!
+//! The environment-level artifact store (`store.rs`) persists stage
+//! outputs across CLI invocations, so the bytes must be (a) versioned
+//! — a future format change must read as a miss, never a panic — and
+//! (b) verifiable — a corrupted or truncated file must be detected
+//! before its artifact is trusted. Every entry therefore carries a
+//! fixed header:
+//!
+//! ```text
+//! "MLCA" | version u32 | stage u8 | key u64 | len u64 | fnv u64 | payload
+//! ```
+//!
+//! `key` is the producing `StageKey` (re-checked against the key the
+//! loader asked for) and `fnv` is the FNV-1a hash of the payload
+//! bytes (re-checked before decoding). Payloads:
+//!
+//! * **Graph** — the `.tmodel` wire format (`frontends::tmodel`),
+//!   reused verbatim: it already round-trips every field a backend
+//!   can observe, byte-compatibly with the python writer.
+//! * **TuneOutcome** — schedule family/layout/knobs + improvement.
+//! * **BuildResult** — a full TinyIR `Program` (buffers, consts,
+//!   kernel calls with cost descriptors) plus `BuildMetrics`.
+//!
+//! All integers little-endian; floats by IEEE bit pattern; `usize`
+//! widened to u64 on disk.
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::backends::{BuildMetrics, BuildResult};
+use crate::frontends::tmodel;
+use crate::schedules::{Family, Knobs, Layout, Schedule};
+use crate::session::cache::{Artifact, CachedStage, StageKey, TuneOutcome};
+use crate::tensor::DType;
+use crate::tinyir::{
+    BufferDecl, ConstDecl, InstrMix, KernelCall, KernelKind, LoopCost,
+    Operand, Program, Requant, WeightStream,
+};
+use crate::util::fnv1a64;
+
+const MAGIC: &[u8; 4] = b"MLCA";
+/// Bump on ANY payload layout change: old entries then decode as
+/// misses and are recomputed (never migrated in place).
+pub const FORMAT_VERSION: u32 = 1;
+
+const HEADER_LEN: usize = 4 + 4 + 1 + 8 + 8 + 8;
+
+fn stage_tag(stage: CachedStage) -> u8 {
+    match stage {
+        CachedStage::Load => 0,
+        CachedStage::Tune => 1,
+        CachedStage::Build => 2,
+    }
+}
+
+fn stage_from_tag(tag: u8) -> Result<CachedStage> {
+    Ok(match tag {
+        0 => CachedStage::Load,
+        1 => CachedStage::Tune,
+        2 => CachedStage::Build,
+        _ => bail!("unknown stage tag {tag}"),
+    })
+}
+
+/// Serialize one artifact under its content key.
+pub fn encode(key: StageKey, artifact: &Artifact) -> Vec<u8> {
+    let payload = match artifact {
+        Artifact::Graph(g) => tmodel::write(g),
+        Artifact::Tune(t) => {
+            let mut e = Enc::new();
+            put_schedule(&mut e, &t.schedule);
+            e.f64(t.improvement);
+            e.0
+        }
+        Artifact::Build(b) => {
+            let mut e = Enc::new();
+            put_metrics(&mut e, &b.metrics);
+            put_program(&mut e, &b.program);
+            e.0
+        }
+    };
+    let mut v = Vec::with_capacity(HEADER_LEN + payload.len());
+    v.extend(MAGIC);
+    v.extend(FORMAT_VERSION.to_le_bytes());
+    v.push(stage_tag(artifact.stage()));
+    v.extend(key.0.to_le_bytes());
+    v.extend((payload.len() as u64).to_le_bytes());
+    v.extend(fnv1a64(&payload).to_le_bytes());
+    v.extend(payload);
+    v
+}
+
+/// Decode an entry, verifying magic, version, key and payload hash.
+/// Any mismatch is an error — callers treat it as a cache miss.
+pub fn decode(bytes: &[u8], expect: StageKey) -> Result<Artifact> {
+    ensure!(bytes.len() >= HEADER_LEN, "entry shorter than header");
+    ensure!(&bytes[..4] == MAGIC, "bad magic: not a cache artifact");
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    ensure!(
+        version == FORMAT_VERSION,
+        "format version {version} != {FORMAT_VERSION}"
+    );
+    let stage = stage_from_tag(bytes[8])?;
+    let key = u64::from_le_bytes(bytes[9..17].try_into().unwrap());
+    ensure!(
+        key == expect.0,
+        "stored key {key:016x} != expected {:016x}",
+        expect.0
+    );
+    let len = u64::from_le_bytes(bytes[17..25].try_into().unwrap()) as usize;
+    let fnv = u64::from_le_bytes(bytes[25..33].try_into().unwrap());
+    let payload = &bytes[HEADER_LEN..];
+    ensure!(payload.len() == len, "payload length mismatch");
+    ensure!(fnv1a64(payload) == fnv, "payload hash mismatch (corrupt entry)");
+    match stage {
+        CachedStage::Load => {
+            Ok(Artifact::Graph(Arc::new(tmodel::parse(payload)?)))
+        }
+        CachedStage::Tune => {
+            let mut d = Dec { b: payload, i: 0 };
+            let schedule = get_schedule(&mut d)?;
+            let improvement = d.f64()?;
+            d.done()?;
+            Ok(Artifact::Tune(TuneOutcome { schedule, improvement }))
+        }
+        CachedStage::Build => {
+            let mut d = Dec { b: payload, i: 0 };
+            let metrics = get_metrics(&mut d)?;
+            let program = get_program(&mut d)?;
+            d.done()?;
+            Ok(Artifact::Build(Arc::new(BuildResult { program, metrics })))
+        }
+    }
+}
+
+// ------------------------------------------------------------- schedule --
+
+fn put_schedule(e: &mut Enc, s: &Schedule) {
+    e.u8(match s.family {
+        Family::DefaultX86 => 0,
+        Family::Arm => 1,
+    });
+    e.u8(match s.layout {
+        Layout::Nhwc => 0,
+        Layout::Nchw => 1,
+    });
+    e.u64(s.knobs.tile_oc as u64);
+    e.u64(s.knobs.tile_oh as u64);
+    e.u64(s.knobs.unroll as u64);
+}
+
+fn get_schedule(d: &mut Dec) -> Result<Schedule> {
+    let family = match d.u8()? {
+        0 => Family::DefaultX86,
+        1 => Family::Arm,
+        x => bail!("unknown schedule family tag {x}"),
+    };
+    let layout = match d.u8()? {
+        0 => Layout::Nhwc,
+        1 => Layout::Nchw,
+        x => bail!("unknown layout tag {x}"),
+    };
+    let knobs = Knobs {
+        tile_oc: d.usize()?,
+        tile_oh: d.usize()?,
+        unroll: d.usize()?,
+    };
+    Ok(Schedule { family, layout, knobs })
+}
+
+// -------------------------------------------------------------- metrics --
+
+fn put_metrics(e: &mut Enc, m: &BuildMetrics) {
+    e.u64(m.setup_instructions);
+    e.u64(m.rom_code);
+    e.u64(m.rom_weights);
+    e.u64(m.rom_misc);
+    e.u64(m.ram_arena);
+    e.u64(m.ram_workspace);
+    e.u64(m.ram_runtime);
+}
+
+fn get_metrics(d: &mut Dec) -> Result<BuildMetrics> {
+    Ok(BuildMetrics {
+        setup_instructions: d.u64()?,
+        rom_code: d.u64()?,
+        rom_weights: d.u64()?,
+        rom_misc: d.u64()?,
+        ram_arena: d.u64()?,
+        ram_workspace: d.u64()?,
+        ram_runtime: d.u64()?,
+    })
+}
+
+// -------------------------------------------------------------- program --
+
+fn put_program(e: &mut Enc, p: &Program) {
+    e.str(&p.name);
+    e.u64(p.input as u64);
+    e.u64(p.output as u64);
+    e.u64(p.arena_size as u64);
+    e.u64(p.workspace_size as u64);
+    e.u32(p.buffers.len() as u32);
+    for b in &p.buffers {
+        e.str(&b.name);
+        e.u64(b.size as u64);
+        e.u8(b.dtype.to_u8());
+        match b.offset {
+            Some(o) => {
+                e.u8(1);
+                e.u64(o as u64);
+            }
+            None => {
+                e.u8(0);
+                e.u64(0);
+            }
+        }
+        e.u64(b.first_use as u64);
+        e.u64(b.last_use as u64);
+    }
+    e.u32(p.consts.len() as u32);
+    for c in &p.consts {
+        e.str(&c.name);
+        e.u8(c.dtype.to_u8());
+        e.bytes(&c.data);
+    }
+    e.u32(p.calls.len() as u32);
+    for call in &p.calls {
+        put_kind(e, &call.kind);
+        e.u32(call.inputs.len() as u32);
+        for op in &call.inputs {
+            match op {
+                Operand::Buf(id) => {
+                    e.u8(0);
+                    e.u64(*id as u64);
+                }
+                Operand::Const(id) => {
+                    e.u8(1);
+                    e.u64(*id as u64);
+                }
+            }
+        }
+        e.u32(call.consts.len() as u32);
+        for &c in &call.consts {
+            e.u64(c as u64);
+        }
+        e.u64(call.output as u64);
+        put_cost(e, &call.cost);
+        e.str(&call.origin);
+    }
+}
+
+fn get_program(d: &mut Dec) -> Result<Program> {
+    let name = d.str()?;
+    let input = d.usize()?;
+    let output = d.usize()?;
+    let arena_size = d.usize()?;
+    let workspace_size = d.usize()?;
+    let n_buffers = d.count()?;
+    let mut buffers = Vec::with_capacity(n_buffers);
+    for _ in 0..n_buffers {
+        let name = d.str()?;
+        let size = d.usize()?;
+        let dtype = DType::from_u8(d.u8()?)?;
+        let has_offset = d.u8()?;
+        let off = d.usize()?;
+        let offset = (has_offset == 1).then_some(off);
+        buffers.push(BufferDecl {
+            name,
+            size,
+            dtype,
+            offset,
+            first_use: d.usize()?,
+            last_use: d.usize()?,
+        });
+    }
+    let n_consts = d.count()?;
+    let mut consts = Vec::with_capacity(n_consts);
+    for _ in 0..n_consts {
+        consts.push(ConstDecl {
+            name: d.str()?,
+            dtype: DType::from_u8(d.u8()?)?,
+            data: d.bytes()?,
+        });
+    }
+    let n_calls = d.count()?;
+    let mut calls = Vec::with_capacity(n_calls);
+    for _ in 0..n_calls {
+        let kind = get_kind(d)?;
+        let n_in = d.count()?;
+        let mut inputs = Vec::with_capacity(n_in);
+        for _ in 0..n_in {
+            let tag = d.u8()?;
+            let id = d.usize()?;
+            inputs.push(match tag {
+                0 => Operand::Buf(id),
+                1 => Operand::Const(id),
+                x => bail!("unknown operand tag {x}"),
+            });
+        }
+        let n_c = d.count()?;
+        let mut call_consts = Vec::with_capacity(n_c);
+        for _ in 0..n_c {
+            call_consts.push(d.usize()?);
+        }
+        let out = d.usize()?;
+        let cost = get_cost(d)?;
+        let origin = d.str()?;
+        calls.push(KernelCall {
+            kind,
+            inputs,
+            consts: call_consts,
+            output: out,
+            cost,
+            origin,
+        });
+    }
+    Ok(Program {
+        name,
+        buffers,
+        consts,
+        calls,
+        input,
+        output,
+        arena_size,
+        workspace_size,
+    })
+}
+
+fn put_cost(e: &mut Enc, c: &LoopCost) {
+    e.u64(c.macs);
+    e.u64(c.out_elems);
+    put_mix(e, &c.per_mac);
+    put_mix(e, &c.per_out);
+    e.f64(c.fixed);
+    e.u64(c.weights.bytes_streamed);
+    e.u64(c.weights.reuse_window);
+    e.u8(c.weights.contiguous as u8);
+    e.u64(c.code_bytes);
+    e.u64(c.workspace as u64);
+}
+
+fn get_cost(d: &mut Dec) -> Result<LoopCost> {
+    Ok(LoopCost {
+        macs: d.u64()?,
+        out_elems: d.u64()?,
+        per_mac: get_mix(d)?,
+        per_out: get_mix(d)?,
+        fixed: d.f64()?,
+        weights: WeightStream {
+            bytes_streamed: d.u64()?,
+            reuse_window: d.u64()?,
+            contiguous: d.u8()? == 1,
+        },
+        code_bytes: d.u64()?,
+        workspace: d.usize()?,
+    })
+}
+
+fn put_mix(e: &mut Enc, m: &InstrMix) {
+    e.f64(m.alu);
+    e.f64(m.mul);
+    e.f64(m.load);
+    e.f64(m.store);
+    e.f64(m.branch);
+}
+
+fn get_mix(d: &mut Dec) -> Result<InstrMix> {
+    Ok(InstrMix {
+        alu: d.f64()?,
+        mul: d.f64()?,
+        load: d.f64()?,
+        store: d.f64()?,
+        branch: d.f64()?,
+    })
+}
+
+fn put_requant(e: &mut Enc, r: &Requant) {
+    e.f64(r.multiplier);
+    e.i64(r.zp_in as i64);
+    e.i64(r.zp_out as i64);
+    e.i64(r.act);
+}
+
+fn get_requant(d: &mut Dec) -> Result<Requant> {
+    Ok(Requant {
+        multiplier: d.f64()?,
+        zp_in: d.i64()? as i32,
+        zp_out: d.i64()? as i32,
+        act: d.i64()?,
+    })
+}
+
+fn put_kind(e: &mut Enc, k: &KernelKind) {
+    match k {
+        KernelKind::Conv2D {
+            ih, iw, ic, oh, ow, oc, kh, kw, stride, padding,
+            channels_first, requant,
+        } => {
+            e.u8(0);
+            for &x in [ih, iw, ic, oh, ow, oc, kh, kw, &stride.0, &stride.1] {
+                e.u64(x as u64);
+            }
+            e.u8(*padding);
+            e.u8(*channels_first as u8);
+            put_requant(e, requant);
+        }
+        KernelKind::DwConv2D {
+            ih, iw, c, oh, ow, kh, kw, stride, padding, requant,
+        } => {
+            e.u8(1);
+            for &x in [ih, iw, c, oh, ow, kh, kw, &stride.0, &stride.1] {
+                e.u64(x as u64);
+            }
+            e.u8(*padding);
+            put_requant(e, requant);
+        }
+        KernelKind::Dense { batch, in_n, out_n, requant } => {
+            e.u8(2);
+            e.u64(*batch as u64);
+            e.u64(*in_n as u64);
+            e.u64(*out_n as u64);
+            put_requant(e, requant);
+        }
+        KernelKind::AvgPool2D { ih, iw, c, oh, ow, fh, fw, stride } => {
+            e.u8(3);
+            for &x in [ih, iw, c, oh, ow, fh, fw, &stride.0, &stride.1] {
+                e.u64(x as u64);
+            }
+        }
+        KernelKind::MaxPool2D { ih, iw, c, oh, ow, fh, fw, stride } => {
+            e.u8(4);
+            for &x in [ih, iw, c, oh, ow, fh, fw, &stride.0, &stride.1] {
+                e.u64(x as u64);
+            }
+        }
+        KernelKind::Add { elems, s_a, zp_a, s_b, zp_b, s_o, zp_o, act } => {
+            e.u8(5);
+            e.u64(*elems as u64);
+            e.f64(*s_a);
+            e.i64(*zp_a as i64);
+            e.f64(*s_b);
+            e.i64(*zp_b as i64);
+            e.f64(*s_o);
+            e.i64(*zp_o as i64);
+            e.i64(*act);
+        }
+        KernelKind::Copy { elems } => {
+            e.u8(6);
+            e.u64(*elems as u64);
+        }
+        KernelKind::Softmax { elems, s_in, zp_in } => {
+            e.u8(7);
+            e.u64(*elems as u64);
+            e.f64(*s_in);
+            e.i64(*zp_in as i64);
+        }
+        KernelKind::Transform { elems, widen } => {
+            e.u8(8);
+            e.u64(*elems as u64);
+            e.u8(*widen as u8);
+        }
+    }
+}
+
+fn get_kind(d: &mut Dec) -> Result<KernelKind> {
+    Ok(match d.u8()? {
+        0 => KernelKind::Conv2D {
+            ih: d.usize()?,
+            iw: d.usize()?,
+            ic: d.usize()?,
+            oh: d.usize()?,
+            ow: d.usize()?,
+            oc: d.usize()?,
+            kh: d.usize()?,
+            kw: d.usize()?,
+            stride: (d.usize()?, d.usize()?),
+            padding: d.u8()?,
+            channels_first: d.u8()? == 1,
+            requant: get_requant(d)?,
+        },
+        1 => KernelKind::DwConv2D {
+            ih: d.usize()?,
+            iw: d.usize()?,
+            c: d.usize()?,
+            oh: d.usize()?,
+            ow: d.usize()?,
+            kh: d.usize()?,
+            kw: d.usize()?,
+            stride: (d.usize()?, d.usize()?),
+            padding: d.u8()?,
+            requant: get_requant(d)?,
+        },
+        2 => KernelKind::Dense {
+            batch: d.usize()?,
+            in_n: d.usize()?,
+            out_n: d.usize()?,
+            requant: get_requant(d)?,
+        },
+        3 => KernelKind::AvgPool2D {
+            ih: d.usize()?,
+            iw: d.usize()?,
+            c: d.usize()?,
+            oh: d.usize()?,
+            ow: d.usize()?,
+            fh: d.usize()?,
+            fw: d.usize()?,
+            stride: (d.usize()?, d.usize()?),
+        },
+        4 => KernelKind::MaxPool2D {
+            ih: d.usize()?,
+            iw: d.usize()?,
+            c: d.usize()?,
+            oh: d.usize()?,
+            ow: d.usize()?,
+            fh: d.usize()?,
+            fw: d.usize()?,
+            stride: (d.usize()?, d.usize()?),
+        },
+        5 => KernelKind::Add {
+            elems: d.usize()?,
+            s_a: d.f64()?,
+            zp_a: d.i64()? as i32,
+            s_b: d.f64()?,
+            zp_b: d.i64()? as i32,
+            s_o: d.f64()?,
+            zp_o: d.i64()? as i32,
+            act: d.i64()?,
+        },
+        6 => KernelKind::Copy { elems: d.usize()? },
+        7 => KernelKind::Softmax {
+            elems: d.usize()?,
+            s_in: d.f64()?,
+            zp_in: d.i64()? as i32,
+        },
+        8 => KernelKind::Transform {
+            elems: d.usize()?,
+            widen: d.u8()? == 1,
+        },
+        x => bail!("unknown kernel tag {x}"),
+    })
+}
+
+// ------------------------------------------------------- byte plumbing --
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn new() -> Enc {
+        Enc(Vec::new())
+    }
+    fn u8(&mut self, x: u8) {
+        self.0.push(x);
+    }
+    fn u32(&mut self, x: u32) {
+        self.0.extend(x.to_le_bytes());
+    }
+    fn u64(&mut self, x: u64) {
+        self.0.extend(x.to_le_bytes());
+    }
+    fn i64(&mut self, x: i64) {
+        self.0.extend(x.to_le_bytes());
+    }
+    fn f64(&mut self, x: f64) {
+        self.0.extend(x.to_bits().to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend(s.as_bytes());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.0.extend(b);
+    }
+}
+
+struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.i + n <= self.b.len(), "truncated at byte {}", self.i);
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+    /// A u32 element count, sanity-bounded so a corrupt count cannot
+    /// drive a giant allocation before the read fails.
+    fn count(&mut self) -> Result<usize> {
+        let n = self.u32()? as usize;
+        ensure!(n <= 1 << 20, "implausible element count {n}");
+        Ok(n)
+    }
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        ensure!(n <= 1 << 20, "implausible string length {n}");
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        ensure!(n <= 1 << 32, "implausible byte length {n}");
+        Ok(self.take(n)?.to_vec())
+    }
+    fn done(&self) -> Result<()> {
+        ensure!(self.i == self.b.len(), "trailing bytes in payload");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::{self, BackendConfig};
+    use crate::graph::model::testutil::tiny_conv;
+    use crate::session::cache::load_key;
+
+    fn build_artifact() -> (StageKey, Artifact) {
+        let g = tiny_conv();
+        let backend = backends::by_name("tvmaot").unwrap();
+        let b = backend.build(&g, &BackendConfig::default()).unwrap();
+        (StageKey(0xB0), Artifact::Build(Arc::new(b)))
+    }
+
+    #[test]
+    fn graph_roundtrip_preserves_content_hash() {
+        let g = Arc::new(tiny_conv());
+        let key = load_key(7);
+        let bytes = encode(key, &Artifact::Graph(g.clone()));
+        match decode(&bytes, key).unwrap() {
+            Artifact::Graph(back) => {
+                assert_eq!(back.content_hash(), g.content_hash());
+                back.validate().unwrap();
+            }
+            _ => panic!("wrong artifact kind"),
+        }
+    }
+
+    #[test]
+    fn tune_roundtrip() {
+        let key = StageKey(0x71);
+        let schedule = Schedule::new(Family::Arm, Layout::Nchw)
+            .with_knobs(Knobs { tile_oc: 16, tile_oh: 4, unroll: 8 });
+        let t = TuneOutcome { schedule, improvement: 1.37 };
+        let bytes = encode(key, &Artifact::Tune(t));
+        match decode(&bytes, key).unwrap() {
+            Artifact::Tune(back) => {
+                assert_eq!(back.schedule, schedule);
+                assert_eq!(back.improvement, 1.37);
+            }
+            _ => panic!("wrong artifact kind"),
+        }
+    }
+
+    #[test]
+    fn build_roundtrip_preserves_program_and_metrics() {
+        let (key, artifact) = build_artifact();
+        let Artifact::Build(orig) = &artifact else { unreachable!() };
+        let bytes = encode(key, &artifact);
+        match decode(&bytes, key).unwrap() {
+            Artifact::Build(back) => {
+                // the listing renders every call, buffer and const —
+                // byte-equal listings mean a faithful roundtrip
+                assert_eq!(
+                    crate::tinyir::listing::render(&back.program),
+                    crate::tinyir::listing::render(&orig.program)
+                );
+                assert_eq!(
+                    back.program.ref_invoke_instructions(),
+                    orig.program.ref_invoke_instructions()
+                );
+                assert_eq!(back.program.arena_size, orig.program.arena_size);
+                assert_eq!(back.metrics.rom_total(), orig.metrics.rom_total());
+                assert_eq!(back.metrics.ram_total(), orig.metrics.ram_total());
+                assert_eq!(
+                    back.metrics.setup_instructions,
+                    orig.metrics.setup_instructions
+                );
+                back.program.check_plan().unwrap();
+            }
+            _ => panic!("wrong artifact kind"),
+        }
+    }
+
+    #[test]
+    fn any_flipped_payload_byte_is_detected() {
+        let (key, artifact) = build_artifact();
+        let bytes = encode(key, &artifact);
+        // flip a byte in the payload: the fnv check must catch it
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x01;
+        assert!(decode(&bad, key).is_err());
+        // and a mid-payload flip too
+        let mut bad = bytes.clone();
+        let mid = HEADER_LEN + (bytes.len() - HEADER_LEN) / 2;
+        bad[mid] ^= 0x80;
+        assert!(decode(&bad, key).is_err());
+    }
+
+    #[test]
+    fn wrong_key_version_magic_truncation_rejected() {
+        let g = Arc::new(tiny_conv());
+        let key = load_key(1);
+        let bytes = encode(key, &Artifact::Graph(g));
+        assert!(decode(&bytes, load_key(2)).is_err(), "wrong key");
+        let mut v = bytes.clone();
+        v[0] = b'X';
+        assert!(decode(&v, key).is_err(), "bad magic");
+        let mut v = bytes.clone();
+        v[4] = 0xFF;
+        assert!(decode(&v, key).is_err(), "future version");
+        for cut in [0, 10, HEADER_LEN, bytes.len() - 1] {
+            assert!(decode(&bytes[..cut], key).is_err(), "truncated at {cut}");
+        }
+    }
+}

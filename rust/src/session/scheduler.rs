@@ -18,7 +18,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::Result;
 
 use crate::session::cache::{
-    self, Artifact, ArtifactCache, StageKey, TuneParams,
+    self, Artifact, ArtifactCache, CachedStage, StageKey, TuneParams,
 };
 use crate::session::run::{self, RunRecord, RunSpec};
 use crate::session::Session;
@@ -64,6 +64,15 @@ impl Kind {
             Kind::Tune => "tune",
             Kind::Build => "build",
             Kind::Tail => "tail",
+        }
+    }
+
+    fn cached_stage(self) -> CachedStage {
+        match self {
+            Kind::Load => CachedStage::Load,
+            Kind::Tune => CachedStage::Tune,
+            Kind::Build => CachedStage::Build,
+            Kind::Tail => unreachable!("tail stages are never cached"),
         }
     }
 }
@@ -368,9 +377,10 @@ fn run_task(
         return Output::Failed(stage, e);
     }
 
-    // cache tier: shared consumers beyond the first each count a hit
+    // cache tiers (memory, then env store): shared consumers beyond
+    // the first each count a hit
     if let Some(key) = task.key {
-        if let Some(artifact) = cache.lookup(key) {
+        if let Some(artifact) = cache.lookup(key, task.kind.cached_stage()) {
             cache.note_shared_hits(task.consumers.len() - 1);
             return Output::Done(artifact, 0.0, false);
         }

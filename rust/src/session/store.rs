@@ -1,0 +1,579 @@
+//! Environment-level artifact store: the persistent disk tier shared
+//! by every session (and every CLI invocation) of one environment.
+//!
+//! Layout under `$ENV/cache/` (configurable via `paths.cache` /
+//! `--cache-dir`):
+//!
+//! ```text
+//! cache/
+//!   index.json          keys, stages, sizes, LRU sequence numbers
+//!   .lock               transient advisory lock (held during writes)
+//!   load/<key>.bin      serialized artifacts (persist.rs format)
+//!   tune/<key>.bin
+//!   build/<key>.bin
+//! ```
+//!
+//! Properties:
+//! * **Verified loads** — every entry is decoded through
+//!   `persist::decode`, which re-checks the stored key and the payload
+//!   hash; corrupt or stale-format entries are deleted and reported as
+//!   misses, never errors.
+//! * **Budgeted** — `cache.budget_mb` (or `--cache-budget`) bounds the
+//!   total entry bytes; inserts evict least-recently-used entries
+//!   until the store fits.
+//! * **Concurrent-safe** — index read-modify-write cycles run under a
+//!   lock file (atomic `create_new`), and both entries and the index
+//!   are written tmp-then-rename, so two CLI processes sharing one
+//!   environment cannot corrupt each other. Entry files are
+//!   content-addressed: racing writers of the same key write identical
+//!   bytes.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::data::Json;
+use crate::session::cache::{Artifact, CachedStage, StageKey};
+use crate::session::persist;
+
+/// Default size budget when neither config nor CLI specify one.
+pub const DEFAULT_BUDGET_MB: u64 = 512;
+
+const INDEX_VERSION: i64 = 1;
+const ALL_STAGES: [CachedStage; 3] =
+    [CachedStage::Load, CachedStage::Tune, CachedStage::Build];
+
+/// Outcome of a store lookup. `Corrupt` means an entry existed but
+/// failed key/hash verification and was deleted — callers recompute.
+pub enum StoreLookup {
+    Hit(Artifact),
+    Miss,
+    Corrupt,
+}
+
+/// Store-level counters and levels (`cache stats`, tests).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    pub entries: usize,
+    pub total_bytes: u64,
+    /// Entries evicted by the size budget (this process).
+    pub evictions: usize,
+    pub loads: usize,
+    pub tunes: usize,
+    pub builds: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    stage: CachedStage,
+    bytes: u64,
+    /// LRU clock: higher = more recently used.
+    seq: u64,
+}
+
+struct Index {
+    seq: u64,
+    entries: HashMap<u64, Entry>,
+    evictions: usize,
+}
+
+/// The shared environment-level artifact store.
+pub struct EnvStore {
+    root: PathBuf,
+    budget_bytes: u64,
+    inner: Mutex<Index>,
+}
+
+impl EnvStore {
+    /// Open (creating if needed) the store at `root`. The persisted
+    /// index is loaded and validated: entries whose files are missing
+    /// or mis-sized are dropped, and files on disk that the index lost
+    /// (e.g. a crashed writer) are adopted as oldest.
+    pub fn open(root: &Path, budget_bytes: u64) -> Result<EnvStore> {
+        fs::create_dir_all(root)
+            .with_context(|| format!("creating cache dir {}", root.display()))?;
+        let _lock = FileLock::acquire(root)?;
+        let index = read_index(root, true);
+        Ok(EnvStore {
+            root: root.to_path_buf(),
+            budget_bytes: budget_bytes.max(1),
+            inner: Mutex::new(index),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget_bytes
+    }
+
+    fn entry_path(&self, stage: CachedStage, key: StageKey) -> PathBuf {
+        entry_path(&self.root, stage, key)
+    }
+
+    /// Look up `key`, expecting a `stage` artifact. Decoding verifies
+    /// the stored key and payload hash; any failure deletes the entry
+    /// and returns `Corrupt` so the caller recomputes.
+    pub fn load(&self, key: StageKey, stage: CachedStage) -> StoreLookup {
+        let path = self.entry_path(stage, key);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => return StoreLookup::Miss,
+        };
+        match persist::decode(&bytes, key) {
+            Ok(artifact) => {
+                let mut ix = self.inner.lock().unwrap();
+                ix.seq += 1;
+                let seq = ix.seq;
+                ix.entries
+                    .entry(key.0)
+                    .or_insert(Entry { stage, bytes: bytes.len() as u64, seq })
+                    .seq = seq;
+                StoreLookup::Hit(artifact)
+            }
+            Err(e) => {
+                crate::log_warn!(
+                    "env cache: entry {} failed verification ({e}); removing",
+                    key.hex()
+                );
+                // drop the file and the memory entry only: the stale
+                // index row self-heals (open-time validation drops
+                // rows whose files are gone, and a trusted row reads
+                // as a plain miss) without taking the file lock here,
+                // which would invert the save() lock order
+                let _ = fs::remove_file(&path);
+                self.inner.lock().unwrap().entries.remove(&key.0);
+                StoreLookup::Corrupt
+            }
+        }
+    }
+
+    /// Persist an artifact. Best-effort: errors are returned for
+    /// logging but the memory tier stays authoritative.
+    pub fn save(&self, key: StageKey, artifact: &Artifact) -> Result<()> {
+        let stage = artifact.stage();
+        let bytes = persist::encode(key, artifact);
+        let path = self.entry_path(stage, key);
+        fs::create_dir_all(path.parent().unwrap())?;
+        let _lock = FileLock::acquire(&self.root)?;
+        write_atomic(&path, &bytes)?;
+        let mut ix = self.inner.lock().unwrap();
+        // merge entries another process added since we last looked
+        merge_disk_index(&self.root, &mut ix);
+        ix.seq += 1;
+        let seq = ix.seq;
+        let entry = Entry { stage, bytes: bytes.len() as u64, seq };
+        ix.entries.insert(key.0, entry);
+        self.evict_until_within_budget(&mut ix, Some(key.0));
+        self.write_index_locked(&mut ix)
+    }
+
+    /// Evict least-recently-used entries until the budget fits,
+    /// never touching `keep` (a just-inserted artifact larger than
+    /// the whole budget would otherwise thrash forever). Returns
+    /// (entries evicted, bytes freed).
+    fn evict_until_within_budget(
+        &self,
+        ix: &mut Index,
+        keep: Option<u64>,
+    ) -> (usize, u64) {
+        let mut evicted = 0usize;
+        let mut freed = 0u64;
+        loop {
+            let total: u64 = ix.entries.values().map(|e| e.bytes).sum();
+            if total <= self.budget_bytes {
+                break;
+            }
+            let victim = ix
+                .entries
+                .iter()
+                .filter(|(&k, _)| Some(k) != keep)
+                .min_by_key(|(_, e)| e.seq)
+                .map(|(&k, e)| (k, *e));
+            let Some((k, e)) = victim else { break };
+            let _ = fs::remove_file(self.entry_path(e.stage, StageKey(k)));
+            ix.entries.remove(&k);
+            ix.evictions += 1;
+            evicted += 1;
+            freed += e.bytes;
+        }
+        (evicted, freed)
+    }
+
+    /// Run the size budget now (CLI `cache gc`). Returns (entries
+    /// evicted, bytes freed).
+    pub fn gc(&self) -> Result<(usize, u64)> {
+        let _lock = FileLock::acquire(&self.root)?;
+        let mut ix = self.inner.lock().unwrap();
+        merge_disk_index(&self.root, &mut ix);
+        // no key to protect: GC may empty the store entirely
+        let (evicted, freed) = self.evict_until_within_budget(&mut ix, None);
+        self.write_index_locked(&mut ix)?;
+        Ok((evicted, freed))
+    }
+
+    /// Delete every entry and the index (CLI `cache clear`).
+    pub fn clear(&self) -> Result<()> {
+        let _lock = FileLock::acquire(&self.root)?;
+        let mut ix = self.inner.lock().unwrap();
+        for stage in ALL_STAGES {
+            let _ = fs::remove_dir_all(self.root.join(stage.name()));
+        }
+        let _ = fs::remove_file(self.root.join("index.json"));
+        ix.entries.clear();
+        ix.seq = 0;
+        Ok(())
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let ix = self.inner.lock().unwrap();
+        let mut s = StoreStats {
+            entries: ix.entries.len(),
+            total_bytes: ix.entries.values().map(|e| e.bytes).sum(),
+            evictions: ix.evictions,
+            ..Default::default()
+        };
+        for e in ix.entries.values() {
+            match e.stage {
+                CachedStage::Load => s.loads += 1,
+                CachedStage::Tune => s.tunes += 1,
+                CachedStage::Build => s.builds += 1,
+            }
+        }
+        s
+    }
+
+    fn write_index_locked(&self, ix: &mut Index) -> Result<()> {
+        let mut entries: Vec<(&u64, &Entry)> = ix.entries.iter().collect();
+        entries.sort_by_key(|(_, e)| e.seq);
+        let arr = entries
+            .into_iter()
+            .map(|(&k, e)| {
+                Json::obj(vec![
+                    ("key", Json::Str(StageKey(k).hex())),
+                    ("stage", Json::Str(e.stage.name().into())),
+                    ("bytes", Json::Num(e.bytes as f64)),
+                    ("seq", Json::Num(e.seq as f64)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("version", Json::Num(INDEX_VERSION as f64)),
+            ("seq", Json::Num(ix.seq as f64)),
+            ("entries", Json::Arr(arr)),
+        ]);
+        write_atomic(&self.root.join("index.json"), doc.to_string().as_bytes())
+    }
+}
+
+fn entry_path(root: &Path, stage: CachedStage, key: StageKey) -> PathBuf {
+    root.join(stage.name()).join(format!("{}.bin", key.hex()))
+}
+
+/// Write via tmp + rename so readers never observe partial files.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    fs::write(&tmp, bytes)
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    fs::rename(&tmp, path)
+        .with_context(|| format!("renaming into {}", path.display()))
+}
+
+/// Load the persisted index. With `validate` (store open), every
+/// entry's file is checked to exist with the recorded size — invalid
+/// rows are dropped — and entry files the index does not know about
+/// (a crashed writer) are adopted with seq 0 ⇒ first eviction
+/// candidates. Without it (per-save merges), index rows are trusted:
+/// a row whose file has vanished self-heals as a plain load miss.
+fn read_index(root: &Path, validate: bool) -> Index {
+    let mut ix = Index { seq: 0, entries: HashMap::new(), evictions: 0 };
+    if let Ok(doc) = Json::parse_file(&root.join("index.json")) {
+        if doc.get("version").and_then(Json::as_i64) == Some(INDEX_VERSION) {
+            let seq = doc.get("seq").and_then(Json::as_i64).unwrap_or(0);
+            ix.seq = seq.max(0) as u64;
+            let entries = doc.get("entries").and_then(Json::as_arr);
+            for e in entries.unwrap_or(&[]) {
+                let Some((key, entry)) = parse_entry(e) else {
+                    continue;
+                };
+                if validate && !entry_file_matches(root, key, entry) {
+                    continue;
+                }
+                ix.entries.insert(key, entry);
+            }
+        }
+    }
+    if !validate {
+        return ix;
+    }
+    // adopt orphans a crashed writer left behind
+    for stage in ALL_STAGES {
+        let Ok(dir) = fs::read_dir(root.join(stage.name())) else { continue };
+        for f in dir.flatten() {
+            let name = f.file_name();
+            let Some(hex) = name.to_str().and_then(|n| n.strip_suffix(".bin"))
+            else {
+                continue;
+            };
+            let Ok(key) = u64::from_str_radix(hex, 16) else { continue };
+            let Ok(md) = f.metadata() else { continue };
+            ix.entries
+                .entry(key)
+                .or_insert(Entry { stage, bytes: md.len(), seq: 0 });
+        }
+    }
+    ix
+}
+
+/// One index entry → (key, Entry): stage known, key hex, counters
+/// non-negative. No filesystem access.
+fn parse_entry(e: &Json) -> Option<(u64, Entry)> {
+    let key = u64::from_str_radix(e.get("key")?.as_str()?, 16).ok()?;
+    let stage = CachedStage::from_name(e.get("stage")?.as_str()?)?;
+    let bytes = e.get("bytes")?.as_i64()?.max(0) as u64;
+    let seq = e.get("seq")?.as_i64()?.max(0) as u64;
+    Some((key, Entry { stage, bytes, seq }))
+}
+
+/// Does the entry's artifact file exist with the recorded size?
+fn entry_file_matches(root: &Path, key: u64, entry: Entry) -> bool {
+    let md = fs::metadata(entry_path(root, entry.stage, StageKey(key)));
+    md.is_ok_and(|m| m.len() == entry.bytes)
+}
+
+/// Re-read the disk index (trusting its rows — no per-entry stat; the
+/// caller holds the file lock, so the rows are the latest writer's)
+/// and merge entries we don't know about; for shared keys keep the
+/// higher seq.
+fn merge_disk_index(root: &Path, ix: &mut Index) {
+    let disk = read_index(root, false);
+    ix.seq = ix.seq.max(disk.seq);
+    for (k, e) in disk.entries {
+        match ix.entries.get_mut(&k) {
+            Some(ours) => ours.seq = ours.seq.max(e.seq),
+            None => {
+                ix.entries.insert(k, e);
+            }
+        }
+    }
+}
+
+/// Advisory cross-process lock via atomic lock-file creation. Held
+/// briefly, for the duration of an index read-modify-write; stale
+/// locks (a killed process) are broken after 30 s. Breaking renames
+/// the lock to a breaker-unique name first, so exactly one of several
+/// concurrent breakers wins (the losers' renames fail) and nobody can
+/// unlink a lock another process just created. The lock file records
+/// the owning token and release only unlinks a still-owned lock.
+struct FileLock {
+    path: PathBuf,
+    token: String,
+}
+
+impl FileLock {
+    fn acquire(root: &Path) -> Result<FileLock> {
+        use std::io::Write as _;
+        let path = root.join(".lock");
+        // pid alone is not unique enough: two sessions in one process
+        // may interleave acquire/release
+        let token = format!("{}-{:x}", std::process::id(), next_lock_nonce());
+        for _ in 0..500 {
+            let mut opts = fs::OpenOptions::new();
+            opts.write(true).create_new(true);
+            match opts.open(&path) {
+                Ok(mut f) => {
+                    let _ = f.write_all(token.as_bytes());
+                    return Ok(FileLock { path, token });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = fs::metadata(&path)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|t| t.elapsed().ok())
+                        .is_some_and(|age| age > Duration::from_secs(30));
+                    if stale {
+                        // rename-to-unique: only the winning breaker
+                        // proceeds to delete; a fresh lock created in
+                        // the meantime is never touched
+                        let grave = root.join(format!(".lock.stale.{token}"));
+                        if fs::rename(&path, &grave).is_ok() {
+                            let _ = fs::remove_file(&grave);
+                        }
+                        continue;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("creating lock {}", path.display())
+                    })
+                }
+            }
+        }
+        anyhow::bail!("cache lock {} held for too long", path.display())
+    }
+}
+
+impl Drop for FileLock {
+    fn drop(&mut self) {
+        // unlink only a lock we still own: if a breaker decided we
+        // were stale and replaced it, the file is no longer ours
+        let ours = fs::read_to_string(&self.path)
+            .is_ok_and(|s| s.trim() == self.token);
+        if ours {
+            let _ = fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// Process-wide monotonic nonce for lock tokens.
+fn next_lock_nonce() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NONCE: AtomicU64 = AtomicU64::new(0);
+    NONCE.fetch_add(1, Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::model::testutil::tiny_conv;
+    use crate::session::cache::load_key;
+    use std::sync::Arc;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mlonmcu_store_{tag}"));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn graph_artifact() -> Artifact {
+        Artifact::Graph(Arc::new(tiny_conv()))
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_stats() {
+        let dir = tmp("roundtrip");
+        let store = EnvStore::open(&dir, u64::MAX).unwrap();
+        let key = load_key(1);
+        assert!(matches!(store.load(key, CachedStage::Load), StoreLookup::Miss));
+        store.save(key, &graph_artifact()).unwrap();
+        assert!(matches!(
+            store.load(key, CachedStage::Load),
+            StoreLookup::Hit(Artifact::Graph(_))
+        ));
+        let s = store.stats();
+        assert_eq!((s.entries, s.loads, s.evictions), (1, 1, 0));
+        assert!(s.total_bytes > 0);
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn reopen_restores_index() {
+        let dir = tmp("reopen");
+        {
+            let store = EnvStore::open(&dir, u64::MAX).unwrap();
+            store.save(load_key(1), &graph_artifact()).unwrap();
+            store.save(load_key(2), &graph_artifact()).unwrap();
+        }
+        let store = EnvStore::open(&dir, u64::MAX).unwrap();
+        assert_eq!(store.stats().entries, 2);
+        assert!(matches!(
+            store.load(load_key(1), CachedStage::Load),
+            StoreLookup::Hit(_)
+        ));
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_entry_is_detected_and_deleted() {
+        let dir = tmp("corrupt");
+        let store = EnvStore::open(&dir, u64::MAX).unwrap();
+        let key = load_key(9);
+        store.save(key, &graph_artifact()).unwrap();
+        let path = dir.join("load").join(format!("{}.bin", key.hex()));
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            store.load(key, CachedStage::Load),
+            StoreLookup::Corrupt
+        ));
+        assert!(!path.exists(), "corrupt entry must be removed");
+        assert!(matches!(store.load(key, CachedStage::Load), StoreLookup::Miss));
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn budget_evicts_lru_first() {
+        let dir = tmp("budget");
+        let one = persist::encode(load_key(0), &graph_artifact()).len() as u64;
+        // room for two entries, not three
+        let store = EnvStore::open(&dir, 2 * one + one / 2).unwrap();
+        store.save(load_key(0), &graph_artifact()).unwrap();
+        store.save(load_key(1), &graph_artifact()).unwrap();
+        // touch key 0 so key 1 becomes the LRU victim
+        assert!(matches!(
+            store.load(load_key(0), CachedStage::Load),
+            StoreLookup::Hit(_)
+        ));
+        store.save(load_key(2), &graph_artifact()).unwrap();
+        let s = store.stats();
+        assert_eq!((s.entries, s.evictions), (2, 1));
+        assert!(matches!(
+            store.load(load_key(1), CachedStage::Load),
+            StoreLookup::Miss
+        ));
+        assert!(matches!(
+            store.load(load_key(0), CachedStage::Load),
+            StoreLookup::Hit(_)
+        ));
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn gc_and_clear() {
+        let dir = tmp("gc");
+        let one = persist::encode(load_key(0), &graph_artifact()).len() as u64;
+        {
+            let store = EnvStore::open(&dir, u64::MAX).unwrap();
+            for k in 0..4 {
+                store.save(load_key(k), &graph_artifact()).unwrap();
+            }
+        }
+        // reopen with a budget that only fits one entry: gc trims
+        let store = EnvStore::open(&dir, one + one / 2).unwrap();
+        let (evicted, freed) = store.gc().unwrap();
+        assert_eq!(evicted, 3);
+        assert_eq!(freed, 3 * one);
+        assert_eq!(store.stats().entries, 1);
+        store.clear().unwrap();
+        assert_eq!(store.stats().entries, 0);
+        assert!(!dir.join("index.json").exists());
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn orphan_files_are_adopted_on_open() {
+        let dir = tmp("orphan");
+        {
+            let store = EnvStore::open(&dir, u64::MAX).unwrap();
+            store.save(load_key(5), &graph_artifact()).unwrap();
+        }
+        // simulate a crashed writer: entry file exists, index lost
+        fs::remove_file(dir.join("index.json")).unwrap();
+        let store = EnvStore::open(&dir, u64::MAX).unwrap();
+        assert_eq!(store.stats().entries, 1);
+        assert!(matches!(
+            store.load(load_key(5), CachedStage::Load),
+            StoreLookup::Hit(_)
+        ));
+        fs::remove_dir_all(dir).unwrap();
+    }
+}

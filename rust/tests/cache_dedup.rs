@@ -192,6 +192,157 @@ fn cached_and_uncached_reports_agree() {
     std::fs::remove_dir_all(dir).unwrap();
 }
 
+// ----------------------------------------------------------------------
+// environment-level store: persistence across sessions (and thereby
+// across CLI invocations — each invocation is one fresh Session)
+
+/// Every serialized build entry under the environment cache dir.
+fn build_entries(dir: &std::path::Path) -> Vec<PathBuf> {
+    std::fs::read_dir(dir.join("cache/build"))
+        .map(|rd| {
+            rd.flatten()
+                .map(|f| f.path())
+                .filter(|p| p.extension().is_some_and(|e| e == "bin"))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+#[test]
+fn second_session_in_same_env_gets_disk_hits() {
+    let (env, dir) = cache_env("xsession");
+    let first_report;
+    {
+        let s1 = Session::new(&env).unwrap();
+        first_report = s1.run_matrix(&matrix(), 2).unwrap();
+        let t = *s1.last_timing.lock().unwrap();
+        assert_eq!(t.stage_execs.builds, 2);
+        assert_eq!(t.disk_hits, 0, "nothing persisted yet");
+        assert_eq!(t.disk_misses, 3, "1 load + 2 builds consulted the store");
+    }
+    // the store now holds 1 graph + 2 build artifacts
+    assert!(dir.join("cache/index.json").is_file());
+    assert_eq!(build_entries(&dir).len(), 2);
+
+    // a brand-new session (fresh memory tier) is served entirely from
+    // the environment store: zero stage executions
+    let s2 = Session::new(&env).unwrap();
+    let report = s2.run_matrix(&matrix(), 2).unwrap();
+    let t = *s2.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs.builds, 0, "builds come from the env store");
+    assert_eq!(t.stage_execs.loads, 0);
+    assert_eq!(t.disk_hits, 3, "1 load + 2 builds deserialized");
+    assert_eq!(t.cache_misses, 0);
+    assert_eq!(t.verify_fails, 0);
+    for row in &report.rows {
+        assert_eq!(row["cached_stages"].render(), "load+build");
+    }
+    // deserialized artifacts must produce byte-identical results
+    for (a, b) in first_report.rows.iter().zip(&report.rows) {
+        for col in [
+            "model", "backend", "target", "status", "invoke_instr", "time_s",
+            "rom_b", "ram_b",
+        ] {
+            assert_eq!(a.get(col), b.get(col), "col {col} differs");
+        }
+    }
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn flipped_byte_in_store_is_detected_and_recomputed() {
+    let (env, dir) = cache_env("corrupt");
+    {
+        let s1 = Session::new(&env).unwrap();
+        s1.run_matrix(&matrix(), 2).unwrap();
+    }
+    // flip one payload byte in one stored build artifact
+    let victim = &build_entries(&dir)[0];
+    let mut bytes = std::fs::read(victim).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0x01;
+    std::fs::write(victim, &bytes).unwrap();
+
+    let s2 = Session::new(&env).unwrap();
+    let report = s2.run_matrix(&matrix(), 2).unwrap();
+    for row in &report.rows {
+        assert_eq!(row["status"].render(), "ok", "corruption must not fail runs");
+    }
+    let t = *s2.last_timing.lock().unwrap();
+    assert_eq!(t.verify_fails, 1, "the flipped entry fails verification");
+    assert_eq!(t.stage_execs.builds, 1, "only the corrupt build re-executes");
+    assert_eq!(t.stage_execs.loads, 0);
+    assert_eq!(t.disk_hits, 2, "the intact load + build still serve");
+    // the recomputed artifact was re-persisted: a third session hits
+    let s3 = Session::new(&env).unwrap();
+    s3.run_matrix(&matrix(), 2).unwrap();
+    let t = *s3.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs.builds, 0);
+    assert_eq!(t.verify_fails, 0);
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn no_cache_ignores_populated_env_store() {
+    let (env, dir) = cache_env("nocachestore");
+    {
+        let s1 = Session::new(&env).unwrap();
+        s1.run_matrix(&matrix(), 2).unwrap();
+    }
+    let s2 = Session::new(&env).unwrap();
+    let opts = RunOptions { parallel: 2, use_cache: false };
+    s2.run_matrix_opts(&matrix(), opts).unwrap();
+    let t = *s2.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs.builds, 10, "--no-cache bypasses the store too");
+    assert_eq!((t.disk_hits, t.cache_hits), (0, 0));
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn store_gc_under_tiny_budget_evicts_lru_order() {
+    use mlonmcu::session::cache::{load_key, Artifact, CachedStage};
+    use mlonmcu::session::{persist, EnvStore};
+    use std::sync::Arc;
+
+    let dir = std::env::temp_dir().join("mlonmcu_cachededup_gcbudget");
+    let _ = std::fs::remove_dir_all(&dir);
+    let artifact = Artifact::Graph(Arc::new(tiny_conv_graph()));
+    let one = persist::encode(load_key(0), &artifact).len() as u64;
+    // budget fits exactly two entries
+    let store = EnvStore::open(&dir, 2 * one + one / 2).unwrap();
+    store.save(load_key(0), &artifact).unwrap();
+    store.save(load_key(1), &artifact).unwrap();
+    assert_eq!(store.stats().entries, 2);
+    // touch 0 so 1 is least-recently-used, then overflow the budget
+    assert!(matches!(
+        store.load(load_key(0), CachedStage::Load),
+        mlonmcu::session::store::StoreLookup::Hit(_)
+    ));
+    store.save(load_key(2), &artifact).unwrap();
+    let s = store.stats();
+    assert_eq!(s.entries, 2);
+    assert_eq!(s.evictions, 1, "eviction counter updated");
+    assert!(
+        matches!(
+            store.load(load_key(1), CachedStage::Load),
+            mlonmcu::session::store::StoreLookup::Miss
+        ),
+        "LRU entry evicted first"
+    );
+    // shrinking the budget and running gc trims to the single MRU entry
+    drop(store);
+    let store = EnvStore::open(&dir, one + one / 2).unwrap();
+    let (evicted, freed) = store.gc().unwrap();
+    assert_eq!(evicted, 1);
+    assert_eq!(freed, one);
+    assert_eq!(store.stats().entries, 1);
+    assert!(matches!(
+        store.load(load_key(2), CachedStage::Load),
+        mlonmcu::session::store::StoreLookup::Hit(_)
+    ));
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
 #[test]
 fn model_content_change_invalidates_cache_keys() {
     let (env, dir) = cache_env("invalidate");

@@ -32,8 +32,13 @@ fn repo_env(tag: &str) -> Option<Environment> {
             })
         })
         .ok()?;
-    env.with_overrides(&[format!("paths.sessions={}", sdir.display())])
-        .ok()
+    // sessions AND the env cache go to the temp dir: a persistent
+    // store under the checkout would leak state between test runs
+    env.with_overrides(&[
+        format!("paths.sessions={}", sdir.display()),
+        format!("paths.cache={}", sdir.join("cache").display()),
+    ])
+    .ok()
 }
 
 #[test]
