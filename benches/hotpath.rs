@@ -1,24 +1,67 @@
-//! Hot-path microbenchmarks for the perf pass (§Perf): the TinyIR
-//! executor's conv/dense inner loops, the end-to-end single-run
-//! latency per model, and the cost-only (tuner measure loop) path.
-//! Records ns/MAC — the number the EXPERIMENTS.md §Perf log tracks.
+//! Hot-path microbenchmarks for the perf pass (§Perf): plan-compile
+//! time, the steady-state (compile-once) invoke, ns/MAC, and the
+//! cost-only path (the tuner measure loop — a cached-struct copy
+//! since the ExecPlan refactor). Records the numbers the
+//! benches/NOTES.md §Perf log tracks.
+//!
+//! Usage:
+//!   cargo bench --bench hotpath                      # paper models
+//!   cargo bench --bench hotpath -- --json m1 m2 ...  # quick mode:
+//!       bench the named models and emit BENCH_hotpath.json (the CI
+//!       perf-trajectory artifact). Explicitly named models must
+//!       resolve; the run fails otherwise.
 
 mod common;
 
 use common::{bench, bench_env, load_or_exit, PAPER_MODELS};
 use mlonmcu::backends::{by_name, BackendConfig};
+use mlonmcu::data::Json;
+use mlonmcu::frontends;
+use mlonmcu::graph::Graph;
+use mlonmcu::mcu::ExecPlan;
 use mlonmcu::targets;
 
+struct ModelRow {
+    name: String,
+    macs: f64,
+    full_ms: f64,
+    ns_per_mac: f64,
+    cost_only_us: f64,
+    plan_compile_ms: f64,
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json_mode = args.iter().any(|a| a == "--json");
+    let named: Vec<String> =
+        args.iter().filter(|a| !a.starts_with("--")).cloned().collect();
+    let models: Vec<String> = if named.is_empty() {
+        PAPER_MODELS.iter().map(|s| s.to_string()).collect()
+    } else {
+        named.clone()
+    };
+
     let env = bench_env();
     let etiss = targets::by_name("etiss").unwrap();
     println!("== hotpath: executor performance (host) ==");
     println!(
-        "{:<8} {:>10} {:>14} {:>12} {:>14}",
-        "model", "MACs (M)", "full run", "ns/MAC", "cost-only"
+        "{:<10} {:>10} {:>12} {:>10} {:>12} {:>12}",
+        "model", "MACs (M)", "full run", "ns/MAC", "cost-only", "plan-compile"
     );
-    for model in PAPER_MODELS {
-        let graph = load_or_exit(&env, model);
+    let mut rows: Vec<ModelRow> = Vec::new();
+    for model in &models {
+        let graph: Graph = if named.is_empty() {
+            load_or_exit(&env, model)
+        } else {
+            // explicitly requested (CI quick mode): must resolve
+            match frontends::load_model(model, &env.model_dirs()) {
+                Ok(g) => g,
+                Err(e) => {
+                    eprintln!("cannot load requested model '{model}': {e}");
+                    std::process::exit(1);
+                }
+            }
+        };
         let build = by_name("tvmaot")
             .unwrap()
             .build(&graph, &BackendConfig::default())
@@ -26,21 +69,68 @@ fn main() {
         let dep = etiss.deploy(&build, "tvm").unwrap();
         let input = vec![1i8; graph.tensor(graph.inputs[0]).numel()];
         let macs = graph.macs() as f64;
-        let iters = if macs > 5e6 { 3 } else { 10 };
+        let iters = if json_mode {
+            5
+        } else if macs > 5e6 {
+            3
+        } else {
+            10
+        };
+        let spec = etiss.spec();
+        let compile = bench(1, if json_mode { 20 } else { 30 }, || {
+            ExecPlan::compile(&build.program, spec).unwrap();
+        });
         let full = bench(1, iters, || {
             etiss.run(&build, &dep, &input, true).unwrap();
         });
-        let dry = bench(1, 50, || {
+        // the tuner's measure loop: pre-summed stats, no call walk
+        let dry = bench(1, if json_mode { 200 } else { 50 }, || {
             etiss.run(&build, &dep, &input, false).unwrap();
         });
+        let row = ModelRow {
+            name: model.clone(),
+            macs,
+            full_ms: full.min_s * 1e3,
+            ns_per_mac: full.min_s * 1e9 / macs,
+            cost_only_us: dry.min_s * 1e6,
+            plan_compile_ms: compile.min_s * 1e3,
+        };
         println!(
-            "{:<8} {:>10.2} {:>12.2}ms {:>12.2} {:>12.4}ms",
-            model,
-            macs / 1e6,
-            full.min_s * 1e3,
-            full.min_s * 1e9 / macs,
-            dry.min_s * 1e3,
+            "{:<10} {:>10.2} {:>10.2}ms {:>10.2} {:>10.3}us {:>10.4}ms",
+            row.name,
+            row.macs / 1e6,
+            row.full_ms,
+            row.ns_per_mac,
+            row.cost_only_us,
+            row.plan_compile_ms,
         );
+        rows.push(row);
     }
-    println!("\n(cost-only is the tuner measure loop — must stay <1ms)");
+    println!(
+        "\n(cost-only is the tuner measure loop — a cached ExecStats copy; \
+         full run reuses the deployment's compile-once ExecPlan)"
+    );
+
+    if json_mode {
+        let entries: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("macs", Json::Num(r.macs)),
+                    ("full_ms", Json::Num(r.full_ms)),
+                    ("ns_per_mac", Json::Num(r.ns_per_mac)),
+                    ("cost_only_us", Json::Num(r.cost_only_us)),
+                    ("plan_compile_ms", Json::Num(r.plan_compile_ms)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("hotpath".into())),
+            ("models", Json::Arr(entries)),
+        ]);
+        std::fs::write("BENCH_hotpath.json", doc.to_string())
+            .expect("write BENCH_hotpath.json");
+        println!("wrote BENCH_hotpath.json ({} model(s))", rows.len());
+    }
 }

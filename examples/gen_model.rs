@@ -1,14 +1,18 @@
 //! Generate a tiny self-contained `.tmodel` file with the rust-side
 //! writer — no python toolchain needed. Used by the CI
-//! `cache-persistence` job to seed an environment's model zoo before
-//! driving the CLI, and handy for local smoke tests:
+//! `cache-persistence` and hotpath-bench jobs to seed an
+//! environment's model zoo before driving the CLI/benches, and handy
+//! for local smoke tests:
 //!
 //! ```sh
 //! cargo run --release --example gen_model -- path/to/tinyconv.tmodel
+//! cargo run --release --example gen_model -- path/to/tinymlp.tmodel tinymlp
 //! ```
 //!
-//! The graph (input[1,4,4,2] → conv 3ch 3×3 SAME relu → out[1,4,4,3])
-//! is small enough to pass every hardware target's memory gates.
+//! Variants: `tinyconv` (default; input[1,4,4,2] → conv 3ch 3×3 SAME
+//! relu → out[1,4,4,3]) and `tinymlp` (conv → maxpool → reshape →
+//! dense → softmax — a deeper pipeline for the hotpath bench). Both
+//! are small enough to pass every hardware target's memory gates.
 
 use std::path::PathBuf;
 
@@ -75,7 +79,12 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("tinyconv.tmodel"));
-    let graph = tiny_conv_graph();
+    let variant = std::env::args().nth(2).unwrap_or_else(|| "tinyconv".into());
+    let graph = match variant.as_str() {
+        "tinyconv" => tiny_conv_graph(),
+        "tinymlp" => mlonmcu::graph::model::testutil::tiny_mlp(),
+        other => anyhow::bail!("unknown model variant '{other}'"),
+    };
     graph.validate()?;
     tmodel::write_file(&graph, &path)?;
     println!(

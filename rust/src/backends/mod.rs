@@ -30,6 +30,11 @@ use crate::tinyir::Program;
 pub struct BuildResult {
     pub program: Program,
     pub metrics: BuildMetrics,
+    /// The schedule this build was lowered under (TVM backends only).
+    /// Enables the cheap `Backend::recost` path: a knob candidate with
+    /// the same family/layout can re-cost this build instead of
+    /// re-lowering the graph.
+    pub schedule: Option<Schedule>,
 }
 
 /// Static deployment metrics (Table IV rows besides Invoke).
@@ -76,6 +81,17 @@ pub trait Backend: Send + Sync {
         false
     }
     fn build(&self, graph: &Graph, cfg: &BackendConfig) -> Result<BuildResult>;
+
+    /// Cheaply rewrite `build`'s cost descriptors in place for a knob
+    /// candidate of the same schedule family/layout. Returns `false`
+    /// when the backend cannot (non-TVM backends, or a family/layout
+    /// change that requires a real re-lowering) — callers then fall
+    /// back to a full `build`. Numerics are untouched either way: the
+    /// tuner's 600-trial measure loop becomes 1 lower + N re-costs.
+    fn recost(&self, build: &mut BuildResult, schedule: Schedule) -> bool {
+        let _ = (build, schedule);
+        false
+    }
 }
 
 /// Instantiate a backend by its Table IV name.

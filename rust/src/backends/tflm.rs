@@ -74,7 +74,7 @@ impl Backend for Tflmi {
                 + n_tensors * calib::TFLMI_RUNTIME_RAM_PER_TENSOR
                 + calib::MLIF_RAM,
         };
-        Ok(BuildResult { program, metrics })
+        Ok(BuildResult { program, metrics, schedule: None })
     }
 }
 
@@ -110,7 +110,7 @@ impl Backend for Tflmc {
             ram_workspace: program.workspace_size as u64,
             ram_runtime: calib::TFLMC_RUNTIME_RAM_FIXED + calib::MLIF_RAM,
         };
-        Ok(BuildResult { program, metrics })
+        Ok(BuildResult { program, metrics, schedule: None })
     }
 }
 

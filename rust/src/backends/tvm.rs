@@ -97,7 +97,35 @@ impl Backend for TvmAot {
             ram_workspace: workspace,
             ram_runtime: calib::TVMAOT_RUNTIME_RAM_FIXED + calib::MLIF_RAM,
         };
-        Ok(BuildResult { program, metrics })
+        Ok(BuildResult { program, metrics, schedule: Some(s) })
+    }
+
+    fn recost(&self, build: &mut BuildResult, schedule: Schedule) -> bool {
+        if !same_template(build, schedule) {
+            return false;
+        }
+        build.program.recost(schedule);
+        // knobs move only the workspace requirement: code size, arena
+        // and weights are schedule-family properties, already correct
+        build.metrics.ram_workspace = if self.usmp {
+            (build.program.workspace_size as u64) * 3 / 4
+        } else {
+            build.program.workspace_size as u64
+        };
+        build.schedule = Some(schedule);
+        true
+    }
+}
+
+/// A knob candidate can re-cost an existing build only when the
+/// lowering template (family × layout) is unchanged — anything else
+/// alters packing/legalization and needs a real build.
+fn same_template(build: &BuildResult, schedule: Schedule) -> bool {
+    match build.schedule {
+        Some(base) => {
+            base.family == schedule.family && base.layout == schedule.layout
+        }
+        None => false,
     }
 }
 
@@ -140,7 +168,17 @@ impl Backend for TvmRt {
                 + n_tensors * calib::TVMRT_RUNTIME_RAM_PER_TENSOR
                 + calib::MLIF_RAM,
         };
-        Ok(BuildResult { program, metrics })
+        Ok(BuildResult { program, metrics, schedule: Some(s) })
+    }
+
+    fn recost(&self, build: &mut BuildResult, schedule: Schedule) -> bool {
+        if !same_template(build, schedule) {
+            return false;
+        }
+        build.program.recost(schedule);
+        build.metrics.ram_workspace = build.program.workspace_size as u64;
+        build.schedule = Some(schedule);
+        true
     }
 }
 
@@ -190,6 +228,51 @@ mod tests {
             nhwc.program.ref_invoke_instructions()
                 > nchw.program.ref_invoke_instructions()
         );
+    }
+
+    #[test]
+    fn recost_matches_full_build_for_knob_candidates() {
+        let g = tiny_conv();
+        let base = Schedule::new(Family::DefaultX86, Layout::Nchw);
+        let backend = TvmAot { usmp: false };
+        let mut cfg = BackendConfig::default();
+        cfg.schedule = Some(base);
+        let built = backend.build(&g, &cfg).unwrap();
+        for knobs in base.conv_knob_space(8).into_iter().take(16) {
+            let cand = base.with_knobs(knobs);
+            let mut re = built.clone();
+            assert!(backend.recost(&mut re, cand));
+            cfg.schedule = Some(cand);
+            let full = backend.build(&g, &cfg).unwrap();
+            assert_eq!(
+                re.program.ref_invoke_instructions(),
+                full.program.ref_invoke_instructions(),
+                "{knobs:?}"
+            );
+            assert_eq!(re.program.workspace_size, full.program.workspace_size);
+            assert_eq!(re.metrics.ram_total(), full.metrics.ram_total());
+            assert_eq!(re.metrics.rom_total(), full.metrics.rom_total());
+            assert_eq!(re.schedule, Some(cand));
+        }
+    }
+
+    #[test]
+    fn recost_refuses_template_changes() {
+        let g = tiny_conv();
+        let base = Schedule::new(Family::DefaultX86, Layout::Nchw);
+        let backend = TvmAot { usmp: true };
+        let mut cfg = BackendConfig::default();
+        cfg.schedule = Some(base);
+        let built = backend.build(&g, &cfg).unwrap();
+        let mut re = built.clone();
+        assert!(!backend.recost(&mut re, Schedule::new(Family::Arm, Layout::Nchw)));
+        assert!(!backend.recost(
+            &mut re,
+            Schedule::new(Family::DefaultX86, Layout::Nhwc)
+        ));
+        // and a build without a recorded schedule can never recost
+        re.schedule = None;
+        assert!(!backend.recost(&mut re, base));
     }
 
     #[test]

@@ -361,6 +361,123 @@ pub mod testutil {
             outputs: vec![3],
         }
     }
+
+    /// input[1,8,8,2] → conv 4ch 3×3 SAME relu → maxpool 2×2/2 →
+    /// reshape → dense 10 → softmax. A deeper pipeline exercising
+    /// every non-residual kernel kind end-to-end; also the second
+    /// model the CI hotpath bench seeds (`gen_model tinymlp`).
+    pub fn tiny_mlp() -> Graph {
+        let act = |name: &str, shape: Vec<usize>, scale: f32, zp: i32| TensorInfo {
+            name: name.into(),
+            shape,
+            dtype: DType::I8,
+            scale,
+            zero_point: zp,
+            data: None,
+        };
+        let conv_w: Vec<u8> = (0..72u32).map(|x| ((x * 5 + 3) % 251) as u8).collect();
+        let conv_b: Vec<u8> = [1200i32, -800, 300, 0]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let fc_w: Vec<u8> = (0..640u32).map(|x| ((x * 7 + 11) % 253) as u8).collect();
+        let fc_b: Vec<u8> = [250i32, -125, 60, -30, 15, -8, 4, -2, 1, 0]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let mut conv_attrs = Attrs::new();
+        conv_attrs.insert("stride_h".into(), 1);
+        conv_attrs.insert("stride_w".into(), 1);
+        conv_attrs.insert("padding".into(), PAD_SAME);
+        conv_attrs.insert("fused_act".into(), ACT_RELU);
+        let mut pool_attrs = Attrs::new();
+        pool_attrs.insert("filter_h".into(), 2);
+        pool_attrs.insert("filter_w".into(), 2);
+        pool_attrs.insert("stride_h".into(), 2);
+        pool_attrs.insert("stride_w".into(), 2);
+        Graph {
+            name: "tinymlp".into(),
+            tensors: vec![
+                act("input", vec![1, 8, 8, 2], 0.5, 2),
+                TensorInfo {
+                    name: "conv.w".into(),
+                    shape: vec![4, 3, 3, 2],
+                    dtype: DType::I8,
+                    scale: 0.02,
+                    zero_point: 0,
+                    data: Some(conv_w),
+                },
+                TensorInfo {
+                    name: "conv.b".into(),
+                    shape: vec![4],
+                    dtype: DType::I32,
+                    scale: 0.01,
+                    zero_point: 0,
+                    data: Some(conv_b),
+                },
+                act("conv.out", vec![1, 8, 8, 4], 0.3, -10),
+                act("pool.out", vec![1, 4, 4, 4], 0.3, -10),
+                TensorInfo {
+                    name: "fc.w".into(),
+                    shape: vec![10, 64],
+                    dtype: DType::I8,
+                    scale: 0.015,
+                    zero_point: 0,
+                    data: Some(fc_w),
+                },
+                TensorInfo {
+                    name: "fc.b".into(),
+                    shape: vec![10],
+                    dtype: DType::I32,
+                    scale: 0.005,
+                    zero_point: 0,
+                    data: Some(fc_b),
+                },
+                act("flat.out", vec![1, 64], 0.3, -10),
+                act("fc.out", vec![1, 10], 0.2, 3),
+                act("softmax.out", vec![1, 10], 1.0 / 256.0, -128),
+            ],
+            ops: vec![
+                OpNode {
+                    opcode: OpCode::Conv2D,
+                    name: "conv0".into(),
+                    inputs: vec![0, 1, 2],
+                    outputs: vec![3],
+                    attrs: conv_attrs,
+                },
+                OpNode {
+                    opcode: OpCode::MaxPool2D,
+                    name: "pool0".into(),
+                    inputs: vec![3],
+                    outputs: vec![4],
+                    attrs: pool_attrs,
+                },
+                OpNode {
+                    opcode: OpCode::Reshape,
+                    name: "flat0".into(),
+                    inputs: vec![4],
+                    outputs: vec![7],
+                    attrs: Attrs::new(),
+                },
+                OpNode {
+                    opcode: OpCode::FullyConnected,
+                    name: "fc0".into(),
+                    inputs: vec![7, 5, 6],
+                    outputs: vec![8],
+                    attrs: Attrs::new(),
+                },
+                OpNode {
+                    opcode: OpCode::Softmax,
+                    name: "softmax0".into(),
+                    inputs: vec![8],
+                    outputs: vec![9],
+                    attrs: Attrs::new(),
+                },
+            ],
+            inputs: vec![0],
+            outputs: vec![9],
+        }
+    }
 }
 
 #[cfg(test)]
@@ -371,6 +488,14 @@ mod tests {
     #[test]
     fn tiny_conv_validates() {
         tiny_conv().validate().unwrap();
+    }
+
+    #[test]
+    fn tiny_mlp_validates() {
+        let g = testutil::tiny_mlp();
+        g.validate().unwrap();
+        assert_eq!(g.ops.len(), 5);
+        assert!(g.macs() > 0);
     }
 
     #[test]

@@ -29,7 +29,7 @@ impl Default for ExecOpts {
 }
 
 /// Accounting result of one invocation.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ExecStats {
     /// Reference-ISA (RV32GC) instruction count — what ETISS reports.
     pub ref_instructions: u64,
@@ -72,19 +72,32 @@ fn account(call: &KernelCall, spec: &McuSpec, stats: &mut ExecStats) {
     stats.stall_cycles += spec.memsys.weight_stall_cycles(&c.weights);
 }
 
+/// Account a whole program without executing it. The accounting is
+/// data-independent, so this is also what `ExecPlan` pre-sums at
+/// compile time and what deployments cache for cost-only invokes.
+pub fn account_program(p: &Program, spec: &McuSpec) -> ExecStats {
+    let mut stats = ExecStats::default();
+    for call in &p.calls {
+        account(call, spec, &mut stats);
+    }
+    stats
+}
+
 /// Run the program once. Returns the int8 output vector (empty when
 /// `opts.compute` is false) and the accounting stats.
+///
+/// This is the reference interpreter: it re-resolves buffers, decodes
+/// biases and allocates scratch on every invoke. Hot paths (targets,
+/// benches) go through `plan::ExecPlan`, which hoists all of that out
+/// and must stay bit-identical to this function.
 pub fn execute(
     p: &Program,
     spec: &McuSpec,
     input: &[i8],
     opts: ExecOpts,
 ) -> Result<(Vec<i8>, ExecStats)> {
-    let mut stats = ExecStats::default();
+    let stats = account_program(p, spec);
     if !opts.compute {
-        for call in &p.calls {
-            account(call, spec, &mut stats);
-        }
         return Ok((Vec::new(), stats));
     }
 
@@ -92,7 +105,6 @@ pub fn execute(
     mem.write_input(p, input)?;
 
     for call in &p.calls {
-        account(call, spec, &mut stats);
         run_call(p, call, &mut mem)?;
     }
     Ok((mem.read_output(p), stats))
@@ -319,7 +331,9 @@ fn run_call(p: &Program, call: &KernelCall, mem: &mut McuMemory) -> Result<()> {
     Ok(())
 }
 
-fn const_i32(p: &Program, id: ConstId) -> Vec<i32> {
+/// Decode an i32 constant (bias vectors). Shared with `plan.rs` so
+/// the interpreter and the compiled plan can never diverge.
+pub(crate) fn const_i32(p: &Program, id: ConstId) -> Vec<i32> {
     p.consts[id]
         .data
         .chunks_exact(4)
@@ -327,8 +341,8 @@ fn const_i32(p: &Program, id: ConstId) -> Vec<i32> {
         .collect()
 }
 
-/// SAME-padding (top, left) amounts; VALID = 0.
-fn pads(
+/// SAME-padding (top, left) amounts; VALID = 0. Shared with `plan.rs`.
+pub(crate) fn pads(
     ih: usize, iw: usize, kh: usize, kw: usize,
     sh: usize, sw: usize, padding: u8,
 ) -> (usize, usize) {

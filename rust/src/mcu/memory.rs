@@ -41,6 +41,24 @@ pub struct McuMemory {
     ram: Vec<u8>,
 }
 
+/// Narrow `elems` stored values at `off` to i8, one dtype dispatch for
+/// the whole buffer. Truncation semantics match `McuMemory::load`
+/// followed by an `as i8` cast. Shared by `read_output` and the
+/// compiled plan's output read (`plan.rs`) so they cannot diverge.
+pub(crate) fn narrow_i8(ram: &[u8], off: usize, elems: usize, dtype: DType) -> Vec<i8> {
+    match dtype {
+        DType::I8 => ram[off..off + elems].iter().map(|&v| v as i8).collect(),
+        DType::I16 => ram[off..off + 2 * elems]
+            .chunks_exact(2)
+            .map(|c| i16::from_le_bytes([c[0], c[1]]) as i8)
+            .collect(),
+        DType::I32 | DType::F32 => ram[off..off + 4 * elems]
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as i8)
+            .collect(),
+    }
+}
+
 impl McuMemory {
     /// Allocate RAM for a planned program. Fails if any buffer is
     /// unplanned — running an unplanned program is a backend bug.
@@ -110,17 +128,24 @@ impl McuMemory {
             data.len()
         );
         let off = b.offset.unwrap();
-        for (i, &v) in data.iter().enumerate() {
-            self.ram[off + i] = v as u8;
+        // bulk slice copy (i8 -> u8 is a bitwise reinterpretation);
+        // the zipped loop compiles to a memcpy, unlike the old
+        // indexed byte-at-a-time write
+        let dst = &mut self.ram[off..off + data.len()];
+        for (d, &v) in dst.iter_mut().zip(data) {
+            *d = v as u8;
         }
         Ok(())
     }
 
     /// Read the graph output back as i8 values (dtype-aware narrow).
+    /// One dtype dispatch for the whole buffer instead of a full
+    /// `load()` per element (§Perf).
     pub fn read_output(&self, p: &Program) -> Vec<i8> {
         let b = &p.buffers[p.output];
+        let off = b.offset.expect("checked by for_program");
         let n = b.size / b.dtype.size();
-        (0..n).map(|i| self.load(p, p.output, i) as i8).collect()
+        narrow_i8(&self.ram, off, n, b.dtype)
     }
 
     /// Number of elements of a buffer.

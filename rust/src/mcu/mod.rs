@@ -10,10 +10,12 @@
 pub mod memsys;
 pub mod memory;
 pub mod exec;
+pub mod plan;
 
-pub use exec::{execute, ExecOpts, ExecStats};
+pub use exec::{account_program, execute, ExecOpts, ExecStats};
 pub use memory::{FlashImage, McuMemory};
 pub use memsys::{FlashKind, MemSystem};
+pub use plan::ExecPlan;
 
 use crate::isa::IsaModel;
 

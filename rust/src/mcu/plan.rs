@@ -1,0 +1,928 @@
+//! Compile-once execution plan (§Perf iteration 4).
+//!
+//! `execute()` (exec.rs) re-derives everything on every invoke: it
+//! resolves buffer offsets through `McuMemory`'s per-element dispatch,
+//! re-decodes the i32 bias constants, recomputes SAME-pads, allocates
+//! fresh widen/accumulator scratch per call, and re-walks the whole
+//! call list for accounting even in cost-only mode. That is exactly
+//! the prepare-once/invoke-many split TFLM's interpreter design makes:
+//! all of it is invariant across invokes.
+//!
+//! `ExecPlan::compile` hoists the invariants out once:
+//!
+//!   * buffer offsets become typed arena views (`BufView`),
+//!   * biases are decoded into `Vec<i32>` once,
+//!   * SAME-pads, weight-row index tables and requant clamp floors are
+//!     precomputed,
+//!   * the data-independent `ExecStats` accounting is pre-summed, so a
+//!     cost-only invoke is a single struct copy,
+//!   * widen/accumulator/softmax scratch and the arena itself are
+//!     owned by the plan and reused, so steady-state invokes are
+//!     allocation-free (beyond the returned output vector),
+//!   * dtype dispatch happens once per kernel call (bulk widen in,
+//!     bulk narrow out), never per element.
+//!
+//! The invariant — enforced by `tests/plan_equivalence.rs` — is
+//! bit-identical outputs and identical `ExecStats` versus the
+//! reference interpreter in exec.rs.
+
+use std::sync::Mutex;
+
+use anyhow::{ensure, Result};
+
+use crate::mcu::exec::{account_program, const_i32, pads};
+use crate::mcu::memory::narrow_i8;
+use crate::mcu::{ExecStats, McuSpec};
+use crate::tensor::DType;
+use crate::tinyir::*;
+use crate::util::round_half_even;
+
+/// A resolved activation buffer: arena offset + element type/count.
+#[derive(Debug, Clone, Copy)]
+struct BufView {
+    off: usize,
+    elems: usize,
+    dtype: DType,
+}
+
+/// Requantization with the clamp floor resolved at compile time
+/// (exec.rs recomputes the ReLU floor per output element).
+#[derive(Debug, Clone, Copy)]
+struct PlannedRequant {
+    multiplier: f64,
+    zp_out: i32,
+    lo: i64,
+}
+
+impl PlannedRequant {
+    fn of(rq: &Requant) -> PlannedRequant {
+        let lo = if rq.act == 1 { rq.zp_out.max(-128) } else { -128 };
+        PlannedRequant {
+            multiplier: rq.multiplier,
+            zp_out: rq.zp_out,
+            lo: lo as i64,
+        }
+    }
+
+    /// Bit-identical to exec.rs::requant.
+    #[inline]
+    fn apply(&self, acc: i64) -> i32 {
+        let y = round_half_even(acc as f64 * self.multiplier) + self.zp_out as f64;
+        (y as i64).clamp(self.lo, 127) as i32
+    }
+}
+
+/// One kernel call with every data-independent quantity precomputed.
+#[derive(Debug)]
+enum PlannedOp {
+    Conv {
+        x: BufView,
+        out: BufView,
+        w: ConstId,
+        bias: Vec<i32>,
+        /// Packed-weight byte offset (row * oc) per (ky*kw+kx)*ic+ci —
+        /// replaces the per-MAC channels_first index arithmetic.
+        wrow: Vec<usize>,
+        zp_in: i32,
+        rq: PlannedRequant,
+        ih: usize,
+        iw: usize,
+        ic: usize,
+        oh: usize,
+        ow: usize,
+        oc: usize,
+        kh: usize,
+        kw: usize,
+        stride: (usize, usize),
+        pads: (usize, usize),
+    },
+    DwConv {
+        x: BufView,
+        out: BufView,
+        w: ConstId,
+        bias: Vec<i32>,
+        zp_in: i32,
+        rq: PlannedRequant,
+        ih: usize,
+        iw: usize,
+        c: usize,
+        oh: usize,
+        ow: usize,
+        kh: usize,
+        kw: usize,
+        stride: (usize, usize),
+        pads: (usize, usize),
+    },
+    Dense {
+        x: BufView,
+        out: BufView,
+        w: ConstId,
+        bias: Vec<i32>,
+        zp_in: i32,
+        rq: PlannedRequant,
+        batch: usize,
+        in_n: usize,
+        out_n: usize,
+    },
+    AvgPool {
+        x: BufView,
+        out: BufView,
+        iw: usize,
+        c: usize,
+        oh: usize,
+        ow: usize,
+        fh: usize,
+        fw: usize,
+        stride: (usize, usize),
+        count: f64,
+    },
+    MaxPool {
+        x: BufView,
+        out: BufView,
+        iw: usize,
+        c: usize,
+        oh: usize,
+        ow: usize,
+        fh: usize,
+        fw: usize,
+        stride: (usize, usize),
+    },
+    Add {
+        a: BufView,
+        b: BufView,
+        out: BufView,
+        elems: usize,
+        /// s_a / s_o and s_b / s_o (exec.rs recomputes per element).
+        ra: f64,
+        rb: f64,
+        zp_a: i32,
+        zp_b: i32,
+        zp_o: i32,
+        lo: i64,
+    },
+    /// Same-dtype copy: one bulk byte move.
+    CopyRaw { src: usize, dst: usize, bytes: usize },
+    /// Dtype-converting copy (legalization widen/narrow transforms).
+    CopyConvert { x: BufView, out: BufView, elems: usize },
+    Softmax {
+        x: BufView,
+        out: BufView,
+        elems: usize,
+        s_in: f32,
+        zp_in: i32,
+    },
+}
+
+/// Reusable per-invoke working memory (allocated once at compile).
+#[derive(Debug, Default)]
+struct Scratch {
+    /// The simulated SRAM arena (+ workspace tail).
+    ram: Vec<u8>,
+    /// Widened-input scratch (i32), sized to the largest buffer.
+    xin: Vec<i32>,
+    /// Second widened input (Add's rhs).
+    xin2: Vec<i32>,
+    /// Requantized outputs staged as i32 before the bulk narrow.
+    ybuf: Vec<i32>,
+    /// Per-output-channel accumulators (conv/dwconv).
+    acc: Vec<i64>,
+    /// Softmax f32 working buffer.
+    fbuf: Vec<f32>,
+}
+
+/// A compiled, reusable execution plan for one (program, target spec)
+/// pair. Compile once with [`ExecPlan::compile`], invoke many times
+/// with [`ExecPlan::run`]; cost-only consumers read [`ExecPlan::stats`]
+/// without touching the executor at all.
+#[derive(Debug)]
+pub struct ExecPlan {
+    name: String,
+    n_calls: usize,
+    ram_len: usize,
+    cost_fp: u64,
+    input: BufView,
+    output: BufView,
+    ops: Vec<PlannedOp>,
+    stats: ExecStats,
+    scratch: Mutex<Scratch>,
+}
+
+fn view(p: &Program, id: BufId) -> BufView {
+    let b = &p.buffers[id];
+    BufView {
+        off: b.offset.expect("checked by check_plan"),
+        elems: b.size / b.dtype.size(),
+        dtype: b.dtype,
+    }
+}
+
+fn in_view(p: &Program, call: &KernelCall, i: usize) -> Result<BufView> {
+    match call.inputs.get(i) {
+        Some(Operand::Buf(id)) => Ok(view(p, *id)),
+        other => anyhow::bail!(
+            "call {}: expected buffer operand, got {other:?}",
+            call.origin
+        ),
+    }
+}
+
+/// Fingerprint of the cost descriptors the plan's pre-summed
+/// `ExecStats` were computed from. A knob re-cost (`Program::recost`)
+/// changes these without changing the program's name or call
+/// structure, so `run` re-checks this to reject a stale plan.
+fn cost_fingerprint(p: &Program) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    let mut mix = |h: &mut u64, v: u64| {
+        *h ^= v;
+        *h = h.wrapping_mul(0x100_0000_01b3);
+    };
+    for call in &p.calls {
+        let c = &call.cost;
+        for v in [
+            c.macs,
+            c.out_elems,
+            c.fixed.to_bits(),
+            c.per_mac.total().to_bits(),
+            c.per_mac.load.to_bits(),
+            c.per_mac.branch.to_bits(),
+            c.per_out.total().to_bits(),
+            c.weights.bytes_streamed,
+            c.weights.reuse_window,
+            c.code_bytes,
+            c.workspace as u64,
+        ] {
+            mix(&mut h, v);
+        }
+    }
+    h
+}
+
+/// Widen the first `out.len()` elements of `v` into i32 (one dtype
+/// dispatch for the whole buffer).
+fn widen_into(ram: &[u8], v: BufView, out: &mut [i32]) {
+    let n = out.len();
+    match v.dtype {
+        DType::I8 => {
+            for (o, &b) in out.iter_mut().zip(&ram[v.off..v.off + n]) {
+                *o = b as i8 as i32;
+            }
+        }
+        DType::I16 => {
+            let src = &ram[v.off..v.off + 2 * n];
+            for (o, c) in out.iter_mut().zip(src.chunks_exact(2)) {
+                *o = i16::from_le_bytes([c[0], c[1]]) as i32;
+            }
+        }
+        DType::I32 | DType::F32 => {
+            let src = &ram[v.off..v.off + 4 * n];
+            for (o, c) in out.iter_mut().zip(src.chunks_exact(4)) {
+                *o = i32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+        }
+    }
+}
+
+/// Narrow i32 values back into the buffer's dtype (one dispatch).
+/// Identical truncation semantics to `McuMemory::store`.
+fn narrow_from(ram: &mut [u8], v: BufView, vals: &[i32]) {
+    match v.dtype {
+        DType::I8 => {
+            let dst = &mut ram[v.off..v.off + vals.len()];
+            for (d, &x) in dst.iter_mut().zip(vals) {
+                *d = x as i8 as u8;
+            }
+        }
+        DType::I16 => {
+            let dst = &mut ram[v.off..v.off + 2 * vals.len()];
+            for (d, &x) in dst.chunks_exact_mut(2).zip(vals) {
+                d.copy_from_slice(&(x as i16).to_le_bytes());
+            }
+        }
+        DType::I32 | DType::F32 => {
+            let dst = &mut ram[v.off..v.off + 4 * vals.len()];
+            for (d, &x) in dst.chunks_exact_mut(4).zip(vals) {
+                d.copy_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+impl ExecPlan {
+    /// Resolve, decode and pre-size everything `run` will need.
+    pub fn compile(p: &Program, spec: &McuSpec) -> Result<ExecPlan> {
+        p.check_plan()?;
+        let input = view(p, p.input);
+        let output = view(p, p.output);
+        ensure!(
+            input.dtype == DType::I8,
+            "graph input buffer must be i8, got {:?}",
+            input.dtype
+        );
+
+        let mut ops = Vec::with_capacity(p.calls.len());
+        let mut max_acc = 1usize;
+        let mut max_soft = 0usize;
+        for call in &p.calls {
+            ops.push(Self::compile_call(p, call, &mut max_acc, &mut max_soft)?);
+        }
+
+        let max_elems = p
+            .buffers
+            .iter()
+            .map(|b| b.size / b.dtype.size())
+            .max()
+            .unwrap_or(0);
+        let scratch = Scratch {
+            ram: vec![0u8; p.arena_size + p.workspace_size],
+            xin: vec![0i32; max_elems],
+            xin2: vec![0i32; max_elems],
+            ybuf: vec![0i32; max_elems],
+            acc: vec![0i64; max_acc],
+            fbuf: vec![0f32; max_soft],
+        };
+        Ok(ExecPlan {
+            name: p.name.clone(),
+            n_calls: p.calls.len(),
+            ram_len: p.arena_size + p.workspace_size,
+            cost_fp: cost_fingerprint(p),
+            input,
+            output,
+            ops,
+            stats: account_program(p, spec),
+            scratch: Mutex::new(scratch),
+        })
+    }
+
+    fn compile_call(
+        p: &Program,
+        call: &KernelCall,
+        max_acc: &mut usize,
+        max_soft: &mut usize,
+    ) -> Result<PlannedOp> {
+        Ok(match &call.kind {
+            KernelKind::Conv2D {
+                ih, iw, ic, oh, ow, oc, kh, kw, stride, padding,
+                channels_first, requant: rq,
+            } => {
+                let x = in_view(p, call, 0)?;
+                let w = call.consts[0];
+                let bias = const_i32(p, call.consts[1]);
+                ensure!(bias.len() >= *oc, "{}: short bias", call.origin);
+                ensure!(
+                    p.consts[w].data.len() >= kh * kw * ic * oc,
+                    "{}: short weight matrix",
+                    call.origin
+                );
+                ensure!(
+                    x.elems >= ih * iw * ic,
+                    "{}: input buffer too small",
+                    call.origin
+                );
+                let mut wrow = Vec::with_capacity(kh * kw * ic);
+                for ky in 0..*kh {
+                    for kx in 0..*kw {
+                        for ci in 0..*ic {
+                            let row = if *channels_first {
+                                ci * kh * kw + ky * kw + kx
+                            } else {
+                                (ky * kw + kx) * ic + ci
+                            };
+                            wrow.push(row * oc);
+                        }
+                    }
+                }
+                *max_acc = (*max_acc).max(*oc);
+                PlannedOp::Conv {
+                    x,
+                    out: view(p, call.output),
+                    w,
+                    bias,
+                    wrow,
+                    zp_in: rq.zp_in,
+                    rq: PlannedRequant::of(rq),
+                    ih: *ih,
+                    iw: *iw,
+                    ic: *ic,
+                    oh: *oh,
+                    ow: *ow,
+                    oc: *oc,
+                    kh: *kh,
+                    kw: *kw,
+                    stride: *stride,
+                    pads: pads(*ih, *iw, *kh, *kw, stride.0, stride.1, *padding),
+                }
+            }
+            KernelKind::DwConv2D {
+                ih, iw, c, oh, ow, kh, kw, stride, padding, requant: rq,
+            } => {
+                let x = in_view(p, call, 0)?;
+                let bias = const_i32(p, call.consts[1]);
+                ensure!(bias.len() >= *c, "{}: short bias", call.origin);
+                ensure!(
+                    p.consts[call.consts[0]].data.len() >= kh * kw * c,
+                    "{}: short dw weights",
+                    call.origin
+                );
+                *max_acc = (*max_acc).max(*c);
+                PlannedOp::DwConv {
+                    x,
+                    out: view(p, call.output),
+                    w: call.consts[0],
+                    bias,
+                    zp_in: rq.zp_in,
+                    rq: PlannedRequant::of(rq),
+                    ih: *ih,
+                    iw: *iw,
+                    c: *c,
+                    oh: *oh,
+                    ow: *ow,
+                    kh: *kh,
+                    kw: *kw,
+                    stride: *stride,
+                    pads: pads(*ih, *iw, *kh, *kw, stride.0, stride.1, *padding),
+                }
+            }
+            KernelKind::Dense { batch, in_n, out_n, requant: rq } => {
+                let x = in_view(p, call, 0)?;
+                let bias = const_i32(p, call.consts[1]);
+                ensure!(bias.len() >= *out_n, "{}: short bias", call.origin);
+                ensure!(
+                    p.consts[call.consts[0]].data.len() >= in_n * out_n,
+                    "{}: short dense weights",
+                    call.origin
+                );
+                ensure!(
+                    x.elems >= batch * in_n,
+                    "{}: input buffer too small",
+                    call.origin
+                );
+                PlannedOp::Dense {
+                    x,
+                    out: view(p, call.output),
+                    w: call.consts[0],
+                    bias,
+                    zp_in: rq.zp_in,
+                    rq: PlannedRequant::of(rq),
+                    batch: *batch,
+                    in_n: *in_n,
+                    out_n: *out_n,
+                }
+            }
+            KernelKind::AvgPool2D { ih, iw, c, oh, ow, fh, fw, stride } => {
+                let x = in_view(p, call, 0)?;
+                ensure!(
+                    x.elems >= ih * iw * c,
+                    "{}: input buffer too small",
+                    call.origin
+                );
+                PlannedOp::AvgPool {
+                    x,
+                    out: view(p, call.output),
+                    iw: *iw,
+                    c: *c,
+                    oh: *oh,
+                    ow: *ow,
+                    fh: *fh,
+                    fw: *fw,
+                    stride: *stride,
+                    count: (fh * fw) as f64,
+                }
+            }
+            KernelKind::MaxPool2D { ih, iw, c, oh, ow, fh, fw, stride } => {
+                let x = in_view(p, call, 0)?;
+                ensure!(
+                    x.elems >= ih * iw * c,
+                    "{}: input buffer too small",
+                    call.origin
+                );
+                PlannedOp::MaxPool {
+                    x,
+                    out: view(p, call.output),
+                    iw: *iw,
+                    c: *c,
+                    oh: *oh,
+                    ow: *ow,
+                    fh: *fh,
+                    fw: *fw,
+                    stride: *stride,
+                }
+            }
+            KernelKind::Add { elems, s_a, zp_a, s_b, zp_b, s_o, zp_o, act } => {
+                let a = in_view(p, call, 0)?;
+                let b = in_view(p, call, 1)?;
+                ensure!(
+                    a.elems >= *elems && b.elems >= *elems,
+                    "{}: add operand too small",
+                    call.origin
+                );
+                PlannedOp::Add {
+                    a,
+                    b,
+                    out: view(p, call.output),
+                    elems: *elems,
+                    ra: s_a / s_o,
+                    rb: s_b / s_o,
+                    zp_a: *zp_a,
+                    zp_b: *zp_b,
+                    zp_o: *zp_o,
+                    lo: if *act == 1 { *zp_o as i64 } else { -128 },
+                }
+            }
+            KernelKind::Copy { elems } | KernelKind::Transform { elems, .. } => {
+                let x = in_view(p, call, 0)?;
+                let out = view(p, call.output);
+                ensure!(
+                    x.elems >= *elems && out.elems >= *elems,
+                    "{}: copy operand too small",
+                    call.origin
+                );
+                if x.dtype == out.dtype {
+                    PlannedOp::CopyRaw {
+                        src: x.off,
+                        dst: out.off,
+                        bytes: elems * x.dtype.size(),
+                    }
+                } else {
+                    PlannedOp::CopyConvert { x, out, elems: *elems }
+                }
+            }
+            KernelKind::Softmax { elems, s_in, zp_in } => {
+                let x = in_view(p, call, 0)?;
+                ensure!(
+                    x.elems >= *elems,
+                    "{}: softmax operand too small",
+                    call.origin
+                );
+                *max_soft = (*max_soft).max(*elems);
+                PlannedOp::Softmax {
+                    x,
+                    out: view(p, call.output),
+                    elems: *elems,
+                    s_in: *s_in as f32,
+                    zp_in: *zp_in,
+                }
+            }
+        })
+    }
+
+    /// The pre-summed, data-independent accounting of one invoke.
+    /// Cost-only consumers (the tuner's measure loop) use this instead
+    /// of walking the call list.
+    pub fn stats(&self) -> ExecStats {
+        self.stats
+    }
+
+    /// Execute one invoke against the plan's own arena. `program` must
+    /// be the program this plan was compiled from (the plan holds
+    /// derived metadata; weights stay in the program's flash consts).
+    pub fn run(&self, p: &Program, input: &[i8]) -> Result<(Vec<i8>, ExecStats)> {
+        ensure!(
+            p.name == self.name
+                && p.calls.len() == self.n_calls
+                && p.arena_size + p.workspace_size == self.ram_len
+                && cost_fingerprint(p) == self.cost_fp,
+            "plan was compiled from a different (or re-costed) program \
+             ({} vs {})",
+            self.name,
+            p.name
+        );
+        ensure!(
+            input.len() == self.input.elems,
+            "input size mismatch: buffer {} elems vs data {} B",
+            self.input.elems,
+            input.len()
+        );
+        let mut guard = self.scratch.lock().unwrap_or_else(|e| e.into_inner());
+        let Scratch { ram, xin, xin2, ybuf, acc, fbuf } = &mut *guard;
+        // fresh-RAM semantics, identical to a new McuMemory per invoke
+        ram.fill(0);
+        let dst = &mut ram[self.input.off..self.input.off + input.len()];
+        for (d, &v) in dst.iter_mut().zip(input) {
+            *d = v as u8;
+        }
+
+        for op in &self.ops {
+            match op {
+                PlannedOp::Conv {
+                    x, out, w, bias, wrow, zp_in, rq,
+                    ih, iw, ic, oh, ow, oc, kh, kw, stride, pads,
+                } => {
+                    let xin = &mut xin[..x.elems];
+                    widen_into(ram, *x, xin);
+                    for v in xin.iter_mut() {
+                        *v -= zp_in;
+                    }
+                    let wd = &p.consts[*w].data;
+                    let acc = &mut acc[..*oc];
+                    let yout = &mut ybuf[..oh * ow * oc];
+                    let (pt, pl) = *pads;
+                    for oy in 0..*oh {
+                        for ox in 0..*ow {
+                            let out_base = ((oy * ow) + ox) * oc;
+                            for (co, a) in acc.iter_mut().enumerate() {
+                                *a = bias[co] as i64;
+                            }
+                            for ky in 0..*kh {
+                                let iy =
+                                    (oy * stride.0 + ky) as isize - pt as isize;
+                                if iy < 0 || iy >= *ih as isize {
+                                    continue;
+                                }
+                                for kx in 0..*kw {
+                                    let ix = (ox * stride.1 + kx) as isize
+                                        - pl as isize;
+                                    if ix < 0 || ix >= *iw as isize {
+                                        continue;
+                                    }
+                                    let base =
+                                        ((iy as usize * iw) + ix as usize) * ic;
+                                    let xrow = &xin[base..base + ic];
+                                    let rows = &wrow[(ky * kw + kx) * ic..];
+                                    for (ci, &xv) in xrow.iter().enumerate() {
+                                        if xv == 0 {
+                                            continue; // zp-padding fast path
+                                        }
+                                        let ro = rows[ci];
+                                        let ws = &wd[ro..ro + oc];
+                                        let xv = xv as i64;
+                                        for (a, &wv) in acc.iter_mut().zip(ws) {
+                                            *a += xv * (wv as i8 as i64);
+                                        }
+                                    }
+                                }
+                            }
+                            for (co, &a) in acc.iter().enumerate() {
+                                yout[out_base + co] = rq.apply(a);
+                            }
+                        }
+                    }
+                    narrow_from(ram, *out, yout);
+                }
+                PlannedOp::DwConv {
+                    x, out, w, bias, zp_in, rq,
+                    ih, iw, c, oh, ow, kh, kw, stride, pads,
+                } => {
+                    let xin = &mut xin[..x.elems];
+                    widen_into(ram, *x, xin);
+                    for v in xin.iter_mut() {
+                        *v -= zp_in;
+                    }
+                    let wd = &p.consts[*w].data;
+                    let acc = &mut acc[..*c];
+                    let yout = &mut ybuf[..oh * ow * c];
+                    let (pt, pl) = *pads;
+                    for oy in 0..*oh {
+                        for ox in 0..*ow {
+                            let out_base = ((oy * ow) + ox) * c;
+                            for (ch, a) in acc.iter_mut().enumerate() {
+                                *a = bias[ch] as i64;
+                            }
+                            for ky in 0..*kh {
+                                let iy =
+                                    (oy * stride.0 + ky) as isize - pt as isize;
+                                if iy < 0 || iy >= *ih as isize {
+                                    continue;
+                                }
+                                for kx in 0..*kw {
+                                    let ix = (ox * stride.1 + kx) as isize
+                                        - pl as isize;
+                                    if ix < 0 || ix >= *iw as isize {
+                                        continue;
+                                    }
+                                    let base =
+                                        ((iy as usize * iw) + ix as usize) * c;
+                                    let xrow = &xin[base..base + c];
+                                    let ws =
+                                        &wd[(ky * kw + kx) * c..(ky * kw + kx + 1) * c];
+                                    for ((a, &xv), &wv) in
+                                        acc.iter_mut().zip(xrow).zip(ws)
+                                    {
+                                        *a += xv as i64 * (wv as i8 as i64);
+                                    }
+                                }
+                            }
+                            for (ch, &a) in acc.iter().enumerate() {
+                                yout[out_base + ch] = rq.apply(a);
+                            }
+                        }
+                    }
+                    narrow_from(ram, *out, yout);
+                }
+                PlannedOp::Dense {
+                    x, out, w, bias, zp_in, rq, batch, in_n, out_n,
+                } => {
+                    let xin = &mut xin[..x.elems];
+                    widen_into(ram, *x, xin);
+                    for v in xin.iter_mut() {
+                        *v -= zp_in;
+                    }
+                    let wd = &p.consts[*w].data;
+                    let yout = &mut ybuf[..batch * out_n];
+                    for b in 0..*batch {
+                        let xrow = &xin[b * in_n..(b + 1) * in_n];
+                        for o in 0..*out_n {
+                            let ws = &wd[o * in_n..(o + 1) * in_n];
+                            let mut a = bias[o] as i64;
+                            for (xv, wv) in xrow.iter().zip(ws) {
+                                a += *xv as i64 * (*wv as i8 as i64);
+                            }
+                            yout[b * out_n + o] = rq.apply(a);
+                        }
+                    }
+                    narrow_from(ram, *out, yout);
+                }
+                PlannedOp::AvgPool {
+                    x, out, iw, c, oh, ow, fh, fw, stride, count,
+                } => {
+                    let xin = &mut xin[..x.elems];
+                    widen_into(ram, *x, xin);
+                    let yout = &mut ybuf[..oh * ow * c];
+                    for oy in 0..*oh {
+                        for ox in 0..*ow {
+                            for ch in 0..*c {
+                                let mut sum = 0i64;
+                                for ky in 0..*fh {
+                                    for kx in 0..*fw {
+                                        let iy = oy * stride.0 + ky;
+                                        let ix = ox * stride.1 + kx;
+                                        sum += xin[((iy * iw) + ix) * c + ch]
+                                            as i64;
+                                    }
+                                }
+                                let v = round_half_even(sum as f64 / count)
+                                    .clamp(-128.0, 127.0)
+                                    as i32;
+                                yout[((oy * ow) + ox) * c + ch] = v;
+                            }
+                        }
+                    }
+                    narrow_from(ram, *out, yout);
+                }
+                PlannedOp::MaxPool { x, out, iw, c, oh, ow, fh, fw, stride } => {
+                    let xin = &mut xin[..x.elems];
+                    widen_into(ram, *x, xin);
+                    let yout = &mut ybuf[..oh * ow * c];
+                    for oy in 0..*oh {
+                        for ox in 0..*ow {
+                            for ch in 0..*c {
+                                let mut m = i32::MIN;
+                                for ky in 0..*fh {
+                                    for kx in 0..*fw {
+                                        let iy = oy * stride.0 + ky;
+                                        let ix = ox * stride.1 + kx;
+                                        m = m.max(xin[((iy * iw) + ix) * c + ch]);
+                                    }
+                                }
+                                yout[((oy * ow) + ox) * c + ch] = m;
+                            }
+                        }
+                    }
+                    narrow_from(ram, *out, yout);
+                }
+                PlannedOp::Add {
+                    a, b, out, elems, ra, rb, zp_a, zp_b, zp_o, lo,
+                } => {
+                    let xa = &mut xin[..*elems];
+                    widen_into(ram, *a, xa);
+                    let xb = &mut xin2[..*elems];
+                    widen_into(ram, *b, xb);
+                    let yout = &mut ybuf[..*elems];
+                    for i in 0..*elems {
+                        let fa = (xa[i] - zp_a) as f64 * ra;
+                        let fb = (xb[i] - zp_b) as f64 * rb;
+                        let y = round_half_even(fa + fb) + *zp_o as f64;
+                        yout[i] = (y as i64).clamp(*lo, 127) as i32;
+                    }
+                    narrow_from(ram, *out, yout);
+                }
+                PlannedOp::CopyRaw { src, dst, bytes } => {
+                    ram.copy_within(*src..*src + *bytes, *dst);
+                }
+                PlannedOp::CopyConvert { x, out, elems } => {
+                    let xin = &mut xin[..*elems];
+                    widen_into(ram, *x, xin);
+                    narrow_from(ram, *out, xin);
+                }
+                PlannedOp::Softmax { x, out, elems, s_in, zp_in } => {
+                    let xin = &mut xin[..*elems];
+                    widen_into(ram, *x, xin);
+                    let f = &mut fbuf[..*elems];
+                    for (fv, &v) in f.iter_mut().zip(xin.iter()) {
+                        *fv = (v - zp_in) as f32 * s_in;
+                    }
+                    let max =
+                        f.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    let mut sum = 0f32;
+                    for v in f.iter_mut() {
+                        *v = (*v - max).exp();
+                        sum += *v;
+                    }
+                    let yout = &mut ybuf[..*elems];
+                    for (y, &v) in yout.iter_mut().zip(f.iter()) {
+                        let q = round_half_even((v / sum) as f64 * 256.0) - 128.0;
+                        *y = q.clamp(-128.0, 127.0) as i32;
+                    }
+                    narrow_from(ram, *out, yout);
+                }
+            }
+        }
+
+        // dtype-aware narrow of the output buffer — the same shared
+        // helper `McuMemory::read_output` uses
+        let v = self.output;
+        let out = narrow_i8(ram, v.off, v.elems, v.dtype);
+        Ok((out, self.stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backends::builder::{lower, LowerOpts};
+    use crate::backends::planner::{plan, PlannerKind};
+    use crate::graph::model::testutil::tiny_conv;
+    use crate::isa;
+    use crate::kernels::KernelLib;
+    use crate::mcu::{execute, ExecOpts, MemSystem};
+
+    fn etiss_spec() -> McuSpec {
+        McuSpec {
+            name: "etiss",
+            isa: &isa::RV32GC,
+            clock_mhz: 100.0,
+            flash_total: u64::MAX / 2,
+            flash_reserved: 0,
+            ram_total: u64::MAX / 2,
+            ram_reserved: 0,
+            memsys: MemSystem::ideal(),
+        }
+    }
+
+    fn tiny_program(lib: KernelLib, legalize: bool) -> Program {
+        let g = tiny_conv();
+        let mut p = lower(
+            &g,
+            "t",
+            LowerOpts { lib, legalize_i16: legalize, transform_input: legalize },
+        )
+        .unwrap();
+        plan(&mut p, PlannerKind::GreedyArena);
+        p
+    }
+
+    #[test]
+    fn plan_matches_interpreter_on_tiny_conv() {
+        let p = tiny_program(KernelLib::TflmRef, false);
+        let spec = etiss_spec();
+        let input: Vec<i8> = (0..32).map(|x| (x * 11 % 256) as i8).collect();
+        let (ref_out, ref_stats) =
+            execute(&p, &spec, &input, ExecOpts::default()).unwrap();
+        let plan = ExecPlan::compile(&p, &spec).unwrap();
+        let (out, stats) = plan.run(&p, &input).unwrap();
+        assert_eq!(out, ref_out);
+        assert_eq!(stats, ref_stats);
+    }
+
+    #[test]
+    fn cost_only_stats_are_presummed() {
+        let p = tiny_program(KernelLib::TflmRef, false);
+        let spec = etiss_spec();
+        let plan = ExecPlan::compile(&p, &spec).unwrap();
+        let (_, dry) =
+            execute(&p, &spec, &[0i8; 32], ExecOpts { compute: false }).unwrap();
+        assert_eq!(plan.stats(), dry);
+    }
+
+    #[test]
+    fn run_rejects_mismatched_program() {
+        use crate::schedules::{Family, Layout, Schedule};
+        let p = tiny_program(KernelLib::TflmRef, false);
+        let spec = etiss_spec();
+        let plan = ExecPlan::compile(&p, &spec).unwrap();
+        let mut other = p.clone();
+        other.name = "other".into();
+        assert!(plan.run(&other, &[0i8; 32]).is_err());
+        assert!(plan.run(&p, &[0i8; 3]).is_err());
+        // a re-costed program has stale pre-summed stats in this plan:
+        // same name/calls/arena, but the cost fingerprint must reject it
+        let mut recosted = p.clone();
+        recosted.recost(Schedule::new(Family::DefaultX86, Layout::Nchw));
+        assert!(plan.run(&recosted, &[0i8; 32]).is_err());
+    }
+
+    #[test]
+    fn unplanned_program_fails_compile() {
+        let g = tiny_conv();
+        let p = lower(
+            &g,
+            "t",
+            LowerOpts {
+                lib: KernelLib::TflmRef,
+                legalize_i16: false,
+                transform_input: false,
+            },
+        )
+        .unwrap();
+        assert!(ExecPlan::compile(&p, &etiss_spec()).is_err());
+    }
+}

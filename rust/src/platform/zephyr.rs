@@ -8,13 +8,21 @@
 //! sessions dominated by flash+run) is reproduced without wasting
 //! wall-clock time.
 
+use std::sync::{Arc, OnceLock};
+
 use anyhow::{bail, Result};
 
 use crate::backends::BuildResult;
-use crate::mcu::{execute, ExecOpts, FlashImage, McuSpec};
+use crate::mcu::{account_program, ExecPlan, ExecStats, FlashImage, McuSpec};
 use crate::platform::mlif::{self, MlifReport};
+use crate::tinyir::Program;
 
 /// A compiled + linked application ready to flash.
+///
+/// A deployment also owns the invoke-side caches: the pre-summed
+/// cost-only `ExecStats` (computed at deploy, one struct copy per
+/// cost-only invoke — the tuner's measure loop) and a lazily-compiled
+/// [`ExecPlan`] shared across repeated compute invokes.
 #[derive(Debug, Clone)]
 pub struct Deployment {
     pub image: FlashImage,
@@ -24,6 +32,41 @@ pub struct Deployment {
     pub sim_build_s: f64,
     /// Simulated flash-programming seconds (Run stage prefix).
     pub sim_flash_s: f64,
+    /// Data-independent accounting of one invoke on this target.
+    pub invoke_stats: ExecStats,
+    /// Compile-once execution plan, built on the first compute invoke.
+    plan: OnceLock<Arc<ExecPlan>>,
+}
+
+impl Deployment {
+    pub fn new(
+        image: FlashImage,
+        rom_total: u64,
+        ram_total: u64,
+        sim_build_s: f64,
+        sim_flash_s: f64,
+        invoke_stats: ExecStats,
+    ) -> Deployment {
+        Deployment {
+            image,
+            rom_total,
+            ram_total,
+            sim_build_s,
+            sim_flash_s,
+            invoke_stats,
+            plan: OnceLock::new(),
+        }
+    }
+
+    /// The deployment's execution plan, compiled on first use and
+    /// reused by every subsequent invoke.
+    pub fn exec_plan(&self, p: &Program, spec: &McuSpec) -> Result<Arc<ExecPlan>> {
+        if let Some(pl) = self.plan.get() {
+            return Ok(pl.clone());
+        }
+        let pl = Arc::new(ExecPlan::compile(p, spec)?);
+        Ok(self.plan.get_or_init(|| pl).clone())
+    }
 }
 
 /// The Zephyr-like platform.
@@ -75,7 +118,14 @@ impl ZephyrSim {
         let sim_build_s = 2.5 + sources * 0.04;
         // flashing at ~48 KiB/s effective serial/JTAG bandwidth
         let sim_flash_s = 1.2 + rom_total as f64 / 48_000.0;
-        Ok(Deployment { image, rom_total, ram_total, sim_build_s, sim_flash_s })
+        Ok(Deployment::new(
+            image,
+            rom_total,
+            ram_total,
+            sim_build_s,
+            sim_flash_s,
+            account_program(&b.program, spec),
+        ))
     }
 
     /// Run stage: "flash" the image, execute setup + one invoke on the
@@ -88,12 +138,14 @@ impl ZephyrSim {
         input: &[i8],
         compute: bool,
     ) -> Result<(MlifReport, f64)> {
-        let (output, stats) = execute(
-            &b.program,
-            spec,
-            input,
-            ExecOpts { compute },
-        )?;
+        let (output, stats) = if compute {
+            let plan = dep.exec_plan(&b.program, spec)?;
+            plan.run(&b.program, input)?
+        } else {
+            // cost-only (tuner measure loop): the accounting was
+            // pre-summed at deploy time — no call walk at all
+            (Vec::new(), dep.invoke_stats)
+        };
         // setup phase runs on the same core: scale the reference count
         // by the ISA's aggregate density (approximate: alu factor)
         let setup_target = (b.metrics.setup_instructions as f64

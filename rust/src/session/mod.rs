@@ -29,6 +29,7 @@ pub use run::{RunRecord, RunSpec, RunStatus, StageTimes};
 pub use scheduler::{RunOptions, StageExecCounts};
 pub use store::{EnvStore, StoreStats};
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
 
@@ -48,6 +49,10 @@ pub struct Session {
     /// Content-addressed stage-artifact cache, shared by every
     /// `run_matrix` call on this session.
     cache: ArtifactCache,
+    /// Parsed golden input vectors, keyed by model name. `None` caches
+    /// a negative lookup so a matrix of N runs parses (or misses)
+    /// `golden/<model>.json` once, not N times.
+    golden_inputs: Mutex<HashMap<String, Option<Arc<Vec<i8>>>>>,
     /// Total wall-clock of the last run_matrix call, split by stage
     /// boundary (Table III's Load–Compile vs Load–Run distinction).
     pub last_timing: Mutex<SessionTiming>,
@@ -126,8 +131,31 @@ impl Session {
             env: env.clone(),
             golden: Mutex::new(None),
             cache,
+            golden_inputs: Mutex::new(HashMap::new()),
             last_timing: Mutex::new(SessionTiming::default()),
         })
+    }
+
+    /// The golden input vector dumped by the python build path for
+    /// `model`, if one exists — parsed once per session and cached.
+    pub fn golden_input(&self, model: &str) -> Option<Arc<Vec<i8>>> {
+        let mut cache = self.golden_inputs.lock().unwrap();
+        if let Some(hit) = cache.get(model) {
+            return hit.clone();
+        }
+        let path = self
+            .env
+            .artifacts_dir()
+            .join("golden")
+            .join(format!("{model}.json"));
+        let parsed = crate::data::Json::parse_file(&path)
+            .ok()
+            .and_then(|j| j.get("input").and_then(|v| v.as_i64_vec()))
+            .map(|v| {
+                Arc::new(v.into_iter().map(|x| x as i8).collect::<Vec<i8>>())
+            });
+        cache.insert(model.to_string(), parsed.clone());
+        parsed
     }
 
     pub fn env(&self) -> &Environment {
@@ -286,6 +314,23 @@ mod tests {
         let s = Session::new(&env).unwrap();
         let err = s.run_matrix(&RunMatrix::new(), 2).unwrap_err();
         assert!(err.to_string().contains("empty"), "{err}");
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn golden_input_parsed_once_and_cached() {
+        let (env, dir) = test_env("golden");
+        let gdir = env.artifacts_dir().join("golden");
+        std::fs::create_dir_all(&gdir).unwrap();
+        std::fs::write(gdir.join("m.json"), r#"{"input": [1, -2, 3]}"#).unwrap();
+        let s = Session::new(&env).unwrap();
+        let a = s.golden_input("m").unwrap();
+        assert_eq!(*a, vec![1i8, -2, 3]);
+        // delete the file: the cached parse must still serve it
+        std::fs::remove_file(gdir.join("m.json")).unwrap();
+        assert!(s.golden_input("m").is_some());
+        // negative lookups are cached too
+        assert!(s.golden_input("missing").is_none());
         std::fs::remove_dir_all(dir).unwrap();
     }
 

@@ -43,7 +43,8 @@ use crate::util::fnv1a64;
 const MAGIC: &[u8; 4] = b"MLCA";
 /// Bump on ANY payload layout change: old entries then decode as
 /// misses and are recomputed (never migrated in place).
-pub const FORMAT_VERSION: u32 = 1;
+/// v2: `BuildResult` gained an optional lowering `Schedule`.
+pub const FORMAT_VERSION: u32 = 2;
 
 const HEADER_LEN: usize = 4 + 4 + 1 + 8 + 8 + 8;
 
@@ -77,6 +78,13 @@ pub fn encode(key: StageKey, artifact: &Artifact) -> Vec<u8> {
         Artifact::Build(b) => {
             let mut e = Enc::new();
             put_metrics(&mut e, &b.metrics);
+            match &b.schedule {
+                Some(s) => {
+                    e.u8(1);
+                    put_schedule(&mut e, s);
+                }
+                None => e.u8(0),
+            }
             put_program(&mut e, &b.program);
             e.0
         }
@@ -128,9 +136,18 @@ pub fn decode(bytes: &[u8], expect: StageKey) -> Result<Artifact> {
         CachedStage::Build => {
             let mut d = Dec { b: payload, i: 0 };
             let metrics = get_metrics(&mut d)?;
+            let schedule = match d.u8()? {
+                0 => None,
+                1 => Some(get_schedule(&mut d)?),
+                x => bail!("bad schedule flag {x}"),
+            };
             let program = get_program(&mut d)?;
             d.done()?;
-            Ok(Artifact::Build(Arc::new(BuildResult { program, metrics })))
+            Ok(Artifact::Build(Arc::new(BuildResult {
+                program,
+                metrics,
+                schedule,
+            })))
         }
     }
 }
@@ -691,6 +708,8 @@ mod tests {
                     orig.program.ref_invoke_instructions()
                 );
                 assert_eq!(back.program.arena_size, orig.program.arena_size);
+                assert_eq!(back.schedule, orig.schedule);
+                assert!(back.schedule.is_some(), "tvm build carries its schedule");
                 assert_eq!(back.metrics.rom_total(), orig.metrics.rom_total());
                 assert_eq!(back.metrics.ram_total(), orig.metrics.ram_total());
                 assert_eq!(

@@ -168,17 +168,12 @@ impl RunRecord {
 
 /// Deterministic input for a run: the golden input vector when the
 /// python build path dumped one, else a seeded pseudo-random tensor.
+/// The golden file is parsed once per session (`Session::golden_input`
+/// caches it), not once per run of the matrix.
 fn run_input(session: &Session, model: &str, n: usize) -> Vec<i8> {
-    let path = session
-        .env()
-        .artifacts_dir()
-        .join("golden")
-        .join(format!("{model}.json"));
-    if let Ok(j) = crate::data::Json::parse_file(&path) {
-        if let Some(v) = j.get("input").and_then(|v| v.as_i64_vec()) {
-            if v.len() == n {
-                return v.into_iter().map(|x| x as i8).collect();
-            }
+    if let Some(v) = session.golden_input(model) {
+        if v.len() == n {
+            return v.as_ref().clone();
         }
     }
     let mut rng = XorShift64::new(0x5EED ^ n as u64);

@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use crate::backends::BuildResult;
 use crate::isa;
-use crate::mcu::{execute, ExecOpts, McuSpec, MemSystem};
+use crate::mcu::{account_program, McuSpec, MemSystem};
 use crate::platform::{Deployment, ZephyrSim};
 
 /// Everything a run reports back from the target (report columns).
@@ -89,13 +89,15 @@ impl Target for Etiss {
             build.metrics.rom_code,
             build.metrics.rom_misc,
         );
-        Ok(Deployment {
-            rom_total: image.total_bytes(),
-            ram_total: build.metrics.ram_total(),
+        let rom_total = image.total_bytes();
+        Ok(Deployment::new(
             image,
-            sim_build_s: 1.0 + build.program.calls.len() as f64 * 0.02,
-            sim_flash_s: 0.0,
-        })
+            rom_total,
+            build.metrics.ram_total(),
+            1.0 + build.program.calls.len() as f64 * 0.02,
+            0.0,
+            account_program(&build.program, &self.spec),
+        ))
     }
 
     fn run(
@@ -105,8 +107,12 @@ impl Target for Etiss {
         input: &[i8],
         compute: bool,
     ) -> Result<RunOutcome> {
-        let (output, stats) =
-            execute(&build.program, &self.spec, input, ExecOpts { compute })?;
+        let (output, stats) = if compute {
+            let plan = dep.exec_plan(&build.program, &self.spec)?;
+            plan.run(&build.program, input)?
+        } else {
+            (Vec::new(), dep.invoke_stats)
+        };
         Ok(RunOutcome {
             setup_instructions: build.metrics.setup_instructions,
             invoke_instructions: stats.ref_instructions,

@@ -273,6 +273,40 @@ impl Program {
         self.calls.iter().map(|c| c.cost.ref_instructions()).sum()
     }
 
+    /// Re-derive the cost descriptors of every tunable kernel under
+    /// `schedule`, in place, without re-lowering the graph. Knob
+    /// candidates change only `LoopCost`/workspace descriptors —
+    /// never shapes, weights, buffers or numerics — so the tuner's
+    /// measure loop can re-cost one cached build per trial instead of
+    /// paying a full `backend.build`. Produces exactly the costs a
+    /// fresh TVM lowering under `schedule` would (asserted by
+    /// tuner tests).
+    pub fn recost(&mut self, schedule: crate::schedules::Schedule) {
+        use crate::kernels::{self, KernelLib};
+        let lib = KernelLib::Tvm(schedule);
+        for call in &mut self.calls {
+            match &call.kind {
+                KernelKind::Conv2D { ih, iw, ic, oh, ow, oc, kh, kw, .. } => {
+                    call.cost = kernels::conv2d_cost(
+                        lib, *ih, *iw, *oh, *ow, *oc, *kh, *kw, *ic,
+                    );
+                }
+                KernelKind::DwConv2D { c, oh, ow, kh, kw, .. } => {
+                    call.cost =
+                        kernels::dwconv2d_cost(lib, *oh, *ow, *c, *kh, *kw);
+                }
+                KernelKind::Dense { batch, in_n, out_n, .. } => {
+                    call.cost =
+                        kernels::dense_cost(lib, *batch, *in_n, *out_n);
+                }
+                // data-movement kernels have schedule-independent costs
+                _ => {}
+            }
+        }
+        self.workspace_size =
+            self.calls.iter().map(|c| c.cost.workspace).max().unwrap_or(0);
+    }
+
     /// Recompute buffer lifetimes from the call list. Planner input.
     pub fn recompute_lifetimes(&mut self) {
         for b in &mut self.buffers {

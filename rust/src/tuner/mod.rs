@@ -11,11 +11,31 @@
 
 use anyhow::Result;
 
-use crate::backends::{Backend, BackendConfig};
+use crate::backends::{Backend, BackendConfig, BuildResult};
 use crate::graph::Graph;
 use crate::schedules::{Knobs, Schedule};
 use crate::targets::Target;
 use crate::util::XorShift64;
+
+/// Whether a measured trial produced a number or was rejected —
+/// AutoTVM's error states, preserved so ablation plots can show them
+/// instead of silently conflating rejections with kept trials.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrialStatus {
+    /// Measured successfully (kept or not, depending on best-so-far).
+    Ok,
+    /// Deploy/measure failed (e.g. workspace blows the RAM budget).
+    Rejected,
+}
+
+/// One entry of the tuning history.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Trial {
+    pub index: usize,
+    /// Best-so-far seconds *after* this trial (ablation plot y-value).
+    pub best_seconds: f64,
+    pub status: TrialStatus,
+}
 
 /// Outcome of a tuning session for one (model, schedule, target).
 #[derive(Debug, Clone)]
@@ -24,8 +44,8 @@ pub struct TuneResult {
     pub best_seconds: f64,
     pub baseline_seconds: f64,
     pub trials: usize,
-    /// (trial index, seconds) history for ablation plots.
-    pub history: Vec<(usize, f64)>,
+    /// Per-trial history (best-so-far + ok/rejected status).
+    pub history: Vec<Trial>,
 }
 
 impl TuneResult {
@@ -52,21 +72,40 @@ impl Default for TuneOpts {
     }
 }
 
-/// Measure one schedule candidate end-to-end on the target
-/// (build → deploy → run in cost-only mode). Returns invoke seconds.
+/// Measure one already-built candidate on the target (deploy → run in
+/// cost-only mode — the same flash+run path MicroTVM takes). Deploy
+/// failures (workspace OOM) surface as Err: AutoTVM's rejected trials.
+fn measure_build(
+    backend: &dyn Backend,
+    target: &dyn Target,
+    build: &BuildResult,
+    input: &[i8],
+) -> Result<f64> {
+    let dep = target.deploy(build, backend.framework())?;
+    let out = target.run(build, &dep, input, false)?;
+    Ok(out.invoke_seconds)
+}
+
+/// Measure one schedule candidate, reusing `cand` (a clone of the
+/// baseline build) when the backend supports the cheap re-cost path:
+/// knob candidates share the baseline's lowering, so the 600-trial
+/// loop is 1 lower + 600 re-costs instead of 600 full builds.
 fn measure(
     backend: &dyn Backend,
     graph: &Graph,
     target: &dyn Target,
+    cand: &mut BuildResult,
     schedule: Schedule,
+    input: &[i8],
 ) -> Result<f64> {
+    if backend.recost(cand, schedule) {
+        return measure_build(backend, target, cand, input);
+    }
+    // fallback: full lowering (non-TVM backends, template changes)
     let mut cfg = BackendConfig::default();
     cfg.schedule = Some(schedule);
     let build = backend.build(graph, &cfg)?;
-    let dep = target.deploy(&build, backend.framework())?;
-    let input = vec![0i8; graph.tensor(graph.inputs[0]).numel()];
-    let out = target.run(&build, &dep, &input, false)?;
-    Ok(out.invoke_seconds)
+    measure_build(backend, target, &build, input)
 }
 
 /// Tune the schedule's knobs for `graph` on `target`.
@@ -87,7 +126,14 @@ pub fn tune(
         "target {} does not support AutoTVM measurement",
         target.name()
     );
-    let baseline = measure(backend, graph, target, base)?;
+    let input = vec![0i8; graph.tensor(graph.inputs[0]).numel()];
+    // lower the graph once at the base schedule (the reused Load/Build
+    // artifact); every knob trial re-costs a clone of it in place
+    let mut cfg = BackendConfig::default();
+    cfg.schedule = Some(base);
+    let base_build = backend.build(graph, &cfg)?;
+    let baseline = measure_build(backend, target, &base_build, &input)?;
+    let mut cand_build = base_build;
     // joint space: conv knobs × dense unroll — sampled, not exhaustive
     let max_oc = graph
         .ops
@@ -135,17 +181,25 @@ pub fn tune(
             Knobs { unroll: if dense_space.len() > 1 { d.unroll } else { c.unroll }, ..c }
         };
         let cand = base.with_knobs(knobs);
-        match measure(backend, graph, target, cand) {
+        match measure(backend, graph, target, &mut cand_build, cand, &input) {
             Ok(s) => {
                 if s < best_s {
                     best_s = s;
                     best = cand;
                 }
-                history.push((t, best_s));
+                history.push(Trial {
+                    index: t,
+                    best_seconds: best_s,
+                    status: TrialStatus::Ok,
+                });
             }
             Err(_) => {
                 // deploy failure (e.g. workspace OOM) — rejected trial
-                history.push((t, best_s));
+                history.push(Trial {
+                    index: t,
+                    best_seconds: best_s,
+                    status: TrialStatus::Rejected,
+                });
             }
         }
     }
@@ -211,6 +265,24 @@ mod tests {
         let t = targets::by_name("esp32").unwrap();
         let base = Schedule::new(Family::DefaultX86, Layout::Nchw);
         assert!(tune(&*b, &g, &*t, base, quick(5)).is_err());
+    }
+
+    #[test]
+    fn history_records_per_trial_status() {
+        let g = tiny_conv();
+        let b = backends::by_name("tvmaot").unwrap();
+        let t = targets::by_name("stm32f7").unwrap();
+        let base = Schedule::new(Family::DefaultX86, Layout::Nchw);
+        let r = tune(&*b, &g, &*t, base, quick(20)).unwrap();
+        assert_eq!(r.history.len(), r.trials);
+        for (i, tr) in r.history.iter().enumerate() {
+            assert_eq!(tr.index, i);
+            assert_eq!(tr.status, TrialStatus::Ok);
+        }
+        // best-so-far is monotone non-increasing
+        for w in r.history.windows(2) {
+            assert!(w[1].best_seconds <= w[0].best_seconds);
+        }
     }
 
     #[test]

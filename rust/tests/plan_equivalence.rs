@@ -1,0 +1,343 @@
+//! Plan-vs-interpreter equivalence: `ExecPlan` (compile-once hot
+//! path) must produce bit-identical outputs and identical `ExecStats`
+//! versus the reference interpreter (`mcu::execute`) for every
+//! schedule family/layout, for i16-legalized programs, across
+//! repeated `run` calls on one plan (stale-scratch regression), and
+//! for arbitrary random data-movement programs (prop framework).
+
+use mlonmcu::backends::builder::{lower, LowerOpts};
+use mlonmcu::backends::planner::{plan, PlannerKind};
+use mlonmcu::graph::model::testutil::{tiny_conv, tiny_mlp};
+use mlonmcu::isa;
+use mlonmcu::kernels::{self, KernelLib};
+use mlonmcu::mcu::{execute, ExecOpts, ExecPlan, McuSpec, MemSystem};
+use mlonmcu::prop::{check, no_shrink, Config};
+use mlonmcu::schedules::{Family, Layout, Schedule};
+use mlonmcu::tensor::DType;
+use mlonmcu::tinyir::*;
+use mlonmcu::util::XorShift64;
+
+fn etiss_spec() -> McuSpec {
+    McuSpec {
+        name: "etiss",
+        isa: &isa::RV32GC,
+        clock_mhz: 100.0,
+        flash_total: u64::MAX / 2,
+        flash_reserved: 0,
+        ram_total: u64::MAX / 2,
+        ram_reserved: 0,
+        memsys: MemSystem::ideal(),
+    }
+}
+
+/// All five lowerings of a graph: TFLM reference + the four Table V
+/// schedule families/layouts (x86 ones i16-legalized).
+fn lowerings(g: &mlonmcu::graph::Graph) -> Vec<(String, Program)> {
+    let mut out = Vec::new();
+    let mut lowered = |label: &str, lib, legalize, planner| {
+        let mut p = lower(
+            g,
+            label,
+            LowerOpts { lib, legalize_i16: legalize, transform_input: legalize },
+        )
+        .unwrap();
+        plan(&mut p, planner);
+        out.push((label.to_string(), p));
+    };
+    lowered("tflm", KernelLib::TflmRef, false, PlannerKind::GreedyArena);
+    for (fam, lay, planner) in [
+        (Family::DefaultX86, Layout::Nhwc, PlannerKind::StorageTokens),
+        (Family::DefaultX86, Layout::Nchw, PlannerKind::UsmpInterval),
+        (Family::Arm, Layout::Nhwc, PlannerKind::GreedyArena),
+        (Family::Arm, Layout::Nchw, PlannerKind::StorageTokens),
+    ] {
+        let s = Schedule::new(fam, lay);
+        lowered(
+            &format!("{fam:?}-{lay:?}"),
+            KernelLib::Tvm(s),
+            s.legalizes_to_i16(),
+            planner,
+        );
+    }
+    out
+}
+
+fn assert_equivalent(label: &str, p: &Program, input: &[i8]) {
+    let spec = etiss_spec();
+    let (ref_out, ref_stats) =
+        execute(p, &spec, input, ExecOpts::default()).unwrap();
+    let exec_plan = ExecPlan::compile(p, &spec).unwrap();
+    let (out, stats) = exec_plan.run(p, input).unwrap();
+    assert_eq!(out, ref_out, "{label}: outputs diverged");
+    assert_eq!(stats, ref_stats, "{label}: stats diverged");
+    // cost-only accounting is the same pre-summed struct
+    let (empty, dry) =
+        execute(p, &spec, input, ExecOpts { compute: false }).unwrap();
+    assert!(empty.is_empty());
+    assert_eq!(exec_plan.stats(), dry, "{label}: cost-only stats diverged");
+}
+
+#[test]
+fn plan_matches_interpreter_across_schedules() {
+    let g = tiny_conv();
+    let input: Vec<i8> = (0..32).map(|x| (x as i8).wrapping_mul(23)).collect();
+    for (label, p) in lowerings(&g) {
+        assert_equivalent(&label, &p, &input);
+    }
+}
+
+#[test]
+fn plan_matches_interpreter_on_multi_op_model() {
+    let g = tiny_mlp();
+    let n = 8 * 8 * 2;
+    let input: Vec<i8> =
+        (0..n).map(|x| ((x * 37 + 5) % 256) as i8).collect();
+    for (label, p) in lowerings(&g) {
+        assert_equivalent(&label, &p, &input);
+    }
+}
+
+#[test]
+fn repeated_runs_have_no_stale_scratch() {
+    let g = tiny_mlp();
+    let spec = etiss_spec();
+    let (label, p) = lowerings(&g).remove(2); // x86-nchw, legalized
+    let exec_plan = ExecPlan::compile(&p, &spec).unwrap();
+    let n = 8 * 8 * 2;
+    for round in 0u8..4 {
+        let input: Vec<i8> = (0..n)
+            .map(|x| ((x * 13 + round as usize * 91) % 256) as i8)
+            .collect();
+        let (ref_out, _) =
+            execute(&p, &spec, &input, ExecOpts::default()).unwrap();
+        let (out, _) = exec_plan.run(&p, &input).unwrap();
+        assert_eq!(out, ref_out, "{label}: round {round} diverged");
+    }
+}
+
+// --------------------------------------------- hand-built programs --
+
+fn buf(name: &str, elems: usize, dtype: DType) -> BufferDecl {
+    BufferDecl {
+        name: name.into(),
+        size: elems * dtype.size(),
+        dtype,
+        offset: None,
+        first_use: 0,
+        last_use: 0,
+    }
+}
+
+fn finish(mut p: Program) -> Program {
+    p.recompute_lifetimes();
+    plan(&mut p, PlannerKind::GreedyArena);
+    p
+}
+
+/// AvgPool feeding a (self-)Add with a fused ReLU and an i16 output.
+fn avgpool_add_program() -> Program {
+    finish(Program {
+        name: "pool_add".into(),
+        buffers: vec![
+            buf("in", 32, DType::I8),
+            buf("pool", 8, DType::I8),
+            buf("add", 8, DType::I16),
+        ],
+        consts: vec![],
+        calls: vec![
+            KernelCall {
+                kind: KernelKind::AvgPool2D {
+                    ih: 4,
+                    iw: 4,
+                    c: 2,
+                    oh: 2,
+                    ow: 2,
+                    fh: 2,
+                    fw: 2,
+                    stride: (2, 2),
+                },
+                inputs: vec![Operand::Buf(0)],
+                consts: vec![],
+                output: 1,
+                cost: kernels::pool_cost(32, 8),
+                origin: "pool".into(),
+            },
+            KernelCall {
+                kind: KernelKind::Add {
+                    elems: 8,
+                    s_a: 0.3,
+                    zp_a: -2,
+                    s_b: 0.3,
+                    zp_b: -2,
+                    s_o: 0.5,
+                    zp_o: 3,
+                    act: 1,
+                },
+                inputs: vec![Operand::Buf(1), Operand::Buf(1)],
+                consts: vec![],
+                output: 2,
+                cost: kernels::add_cost(8),
+                origin: "add".into(),
+            },
+        ],
+        input: 0,
+        output: 2,
+        arena_size: 0,
+        workspace_size: 0,
+    })
+}
+
+/// A lone depthwise conv with SAME padding and nonzero zero-points.
+fn dwconv_program() -> Program {
+    finish(Program {
+        name: "dw".into(),
+        buffers: vec![buf("in", 32, DType::I8), buf("out", 32, DType::I8)],
+        consts: vec![
+            ConstDecl {
+                name: "w".into(),
+                data: (0..18u32).map(|x| ((x * 29 + 7) % 255) as u8).collect(),
+                dtype: DType::I8,
+            },
+            ConstDecl {
+                name: "b".into(),
+                data: [900i32, -450]
+                    .iter()
+                    .flat_map(|v| v.to_le_bytes())
+                    .collect(),
+                dtype: DType::I32,
+            },
+        ],
+        calls: vec![KernelCall {
+            kind: KernelKind::DwConv2D {
+                ih: 4,
+                iw: 4,
+                c: 2,
+                oh: 4,
+                ow: 4,
+                kh: 3,
+                kw: 3,
+                stride: (1, 1),
+                padding: 0,
+                requant: Requant {
+                    multiplier: 0.07,
+                    zp_in: 1,
+                    zp_out: -5,
+                    act: 0,
+                },
+            },
+            inputs: vec![Operand::Buf(0)],
+            consts: vec![0, 1],
+            output: 1,
+            cost: kernels::dwconv2d_cost(KernelLib::TflmRef, 4, 4, 2, 3, 3),
+            origin: "dw".into(),
+        }],
+        input: 0,
+        output: 1,
+        arena_size: 0,
+        workspace_size: 0,
+    })
+}
+
+#[test]
+fn plan_matches_interpreter_on_handbuilt_kernels() {
+    let input: Vec<i8> = (0..32).map(|x| (x as i8).wrapping_mul(19)).collect();
+    assert_equivalent("pool_add", &avgpool_add_program(), &input);
+    assert_equivalent("dwconv", &dwconv_program(), &input);
+}
+
+// ------------------------------------------------- random programs --
+
+/// Random chains of Copy/Transform/Add/Softmax over mixed-dtype
+/// buffers of a common element count, plus a random input vector.
+fn random_case(rng: &mut XorShift64) -> (Program, Vec<i8>) {
+    let n = rng.range(4, 40);
+    let n_calls = rng.range(1, 10);
+    let dts = [DType::I8, DType::I16, DType::I32];
+    let mut buffers = vec![buf("in", n, DType::I8)];
+    let mut calls = Vec::new();
+    for i in 0..n_calls {
+        let src = rng.range(0, buffers.len() - 1);
+        let sdt = buffers[src].dtype;
+        let dt = *rng.choose(&dts);
+        buffers.push(buf(&format!("b{i}"), n, dt));
+        let dst = buffers.len() - 1;
+        let (kind, inputs, cost) = match rng.range(0, 2) {
+            0 if sdt == dt => (
+                KernelKind::Copy { elems: n },
+                vec![Operand::Buf(src)],
+                kernels::copy_cost(n as u64),
+            ),
+            0 => (
+                KernelKind::Transform { elems: n, widen: dt.size() > sdt.size() },
+                vec![Operand::Buf(src)],
+                kernels::transform_cost(n as u64),
+            ),
+            1 => {
+                let src2 = rng.range(0, buffers.len() - 2);
+                (
+                    KernelKind::Add {
+                        elems: n,
+                        s_a: 0.25 + rng.f64(),
+                        zp_a: rng.range(0, 8) as i32 - 4,
+                        s_b: 0.25 + rng.f64(),
+                        zp_b: rng.range(0, 8) as i32 - 4,
+                        s_o: 0.25 + rng.f64(),
+                        zp_o: rng.range(0, 8) as i32 - 4,
+                        act: rng.range(0, 1) as i64,
+                    },
+                    vec![Operand::Buf(src), Operand::Buf(src2)],
+                    kernels::add_cost(n as u64),
+                )
+            }
+            _ => (
+                KernelKind::Softmax {
+                    elems: n,
+                    s_in: 0.05 + rng.f64() * 0.2,
+                    zp_in: rng.range(0, 8) as i32 - 4,
+                },
+                vec![Operand::Buf(src)],
+                kernels::softmax_cost(n as u64),
+            ),
+        };
+        calls.push(KernelCall {
+            kind,
+            inputs,
+            consts: vec![],
+            output: dst,
+            cost,
+            origin: format!("c{i}"),
+        });
+    }
+    let out = buffers.len() - 1;
+    let p = finish(Program {
+        name: "prop".into(),
+        buffers,
+        consts: vec![],
+        calls,
+        input: 0,
+        output: out,
+        arena_size: 0,
+        workspace_size: 0,
+    });
+    let input: Vec<i8> = (0..n).map(|_| (rng.next_u64() & 0xff) as i8).collect();
+    (p, input)
+}
+
+#[test]
+fn random_programs_agree_with_interpreter() {
+    check(
+        Config { cases: 80, seed: 0x91A4 },
+        random_case,
+        no_shrink,
+        |(p, input)| {
+            let spec = etiss_spec();
+            let (ref_out, ref_stats) =
+                execute(p, &spec, input, ExecOpts::default()).unwrap();
+            let exec_plan = ExecPlan::compile(p, &spec).unwrap();
+            // two runs on one plan: both must match (scratch reuse)
+            let (a, sa) = exec_plan.run(p, input).unwrap();
+            let (b, sb) = exec_plan.run(p, input).unwrap();
+            a == ref_out && b == ref_out && sa == ref_stats && sb == ref_stats
+        },
+    );
+}
