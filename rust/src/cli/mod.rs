@@ -33,12 +33,14 @@ USAGE:
   mlonmcu targets ls                      list targets (Table II)
   mlonmcu flow run -m M [-m M2..] -b B.. -t T..
           [--schedule default-nchw ..] [--tune]
-          [-f validate ..] [--parallel N] [-c key=val ..]
+          [-f validate ..] [--parallel N] [--workers N] [-c key=val ..]
           [--postprocess filter_cols:a,b ..] [--no-cache]
           [--cache-dir DIR] [--cache-budget MB]
   mlonmcu cache stats|gc|clear            manage the environment cache
           [--cache-dir DIR] [--cache-budget MB] [-c key=val ..]
   mlonmcu report [--session N]            reprint a session report
+  mlonmcu worker --queue DIR --home DIR [-c key=val ..]
+                                          (internal) dispatch worker
 
 FLAGS:
   --no-cache       disable all artifact-cache tiers: every run executes
@@ -47,6 +49,11 @@ FLAGS:
                    (default: $ENV/cache, config key paths.cache)
   --cache-budget   store size budget in MB before LRU GC
                    (default: 512, config key cache.budget_mb)
+  --workers        shard Load/Tune/Build across N `mlonmcu worker`
+                   child processes exchanging artifacts through the
+                   env store (default: 0 = in-process; config key
+                   dispatch.workers). Reports are byte-identical to a
+                   serial run.
 ";
 
 /// Entry point for the binary.
@@ -65,6 +72,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         "flow" => cmd_flow(&rest),
         "cache" => cmd_cache(&rest),
         "report" => cmd_report(&rest),
+        "worker" => cmd_worker(&rest),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(0)
@@ -153,6 +161,7 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
             ("-c", true), ("--config", true),
             ("--postprocess", true),
             ("--parallel", true),
+            ("--workers", true),
             ("--tune", false),
             ("--no-cache", false),
             ("--cache-dir", true),
@@ -171,6 +180,11 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
         .map(|s| s.parse::<usize>().context("--parallel"))
         .transpose()?
         .unwrap_or(env.get_i64("run", "parallel", 2) as usize);
+    let workers = p
+        .one("--workers")
+        .map(|s| s.parse::<usize>().context("--workers"))
+        .transpose()?
+        .unwrap_or_else(|| env.dispatch_workers());
 
     let mut matrix = RunMatrix::new()
         .models(models)
@@ -187,6 +201,7 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
     let opts = RunOptions {
         parallel,
         use_cache: !p.flag("--no-cache"),
+        workers,
     };
     let mut report = session.run_matrix_opts(&matrix, opts)?;
     let artifacts =
@@ -197,12 +212,19 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
     println!("{}", report.to_text());
     let t = *session.last_timing.lock().unwrap();
     println!(
-        "session {} done: {} runs in {:.1}s wall ({} workers); \
+        "session {} done: {} runs in {:.1}s wall ({} thread(s){}); \
          simulated device time {:.1}s; artifacts in {}",
         session.id,
         t.runs,
         t.wall_s,
         parallel,
+        // actual fleet size, not the request: 0 when dispatch fell
+        // back to in-process execution (no store, --no-cache)
+        if t.worker_procs > 0 {
+            format!(", {} worker process(es)", t.worker_procs)
+        } else {
+            String::new()
+        },
         t.sim_s,
         session.dir.display()
     );
@@ -299,6 +321,30 @@ fn cmd_cache(rest: &[String]) -> Result<i32> {
     Ok(0)
 }
 
+/// `mlonmcu worker` — internal subcommand spawned by the sharded
+/// dispatcher: drain the Load/Tune/Build work queue at `--queue`,
+/// exchanging artifacts through the env store of `--home`.
+fn cmd_worker(rest: &[String]) -> Result<i32> {
+    let p = Parsed::parse(
+        rest,
+        &[
+            ("--queue", true),
+            ("--home", true),
+            ("-c", true),
+            ("--config", true),
+        ],
+    )?;
+    let queue = p
+        .one("--queue")
+        .context("worker needs --queue DIR (internal subcommand)")?;
+    let home = p
+        .one("--home")
+        .context("worker needs --home DIR (internal subcommand)")?;
+    let env = Environment::load_or_template(std::path::Path::new(home))?
+        .with_overrides(&p.all(&["-c", "--config"]))?;
+    crate::session::dispatch::worker_main(std::path::Path::new(queue), &env)
+}
+
 fn cmd_report(rest: &[String]) -> Result<i32> {
     let p = Parsed::parse(rest, &[("--session", true)])?;
     let env = Environment::discover()?;
@@ -359,6 +405,19 @@ mod tests {
         assert!(main_with_args(&args("frobnicate")).is_err());
         assert!(main_with_args(&["cache".into()]).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_requires_queue_and_home() {
+        let err = main_with_args(&["worker".into()]).unwrap_err();
+        assert!(err.to_string().contains("--queue"), "{err}");
+        let err = main_with_args(&[
+            "worker".into(),
+            "--queue".into(),
+            "/nonexistent".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("--home"), "{err}");
     }
 
     #[test]

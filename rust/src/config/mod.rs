@@ -38,6 +38,13 @@ parallel = 2
 validate_atol = 1
 seed = 7
 
+[dispatch]
+# > 0: shard Load/Tune/Build across this many `mlonmcu worker`
+# child processes (artifacts exchanged through the env store)
+workers = 0
+# lease heartbeat timeout before a worker's claim is reclaimed
+lease_ms = 5000
+
 [tune]
 trials = 600
 
@@ -65,6 +72,22 @@ impl Environment {
         Ok(Environment {
             root: dir.to_path_buf(),
             doc,
+            overrides: BTreeMap::new(),
+        })
+    }
+
+    /// Load `dir`'s environment, or — when it has no
+    /// `environment.toml` (e.g. the implicit default environment
+    /// `discover` synthesizes) — the built-in template rooted there.
+    /// Dispatch worker processes resolve their `--home` this way so a
+    /// parent running in an implicit environment can still shard.
+    pub fn load_or_template(dir: &Path) -> Result<Environment> {
+        if dir.join("environment.toml").is_file() {
+            return Environment::load(dir);
+        }
+        Ok(Environment {
+            root: dir.to_path_buf(),
+            doc: TomlDoc::parse(DEFAULT_TEMPLATE).expect("builtin template"),
             overrides: BTreeMap::new(),
         })
     }
@@ -157,6 +180,39 @@ impl Environment {
             Some(TomlValue::Str(s)) => !matches!(s.as_str(), "false" | "0" | "no"),
             Some(_) | None => true,
         }
+    }
+
+    /// Default worker-process count of the sharded dispatcher
+    /// (`dispatch.workers`, or the `--workers` CLI flag). 0 keeps
+    /// matrix execution in-process.
+    pub fn dispatch_workers(&self) -> usize {
+        self.get_i64("dispatch", "workers", 0).max(0) as usize
+    }
+
+    /// Lease heartbeat timeout of the dispatch work queue in
+    /// milliseconds (`dispatch.lease_ms`): a claimed task whose lease
+    /// goes this long without a heartbeat is reclaimed by another
+    /// worker. Clamped to a sane range.
+    pub fn dispatch_lease_ms(&self) -> u64 {
+        self.get_i64("dispatch", "lease_ms", 5000).clamp(50, 600_000) as u64
+    }
+
+    /// Override the binary spawned as `mlonmcu worker`
+    /// (`dispatch.worker_bin`). Defaults to the current executable;
+    /// tests point it at the real CLI binary because their own
+    /// executable is the test harness.
+    pub fn dispatch_worker_bin(&self) -> Option<PathBuf> {
+        let s = self.get_str("dispatch", "worker_bin", "");
+        (!s.is_empty()).then(|| PathBuf::from(s))
+    }
+
+    /// Fault-injection hook for the conformance tests
+    /// (`dispatch.fault_marker`): the first worker to win creating
+    /// this marker file dies mid-Build with its lease held, simulating
+    /// a SIGKILLed worker. Unset in normal operation.
+    pub fn dispatch_fault_marker(&self) -> Option<PathBuf> {
+        let s = self.get_str("dispatch", "fault_marker", "");
+        (!s.is_empty()).then(|| PathBuf::from(s))
     }
 
     /// Size budget of the environment store in bytes

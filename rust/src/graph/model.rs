@@ -301,9 +301,11 @@ impl Graph {
     }
 }
 
-#[cfg(test)]
 pub mod testutil {
-    //! Tiny hand-built graphs for unit tests across the crate.
+    //! Tiny hand-built graphs shared by unit tests across the crate,
+    //! the integration tests, the `gen_model` example and the CI
+    //! jobs that seed environments. Not `#[cfg(test)]`-gated: the
+    //! example and `tests/` build the library without that cfg.
     use super::*;
     use crate::graph::op::*;
 

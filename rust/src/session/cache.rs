@@ -333,6 +333,15 @@ impl ArtifactCache {
         inner.stats.entries = inner.map.len();
     }
 
+    /// Does the memory tier hold `key`? Pure probe — no hit/miss
+    /// counting, no LRU touch. The sharded dispatcher uses it to tell
+    /// memory-tier hits from env-store hits when reconstructing the
+    /// serial-equivalent counters (a warm same-session rerun is served
+    /// from memory in a serial pass, so it must not count disk hits).
+    pub fn contains_mem(&self, key: StageKey) -> bool {
+        self.enabled && self.inner.lock().unwrap().map.contains_key(&key.0)
+    }
+
     /// Count `n` extra hits for consumers that shared one deduplicated
     /// stage execution (the scheduler merges identical stage tasks, so
     /// only one of them performs the `lookup`).

@@ -1,0 +1,1047 @@
+//! Sharded multi-process matrix executor.
+//!
+//! `execute_sharded` promotes the in-process ready-queue scheduler to
+//! a fleet of `mlonmcu worker` child processes. The parent plans the
+//! same deduplicated stage DAG as the serial scheduler
+//! (`scheduler::plan`), publishes each Load/Tune/Build task as a file
+//! in a session-local work queue, and spawns N workers that claim
+//! tasks, execute them, and exchange every artifact exclusively
+//! through the verified environment store (`store.rs` /
+//! `persist.rs`). The per-run tails (Compile → Run → Postprocess)
+//! then replay in the parent through the ordinary scheduler with a
+//! *worker overlay*, which charges each worker's host seconds and
+//! execution attribution to the same run a serial pass would have
+//! charged — serial and sharded runs of one matrix therefore produce
+//! byte-identical reports (proven by `tests/dispatch_equivalence.rs`).
+//!
+//! ## Queue layout (under `<session>/queue/<n>/`)
+//!
+//! ```text
+//! task-<id>.json        one Load/Tune/Build task (spec slice, key,
+//!                       dep ids; "format" = persist::FORMAT_VERSION)
+//! task-<id>.lease       claim marker: "<pid>-<nonce>", heartbeat by
+//!                       rewriting; create_new is the claim
+//! task-<id>.done.json   outcome: status, executed, store lookup,
+//!                       host seconds (written tmp-then-rename)
+//! ```
+//!
+//! ## Fault tolerance
+//!
+//! * A worker killed mid-task leaves a lease whose pid is dead: any
+//!   live worker (and the parent) reclaims it immediately via
+//!   `util::proc::pid_alive`, or after the heartbeat timeout
+//!   (`dispatch.lease_ms`) on platforms without /proc.
+//! * The parent itself drains the queue alongside the workers, so the
+//!   matrix completes even if every child dies.
+//! * Reclaim races can at worst execute a task twice: artifacts are
+//!   content-addressed and done-markers rename atomically, so
+//!   duplicates are idempotent.
+//! * A task whose store artifact vanishes before the tail pass is
+//!   recomputed locally by the scheduler's overlay fallthrough.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Environment;
+use crate::data::Json;
+use crate::features::Features;
+use crate::session::cache::{
+    Artifact, ArtifactCache, CachedStage, StageKey, TuneOutcome, TuneParams,
+};
+use crate::session::persist;
+use crate::session::run::{self, RunRecord, RunSpec};
+use crate::session::scheduler::{
+    self, Overlay, RunOptions, StageExecCounts, StageKind, TaskGraph,
+    WorkerOutcome,
+};
+use crate::session::store::{write_atomic, EnvStore, StoreLookup};
+use crate::session::Session;
+use crate::util::proc::stale_owner_file;
+use crate::util::Stopwatch;
+
+/// Counters of one sharded invocation, reconstructed from the worker
+/// outcomes so `SessionTiming` and the report note carry exactly the
+/// numbers an equivalent serial pass would have produced.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DispatchCounters {
+    pub hits: usize,
+    pub misses: usize,
+    pub disk_hits: usize,
+    pub disk_misses: usize,
+    pub verify_fails: usize,
+    pub execs: StageExecCounts,
+    /// Worker child processes that actually spawned.
+    pub workers_spawned: usize,
+}
+
+/// Store-lookup outcome a worker observed for its own task key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Lookup {
+    Hit,
+    Miss,
+    Corrupt,
+    /// Task never consulted the store (upstream failure propagated).
+    None,
+}
+
+impl Lookup {
+    fn name(self) -> &'static str {
+        match self {
+            Lookup::Hit => "hit",
+            Lookup::Miss => "miss",
+            Lookup::Corrupt => "corrupt",
+            Lookup::None => "none",
+        }
+    }
+
+    fn from_name(s: &str) -> Lookup {
+        match s {
+            "hit" => Lookup::Hit,
+            "miss" => Lookup::Miss,
+            "corrupt" => Lookup::Corrupt,
+            _ => Lookup::None,
+        }
+    }
+}
+
+/// One published stage task, as read back from the queue.
+struct QueueTask {
+    id: usize,
+    kind: CachedStage,
+    key: StageKey,
+    spec: RunSpec,
+    /// (task id, kind, key) of each dependency, id-ascending — the
+    /// order the serial scheduler picks failures in.
+    deps: Vec<(usize, CachedStage, StageKey)>,
+}
+
+/// Outcome record of one task (the `.done.json` payload).
+struct DoneRecord {
+    ok: bool,
+    /// Failing stage name ("load"/"tune"/"build"), possibly upstream.
+    stage: String,
+    error: String,
+    executed: bool,
+    lookup: Lookup,
+    secs: f64,
+}
+
+impl DoneRecord {
+    fn ok(executed: bool, lookup: Lookup, secs: f64) -> DoneRecord {
+        DoneRecord {
+            ok: true,
+            stage: String::new(),
+            error: String::new(),
+            executed,
+            lookup,
+            secs,
+        }
+    }
+
+    fn failed(stage: &str, error: String, lookup: Lookup, secs: f64) -> DoneRecord {
+        DoneRecord {
+            ok: false,
+            stage: stage.to_string(),
+            error,
+            executed: false,
+            lookup,
+            secs,
+        }
+    }
+
+    fn to_json(&self, id: usize) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("status", Json::Str(if self.ok { "ok" } else { "failed" }.into())),
+            ("stage", Json::Str(self.stage.clone())),
+            ("error", Json::Str(self.error.clone())),
+            ("executed", Json::Bool(self.executed)),
+            ("lookup", Json::Str(self.lookup.name().into())),
+            ("secs", Json::Num(self.secs)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<DoneRecord> {
+        Some(DoneRecord {
+            ok: j.get("status")?.as_str()? == "ok",
+            stage: j.get("stage")?.as_str()?.to_string(),
+            error: j.get("error")?.as_str()?.to_string(),
+            executed: matches!(j.get("executed"), Some(Json::Bool(true))),
+            lookup: Lookup::from_name(j.get("lookup")?.as_str()?),
+            secs: j.get("secs")?.as_f64()?,
+        })
+    }
+}
+
+/// Everything a drain loop (worker process or assisting parent)
+/// needs to claim and execute queue tasks.
+struct WorkerCtx<'a> {
+    queue: &'a Path,
+    env: &'a Environment,
+    store: Arc<EnvStore>,
+    tune: TuneParams,
+    lease_ms: u64,
+    /// Fault-injection hook (`dispatch.fault_marker`): die with the
+    /// lease held on the first Build claim that wins the marker file.
+    /// Only armed in worker processes, never in the parent.
+    fault_marker: Option<PathBuf>,
+    tasks: Vec<QueueTask>,
+}
+
+// ------------------------------------------------------------ parent --
+
+/// Execute `specs` by sharding Load/Tune/Build across worker
+/// processes, then replay the per-run tails in-process. Returns the
+/// records (spec order) and serial-equivalent counters.
+pub fn execute_sharded(
+    session: &Session,
+    specs: &[RunSpec],
+    cache: &ArtifactCache,
+    opts: RunOptions,
+) -> Result<(Vec<RunRecord>, DispatchCounters)> {
+    let env = session.env();
+    let store = cache
+        .env_store()
+        .cloned()
+        .context("sharded dispatch requires the environment store")?;
+    let tune = scheduler::tune_params(env);
+    let (model_fp, model_bytes) = scheduler::model_fingerprints(session, specs);
+    let graph = scheduler::plan(specs, tune, &model_fp, true);
+    let qtasks = queue_tasks_from_graph(&graph, specs);
+
+    let queue = next_queue_dir(&session.dir)?;
+    publish(&queue, &qtasks)?;
+
+    let n_stage = graph.stage_task_count();
+    let workers = opts.workers.min(n_stage.max(1));
+    crate::log_info!(
+        "session {}: dispatching {} stage task(s) to {} worker process(es) \
+         (queue {})",
+        session.id,
+        n_stage,
+        workers,
+        queue.display()
+    );
+    let mut children = Reaper(spawn_workers(env, &queue, workers));
+    let spawned = children.0.len();
+    // (fleet is killed + reaped on drop, even on early error returns)
+    if spawned < workers {
+        crate::log_warn!(
+            "dispatch: only {spawned} of {workers} worker(s) spawned; \
+             the parent drains the rest in-process"
+        );
+    }
+
+    // supervise the fleet: reap exited children (so their pids read
+    // as dead), break stale leases so live workers take over a killed
+    // worker's task, and drain the queue in-process once no children
+    // remain — the matrix completes even if every worker dies
+    let ctx = WorkerCtx {
+        queue: &queue,
+        env,
+        store,
+        tune,
+        lease_ms: env.dispatch_lease_ms(),
+        fault_marker: None,
+        // the parent already holds the graph: no need to round-trip
+        // its own queue files (workers parse them via read_queue_tasks)
+        tasks: qtasks,
+    };
+    supervise(&ctx, &mut children)?;
+    drop(children); // all tasks done: reap (and stop) the fleet
+
+    // worker outcomes -> overlay + serial-equivalent counters
+    let mut overlay = Overlay::new();
+    let mut counters = DispatchCounters { workers_spawned: spawned, ..Default::default() };
+    for (id, task) in graph.tasks.iter().enumerate() {
+        if task.kind == StageKind::Tail {
+            continue;
+        }
+        let done = read_done(&queue, id)
+            .with_context(|| format!("queue task {id} finished without an outcome"))?;
+        let key = task.key.expect("stage tasks are keyed");
+        let shared = task.consumers.len() - 1;
+        if done.ok {
+            if done.executed {
+                counters.misses += 1;
+                match done.lookup {
+                    Lookup::Miss => counters.disk_misses += 1,
+                    Lookup::Corrupt => counters.verify_fails += 1,
+                    _ => {}
+                }
+                match task.kind {
+                    StageKind::Load => counters.execs.loads += 1,
+                    StageKind::Tune => counters.execs.tunes += 1,
+                    StageKind::Build => counters.execs.builds += 1,
+                    StageKind::Tail => {}
+                }
+            } else {
+                counters.hits += 1;
+                // a serial pass serves what this session already holds
+                // in memory from the memory tier, not the store — only
+                // count a disk hit when memory could not have served it
+                if !cache.contains_mem(key) {
+                    counters.disk_hits += 1;
+                }
+            }
+            counters.hits += shared;
+        } else {
+            match done.lookup {
+                Lookup::Miss => {
+                    counters.misses += 1;
+                    counters.disk_misses += 1;
+                }
+                Lookup::Corrupt => {
+                    counters.misses += 1;
+                    counters.verify_fails += 1;
+                }
+                // propagated upstream failures never consulted the
+                // store and count nothing, exactly like the serial
+                // scheduler's early return
+                _ => {}
+            }
+        }
+        overlay.insert(
+            key.0,
+            WorkerOutcome {
+                executed: done.executed,
+                secs: done.secs,
+                failed: (!done.ok)
+                    .then(|| (intern_stage(&done.stage, task.kind), done.error)),
+            },
+        );
+    }
+
+    // deterministic tail pass: the same scheduler over the *same*
+    // planned graph (no re-read/re-hash of the models), stages served
+    // from the cache tiers with worker attribution
+    let (records, local_execs) = scheduler::execute_planned(
+        session,
+        specs,
+        cache,
+        opts,
+        &graph,
+        &model_bytes,
+        tune,
+        Some(&overlay),
+    )?;
+    // stages the store lost between worker write and tail pass were
+    // recomputed locally: count those executions too
+    counters.execs.loads += local_execs.loads;
+    counters.execs.tunes += local_execs.tunes;
+    counters.execs.builds += local_execs.builds;
+    Ok((records, counters))
+}
+
+/// Map a worker-reported stage name back to the interned form used by
+/// `RunStatus`; unknown names fall back to the task's own kind.
+fn intern_stage(name: &str, kind: StageKind) -> &'static str {
+    match name {
+        "load" => "load",
+        "tune" => "tune",
+        "build" => "build",
+        _ => kind.stage_name(),
+    }
+}
+
+/// First free `<session>/queue/<n>` (repeated `run_matrix` calls on
+/// one session each get a fresh queue).
+fn next_queue_dir(session_dir: &Path) -> Result<PathBuf> {
+    let root = session_dir.join("queue");
+    fs::create_dir_all(&root)?;
+    let mut n = 0usize;
+    loop {
+        let dir = root.join(format!("{n}"));
+        if !dir.exists() {
+            fs::create_dir_all(&dir)?;
+            return Ok(dir);
+        }
+        n += 1;
+    }
+}
+
+/// Project the planned graph's Load/Tune/Build tasks (tails stay in
+/// the parent) into queue tasks. Ids are graph indices, so
+/// done-markers map straight back onto the planned DAG; deps come out
+/// id-ascending because `plan` sorts them.
+fn queue_tasks_from_graph(graph: &TaskGraph, specs: &[RunSpec]) -> Vec<QueueTask> {
+    graph
+        .tasks
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.kind != StageKind::Tail)
+        .map(|(id, t)| QueueTask {
+            id,
+            kind: t.kind.cached_stage(),
+            key: t.key.expect("stage tasks are keyed"),
+            spec: specs[t.spec_idx].clone(),
+            deps: t
+                .deps
+                .iter()
+                .map(|&d| {
+                    let dep = &graph.tasks[d];
+                    (
+                        d,
+                        dep.kind.cached_stage(),
+                        dep.key.expect("stage deps are keyed"),
+                    )
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+/// Publish every stage task as a queue file for the worker processes.
+fn publish(queue: &Path, tasks: &[QueueTask]) -> Result<()> {
+    for t in tasks {
+        let deps = t
+            .deps
+            .iter()
+            .map(|&(d, kind, key)| {
+                Json::obj(vec![
+                    ("id", Json::Num(d as f64)),
+                    ("kind", Json::Str(kind.name().into())),
+                    ("key", Json::Str(key.hex())),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            // queue records ride the artifact format's version gate: a
+            // worker from another build refuses the queue instead of
+            // misreading it
+            ("format", Json::Num(persist::FORMAT_VERSION as f64)),
+            ("id", Json::Num(t.id as f64)),
+            ("kind", Json::Str(t.kind.name().into())),
+            ("key", Json::Str(t.key.hex())),
+            ("model", Json::Str(t.spec.model.clone())),
+            ("backend", Json::Str(t.spec.backend.clone())),
+            ("target", Json::Str(t.spec.target.clone())),
+            (
+                "schedule",
+                t.spec.schedule.clone().map(Json::Str).unwrap_or(Json::Null),
+            ),
+            ("tuned", Json::Bool(t.spec.tuned)),
+            (
+                "features",
+                Json::Arr(
+                    t.spec.features.names().into_iter().map(Json::Str).collect(),
+                ),
+            ),
+            ("deps", Json::Arr(deps)),
+        ]);
+        write_atomic(
+            &queue.join(format!("task-{}.json", t.id)),
+            doc.to_string().as_bytes(),
+        )?;
+    }
+    Ok(())
+}
+
+/// Spawn up to `n` worker children. Spawn failures degrade to fewer
+/// workers (the parent drains regardless), never to an error.
+fn spawn_workers(env: &Environment, queue: &Path, n: usize) -> Vec<Child> {
+    let bin = match env.dispatch_worker_bin() {
+        Some(p) => p,
+        None => match std::env::current_exe() {
+            Ok(p) => p,
+            Err(e) => {
+                crate::log_warn!("dispatch: current_exe unavailable ({e})");
+                return Vec::new();
+            }
+        },
+    };
+    let mut children = Vec::new();
+    for _ in 0..n {
+        let mut cmd = Command::new(&bin);
+        cmd.arg("worker")
+            .arg("--queue")
+            .arg(queue)
+            .arg("--home")
+            .arg(&env.root)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null()); // stderr inherited: worker logs stay visible
+        for (k, v) in &env.overrides {
+            cmd.arg("-c").arg(format!("{k}={v}"));
+        }
+        match cmd.spawn() {
+            Ok(c) => children.push(c),
+            Err(e) => {
+                crate::log_warn!(
+                    "dispatch: spawning worker {} failed: {e}",
+                    bin.display()
+                );
+                break;
+            }
+        }
+    }
+    children
+}
+
+/// Parent-side supervision loop: returns once every task has an
+/// outcome. While children live, the parent only reaps them and
+/// breaks stale leases (a killed worker's task is reclaimed by a live
+/// worker); once the fleet is gone it drains the remainder itself.
+fn supervise(ctx: &WorkerCtx, children: &mut Reaper) -> Result<()> {
+    loop {
+        // reap exited children so their pids read as dead everywhere
+        children.0.retain_mut(|c| !matches!(c.try_wait(), Ok(Some(_))));
+        if ctx.tasks.iter().all(|t| done_exists(ctx.queue, t.id)) {
+            return Ok(());
+        }
+        if children.0.is_empty() {
+            return drain(ctx);
+        }
+        for t in &ctx.tasks {
+            if !done_exists(ctx.queue, t.id)
+                && reclaim_if_stale(&lease_path(ctx.queue, t.id), ctx.lease_ms)
+            {
+                crate::log_warn!(
+                    "dispatch: reclaimed stale lease of task {}",
+                    t.id
+                );
+            }
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Kills + reaps the worker fleet on drop, so no codepath (including
+/// errors) leaks children or zombies.
+struct Reaper(Vec<Child>);
+
+impl Drop for Reaper {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+// ------------------------------------------------------------ worker --
+
+/// Entry point of the `mlonmcu worker` subcommand: drain the queue at
+/// `queue_dir`, exchanging artifacts through `env`'s store.
+pub fn worker_main(queue_dir: &Path, env: &Environment) -> Result<i32> {
+    let store = Arc::new(EnvStore::open(
+        &env.cache_dir(),
+        env.cache_budget_bytes(),
+    )?);
+    let ctx = WorkerCtx {
+        queue: queue_dir,
+        env,
+        store,
+        tune: scheduler::tune_params(env),
+        lease_ms: env.dispatch_lease_ms(),
+        fault_marker: env.dispatch_fault_marker(),
+        tasks: read_queue_tasks(queue_dir)?,
+    };
+    drain(&ctx)?;
+    Ok(0)
+}
+
+/// Parse every published task. Rejects queues written by a different
+/// artifact-format version and dangling dependency ids up front.
+fn read_queue_tasks(queue: &Path) -> Result<Vec<QueueTask>> {
+    let mut tasks: Vec<QueueTask> = Vec::new();
+    let dir = fs::read_dir(queue)
+        .with_context(|| format!("reading queue {}", queue.display()))?;
+    for f in dir.flatten() {
+        let name = f.file_name();
+        let Some(id) = name
+            .to_str()
+            .and_then(|n| n.strip_prefix("task-"))
+            .and_then(|n| n.strip_suffix(".json"))
+            .and_then(|n| n.parse::<usize>().ok())
+        else {
+            continue; // leases, done markers, tmp files
+        };
+        let doc = Json::parse_file(&f.path())
+            .with_context(|| format!("parsing queue task {id}"))?;
+        tasks.push(parse_task(id, &doc)?);
+    }
+    tasks.sort_by_key(|t| t.id);
+    // dangling dep = corrupt queue; better to refuse than to hang
+    for t in &tasks {
+        for &(d, _, _) in &t.deps {
+            if !tasks.iter().any(|o| o.id == d) {
+                bail!("queue task {} depends on missing task {d}", t.id);
+            }
+        }
+    }
+    Ok(tasks)
+}
+
+fn parse_task(id: usize, j: &Json) -> Result<QueueTask> {
+    let format = j.get("format").and_then(Json::as_i64).unwrap_or(-1);
+    if format != persist::FORMAT_VERSION as i64 {
+        bail!(
+            "queue task {id}: format {format} != {} (worker from a \
+             different build?)",
+            persist::FORMAT_VERSION
+        );
+    }
+    let str_field = |k: &str| -> Result<String> {
+        Ok(j.get(k)
+            .and_then(Json::as_str)
+            .with_context(|| format!("queue task {id}: missing '{k}'"))?
+            .to_string())
+    };
+    let kind = CachedStage::from_name(&str_field("kind")?)
+        .with_context(|| format!("queue task {id}: bad kind"))?;
+    let key = parse_key(j.get("key").and_then(Json::as_str))
+        .with_context(|| format!("queue task {id}: bad key"))?;
+    let features: Vec<String> = j
+        .get("features")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|v| v.as_str().map(str::to_string))
+        .collect();
+    let mut deps = Vec::new();
+    for d in j.get("deps").and_then(Json::as_arr).unwrap_or(&[]) {
+        let did = d
+            .get("id")
+            .and_then(Json::as_i64)
+            .with_context(|| format!("queue task {id}: bad dep id"))?;
+        let dkind = CachedStage::from_name(
+            d.get("kind").and_then(Json::as_str).unwrap_or(""),
+        )
+        .with_context(|| format!("queue task {id}: bad dep kind"))?;
+        let dkey = parse_key(d.get("key").and_then(Json::as_str))
+            .with_context(|| format!("queue task {id}: bad dep key"))?;
+        deps.push((did.max(0) as usize, dkind, dkey));
+    }
+    deps.sort_by_key(|&(d, _, _)| d);
+    Ok(QueueTask {
+        id,
+        kind,
+        key,
+        spec: RunSpec {
+            model: str_field("model")?,
+            backend: str_field("backend")?,
+            target: str_field("target")?,
+            schedule: j
+                .get("schedule")
+                .and_then(Json::as_str)
+                .map(str::to_string),
+            tuned: matches!(j.get("tuned"), Some(Json::Bool(true))),
+            features: Features::parse(&features)?,
+        },
+        deps,
+    })
+}
+
+fn parse_key(hex: Option<&str>) -> Option<StageKey> {
+    u64::from_str_radix(hex?, 16).ok().map(StageKey)
+}
+
+/// Claim/execute loop shared by worker processes and the assisting
+/// parent. Returns once every task has a done marker. A task outcome
+/// that cannot be published (disk full, unwritable queue) is a hard
+/// error — retrying would re-execute the stage forever.
+fn drain(ctx: &WorkerCtx) -> Result<()> {
+    loop {
+        let mut all_done = true;
+        let mut progressed = false;
+        for t in &ctx.tasks {
+            if done_exists(ctx.queue, t.id) {
+                continue;
+            }
+            all_done = false;
+            if !t.deps.iter().all(|&(d, _, _)| done_exists(ctx.queue, d)) {
+                continue;
+            }
+            match Lease::claim(ctx.queue, t.id, ctx.lease_ms) {
+                Some(_lease) => {
+                    execute_task(ctx, t)?;
+                    progressed = true;
+                    // done marker written; lease released on drop
+                }
+                None => {
+                    // claimed elsewhere: reclaim if its owner is dead
+                    // or stopped heartbeating
+                    if reclaim_if_stale(
+                        &lease_path(ctx.queue, t.id),
+                        ctx.lease_ms,
+                    ) {
+                        crate::log_warn!(
+                            "dispatch: reclaimed stale lease of task {}",
+                            t.id
+                        );
+                        progressed = true;
+                    }
+                }
+            }
+        }
+        if all_done {
+            return Ok(());
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_millis(15));
+        }
+    }
+}
+
+/// Execute one claimed task and write its done marker. Never panics
+/// out (stage panics become failed outcomes, scheduler-style); only
+/// an unpublishable outcome is an error.
+fn execute_task(ctx: &WorkerCtx, t: &QueueTask) -> Result<()> {
+    if t.kind == CachedStage::Build {
+        if let Some(marker) = &ctx.fault_marker {
+            let won = fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(marker)
+                .is_ok();
+            if won {
+                // fault injection (tests): die mid-Build, lease held,
+                // exactly like a SIGKILLed worker
+                std::process::exit(9);
+            }
+        }
+    }
+    let done = run_stage_task(ctx, t);
+    write_done_once(ctx.queue, t.id, &done)
+        .with_context(|| format!("publishing outcome of task {}", t.id))
+}
+
+/// Publish a done marker atomically, first-writer-wins: a duplicate
+/// execution (possible after a racy lease reclaim) must not overwrite
+/// the original record — the first outcome is the one the parent's
+/// accounting replays. `hard_link` both publishes atomically and
+/// refuses an existing destination.
+fn write_done_once(queue: &Path, id: usize, done: &DoneRecord) -> Result<()> {
+    let path = done_path(queue, id);
+    if path.exists() {
+        return Ok(()); // a duplicate already settled this task
+    }
+    let tmp = path.with_extension(format!("tmp{}", std::process::id()));
+    fs::write(&tmp, done.to_json(id).to_string().as_bytes())
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    let linked = fs::hard_link(&tmp, &path);
+    let _ = fs::remove_file(&tmp);
+    match linked {
+        Ok(()) => Ok(()),
+        // lost the publish race: the earlier record wins
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(()),
+        // re-check before the rename fallback, which WOULD overwrite
+        Err(_) if path.exists() => Ok(()),
+        // filesystem without hard links: fall back to tmp-rename
+        Err(_) => write_atomic(&path, done.to_json(id).to_string().as_bytes()),
+    }
+}
+
+fn run_stage_task(ctx: &WorkerCtx, t: &QueueTask) -> DoneRecord {
+    // propagate upstream failures without executing — deps are
+    // id-ordered, matching the serial scheduler's earliest-dep pick
+    for &(d, _, _) in &t.deps {
+        if let Some(dep) = read_done(ctx.queue, d) {
+            if !dep.ok {
+                return DoneRecord::failed(&dep.stage, dep.error, Lookup::None, 0.0);
+            }
+        }
+    }
+    // primary lookup: another invocation (or worker round) may have
+    // produced this artifact already
+    let lookup = match ctx.store.load(t.key, t.kind) {
+        StoreLookup::Hit(_) => return DoneRecord::ok(false, Lookup::Hit, 0.0),
+        StoreLookup::Miss => Lookup::Miss,
+        StoreLookup::Corrupt => Lookup::Corrupt,
+    };
+    let watch = Stopwatch::start();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        execute_stage(ctx, t)
+    }));
+    let secs = watch.elapsed_s();
+    match result {
+        Ok(Ok(artifact)) => {
+            if let Err(e) = ctx.store.save(t.key, &artifact) {
+                crate::log_warn!(
+                    "dispatch: artifact {} not saved: {e}",
+                    t.key.hex()
+                );
+            }
+            DoneRecord::ok(true, lookup, secs)
+        }
+        Ok(Err(e)) => DoneRecord::failed(
+            t.kind.name(),
+            e.to_string(),
+            lookup,
+            secs,
+        ),
+        Err(p) => DoneRecord::failed(
+            t.kind.name(),
+            format!("stage panicked: {}", scheduler::panic_msg(&p)),
+            lookup,
+            secs,
+        ),
+    }
+}
+
+fn execute_stage(ctx: &WorkerCtx, t: &QueueTask) -> Result<Artifact> {
+    match t.kind {
+        CachedStage::Load => run::stage_load(ctx.env, &t.spec)
+            .map(|g| Artifact::Graph(Arc::new(g))),
+        CachedStage::Tune => {
+            let graph = fetch_graph(ctx, t)?;
+            run::stage_tune(&t.spec, &graph, ctx.tune).map(Artifact::Tune)
+        }
+        CachedStage::Build => {
+            let graph = fetch_graph(ctx, t)?;
+            let tuned = fetch_tune(ctx, t, &graph)?;
+            run::stage_build(&t.spec, &graph, tuned.map(|o| o.schedule))
+                .map(|b| Artifact::Build(Arc::new(b)))
+        }
+    }
+}
+
+/// The Load dep's graph from the store; recomputed locally when the
+/// store lost it (budget eviction between producer and consumer).
+fn fetch_graph(ctx: &WorkerCtx, t: &QueueTask) -> Result<Arc<crate::graph::Graph>> {
+    for &(_, kind, key) in &t.deps {
+        if kind == CachedStage::Load {
+            if let StoreLookup::Hit(Artifact::Graph(g)) =
+                ctx.store.load(key, CachedStage::Load)
+            {
+                return Ok(g);
+            }
+        }
+    }
+    run::stage_load(ctx.env, &t.spec).map(Arc::new)
+}
+
+/// The Tune dep's outcome, when this build consumes one.
+fn fetch_tune(
+    ctx: &WorkerCtx,
+    t: &QueueTask,
+    graph: &crate::graph::Graph,
+) -> Result<Option<TuneOutcome>> {
+    let Some(&(_, _, key)) =
+        t.deps.iter().find(|&&(_, k, _)| k == CachedStage::Tune)
+    else {
+        return Ok(None);
+    };
+    if let StoreLookup::Hit(Artifact::Tune(o)) =
+        ctx.store.load(key, CachedStage::Tune)
+    {
+        return Ok(Some(o));
+    }
+    run::stage_tune(&t.spec, graph, ctx.tune).map(Some)
+}
+
+// ----------------------------------------------------- queue files --
+
+fn done_path(queue: &Path, id: usize) -> PathBuf {
+    queue.join(format!("task-{id}.done.json"))
+}
+
+fn lease_path(queue: &Path, id: usize) -> PathBuf {
+    queue.join(format!("task-{id}.lease"))
+}
+
+fn done_exists(queue: &Path, id: usize) -> bool {
+    done_path(queue, id).exists()
+}
+
+fn read_done(queue: &Path, id: usize) -> Option<DoneRecord> {
+    let doc = Json::parse_file(&done_path(queue, id)).ok()?;
+    DoneRecord::from_json(&doc)
+}
+
+/// Process-wide monotonic nonce for lease tokens.
+fn next_nonce() -> u64 {
+    static NONCE: AtomicU64 = AtomicU64::new(0);
+    NONCE.fetch_add(1, Ordering::Relaxed)
+}
+
+/// A held task lease: the `.lease` file plus a heartbeat thread that
+/// rewrites it every `lease_ms / 4`, so a live owner's lease never
+/// looks stale. Dropping stops the heartbeat and unlinks the lease
+/// (only if still owned — a reclaimer may have replaced it).
+struct Lease {
+    path: PathBuf,
+    token: String,
+    stop: Arc<AtomicBool>,
+    heartbeat: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Lease {
+    /// Atomically claim task `id`; `None` when someone else holds it.
+    fn claim(queue: &Path, id: usize, lease_ms: u64) -> Option<Lease> {
+        use std::io::Write as _;
+        let path = lease_path(queue, id);
+        let token = format!("{}-{:x}", std::process::id(), next_nonce());
+        let mut f = fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .ok()?;
+        let _ = f.write_all(token.as_bytes());
+        drop(f);
+        let stop = Arc::new(AtomicBool::new(false));
+        let heartbeat = {
+            let (path, token, stop) = (path.clone(), token.clone(), stop.clone());
+            let beat = Duration::from_millis((lease_ms / 4).max(10));
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(beat);
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    // touch (rewrite) ONLY a lease that is still ours:
+                    // recreating a reclaimed-and-re-claimed lease would
+                    // hand our token back to Drop, which would then
+                    // unlink the new owner's live lease
+                    match fs::read_to_string(&path) {
+                        Ok(s) if s.trim() == token => {
+                            let _ = fs::write(&path, token.as_bytes());
+                        }
+                        _ => break, // lost ownership: stop touching it
+                    }
+                }
+            })
+        };
+        Some(Lease { path, token, stop, heartbeat: Some(heartbeat) })
+    }
+}
+
+impl Drop for Lease {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.heartbeat.take() {
+            let _ = h.join();
+        }
+        let ours = fs::read_to_string(&self.path)
+            .is_ok_and(|s| s.trim() == self.token);
+        if ours {
+            let _ = fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// Is this lease stale? Immediately when its recorded pid is dead
+/// (crashed/killed owner — it has no writes in flight), otherwise
+/// after `lease_ms` without a heartbeat. Same rules as the store's
+/// lock file (`util::proc::stale_owner_file`).
+fn lease_is_stale(path: &Path, lease_ms: u64) -> bool {
+    stale_owner_file(path, Duration::from_millis(lease_ms.max(100)))
+}
+
+/// Break a stale lease via rename-to-unique (exactly one of several
+/// concurrent reclaimers wins; a fresh lease created in the meantime
+/// is never touched). Returns whether the task became claimable.
+fn reclaim_if_stale(path: &Path, lease_ms: u64) -> bool {
+    if !lease_is_stale(path, lease_ms) {
+        return false;
+    }
+    let grave = path.with_extension(format!(
+        "stale.{}-{:x}",
+        std::process::id(),
+        next_nonce()
+    ));
+    if fs::rename(path, &grave).is_ok() {
+        let _ = fs::remove_file(&grave);
+        return true;
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mlonmcu_dispatch_{tag}"));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn lease_claim_is_exclusive_and_released_on_drop() {
+        let dir = tmp("lease");
+        let a = Lease::claim(&dir, 0, 5000).expect("first claim wins");
+        assert!(Lease::claim(&dir, 0, 5000).is_none(), "second claim loses");
+        drop(a);
+        assert!(!lease_path(&dir, 0).exists(), "released on drop");
+        assert!(Lease::claim(&dir, 0, 5000).is_some(), "claimable again");
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn dead_pid_lease_is_reclaimed_immediately() {
+        let dir = tmp("deadlease");
+        let dead = {
+            let mut c = std::process::Command::new("true").spawn().unwrap();
+            let pid = c.id();
+            c.wait().unwrap();
+            pid
+        };
+        fs::write(lease_path(&dir, 3), format!("{dead}-1")).unwrap();
+        // lease_ms is huge: only the dead-pid path can fire
+        assert!(reclaim_if_stale(&lease_path(&dir, 3), 600_000));
+        assert!(!lease_path(&dir, 3).exists());
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn live_lease_is_not_reclaimed() {
+        let dir = tmp("livelease");
+        let _l = Lease::claim(&dir, 1, 600_000).unwrap();
+        assert!(!reclaim_if_stale(&lease_path(&dir, 1), 600_000));
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn heartbeat_keeps_mtime_fresh() {
+        let dir = tmp("heartbeat");
+        let _l = Lease::claim(&dir, 2, 80).unwrap(); // beat every 20ms
+        std::thread::sleep(Duration::from_millis(400));
+        // the mtime-staleness threshold (150ms) is far exceeded by the
+        // sleep — only a live heartbeat keeps the lease fresh (the pid
+        // check can't save it: age is tested before the pid)
+        assert!(!lease_is_stale(&lease_path(&dir, 2), 150));
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn done_marker_is_first_writer_wins() {
+        let dir = tmp("donewins");
+        let first = DoneRecord::ok(true, Lookup::Miss, 1.0);
+        write_done_once(&dir, 5, &first).unwrap();
+        // a racy duplicate execution reports a store hit — it must NOT
+        // replace the original executed=true record
+        let second = DoneRecord::ok(false, Lookup::Hit, 0.0);
+        write_done_once(&dir, 5, &second).unwrap();
+        let back = read_done(&dir, 5).unwrap();
+        assert!(back.executed, "first record wins");
+        assert_eq!(back.lookup, Lookup::Miss);
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn done_record_roundtrips() {
+        let ok = DoneRecord::ok(true, Lookup::Miss, 1.25);
+        let j = ok.to_json(7);
+        let back = DoneRecord::from_json(&Json::parse(&j.to_string()).unwrap())
+            .unwrap();
+        assert!(back.ok && back.executed);
+        assert_eq!(back.lookup, Lookup::Miss);
+        assert_eq!(back.secs, 1.25);
+
+        let bad = DoneRecord::failed("tune", "no tuning".into(), Lookup::None, 0.0);
+        let back =
+            DoneRecord::from_json(&Json::parse(&bad.to_json(1).to_string()).unwrap())
+                .unwrap();
+        assert!(!back.ok);
+        assert_eq!((back.stage.as_str(), back.error.as_str()), ("tune", "no tuning"));
+        assert_eq!(back.lookup, Lookup::None);
+    }
+}

@@ -17,6 +17,7 @@
 //! produces the report.
 
 pub mod cache;
+pub mod dispatch;
 pub mod matrix;
 pub mod persist;
 pub mod run;
@@ -24,6 +25,7 @@ pub mod scheduler;
 pub mod store;
 
 pub use cache::{ArtifactCache, CacheStats};
+pub use dispatch::DispatchCounters;
 pub use matrix::RunMatrix;
 pub use run::{RunRecord, RunSpec, RunStatus, StageTimes};
 pub use scheduler::{RunOptions, StageExecCounts};
@@ -87,6 +89,26 @@ pub struct SessionTiming {
     pub verify_fails: usize,
     /// Load/Tune/Build stage executions that actually ran.
     pub stage_execs: StageExecCounts,
+    /// Worker child processes the sharded dispatcher actually spawned
+    /// (0 = the matrix ran in-process, including `--workers` fallbacks
+    /// when the environment store is unavailable).
+    pub worker_procs: usize,
+}
+
+/// Per-invocation counters, normalized across the two execution
+/// paths: the in-process scheduler reports live `ArtifactCache`
+/// deltas, the sharded dispatcher reconstructs the serial-equivalent
+/// numbers from its worker outcomes (so serial and sharded reports
+/// carry identical notes).
+#[derive(Debug, Clone, Copy, Default)]
+struct MatrixCounters {
+    hits: usize,
+    misses: usize,
+    evictions: usize,
+    disk_hits: usize,
+    disk_misses: usize,
+    verify_fails: usize,
+    execs: StageExecCounts,
 }
 
 impl Session {
@@ -194,7 +216,11 @@ impl Session {
         self.run_matrix_opts(matrix, RunOptions::with_parallel(parallel))
     }
 
-    /// `run_matrix` with explicit options (`--no-cache`, ...).
+    /// `run_matrix` with explicit options (`--no-cache`, `workers`,
+    /// ...). With `opts.workers > 0` (and the environment store open)
+    /// the Load/Tune/Build stages execute in `mlonmcu worker` child
+    /// processes (`dispatch`), exchanging artifacts through the store;
+    /// the resulting report is byte-identical to a serial run.
     pub fn run_matrix_opts(
         &self,
         matrix: &RunMatrix,
@@ -203,7 +229,7 @@ impl Session {
         let specs = matrix.expand()?;
         let total = specs.len();
         crate::log_info!(
-            "session {}: {} runs, {} worker(s), cache {}",
+            "session {}: {} runs, {} thread(s), cache {}",
             self.id,
             total,
             opts.parallel.max(1),
@@ -215,20 +241,66 @@ impl Session {
         // tier untouched and all counters at zero
         let bypass = ArtifactCache::disabled();
         let cache = if opts.use_cache { &self.cache } else { &bypass };
-        let (records, execs) = scheduler::execute_matrix(self, &specs, cache, opts)?;
+
+        // sharded dispatch needs the store as the artifact-exchange
+        // substrate; without it (or under --no-cache) fall back to the
+        // in-process scheduler rather than failing the run
+        let sharded = opts.workers > 0
+            && opts.use_cache
+            && self.cache.env_store().is_some();
+        if opts.workers > 0 && !sharded {
+            crate::log_warn!(
+                "sharded dispatch ({} workers) needs the environment store \
+                 and the cache enabled; running in-process instead",
+                opts.workers
+            );
+        }
+        let mut worker_procs = 0usize;
+        let (records, c) = if sharded {
+            let (records, d) = dispatch::execute_sharded(self, &specs, cache, opts)?;
+            worker_procs = d.workers_spawned;
+            let counters = MatrixCounters {
+                hits: d.hits,
+                misses: d.misses,
+                // memory-tier evictions happen in the tail pass (store
+                // promotions), not in the workers: the live delta is
+                // the truthful number
+                evictions: self.cache.stats().since(&stats_before).evictions,
+                disk_hits: d.disk_hits,
+                disk_misses: d.disk_misses,
+                verify_fails: d.verify_fails,
+                execs: d.execs,
+            };
+            (records, counters)
+        } else {
+            let (records, execs) =
+                scheduler::execute_matrix(self, &specs, cache, opts)?;
+            let s = self.cache.stats().since(&stats_before);
+            let counters = MatrixCounters {
+                hits: s.hits,
+                misses: s.misses,
+                evictions: s.evictions,
+                disk_hits: s.disk_hits,
+                disk_misses: s.disk_misses,
+                verify_fails: s.verify_fails,
+                execs,
+            };
+            (records, counters)
+        };
+        let execs = c.execs;
 
         // session timing aggregate (Table III + cache counters)
-        let stats = self.cache.stats().since(&stats_before);
         let mut timing = SessionTiming {
             runs: total,
             wall_s: watch.elapsed_s(),
-            cache_hits: stats.hits,
-            cache_misses: stats.misses,
-            cache_evictions: stats.evictions,
-            disk_hits: stats.disk_hits,
-            disk_misses: stats.disk_misses,
-            verify_fails: stats.verify_fails,
+            cache_hits: c.hits,
+            cache_misses: c.misses,
+            cache_evictions: c.evictions,
+            disk_hits: c.disk_hits,
+            disk_misses: c.disk_misses,
+            verify_fails: c.verify_fails,
             stage_execs: execs,
+            worker_procs,
             ..Default::default()
         };
         for r in &records {
@@ -243,10 +315,10 @@ impl Session {
              {} verify failure(s); executed {} load, {} tune, {} build \
              stage(s) for {} run(s)",
             self.id,
-            stats.hits,
-            stats.disk_hits,
-            stats.misses,
-            stats.verify_fails,
+            c.hits,
+            c.disk_hits,
+            c.misses,
+            c.verify_fails,
             execs.loads,
             execs.tunes,
             execs.builds,
@@ -263,10 +335,10 @@ impl Session {
                 "artifact cache: {} hit(s) ({} from env store), {} miss(es), \
                  {} verify failure(s); executed {} load / {} tune / {} build \
                  stage(s) for {} run(s)",
-                stats.hits,
-                stats.disk_hits,
-                stats.misses,
-                stats.verify_fails,
+                c.hits,
+                c.disk_hits,
+                c.misses,
+                c.verify_fails,
                 execs.loads,
                 execs.tunes,
                 execs.builds,

@@ -44,6 +44,11 @@ const MAGIC: &[u8; 4] = b"MLCA";
 /// Bump on ANY payload layout change: old entries then decode as
 /// misses and are recomputed (never migrated in place).
 /// v2: `BuildResult` gained an optional lowering `Schedule`.
+///
+/// The dispatch work queue (`dispatch.rs`) stamps this version into
+/// its task records too: a worker built from a different format
+/// refuses the queue outright instead of exchanging artifacts it
+/// would decode as misses (or worse, misread).
 pub const FORMAT_VERSION: u32 = 2;
 
 const HEADER_LEN: usize = 4 + 4 + 1 + 8 + 8 + 8;

@@ -182,9 +182,11 @@ fn run_input(session: &Session, model: &str, n: usize) -> Vec<i8> {
 
 // ------------------------------------------------------------- stages --
 
-/// Load stage: resolve + parse + validate the model.
-pub fn stage_load(session: &Session, spec: &RunSpec) -> Result<Graph> {
-    frontends::load_model(&spec.model, &session.env().model_dirs())
+/// Load stage: resolve + parse + validate the model. Takes the
+/// environment (not the session) so dispatch worker processes — which
+/// have no session of their own — run the identical code path.
+pub fn stage_load(env: &crate::config::Environment, spec: &RunSpec) -> Result<Graph> {
+    frontends::load_model(&spec.model, &env.model_dirs())
 }
 
 /// Tune stage: AutoTVM-style schedule search on the target.

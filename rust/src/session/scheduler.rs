@@ -11,6 +11,17 @@
 //! push tasks whose dependencies just resolved — idle workers thereby
 //! "steal" whatever becomes runnable, so one slow Tune cannot stall
 //! unrelated pipelines.
+//!
+//! The task/key decomposition is exposed as [`plan`]/[`TaskGraph`] so
+//! the multi-process sharded executor (`dispatch.rs`) can publish the
+//! same DAG to worker processes, and so property tests can check the
+//! graph invariants directly. When a dispatch pass already executed
+//! the Load/Tune/Build tasks out of process, `execute_matrix_with`
+//! takes an *overlay* of those worker outcomes: the stage artifacts
+//! are then served from the environment store while timing, execution
+//! attribution and failure propagation replay exactly as if the
+//! stages had run here — which is what makes serial and sharded
+//! reports byte-identical.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -27,16 +38,26 @@ use crate::util::Stopwatch;
 /// Options of one `run_matrix` invocation.
 #[derive(Debug, Clone, Copy)]
 pub struct RunOptions {
-    /// Worker count of the stage scheduler.
+    /// Worker count of the in-process stage scheduler (threads).
     pub parallel: usize,
     /// `false` = `--no-cache`: no artifact reuse, no dedup — every run
     /// executes every stage itself (the seed behaviour).
     pub use_cache: bool,
+    /// `> 0`: shard Load/Tune/Build execution across this many
+    /// `mlonmcu worker` child processes (`dispatch.rs`). Requires the
+    /// environment store; `0` keeps everything in-process.
+    pub workers: usize,
 }
 
 impl RunOptions {
     pub fn with_parallel(parallel: usize) -> RunOptions {
-        RunOptions { parallel, use_cache: true }
+        RunOptions { parallel, use_cache: true, workers: 0 }
+    }
+}
+
+impl Default for RunOptions {
+    fn default() -> RunOptions {
+        RunOptions::with_parallel(1)
     }
 }
 
@@ -49,45 +70,222 @@ pub struct StageExecCounts {
     pub builds: usize,
 }
 
+/// Kind of one planned task. `Tail` (Compile → Run → Postprocess) is
+/// always per-run and never cached or dispatched to worker processes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Kind {
+pub enum StageKind {
     Load,
     Tune,
     Build,
     Tail,
 }
 
-impl Kind {
-    fn stage_name(self) -> &'static str {
+impl StageKind {
+    pub fn stage_name(self) -> &'static str {
         match self {
-            Kind::Load => "load",
-            Kind::Tune => "tune",
-            Kind::Build => "build",
-            Kind::Tail => "tail",
+            StageKind::Load => "load",
+            StageKind::Tune => "tune",
+            StageKind::Build => "build",
+            StageKind::Tail => "tail",
         }
     }
 
-    fn cached_stage(self) -> CachedStage {
+    pub fn cached_stage(self) -> CachedStage {
         match self {
-            Kind::Load => CachedStage::Load,
-            Kind::Tune => CachedStage::Tune,
-            Kind::Build => CachedStage::Build,
-            Kind::Tail => unreachable!("tail stages are never cached"),
+            StageKind::Load => CachedStage::Load,
+            StageKind::Tune => CachedStage::Tune,
+            StageKind::Build => CachedStage::Build,
+            StageKind::Tail => unreachable!("tail stages are never cached"),
         }
     }
 }
 
-struct Task {
-    kind: Kind,
+/// One node of the planned stage DAG.
+#[derive(Debug, Clone)]
+pub struct PlannedTask {
+    pub kind: StageKind,
     /// Representative run whose spec parameterizes this stage (for
     /// shared tasks, the lowest consuming run index).
-    spec_idx: usize,
-    /// Cache key; `None` under `--no-cache`.
-    key: Option<StageKey>,
-    deps: Vec<usize>,
-    dependents: Vec<usize>,
+    pub spec_idx: usize,
+    /// Cache key; `None` under `--no-cache` and for tails.
+    pub key: Option<StageKey>,
+    /// Dependency task ids (sorted, deduplicated, always `< self`).
+    pub deps: Vec<usize>,
+    pub dependents: Vec<usize>,
     /// Consuming run indices (tails: exactly their own run).
-    consumers: Vec<usize>,
+    pub consumers: Vec<usize>,
+}
+
+/// The deduplicated stage DAG of one matrix invocation. Task ids are
+/// indices into `tasks`; dependencies always point at lower ids
+/// (topological by construction).
+#[derive(Debug, Clone, Default)]
+pub struct TaskGraph {
+    pub tasks: Vec<PlannedTask>,
+}
+
+impl TaskGraph {
+    /// Number of Load/Tune/Build tasks (excludes per-run tails).
+    pub fn stage_task_count(&self) -> usize {
+        self.tasks.iter().filter(|t| t.kind != StageKind::Tail).count()
+    }
+
+    /// Unique stage tasks per kind — what a fully cold serial run
+    /// would execute.
+    pub fn unique_stage_counts(&self) -> StageExecCounts {
+        let mut c = StageExecCounts::default();
+        for t in &self.tasks {
+            match t.kind {
+                StageKind::Load => c.loads += 1,
+                StageKind::Tune => c.tunes += 1,
+                StageKind::Build => c.builds += 1,
+                StageKind::Tail => {}
+            }
+        }
+        c
+    }
+}
+
+/// Outcome of one stage task executed out-of-process by a dispatch
+/// worker, keyed by stage key (`Overlay`). `executed` and `secs`
+/// replay the worker's execution attribution into the records;
+/// `failed` short-circuits the task exactly like a local failure.
+#[derive(Debug, Clone)]
+pub struct WorkerOutcome {
+    pub executed: bool,
+    pub secs: f64,
+    pub failed: Option<(&'static str, String)>,
+}
+
+/// Stage key (`StageKey.0`) → worker outcome, from a dispatch pass.
+pub type Overlay = HashMap<u64, WorkerOutcome>;
+
+/// Build the deduplicated stage DAG for `specs`. With `use_cache`
+/// false every run gets private tasks (no keys, no sharing) — the
+/// seed behaviour. `model_fp` must cover every model the specs name
+/// (see [`model_fingerprints`]): a missing fingerprint would silently
+/// collide distinct models' Load keys, so it panics instead.
+pub fn plan(
+    specs: &[RunSpec],
+    tune: TuneParams,
+    model_fp: &HashMap<String, u64>,
+    use_cache: bool,
+) -> TaskGraph {
+    let mut tasks: Vec<PlannedTask> = Vec::new();
+    // (kind, key) -> task id, for prefix dedup
+    let mut dedup: HashMap<(StageKind, u64), usize> = HashMap::new();
+    let mut shared_or_new = |tasks: &mut Vec<PlannedTask>,
+                             dedup: &mut HashMap<(StageKind, u64), usize>,
+                             kind: StageKind,
+                             key: StageKey,
+                             run_idx: usize,
+                             deps: Vec<usize>|
+     -> usize {
+        if use_cache {
+            if let Some(&id) = dedup.get(&(kind, key.0)) {
+                tasks[id].consumers.push(run_idx);
+                return id;
+            }
+        }
+        let id = tasks.len();
+        tasks.push(PlannedTask {
+            kind,
+            spec_idx: run_idx,
+            key: use_cache.then_some(key),
+            deps,
+            dependents: Vec::new(),
+            consumers: vec![run_idx],
+        });
+        if use_cache {
+            dedup.insert((kind, key.0), id);
+        }
+        id
+    };
+
+    for (i, spec) in specs.iter().enumerate() {
+        let fp = *model_fp
+            .get(&spec.model)
+            .expect("a fingerprint for every model in the matrix");
+        let load_id = shared_or_new(
+            &mut tasks,
+            &mut dedup,
+            StageKind::Load,
+            cache::load_key(fp),
+            i,
+            Vec::new(),
+        );
+        let tune_id = spec.needs_tune().then(|| {
+            shared_or_new(
+                &mut tasks,
+                &mut dedup,
+                StageKind::Tune,
+                cache::tune_key(fp, spec, tune),
+                i,
+                vec![load_id],
+            )
+        });
+        let mut build_deps = vec![load_id];
+        build_deps.extend(tune_id);
+        let build_id = shared_or_new(
+            &mut tasks,
+            &mut dedup,
+            StageKind::Build,
+            cache::build_key(fp, spec, tune),
+            i,
+            build_deps,
+        );
+        let mut tail_deps = vec![load_id, build_id];
+        tail_deps.extend(tune_id);
+        tasks.push(PlannedTask {
+            kind: StageKind::Tail,
+            spec_idx: i,
+            key: None,
+            deps: tail_deps,
+            dependents: Vec::new(),
+            consumers: vec![i],
+        });
+    }
+    // wire dependents (deps are deduplicated per task so a shared dep
+    // is only counted once)
+    for id in 0..tasks.len() {
+        let mut deps = std::mem::take(&mut tasks[id].deps);
+        deps.sort_unstable();
+        deps.dedup();
+        for &d in &deps {
+            tasks[d].dependents.push(id);
+        }
+        tasks[id].deps = deps;
+    }
+    TaskGraph { tasks }
+}
+
+/// Content fingerprints (and raw bytes, for single-read Load stages)
+/// of every distinct model named by `specs`.
+pub fn model_fingerprints(
+    session: &Session,
+    specs: &[RunSpec],
+) -> (HashMap<String, u64>, HashMap<String, Arc<Vec<u8>>>) {
+    let mut model_fp: HashMap<String, u64> = HashMap::new();
+    let mut model_bytes: HashMap<String, Arc<Vec<u8>>> = HashMap::new();
+    for s in specs {
+        if !model_fp.contains_key(&s.model) {
+            let (fp, bytes) = model_fingerprint(session, &s.model);
+            model_fp.insert(s.model.clone(), fp);
+            if let Some(b) = bytes {
+                model_bytes.insert(s.model.clone(), b);
+            }
+        }
+    }
+    (model_fp, model_bytes)
+}
+
+/// Tuning inputs of this session's environment (shared by the serial
+/// scheduler and the dispatch workers — keys must agree).
+pub fn tune_params(env: &crate::config::Environment) -> TuneParams {
+    TuneParams {
+        trials: env.get_i64("tune", "trials", 600) as usize,
+        seed: env.get_i64("run", "seed", 7) as u64,
+    }
 }
 
 /// Result slot of a finished task.
@@ -129,116 +327,48 @@ pub fn execute_matrix(
     cache: &ArtifactCache,
     opts: RunOptions,
 ) -> Result<(Vec<RunRecord>, StageExecCounts)> {
-    let tune = TuneParams {
-        trials: session.env().get_i64("tune", "trials", 600) as usize,
-        seed: session.env().get_i64("run", "seed", 7) as u64,
-    };
+    execute_matrix_with(session, specs, cache, opts, None)
+}
 
-    // model name -> content fingerprint (+ the bytes it was computed
-    // over, reused by the Load stage so each file is read once and
-    // fingerprint/graph can never diverge)
-    let mut model_fp: HashMap<String, u64> = HashMap::new();
-    let mut model_bytes: HashMap<String, Arc<Vec<u8>>> = HashMap::new();
-    for s in specs {
-        if !model_fp.contains_key(&s.model) {
-            let (fp, bytes) = model_fingerprint(session, &s.model);
-            model_fp.insert(s.model.clone(), fp);
-            if let Some(b) = bytes {
-                model_bytes.insert(s.model.clone(), b);
-            }
-        }
-    }
+/// `execute_matrix` with an optional dispatch overlay: stage tasks a
+/// worker process already completed are served from the cache tiers
+/// with the worker's timing/attribution (or fail with the worker's
+/// error) instead of executing here. Tasks the store lost fall back
+/// to local execution.
+pub fn execute_matrix_with(
+    session: &Session,
+    specs: &[RunSpec],
+    cache: &ArtifactCache,
+    opts: RunOptions,
+    overlay: Option<&Overlay>,
+) -> Result<(Vec<RunRecord>, StageExecCounts)> {
+    let tune = tune_params(session.env());
+    let (model_fp, model_bytes) = model_fingerprints(session, specs);
+    let graph = plan(specs, tune, &model_fp, opts.use_cache);
+    execute_planned(session, specs, cache, opts, &graph, &model_bytes, tune, overlay)
+}
 
-    // ---------------------------------------------- task graph build --
-    let mut tasks: Vec<Task> = Vec::new();
-    // (kind, key) -> task id, for prefix dedup
-    let mut dedup: HashMap<(Kind, u64), usize> = HashMap::new();
-    let mut shared_or_new = |tasks: &mut Vec<Task>,
-                             dedup: &mut HashMap<(Kind, u64), usize>,
-                             kind: Kind,
-                             key: StageKey,
-                             run_idx: usize,
-                             deps: Vec<usize>|
-     -> usize {
-        if opts.use_cache {
-            if let Some(&id) = dedup.get(&(kind, key.0)) {
-                tasks[id].consumers.push(run_idx);
-                return id;
-            }
-        }
-        let id = tasks.len();
-        tasks.push(Task {
-            kind,
-            spec_idx: run_idx,
-            key: opts.use_cache.then_some(key),
-            deps,
-            dependents: Vec::new(),
-            consumers: vec![run_idx],
-        });
-        if opts.use_cache {
-            dedup.insert((kind, key.0), id);
-        }
-        id
-    };
-
-    for (i, spec) in specs.iter().enumerate() {
-        let fp = model_fp[&spec.model];
-        let load_id = shared_or_new(
-            &mut tasks,
-            &mut dedup,
-            Kind::Load,
-            cache::load_key(fp),
-            i,
-            Vec::new(),
-        );
-        let tune_id = spec.needs_tune().then(|| {
-            shared_or_new(
-                &mut tasks,
-                &mut dedup,
-                Kind::Tune,
-                cache::tune_key(fp, spec, tune),
-                i,
-                vec![load_id],
-            )
-        });
-        let mut build_deps = vec![load_id];
-        build_deps.extend(tune_id);
-        let build_id = shared_or_new(
-            &mut tasks,
-            &mut dedup,
-            Kind::Build,
-            cache::build_key(fp, spec, tune),
-            i,
-            build_deps,
-        );
-        let mut tail_deps = vec![load_id, build_id];
-        tail_deps.extend(tune_id);
-        tasks.push(Task {
-            kind: Kind::Tail,
-            spec_idx: i,
-            key: None,
-            deps: tail_deps,
-            dependents: Vec::new(),
-            consumers: vec![i],
-        });
-    }
-    // wire dependents + initial pending counts (deps are deduplicated
-    // per task so a shared dep is only counted once)
-    let mut pending = vec![0usize; tasks.len()];
-    for id in 0..tasks.len() {
-        let mut deps = tasks[id].deps.clone();
-        deps.sort_unstable();
-        deps.dedup();
-        tasks[id].deps = deps.clone();
-        pending[id] = deps.len();
-        for d in deps {
-            tasks[d].dependents.push(id);
-        }
-    }
+/// Execute an already-planned graph. The dispatcher reuses its own
+/// plan (and fingerprints) here, so models are read and hashed once
+/// per sharded invocation and the tail pass replays the *identical*
+/// DAG the workers executed.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn execute_planned(
+    session: &Session,
+    specs: &[RunSpec],
+    cache: &ArtifactCache,
+    opts: RunOptions,
+    graph: &TaskGraph,
+    model_bytes: &HashMap<String, Arc<Vec<u8>>>,
+    tune: TuneParams,
+    overlay: Option<&Overlay>,
+) -> Result<(Vec<RunRecord>, StageExecCounts)> {
+    let tasks = &graph.tasks;
+    let n_tasks = tasks.len();
 
     // --------------------------------------------------- execution --
-    let ready: VecDeque<usize> = (0..tasks.len()).filter(|&i| pending[i] == 0).collect();
-    let n_tasks = tasks.len();
+    let pending: Vec<usize> = tasks.iter().map(|t| t.deps.len()).collect();
+    let ready: VecDeque<usize> = (0..n_tasks).filter(|&i| pending[i] == 0).collect();
     let remaining: Vec<usize> = tasks.iter().map(|t| t.dependents.len()).collect();
     let state = Mutex::new(SchedState {
         ready,
@@ -251,7 +381,6 @@ pub fn execute_matrix(
     let records: Mutex<Vec<Option<RunRecord>>> =
         Mutex::new((0..specs.len()).map(|_| None).collect());
     let execs = Mutex::new(StageExecCounts::default());
-    let tasks = &tasks; // shared immutably across workers
 
     let workers = opts.parallel.max(1).min(n_tasks.max(1));
     std::thread::scope(|scope| {
@@ -275,14 +404,14 @@ pub fn execute_matrix(
                     || {
                         run_task(
                             session, specs, tasks, task_id, cache, tune,
-                            &model_bytes, &state, &records, &execs,
+                            model_bytes, overlay, &state, &records, &execs,
                         )
                     },
                 ))
                 .unwrap_or_else(|p| {
                     let msg = format!("stage panicked: {}", panic_msg(&p));
                     let task = &tasks[task_id];
-                    if task.kind == Kind::Tail {
+                    if task.kind == StageKind::Tail {
                         let mut recs = lock(&records);
                         if recs[task.spec_idx].is_none() {
                             let mut rec = run::blank_record(&specs[task.spec_idx]);
@@ -324,7 +453,7 @@ pub fn execute_matrix(
     Ok((records, execs.into_inner().unwrap_or_else(|e| e.into_inner())))
 }
 
-fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = p.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = p.downcast_ref::<String>() {
@@ -355,11 +484,12 @@ fn dep_outputs(
 fn run_task(
     session: &Session,
     specs: &[RunSpec],
-    tasks: &[Task],
+    tasks: &[PlannedTask],
     task_id: usize,
     cache: &ArtifactCache,
     tune: TuneParams,
     model_bytes: &HashMap<String, Arc<Vec<u8>>>,
+    overlay: Option<&Overlay>,
     state: &Mutex<SchedState>,
     records: &Mutex<Vec<Option<RunRecord>>>,
     execs: &Mutex<StageExecCounts>,
@@ -368,7 +498,7 @@ fn run_task(
     let spec = &specs[task.spec_idx];
     let deps = dep_outputs(state, &task.deps);
 
-    if task.kind == Kind::Tail {
+    if task.kind == StageKind::Tail {
         return run_tail(session, specs, tasks, task_id, &deps, records);
     }
 
@@ -377,13 +507,31 @@ fn run_task(
         return Output::Failed(stage, e);
     }
 
+    // a dispatch worker already settled this task: replay its failure,
+    // or serve its artifact from the cache tiers with its timing
+    let worker = overlay
+        .zip(task.key)
+        .and_then(|(ov, key)| ov.get(&key.0));
+    if let Some(w) = worker {
+        if let Some((stage, e)) = w.failed.clone() {
+            return Output::Failed(stage, e);
+        }
+    }
+
     // cache tiers (memory, then env store): shared consumers beyond
     // the first each count a hit
     if let Some(key) = task.key {
         if let Some(artifact) = cache.lookup(key, task.kind.cached_stage()) {
             cache.note_shared_hits(task.consumers.len() - 1);
-            return Output::Done(artifact, 0.0, false);
+            // with an overlay, the worker's host seconds + execution
+            // flag are charged as if the stage had run here
+            let (secs, executed) =
+                worker.map(|w| (w.secs, w.executed)).unwrap_or((0.0, false));
+            return Output::Done(artifact, secs, executed);
         }
+        // an overlay task missing from the store (evicted or corrupted
+        // between the worker's write and now) falls through and
+        // recomputes locally — degraded, never wrong
     }
 
     let graph = deps.iter().find_map(|d| match d {
@@ -397,24 +545,24 @@ fn run_task(
 
     let watch = Stopwatch::start();
     let result: Result<Artifact> = match task.kind {
-        Kind::Load => match model_bytes.get(&spec.model) {
+        StageKind::Load => match model_bytes.get(&spec.model) {
             Some(bytes) => {
                 crate::frontends::load_model_from_bytes(bytes, &spec.model)
             }
-            None => run::stage_load(session, spec),
+            None => run::stage_load(session.env(), spec),
         }
         .map(|g| Artifact::Graph(Arc::new(g))),
-        Kind::Tune => {
+        StageKind::Tune => {
             run::stage_tune(spec, &graph.expect("load is a dep"), tune)
                 .map(Artifact::Tune)
         }
-        Kind::Build => run::stage_build(
+        StageKind::Build => run::stage_build(
             spec,
             &graph.expect("load is a dep"),
             tuned.map(|t| t.schedule),
         )
         .map(|b| Artifact::Build(Arc::new(b))),
-        Kind::Tail => unreachable!(),
+        StageKind::Tail => unreachable!(),
     };
     let secs = watch.elapsed_s();
     match result {
@@ -422,10 +570,10 @@ fn run_task(
             {
                 let mut e = lock(execs);
                 match task.kind {
-                    Kind::Load => e.loads += 1,
-                    Kind::Tune => e.tunes += 1,
-                    Kind::Build => e.builds += 1,
-                    Kind::Tail => {}
+                    StageKind::Load => e.loads += 1,
+                    StageKind::Tune => e.tunes += 1,
+                    StageKind::Build => e.builds += 1,
+                    StageKind::Tail => {}
                 }
             }
             if let Some(key) = task.key {
@@ -444,7 +592,7 @@ fn run_task(
 fn run_tail(
     session: &Session,
     specs: &[RunSpec],
-    tasks: &[Task],
+    tasks: &[PlannedTask],
     task_id: usize,
     deps: &[Result<(Artifact, f64, bool), (&'static str, String)>],
     records: &Mutex<Vec<Option<RunRecord>>>,
@@ -465,7 +613,7 @@ fn run_tail(
         match dep {
             Ok((artifact, secs, executed)) => {
                 let secs = if charged && *executed { *secs } else { 0.0 };
-                if !(charged && *executed) && dep_task.kind != Kind::Tail {
+                if !(charged && *executed) && dep_task.kind != StageKind::Tail {
                     rec.reused.push(dep_task.kind.stage_name());
                 }
                 match artifact {

@@ -277,7 +277,9 @@ fn entry_path(root: &Path, stage: CachedStage, key: StageKey) -> PathBuf {
 }
 
 /// Write via tmp + rename so readers never observe partial files.
-fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+/// Shared with the dispatch work queue (`dispatch.rs`), whose task
+/// and outcome records need the same no-partial-reads guarantee.
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
     let tmp = path.with_extension(format!("tmp{}", std::process::id()));
     fs::write(&tmp, bytes)
         .with_context(|| format!("writing {}", tmp.display()))?;
@@ -365,15 +367,29 @@ fn merge_disk_index(root: &Path, ix: &mut Index) {
 }
 
 /// Advisory cross-process lock via atomic lock-file creation. Held
-/// briefly, for the duration of an index read-modify-write; stale
-/// locks (a killed process) are broken after 30 s. Breaking renames
-/// the lock to a breaker-unique name first, so exactly one of several
-/// concurrent breakers wins (the losers' renames fail) and nobody can
-/// unlink a lock another process just created. The lock file records
-/// the owning token and release only unlinks a still-owned lock.
+/// briefly, for the duration of an index read-modify-write. Stale
+/// locks are broken (a) immediately when the owning pid recorded in
+/// the lock no longer runs — a lock left by a killed or crashed
+/// process used to block every other process for the full mtime
+/// timeout — or (b) after 30 s without the owner touching the file,
+/// the portable fallback. Breaking renames the lock to a
+/// breaker-unique name first, so exactly one of several concurrent
+/// breakers wins (the losers' renames fail) and nobody can unlink a
+/// lock another process just created. The lock file records the
+/// owning token (`<pid>-<nonce>`) and release only unlinks a
+/// still-owned lock.
 struct FileLock {
     path: PathBuf,
     token: String,
+}
+
+/// Is the lock at `path` left over from a process that no longer
+/// exists, or simply ancient? Shared staleness rules (dead-pid =>
+/// break immediately; unparsable token => only age out) live in
+/// `util::proc::stale_owner_file`, which the dispatch queue's leases
+/// use too.
+fn lock_is_stale(path: &Path) -> bool {
+    crate::util::proc::stale_owner_file(path, Duration::from_secs(30))
 }
 
 impl FileLock {
@@ -392,12 +408,7 @@ impl FileLock {
                     return Ok(FileLock { path, token });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                    let stale = fs::metadata(&path)
-                        .and_then(|m| m.modified())
-                        .ok()
-                        .and_then(|t| t.elapsed().ok())
-                        .is_some_and(|age| age > Duration::from_secs(30));
-                    if stale {
+                    if lock_is_stale(&path) {
                         // rename-to-unique: only the winning breaker
                         // proceeds to delete; a fresh lock created in
                         // the meantime is never touched
@@ -556,6 +567,48 @@ mod tests {
         store.clear().unwrap();
         assert_eq!(store.stats().entries, 0);
         assert!(!dir.join("index.json").exists());
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn stale_lock_of_dead_process_is_reclaimed() {
+        let dir = tmp("stalelock");
+        fs::create_dir_all(&dir).unwrap();
+        // a lock left by a process that no longer exists (spawn + reap
+        // /bin/true to get a genuinely dead pid with fresh mtime)
+        let dead_pid = {
+            let mut c = std::process::Command::new("true").spawn().unwrap();
+            let pid = c.id();
+            c.wait().unwrap();
+            pid
+        };
+        fs::write(dir.join(".lock"), format!("{dead_pid}-deadbeef")).unwrap();
+        // before the pid check this blocked until the 30 s mtime
+        // timeout and then errored out of the 5 s retry loop; now the
+        // dead owner's lock is broken immediately
+        let watch = crate::util::Stopwatch::start();
+        let store = EnvStore::open(&dir, u64::MAX).unwrap();
+        assert!(
+            watch.elapsed_s() < 4.0,
+            "stale lock must break fast, took {:.1}s",
+            watch.elapsed_s()
+        );
+        store.save(load_key(1), &graph_artifact()).unwrap();
+        assert!(matches!(
+            store.load(load_key(1), CachedStage::Load),
+            StoreLookup::Hit(_)
+        ));
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn fresh_lock_of_live_process_is_respected() {
+        let dir = tmp("livelock");
+        fs::create_dir_all(&dir).unwrap();
+        // our own pid: alive by definition, mtime fresh => not stale
+        fs::write(dir.join(".lock"), format!("{}-1", std::process::id()))
+            .unwrap();
+        assert!(!lock_is_stale(&dir.join(".lock")));
         fs::remove_dir_all(dir).unwrap();
     }
 

@@ -7,6 +7,7 @@ pub mod rng;
 pub mod log;
 pub mod fmt;
 pub mod hash;
+pub mod proc;
 
 pub use hash::{fnv1a64, StableHasher};
 pub use rng::XorShift64;

@@ -1,0 +1,83 @@
+//! Process liveness probing for crash detection.
+//!
+//! Both the environment store's lock file (`session/store.rs`) and the
+//! dispatch work queue's lease files (`session/dispatch.rs`) record the
+//! owning process id so that a file left behind by a crashed or killed
+//! process can be reclaimed immediately instead of waiting out a
+//! conservative mtime timeout.
+
+/// Is a process with this pid currently running (and not a zombie)?
+///
+/// On Linux this reads `/proc/<pid>/stat`; a missing entry or a
+/// zombie/dead state means the owner can no longer touch its files, so
+/// breaking its lock/lease is safe. Zombies count as dead because a
+/// zombie has already exited — only its exit status lingers.
+#[cfg(target_os = "linux")]
+pub fn pid_alive(pid: u32) -> bool {
+    match std::fs::read_to_string(format!("/proc/{pid}/stat")) {
+        Ok(stat) => {
+            // field 3 (state) follows the parenthesised comm, which may
+            // itself contain spaces or parens — split on the LAST ')'
+            let state = stat
+                .rfind(')')
+                .and_then(|i| stat[i + 1..].trim_start().chars().next());
+            !matches!(state, Some('Z' | 'X') | None)
+        }
+        Err(_) => false,
+    }
+}
+
+/// Portable fallback: without /proc there is no dependency-free way to
+/// probe liveness, so report "alive" and let callers fall back to
+/// mtime-based staleness.
+#[cfg(not(target_os = "linux"))]
+pub fn pid_alive(_pid: u32) -> bool {
+    true
+}
+
+/// Is the owner-marker file at `path` (store lock, dispatch lease)
+/// stale? Stale means (a) its mtime exceeds `timeout` — the portable
+/// fallback — or (b) the `<pid>-<nonce>` token it records names a
+/// process that no longer runs: a dead owner has no writes in flight,
+/// so breaking immediately is safe. A vanished file, or a half-written
+/// or unparsable token (the owner may be mid-write), reads as live.
+pub fn stale_owner_file(path: &std::path::Path, timeout: std::time::Duration) -> bool {
+    let Some(age) = std::fs::metadata(path)
+        .and_then(|m| m.modified())
+        .ok()
+        .and_then(|t| t.elapsed().ok())
+    else {
+        return false; // vanished: the owner released it
+    };
+    if age > timeout {
+        return true;
+    }
+    let pid = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| s.trim().split('-').next()?.parse::<u32>().ok());
+    match pid {
+        Some(pid) if pid != std::process::id() => !pid_alive(pid),
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn own_pid_is_alive() {
+        assert!(pid_alive(std::process::id()));
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn reaped_child_is_dead() {
+        let mut child = std::process::Command::new("true")
+            .spawn()
+            .expect("spawning /bin/true");
+        let pid = child.id();
+        child.wait().unwrap();
+        assert!(!pid_alive(pid), "reaped pid {pid} must read as dead");
+    }
+}

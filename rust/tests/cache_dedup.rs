@@ -155,7 +155,7 @@ fn second_run_matrix_is_all_hits() {
 fn no_cache_executes_every_stage_per_run() {
     let (env, dir) = cache_env("nocache");
     let session = Session::new(&env).unwrap();
-    let opts = RunOptions { parallel: 4, use_cache: false };
+    let opts = RunOptions { parallel: 4, use_cache: false, workers: 0 };
     let report = session.run_matrix_opts(&matrix(), opts).unwrap();
     assert_eq!(report.len(), 10);
     for row in &report.rows {
@@ -178,7 +178,7 @@ fn cached_and_uncached_reports_agree() {
     let r1 = cached.run_matrix(&matrix(), 4).unwrap();
     let uncached = Session::new(&env).unwrap();
     let r2 = uncached
-        .run_matrix_opts(&matrix(), RunOptions { parallel: 1, use_cache: false })
+        .run_matrix_opts(&matrix(), RunOptions { parallel: 1, use_cache: false, workers: 0 })
         .unwrap();
     assert_eq!(r1.len(), r2.len());
     for (a, b) in r1.rows.iter().zip(&r2.rows) {
@@ -290,7 +290,7 @@ fn no_cache_ignores_populated_env_store() {
         s1.run_matrix(&matrix(), 2).unwrap();
     }
     let s2 = Session::new(&env).unwrap();
-    let opts = RunOptions { parallel: 2, use_cache: false };
+    let opts = RunOptions { parallel: 2, use_cache: false, workers: 0 };
     s2.run_matrix_opts(&matrix(), opts).unwrap();
     let t = *s2.last_timing.lock().unwrap();
     assert_eq!(t.stage_execs.builds, 10, "--no-cache bypasses the store too");

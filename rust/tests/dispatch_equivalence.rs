@@ -1,0 +1,272 @@
+//! Serial-vs-parallel conformance harness for the sharded
+//! multi-process matrix executor (`session/dispatch.rs`): the same
+//! matrix executed serially, with 1 worker process and with 4 worker
+//! processes must produce **byte-identical** reports — including the
+//! counter note — across the full backend × schedule matrix with a
+//! tuning sweep (which exercises shared Load/Tune/Build dedup *and*
+//! failure propagation: esp32 rejects AutoTVM, so tuned esp32 rows
+//! fail identically everywhere). A worker killed mid-Build must be
+//! reclaimed with the run still completing, still byte-identical.
+//!
+//! Workers are real `mlonmcu` child processes
+//! (`CARGO_BIN_EXE_mlonmcu` via the `dispatch.worker_bin` override —
+//! the test harness binary has no `worker` subcommand), exchanging
+//! artifacts exclusively through the environment store.
+
+use std::path::PathBuf;
+
+use mlonmcu::config::Environment;
+use mlonmcu::frontends::tmodel;
+use mlonmcu::graph::{Graph, OpNode, TensorInfo};
+use mlonmcu::graph::{OpCode, ACT_RELU, PAD_SAME};
+use mlonmcu::session::{RunMatrix, RunOptions, Session};
+use mlonmcu::tensor::DType;
+
+/// input[1,4,4,2] -> conv 3ch 3x3 SAME relu -> out[1,4,4,3]; small
+/// enough to pass every hardware target's memory gates (same graph as
+/// tests/cache_dedup.rs).
+fn tiny_conv_graph() -> Graph {
+    let mut attrs = std::collections::BTreeMap::new();
+    attrs.insert("stride_h".to_string(), 1);
+    attrs.insert("stride_w".to_string(), 1);
+    attrs.insert("padding".to_string(), PAD_SAME);
+    attrs.insert("fused_act".to_string(), ACT_RELU);
+    Graph {
+        name: "tinyconv".into(),
+        tensors: vec![
+            TensorInfo {
+                name: "input".into(),
+                shape: vec![1, 4, 4, 2],
+                dtype: DType::I8,
+                scale: 0.5,
+                zero_point: 0,
+                data: None,
+            },
+            TensorInfo {
+                name: "w".into(),
+                shape: vec![3, 3, 3, 2],
+                dtype: DType::I8,
+                scale: 0.01,
+                zero_point: 0,
+                data: Some((0..54).map(|x| (x % 7) as u8).collect()),
+            },
+            TensorInfo {
+                name: "b".into(),
+                shape: vec![3],
+                dtype: DType::I32,
+                scale: 0.005,
+                zero_point: 0,
+                data: Some(vec![0; 12]),
+            },
+            TensorInfo {
+                name: "out".into(),
+                shape: vec![1, 4, 4, 3],
+                dtype: DType::I8,
+                scale: 0.25,
+                zero_point: -128,
+                data: None,
+            },
+        ],
+        ops: vec![OpNode {
+            opcode: OpCode::Conv2D,
+            name: "conv0".into(),
+            inputs: vec![0, 1, 2],
+            outputs: vec![3],
+            attrs,
+        }],
+        inputs: vec![0],
+        outputs: vec![3],
+    }
+}
+
+/// Fresh environment in a temp dir with the generated model in place
+/// and the dispatch knobs pointed at the real CLI binary. `extra`
+/// appends overrides (fault markers, lease tuning).
+fn fresh_env(tag: &str, extra: &[String]) -> (Environment, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("mlonmcu_dispatcheq_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let env = Environment::init(&dir).unwrap();
+    tmodel::write_file(
+        &tiny_conv_graph(),
+        &dir.join("artifacts/models/tinyconv.tmodel"),
+    )
+    .unwrap();
+    let mut overrides = vec![
+        format!("dispatch.worker_bin={}", env!("CARGO_BIN_EXE_mlonmcu")),
+        // small budget keeps tune fast; identical across envs so keys
+        // and outcomes agree
+        "tune.trials=8".to_string(),
+        "dispatch.lease_ms=400".to_string(),
+    ];
+    overrides.extend_from_slice(extra);
+    (env.with_overrides(&overrides).unwrap(), dir)
+}
+
+/// The full backend × schedule matrix, with a tuning sweep: every
+/// backend family, schedule-capable and not, plus a target (esp32)
+/// whose tuned runs fail — failure rows must propagate identically
+/// under sharded execution.
+fn full_matrix() -> RunMatrix {
+    RunMatrix::new()
+        .models(["tinyconv"])
+        .backends(["tflmi", "tflmc", "tvmaot", "tvmaot+", "tvmrt"])
+        .targets(["etiss", "esp32"])
+        .schedules(["default-nchw", "arm-nhwc"])
+        .with_tuning_sweep()
+}
+
+/// 1 model × 2 backends × 5 targets: the cache-dedup matrix (all-ok
+/// rows, heavy artifact sharing).
+fn dedup_matrix() -> RunMatrix {
+    RunMatrix::new()
+        .models(["tinyconv"])
+        .backends(["tflmi", "tvmaot"])
+        .targets(["etiss", "esp32c3", "stm32f4", "stm32f7", "esp32"])
+}
+
+fn opts(workers: usize) -> RunOptions {
+    RunOptions { parallel: 2, use_cache: true, workers }
+}
+
+#[test]
+fn serial_one_and_four_workers_byte_identical() {
+    let (env_s, dir_s) = fresh_env("serial", &[]);
+    let serial_session = Session::new(&env_s).unwrap();
+    let baseline = serial_session.run_matrix_opts(&full_matrix(), opts(0)).unwrap();
+    let baseline_t = *serial_session.last_timing.lock().unwrap();
+    // the matrix exercises both failure rows and ok rows
+    assert!(baseline.rows.iter().any(|r| r["status"].render() == "ok"));
+    assert!(baseline
+        .rows
+        .iter()
+        .any(|r| r["status"].render().starts_with("failed:tune")));
+
+    for workers in [1usize, 4] {
+        let (env_w, dir_w) = fresh_env(&format!("w{workers}"), &[]);
+        let session = Session::new(&env_w).unwrap();
+        let report = session.run_matrix_opts(&full_matrix(), opts(workers)).unwrap();
+        assert_eq!(
+            baseline.to_csv(),
+            report.to_csv(),
+            "{workers}-worker CSV differs from serial"
+        );
+        assert_eq!(
+            baseline.to_markdown(),
+            report.to_markdown(),
+            "{workers}-worker markdown (rows + counter note) differs from serial"
+        );
+        // the dispatch accounting reconstructs the serial counters
+        let t = *session.last_timing.lock().unwrap();
+        assert_eq!(t.stage_execs, baseline_t.stage_execs, "{workers} workers");
+        assert_eq!(t.cache_hits, baseline_t.cache_hits, "{workers} workers");
+        assert_eq!(t.cache_misses, baseline_t.cache_misses, "{workers} workers");
+        assert_eq!(t.disk_misses, baseline_t.disk_misses, "{workers} workers");
+        assert_eq!((t.disk_hits, t.verify_fails), (0, 0), "{workers} workers");
+        std::fs::remove_dir_all(dir_w).unwrap();
+    }
+    std::fs::remove_dir_all(dir_s).unwrap();
+}
+
+#[test]
+fn killed_worker_mid_build_is_reclaimed_and_report_still_identical() {
+    let (env_s, dir_s) = fresh_env("killserial", &[]);
+    let baseline = Session::new(&env_s)
+        .unwrap()
+        .run_matrix_opts(&full_matrix(), opts(0))
+        .unwrap();
+
+    // fault injection: the first worker to claim a Build task dies
+    // with its lease held, exactly like a SIGKILL mid-Build
+    let dir_marker = std::env::temp_dir().join("mlonmcu_dispatcheq_kill.marker");
+    let _ = std::fs::remove_file(&dir_marker);
+    let (env_k, dir_k) = fresh_env(
+        "killed",
+        &[format!("dispatch.fault_marker={}", dir_marker.display())],
+    );
+    let session = Session::new(&env_k).unwrap();
+    let report = session.run_matrix_opts(&full_matrix(), opts(4)).unwrap();
+
+    assert!(
+        dir_marker.is_file(),
+        "a worker must actually have died mid-Build (fault marker missing \
+         means no worker process ever claimed a Build task)"
+    );
+    assert_eq!(
+        baseline.to_csv(),
+        report.to_csv(),
+        "run with a killed worker diverged from serial"
+    );
+    assert_eq!(baseline.to_markdown(), report.to_markdown());
+
+    let _ = std::fs::remove_file(&dir_marker);
+    std::fs::remove_dir_all(dir_k).unwrap();
+    std::fs::remove_dir_all(dir_s).unwrap();
+}
+
+#[test]
+fn sharded_rerun_is_all_disk_hits_and_matches_warm_serial() {
+    let (env, dir) = fresh_env("rerun", &[]);
+    // session 0 populates the store
+    {
+        let s = Session::new(&env).unwrap();
+        s.run_matrix_opts(&dedup_matrix(), opts(0)).unwrap();
+        let t = *s.last_timing.lock().unwrap();
+        assert_eq!(t.stage_execs.builds, 2);
+        assert_eq!(t.stage_execs.loads, 1);
+    }
+    // session 1: warm serial baseline
+    let warm = Session::new(&env).unwrap();
+    let warm_report = warm.run_matrix_opts(&dedup_matrix(), opts(0)).unwrap();
+    let warm_t = *warm.last_timing.lock().unwrap();
+    assert_eq!(warm_t.stage_execs, Default::default());
+    assert_eq!(warm_t.disk_hits, 3);
+
+    // session 2: 4 worker processes, everything served from the store
+    let sharded = Session::new(&env).unwrap();
+    let sharded_report = sharded.run_matrix_opts(&dedup_matrix(), opts(4)).unwrap();
+    let t = *sharded.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs, Default::default(), "0 executed stages");
+    assert_eq!(t.disk_hits, 3);
+    assert_eq!(t.cache_misses, 0);
+    assert_eq!(t.cache_hits, warm_t.cache_hits);
+    for row in &sharded_report.rows {
+        assert_eq!(row["cached_stages"].render(), "load+build");
+    }
+    assert_eq!(warm_report.to_csv(), sharded_report.to_csv());
+    assert_eq!(warm_report.to_markdown(), sharded_report.to_markdown());
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn same_session_sharded_rerun_counts_memory_hits_like_serial() {
+    let (env, dir) = fresh_env("samesession", &[]);
+    let session = Session::new(&env).unwrap();
+    session.run_matrix_opts(&dedup_matrix(), opts(0)).unwrap();
+
+    // serial semantics for a warm same-session rerun: everything is a
+    // memory-tier hit, zero disk hits — the sharded accounting must
+    // reconstruct exactly that even though the workers consult the
+    // store (the parent's memory tier would have served a serial pass)
+    let report = session.run_matrix_opts(&dedup_matrix(), opts(4)).unwrap();
+    let t = *session.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs, Default::default());
+    assert_eq!((t.cache_hits, t.cache_misses), (20, 0));
+    assert_eq!(t.disk_hits, 0, "memory tier hits must not read as disk hits");
+    for row in &report.rows {
+        assert_eq!(row["cached_stages"].render(), "load+build");
+    }
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn workers_without_store_fall_back_to_in_process() {
+    let (env, dir) = fresh_env("nostore", &["cache.persist=false".to_string()]);
+    let session = Session::new(&env).unwrap();
+    assert!(session.env_store().is_none());
+    // requesting workers must not fail — it degrades to the serial path
+    let report = session.run_matrix_opts(&dedup_matrix(), opts(4)).unwrap();
+    assert_eq!(report.len(), 10);
+    let t = *session.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs.builds, 2, "in-process scheduler executed");
+    std::fs::remove_dir_all(dir).unwrap();
+}

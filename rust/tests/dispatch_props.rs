@@ -1,0 +1,198 @@
+//! Property tests for the shared stage-DAG planner
+//! (`scheduler::plan`) that both the in-process scheduler and the
+//! multi-process dispatcher execute: random matrices must always
+//! yield (a) a graph whose dependencies point strictly backwards
+//! (topological by construction), (b) exactly-once stage execution
+//! under any ready-order, and (c) dedup counts that match the
+//! independently-computed unique key sets — i.e. what a cold serial
+//! run executes. The dispatcher publishes exactly this graph, so
+//! these invariants are what make its sharding sound.
+
+use std::collections::{HashMap, HashSet};
+
+use mlonmcu::features::Features;
+use mlonmcu::session::cache::{build_key, load_key, tune_key, TuneParams};
+use mlonmcu::session::run::RunSpec;
+use mlonmcu::session::scheduler::{plan, StageKind, TaskGraph};
+use mlonmcu::util::XorShift64;
+
+const TP: TuneParams = TuneParams { trials: 600, seed: 7 };
+
+fn fingerprints() -> HashMap<String, u64> {
+    (0..4).map(|i| (format!("m{i}"), 0x1000 + i as u64)).collect()
+}
+
+/// One random spec from small fixed pools (components need not be
+/// executable — the planner never validates, it only keys).
+fn random_spec(rng: &mut XorShift64) -> RunSpec {
+    let pick = |rng: &mut XorShift64, n: usize| (rng.next_u64() % n as u64) as usize;
+    let models = ["m0", "m1", "m2", "m3"];
+    let backends = ["tflmi", "tflmc", "tvmaot", "tvmaot+", "tvmrt"];
+    let targets = ["etiss", "esp32c3", "stm32f4", "stm32f7", "esp32"];
+    let schedules = [None, Some("default-nchw"), Some("arm-nhwc"), Some("default-nhwc")];
+    let features = if pick(rng, 4) == 0 {
+        Features::parse(&["autotvm".to_string()]).unwrap()
+    } else {
+        Features::default()
+    };
+    RunSpec {
+        model: models[pick(rng, models.len())].to_string(),
+        backend: backends[pick(rng, backends.len())].to_string(),
+        target: targets[pick(rng, targets.len())].to_string(),
+        schedule: schedules[pick(rng, schedules.len())].map(str::to_string),
+        tuned: pick(rng, 3) == 0,
+        features,
+    }
+}
+
+fn random_specs(rng: &mut XorShift64, max: usize) -> Vec<RunSpec> {
+    let n = 1 + (rng.next_u64() % max as u64) as usize;
+    (0..n).map(|_| random_spec(rng)).collect()
+}
+
+/// Execute the DAG in a random ready-order, asserting exactly-once
+/// execution and deps-before-dependents. Returns per-kind counts.
+fn simulate(graph: &TaskGraph, rng: &mut XorShift64) -> HashMap<&'static str, usize> {
+    let n = graph.tasks.len();
+    let mut pending: Vec<usize> = graph.tasks.iter().map(|t| t.deps.len()).collect();
+    let mut ready: Vec<usize> = (0..n).filter(|&i| pending[i] == 0).collect();
+    let mut executed = vec![false; n];
+    let mut counts: HashMap<&'static str, usize> = HashMap::new();
+    while let Some(slot) = (!ready.is_empty())
+        .then(|| (rng.next_u64() % ready.len() as u64) as usize)
+    {
+        let id = ready.swap_remove(slot);
+        assert!(!executed[id], "task {id} executed twice");
+        for &d in &graph.tasks[id].deps {
+            assert!(executed[d], "task {id} ran before its dep {d}");
+        }
+        executed[id] = true;
+        *counts.entry(graph.tasks[id].kind.stage_name()).or_default() += 1;
+        for &dep in &graph.tasks[id].dependents {
+            pending[dep] -= 1;
+            if pending[dep] == 0 {
+                ready.push(dep);
+            }
+        }
+    }
+    assert!(
+        executed.iter().all(|&e| e),
+        "DAG did not drain: a cycle or a lost dependent"
+    );
+    counts
+}
+
+#[test]
+fn random_matrices_graph_invariants_and_exact_once_execution() {
+    let fp = fingerprints();
+    let mut rng = XorShift64::new(0x9E3779B97F4A7C15);
+    for _ in 0..200 {
+        let specs = random_specs(&mut rng, 24);
+        let graph = plan(&specs, TP, &fp, true);
+
+        // (a) deps point strictly backwards and are deduplicated
+        for (id, t) in graph.tasks.iter().enumerate() {
+            let mut seen = HashSet::new();
+            for &d in &t.deps {
+                assert!(d < id, "dep {d} of task {id} not earlier");
+                assert!(seen.insert(d), "duplicate dep {d} of task {id}");
+            }
+            assert_eq!(
+                t.consumers.iter().copied().min(),
+                Some(t.spec_idx),
+                "a task's representative spec is its lowest consumer"
+            );
+            let sorted = t.consumers.windows(2).all(|w| w[0] <= w[1]);
+            assert!(sorted, "consumers of task {id} not in run order");
+        }
+
+        // (b) one tail per run, wired to that run's load + build
+        let tails: Vec<_> = graph
+            .tasks
+            .iter()
+            .filter(|t| t.kind == StageKind::Tail)
+            .collect();
+        assert_eq!(tails.len(), specs.len());
+        for (i, tail) in tails.iter().enumerate() {
+            assert_eq!(tail.spec_idx, i);
+            let kinds: Vec<StageKind> =
+                tail.deps.iter().map(|&d| graph.tasks[d].kind).collect();
+            assert!(kinds.contains(&StageKind::Load));
+            assert!(kinds.contains(&StageKind::Build));
+            for &d in &tail.deps {
+                assert!(
+                    graph.tasks[d].consumers.contains(&i),
+                    "tail {i}'s dep does not list it as consumer"
+                );
+            }
+        }
+
+        // (c) dedup counts match the independently-computed unique key
+        // sets — what a cold serial scheduler executes
+        let mut loads = HashSet::new();
+        let mut tunes = HashSet::new();
+        let mut builds = HashSet::new();
+        for s in &specs {
+            let f = fp[&s.model];
+            loads.insert(load_key(f).0);
+            if s.needs_tune() {
+                tunes.insert(tune_key(f, s, TP).0);
+            }
+            builds.insert(build_key(f, s, TP).0);
+        }
+        let unique = graph.unique_stage_counts();
+        assert_eq!(unique.loads, loads.len());
+        assert_eq!(unique.tunes, tunes.len());
+        assert_eq!(unique.builds, builds.len());
+        assert_eq!(
+            graph.stage_task_count(),
+            loads.len() + tunes.len() + builds.len()
+        );
+
+        // (d) exactly-once execution under a random ready-order, with
+        // per-kind execution counts equal to the unique key sets
+        let counts = simulate(&graph, &mut rng);
+        assert_eq!(counts.get("load").copied().unwrap_or(0), loads.len());
+        assert_eq!(counts.get("tune").copied().unwrap_or(0), tunes.len());
+        assert_eq!(counts.get("build").copied().unwrap_or(0), builds.len());
+        assert_eq!(counts.get("tail").copied().unwrap_or(0), specs.len());
+    }
+}
+
+#[test]
+fn planner_is_deterministic() {
+    let fp = fingerprints();
+    let mut rng = XorShift64::new(42);
+    for _ in 0..50 {
+        let specs = random_specs(&mut rng, 16);
+        let a = plan(&specs, TP, &fp, true);
+        let b = plan(&specs, TP, &fp, true);
+        assert_eq!(
+            format!("{:?}", a.tasks),
+            format!("{:?}", b.tasks),
+            "planning the same specs twice must yield the identical graph \
+             (the dispatcher and the tail pass both re-plan it)"
+        );
+    }
+}
+
+#[test]
+fn no_cache_plan_shares_nothing() {
+    let fp = fingerprints();
+    let mut rng = XorShift64::new(7);
+    for _ in 0..50 {
+        let specs = random_specs(&mut rng, 16);
+        let graph = plan(&specs, TP, &fp, false);
+        let expected: usize = specs
+            .iter()
+            .map(|s| 2 + usize::from(s.needs_tune()) + 1)
+            .sum();
+        assert_eq!(graph.tasks.len(), expected, "no dedup under --no-cache");
+        for t in &graph.tasks {
+            assert!(t.key.is_none(), "no keys under --no-cache");
+            assert_eq!(t.consumers.len(), 1, "no sharing under --no-cache");
+        }
+        // still drains exactly once
+        simulate(&graph, &mut rng);
+    }
+}

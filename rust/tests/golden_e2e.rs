@@ -6,9 +6,11 @@
 use std::path::PathBuf;
 
 use mlonmcu::backends::{by_name, BackendConfig};
+use mlonmcu::config::Environment;
 use mlonmcu::features::{compare_outputs, Validation};
 use mlonmcu::frontends::load_model;
 use mlonmcu::runtime::GoldenRuntime;
+use mlonmcu::session::{RunMatrix, RunOptions, Session};
 use mlonmcu::targets;
 
 fn artifacts() -> Option<PathBuf> {
@@ -83,6 +85,52 @@ fn pjrt_golden_matches_dumped_golden() {
             "{model}: PJRT execution disagrees with aot.py dump"
         );
     }
+}
+
+/// The full-matrix run of the real zoo models under the sharded
+/// multi-process executor must render the exact same report bytes as
+/// the serial baseline — the golden-artifact variant of
+/// tests/dispatch_equivalence.rs.
+#[test]
+fn sharded_executor_report_matches_serial_on_real_models() {
+    let Some(artifacts) = artifacts() else { return };
+    let models_dir = artifacts.join("models");
+    let make_env = |tag: &str| {
+        let root = std::env::temp_dir().join(format!("mlonmcu_golden_shard_{tag}"));
+        let _ = std::fs::remove_dir_all(&root);
+        let env = Environment::init(&root).unwrap();
+        let env = env
+            .with_overrides(&[
+                format!("paths.models={}", models_dir.display()),
+                format!("dispatch.worker_bin={}", env!("CARGO_BIN_EXE_mlonmcu")),
+            ])
+            .unwrap();
+        (env, root)
+    };
+    let matrix = RunMatrix::new()
+        .models(["aww", "toycar"])
+        .backends(["tflmi", "tflmc", "tvmaot", "tvmaot+", "tvmrt"])
+        .targets(["etiss"]);
+
+    let (env_s, dir_s) = make_env("serial");
+    let baseline = Session::new(&env_s)
+        .unwrap()
+        .run_matrix_opts(&matrix, RunOptions { parallel: 2, use_cache: true, workers: 0 })
+        .unwrap();
+    for row in &baseline.rows {
+        assert_eq!(row["status"].render(), "ok", "baseline run failed");
+    }
+
+    let (env_w, dir_w) = make_env("workers");
+    let sharded = Session::new(&env_w)
+        .unwrap()
+        .run_matrix_opts(&matrix, RunOptions { parallel: 2, use_cache: true, workers: 4 })
+        .unwrap();
+    assert_eq!(baseline.to_csv(), sharded.to_csv());
+    assert_eq!(baseline.to_markdown(), sharded.to_markdown());
+
+    std::fs::remove_dir_all(dir_s).unwrap();
+    std::fs::remove_dir_all(dir_w).unwrap();
 }
 
 #[test]

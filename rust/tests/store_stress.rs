@@ -1,0 +1,145 @@
+//! Multi-process stress test for the environment store: N concurrent
+//! writer processes plus GC loops hammering one `index.json` must
+//! never corrupt an entry or lose a verified artifact. Children are
+//! real processes (this test binary re-executing itself with
+//! `MLONMCU_STRESS_*` set), not threads — the lock file, tmp-rename
+//! writes and index merge are exactly the cross-process surfaces the
+//! sharded dispatcher (`session/dispatch.rs`) leans on.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use mlonmcu::graph::model::testutil::tiny_conv;
+use mlonmcu::session::cache::{load_key, Artifact, CachedStage};
+use mlonmcu::session::store::{EnvStore, StoreLookup};
+use std::sync::Arc;
+
+const WRITERS: usize = 4;
+const KEYS_PER_WRITER: u64 = 60;
+
+fn artifact() -> Artifact {
+    Artifact::Graph(Arc::new(tiny_conv()))
+}
+
+fn child_key(child: u64, i: u64) -> u64 {
+    child * 1_000_000 + i
+}
+
+/// Re-execute this test binary as a stress child.
+fn spawn_child(dir: &std::path::Path, id: usize, budget: &str) -> std::process::Child {
+    Command::new(std::env::current_exe().unwrap())
+        .args(["stress_child_worker", "--exact", "--include-ignored", "--nocapture"])
+        .env("MLONMCU_STRESS_CHILD", id.to_string())
+        .env("MLONMCU_STRESS_DIR", dir)
+        .env("MLONMCU_STRESS_BUDGET", budget)
+        .spawn()
+        .expect("spawning stress child")
+}
+
+/// The child body: save/load/gc loops against the shared store. Run
+/// only when re-executed by the parent tests (ignored otherwise).
+#[test]
+#[ignore = "helper: re-executed as a child process by the stress tests"]
+fn stress_child_worker() {
+    let Ok(id) = std::env::var("MLONMCU_STRESS_CHILD") else { return };
+    let id: u64 = id.parse().unwrap();
+    let dir = PathBuf::from(std::env::var("MLONMCU_STRESS_DIR").unwrap());
+    let budget: u64 = std::env::var("MLONMCU_STRESS_BUDGET").unwrap().parse().unwrap();
+    let store = EnvStore::open(&dir, budget).expect("child open");
+    let a = artifact();
+    for i in 0..KEYS_PER_WRITER {
+        store.save(load_key(child_key(id, i)), &a).expect("child save");
+        // read back own + sibling keys: any Hit decoded through the
+        // key/hash verifier; Corrupt would mean torn bytes
+        for probe in [child_key(id, i), child_key((id + 1) % WRITERS as u64, i)] {
+            match store.load(load_key(probe), CachedStage::Load) {
+                StoreLookup::Hit(_) | StoreLookup::Miss => {}
+                StoreLookup::Corrupt => {
+                    panic!("child {id}: store served a corrupt entry for {probe:x}")
+                }
+            }
+        }
+        if i % 8 == 0 {
+            // GC loop hammering the same index under the same lock
+            store.gc().expect("child gc");
+        }
+    }
+}
+
+fn run_stress(tag: &str, budget: u64) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mlonmcu_store_stress_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let children: Vec<_> = (0..WRITERS)
+        .map(|i| spawn_child(&dir, i, &budget.to_string()))
+        .collect();
+    for mut c in children {
+        let status = c.wait().expect("child waited");
+        assert!(status.success(), "stress child failed: {status:?}");
+    }
+    dir
+}
+
+#[test]
+fn concurrent_writers_and_gc_lose_nothing_under_unlimited_budget() {
+    // guard: when libtest runs this inside a child re-execution the
+    // filter already excludes it, but belt-and-braces
+    if std::env::var("MLONMCU_STRESS_CHILD").is_ok() {
+        return;
+    }
+    let dir = run_stress("unlimited", u64::MAX);
+    // with no budget pressure GC evicts nothing: every verified
+    // artifact every child saved must still load — and decode clean
+    let store = EnvStore::open(&dir, u64::MAX).unwrap();
+    assert_eq!(
+        store.stats().entries as u64,
+        WRITERS as u64 * KEYS_PER_WRITER,
+        "index lost entries under concurrent writers"
+    );
+    for child in 0..WRITERS as u64 {
+        for i in 0..KEYS_PER_WRITER {
+            match store.load(load_key(child_key(child, i)), CachedStage::Load) {
+                StoreLookup::Hit(_) => {}
+                StoreLookup::Miss => {
+                    panic!("lost verified artifact {child}/{i}")
+                }
+                StoreLookup::Corrupt => {
+                    panic!("corrupt artifact {child}/{i}")
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(dir).unwrap();
+}
+
+#[test]
+fn concurrent_writers_under_tiny_budget_never_corrupt() {
+    if std::env::var("MLONMCU_STRESS_CHILD").is_ok() {
+        return;
+    }
+    // budget fits only a handful of entries: eviction races everywhere
+    let one = mlonmcu::session::persist::encode(load_key(0), &artifact()).len() as u64;
+    let dir = run_stress("tiny", 8 * one);
+    // losing entries to eviction is legal; serving corrupt ones never:
+    // every surviving index row must decode through verification
+    let store = EnvStore::open(&dir, u64::MAX).unwrap();
+    let mut survivors = 0usize;
+    for child in 0..WRITERS as u64 {
+        for i in 0..KEYS_PER_WRITER {
+            match store.load(load_key(child_key(child, i)), CachedStage::Load) {
+                StoreLookup::Hit(_) => survivors += 1,
+                StoreLookup::Miss => {}
+                StoreLookup::Corrupt => {
+                    panic!("corrupt artifact {child}/{i} after eviction races")
+                }
+            }
+        }
+    }
+    assert!(survivors > 0, "at least the newest entries survive");
+    // the validated open dropped any index row without a matching
+    // file, so every remaining entry was probed above and served clean
+    let s = store.stats();
+    assert_eq!(s.entries, survivors, "index rows == loadable artifacts");
+    assert_eq!(s.total_bytes, survivors as u64 * one);
+    std::fs::remove_dir_all(dir).unwrap();
+}
