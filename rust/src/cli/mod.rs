@@ -17,7 +17,10 @@ pub mod args;
 use anyhow::{bail, Context, Result};
 
 use crate::config::Environment;
+use crate::data::Json;
 use crate::postprocess;
+use crate::session::persist;
+use crate::session::transport::{Client, RemoteConfig, Server};
 use crate::session::{EnvStore, RunMatrix, RunOptions, Session};
 use crate::util::fmt::human_bytes;
 
@@ -35,12 +38,16 @@ USAGE:
           [--schedule default-nchw ..] [--tune]
           [-f validate ..] [--parallel N] [--workers N] [-c key=val ..]
           [--postprocess filter_cols:a,b ..] [--no-cache]
-          [--cache-dir DIR] [--cache-budget MB]
+          [--cache-dir DIR] [--cache-budget MB] [--connect HOST:PORT]
+  mlonmcu serve [--listen HOST:PORT]      export the env store + a task
+          [--cache-dir DIR] [--cache-budget MB] [-c key=val ..]
+                                          queue to remote workers
   mlonmcu cache stats|gc|clear            manage the environment cache
           [--cache-dir DIR] [--cache-budget MB] [-c key=val ..]
+          [--connect HOST:PORT]
   mlonmcu report [--session N]            reprint a session report
-  mlonmcu worker --queue DIR --home DIR [-c key=val ..]
-                                          (internal) dispatch worker
+  mlonmcu worker (--queue DIR | --connect HOST:PORT) --home DIR
+          [-c key=val ..]                 (internal) dispatch worker
 
 FLAGS:
   --no-cache       disable all artifact-cache tiers: every run executes
@@ -54,6 +61,13 @@ FLAGS:
                    env store (default: 0 = in-process; config key
                    dispatch.workers). Reports are byte-identical to a
                    serial run.
+  --connect        address of a `mlonmcu serve` daemon (config key
+                   remote.connect). Adds a remote tier behind the env
+                   store; with --workers the Load/Tune/Build stages are
+                   dispatched through the daemon's task queue to
+                   `worker --connect` fleets on any machine. An
+                   unreachable server degrades to local execution.
+  --listen         serve bind address (default 127.0.0.1:4917)
 ";
 
 /// Entry point for the binary.
@@ -70,6 +84,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         "backends" => cmd_backends(),
         "targets" => cmd_targets(),
         "flow" => cmd_flow(&rest),
+        "serve" => cmd_serve(&rest),
         "cache" => cmd_cache(&rest),
         "report" => cmd_report(&rest),
         "worker" => cmd_worker(&rest),
@@ -166,6 +181,7 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
             ("--no-cache", false),
             ("--cache-dir", true),
             ("--cache-budget", true),
+            ("--connect", true),
         ],
     )?;
     let models = p.all(&["-m", "--model"]);
@@ -243,6 +259,12 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
             t.stage_execs.builds,
             t.runs
         );
+        if env.remote_connect().is_some() {
+            println!(
+                "remote store: {} hit(s), {} miss(es), {} error(s)",
+                t.remote_hits, t.remote_misses, t.remote_errors
+            );
+        }
     } else {
         println!("artifact cache: disabled (--no-cache)");
     }
@@ -250,8 +272,9 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
 }
 
 /// Resolve the environment with `-c` overrides plus the cache flags
-/// (`--cache-dir` / `--cache-budget` are sugar for the `paths.cache` /
-/// `cache.budget_mb` config keys, so precedence stays in one place).
+/// (`--cache-dir` / `--cache-budget` / `--connect` are sugar for the
+/// `paths.cache` / `cache.budget_mb` / `remote.connect` config keys,
+/// so precedence stays in one place).
 fn env_with_cache_flags(p: &Parsed) -> Result<Environment> {
     let mut overrides = p.all(&["-c", "--config"]);
     if let Some(dir) = p.one("--cache-dir") {
@@ -261,14 +284,61 @@ fn env_with_cache_flags(p: &Parsed) -> Result<Environment> {
         mb.parse::<u64>().context("--cache-budget (MB)")?;
         overrides.push(format!("cache.budget_mb={mb}"));
     }
+    if let Some(addr) = p.one("--connect") {
+        overrides.push(format!("remote.connect={addr}"));
+    }
     Environment::discover()?.with_overrides(&overrides)
+}
+
+/// A wire client configured from the environment's `[remote]` section
+/// for an explicit address (`--connect`).
+fn remote_client(env: &Environment, addr: &str) -> Client {
+    Client::new(RemoteConfig {
+        addr: addr.to_string(),
+        timeout_ms: env.remote_timeout_ms(),
+        retries: env.remote_retries(),
+        backoff_ms: env.remote_backoff_ms(),
+        grace_ms: env.remote_grace_ms(),
+    })
+}
+
+/// `mlonmcu serve` — export the environment store plus a shared work
+/// queue over TCP to `--connect` clients. Runs until killed.
+fn cmd_serve(rest: &[String]) -> Result<i32> {
+    let p = Parsed::parse(
+        rest,
+        &[
+            ("--listen", true),
+            ("--cache-dir", true),
+            ("--cache-budget", true),
+            ("-c", true),
+            ("--config", true),
+        ],
+    )?;
+    let listen =
+        p.one("--listen").map(String::as_str).unwrap_or("127.0.0.1:4917");
+    let env = env_with_cache_flags(&p)?;
+    let store = std::sync::Arc::new(EnvStore::open(
+        &env.cache_dir(),
+        env.cache_budget_bytes(),
+    )?);
+    let server = Server::bind(std::sync::Arc::clone(&store), listen)?;
+    println!(
+        "serving artifact store {} (format v{}) on {}",
+        store.root().display(),
+        persist::FORMAT_VERSION,
+        server.local_addr()
+    );
+    server.run()?;
+    Ok(0)
 }
 
 /// `mlonmcu cache stats|gc|clear` — manage the environment-level
 /// artifact store without running anything.
 fn cmd_cache(rest: &[String]) -> Result<i32> {
     let usage = "usage: mlonmcu cache stats|gc|clear \
-                 [--cache-dir DIR] [--cache-budget MB] [-c key=val ..]";
+                 [--cache-dir DIR] [--cache-budget MB] \
+                 [--connect HOST:PORT] [-c key=val ..]";
     let Some(action) = rest.first().map(String::as_str) else {
         bail!("{usage}");
     };
@@ -277,6 +347,7 @@ fn cmd_cache(rest: &[String]) -> Result<i32> {
         &[
             ("--cache-dir", true),
             ("--cache-budget", true),
+            ("--connect", true),
             ("-c", true),
             ("--config", true),
         ],
@@ -296,6 +367,36 @@ fn cmd_cache(rest: &[String]) -> Result<i32> {
                 human_bytes(s.total_bytes),
                 human_bytes(store.budget_bytes())
             );
+            // with a remote configured, report the served store too;
+            // an unreachable server is a note, never an error
+            if let Some(addr) = env.remote_connect() {
+                let n = |j: &Json, k: &str| {
+                    j.get(k).and_then(Json::as_i64).unwrap_or(0)
+                };
+                match remote_client(&env, &addr).stats() {
+                    Ok(r) => {
+                        println!("remote store at {addr} (format v{})", n(&r, "format"));
+                        println!(
+                            "  entries: {} ({} load / {} tune / {} build)",
+                            n(&r, "entries"),
+                            n(&r, "loads"),
+                            n(&r, "tunes"),
+                            n(&r, "builds")
+                        );
+                        println!(
+                            "  size:    {}; {} model blob(s), {} queue(s), \
+                             {} worker(s)",
+                            human_bytes(n(&r, "total_bytes").max(0) as u64),
+                            n(&r, "blobs"),
+                            n(&r, "queues"),
+                            n(&r, "workers")
+                        );
+                    }
+                    Err(e) => {
+                        println!("remote store at {addr}: unreachable ({e:#})");
+                    }
+                }
+            }
         }
         "gc" => {
             let (evicted, freed) = store.gc()?;
@@ -321,28 +422,44 @@ fn cmd_cache(rest: &[String]) -> Result<i32> {
     Ok(0)
 }
 
-/// `mlonmcu worker` — internal subcommand spawned by the sharded
-/// dispatcher: drain the Load/Tune/Build work queue at `--queue`,
-/// exchanging artifacts through the env store of `--home`.
+/// `mlonmcu worker` — internal subcommand: drain a Load/Tune/Build
+/// work queue, exchanging artifacts through the env store of `--home`.
+/// `--queue DIR` drains a local file queue (spawned by the sharded
+/// dispatcher); `--connect HOST:PORT` claims tasks from a serve
+/// daemon's shared queue instead.
 fn cmd_worker(rest: &[String]) -> Result<i32> {
     let p = Parsed::parse(
         rest,
         &[
             ("--queue", true),
+            ("--connect", true),
             ("--home", true),
             ("-c", true),
             ("--config", true),
         ],
     )?;
-    let queue = p
-        .one("--queue")
-        .context("worker needs --queue DIR (internal subcommand)")?;
+    let queue = p.one("--queue");
+    let connect = p.one("--connect");
+    if queue.is_none() && connect.is_none() {
+        bail!(
+            "worker needs --queue DIR or --connect HOST:PORT \
+             (internal subcommand)"
+        );
+    }
     let home = p
         .one("--home")
         .context("worker needs --home DIR (internal subcommand)")?;
     let env = Environment::load_or_template(std::path::Path::new(home))?
         .with_overrides(&p.all(&["-c", "--config"]))?;
-    crate::session::dispatch::worker_main(std::path::Path::new(queue), &env)
+    match queue {
+        Some(q) => {
+            crate::session::dispatch::worker_main(std::path::Path::new(q), &env)
+        }
+        None => crate::session::dispatch::worker_main_remote(
+            connect.expect("checked above"),
+            &env,
+        ),
+    }
 }
 
 fn cmd_report(rest: &[String]) -> Result<i32> {

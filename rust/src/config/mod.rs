@@ -45,6 +45,18 @@ workers = 0
 # lease heartbeat timeout before a worker's claim is reclaimed
 lease_ms = 5000
 
+[remote]
+# artifact server (`mlonmcu serve`) to consult after the local env
+# store misses; empty = local-only. Also enables `--connect` fleets.
+connect = ""
+# per-request timeout and bounded retry/backoff of the remote client
+timeout_ms = 2000
+retries = 3
+backoff_ms = 100
+# queue-stall age after which a dispatching parent drains one task
+# itself instead of waiting for remote workers
+grace_ms = 500
+
 [tune]
 trials = 600
 
@@ -215,6 +227,37 @@ impl Environment {
         (!s.is_empty()).then(|| PathBuf::from(s))
     }
 
+    /// Remote artifact server address (`remote.connect`, or the
+    /// `--connect` CLI flag via an override). `None` when unset: the
+    /// cache chain stays local-only.
+    pub fn remote_connect(&self) -> Option<String> {
+        let s = self.get_str("remote", "connect", "");
+        (!s.is_empty()).then_some(s)
+    }
+
+    /// Per-request timeout of the remote client in milliseconds.
+    pub fn remote_timeout_ms(&self) -> u64 {
+        self.get_i64("remote", "timeout_ms", 2000).clamp(50, 60_000) as u64
+    }
+
+    /// Bounded retry count of the remote client (attempts = retries+1).
+    pub fn remote_retries(&self) -> u32 {
+        self.get_i64("remote", "retries", 3).clamp(0, 10) as u32
+    }
+
+    /// Base backoff between remote retries in milliseconds (doubles
+    /// each attempt, plus jitter).
+    pub fn remote_backoff_ms(&self) -> u64 {
+        self.get_i64("remote", "backoff_ms", 100).clamp(1, 10_000) as u64
+    }
+
+    /// Queue-stall age in milliseconds after which a dispatching
+    /// parent drains one served task itself instead of waiting for
+    /// remote workers (`remote.grace_ms`).
+    pub fn remote_grace_ms(&self) -> u64 {
+        self.get_i64("remote", "grace_ms", 500).clamp(20, 60_000) as u64
+    }
+
     /// Size budget of the environment store in bytes
     /// (`cache.budget_mb`, or `--cache-budget` via an override).
     pub fn cache_budget_bytes(&self) -> u64 {
@@ -280,6 +323,29 @@ mod tests {
         // an absolute --cache-dir wins the join; budget is in MB
         assert_eq!(env.cache_dir(), PathBuf::from("/abs/store"));
         assert_eq!(env.cache_budget_bytes(), 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn remote_section_defaults_and_overrides() {
+        let env = Environment {
+            root: PathBuf::from("/x"),
+            doc: TomlDoc::parse(DEFAULT_TEMPLATE).unwrap(),
+            overrides: BTreeMap::new(),
+        };
+        // template ships with the tier disabled
+        assert_eq!(env.remote_connect(), None);
+        assert_eq!(env.remote_timeout_ms(), 2000);
+        assert_eq!(env.remote_retries(), 3);
+        assert_eq!(env.remote_backoff_ms(), 100);
+        assert_eq!(env.remote_grace_ms(), 500);
+        let env = env
+            .with_overrides(&[
+                "remote.connect=127.0.0.1:4917".into(),
+                "remote.retries=99".into(),
+            ])
+            .unwrap();
+        assert_eq!(env.remote_connect().as_deref(), Some("127.0.0.1:4917"));
+        assert_eq!(env.remote_retries(), 10, "retries clamp to a sane bound");
     }
 
     #[test]

@@ -42,6 +42,7 @@ use crate::graph::Graph;
 use crate::schedules::Schedule;
 use crate::session::run::RunSpec;
 use crate::session::store::{EnvStore, StoreLookup};
+use crate::session::transport::{RemoteLookup, RemoteStore};
 use crate::util::StableHasher;
 
 /// A stable 64-bit content key for one stage output.
@@ -179,6 +180,15 @@ pub struct CacheStats {
     /// recomputed (corruption or a stale format — a miss, not an
     /// error).
     pub verify_fails: usize,
+    /// Subset of `hits` served by the remote store tier (another
+    /// machine's serve daemon held the artifact).
+    pub remote_hits: usize,
+    /// Remote consultations that found nothing (including entries that
+    /// failed client-side verification — skew is a miss).
+    pub remote_misses: usize,
+    /// Remote transport failures; the tier degrades to local-only
+    /// after the first one, so this counts at most one per session.
+    pub remote_errors: usize,
 }
 
 impl CacheStats {
@@ -194,6 +204,9 @@ impl CacheStats {
             disk_hits: self.disk_hits - earlier.disk_hits,
             disk_misses: self.disk_misses - earlier.disk_misses,
             verify_fails: self.verify_fails - earlier.verify_fails,
+            remote_hits: self.remote_hits - earlier.remote_hits,
+            remote_misses: self.remote_misses - earlier.remote_misses,
+            remote_errors: self.remote_errors - earlier.remote_errors,
         }
     }
 }
@@ -215,6 +228,7 @@ pub struct ArtifactCache {
     capacity: usize,
     disk_dir: Option<PathBuf>,
     store: Option<Arc<EnvStore>>,
+    remote: Option<Arc<RemoteStore>>,
     inner: Mutex<Inner>,
 }
 
@@ -228,6 +242,7 @@ impl ArtifactCache {
             capacity: capacity.max(1),
             disk_dir,
             store: None,
+            remote: None,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 lru: VecDeque::new(),
@@ -243,6 +258,13 @@ impl ArtifactCache {
         self
     }
 
+    /// Attach the remote store tier (consulted after the local store
+    /// misses; `transport::RemoteStore`).
+    pub fn with_remote(mut self, remote: Option<Arc<RemoteStore>>) -> ArtifactCache {
+        self.remote = remote;
+        self
+    }
+
     /// A cache that never stores or counts anything (`--no-cache`).
     pub fn disabled() -> ArtifactCache {
         ArtifactCache {
@@ -250,6 +272,7 @@ impl ArtifactCache {
             capacity: 1,
             disk_dir: None,
             store: None,
+            remote: None,
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 lru: VecDeque::new(),
@@ -267,9 +290,15 @@ impl ArtifactCache {
         self.store.as_ref()
     }
 
+    pub fn remote_store(&self) -> Option<&Arc<RemoteStore>> {
+        self.remote.as_ref()
+    }
+
     /// Look up a stage artifact: memory tier, then the environment
-    /// store. Counts a hit (plus `disk_hits` when the store served
-    /// it), a miss, or a `verify_fails` for a corrupt store entry.
+    /// store, then the remote store. Counts a hit (plus `disk_hits` /
+    /// `remote_hits` for the serving tier), a miss, a `verify_fails`
+    /// for a corrupt store entry, or a `remote_errors` for the
+    /// (single, degrading) remote transport failure.
     pub fn lookup(&self, key: StageKey, stage: CachedStage) -> Option<Artifact> {
         if !self.enabled {
             return None;
@@ -286,29 +315,54 @@ impl ArtifactCache {
         // into the memory tier — the file is decoded at most once per
         // process
         let looked_up = self.store.as_ref().map(|s| s.load(key, stage));
-        let mut inner = self.inner.lock().unwrap();
+        let mut store_corrupt = false;
+        let mut store_missed = false;
         match looked_up {
             Some(StoreLookup::Hit(artifact)) => {
+                let mut inner = self.inner.lock().unwrap();
                 inner.stats.hits += 1;
                 inner.stats.disk_hits += 1;
                 insert_mem(&mut inner, self.capacity, key, artifact.clone());
-                Some(artifact)
+                return Some(artifact);
             }
-            Some(StoreLookup::Corrupt) => {
-                inner.stats.misses += 1;
-                inner.stats.verify_fails += 1;
-                None
-            }
-            Some(StoreLookup::Miss) => {
-                inner.stats.misses += 1;
-                inner.stats.disk_misses += 1;
-                None
-            }
-            None => {
-                inner.stats.misses += 1;
-                None
-            }
+            Some(StoreLookup::Corrupt) => store_corrupt = true,
+            Some(StoreLookup::Miss) => store_missed = true,
+            None => {}
         }
+        // last tier: the remote store (if attached) — network faults
+        // degrade it, they never fail the lookup
+        let remote = self.remote.as_ref().map(|r| r.load(key, stage));
+        let mut inner = self.inner.lock().unwrap();
+        if store_corrupt {
+            inner.stats.verify_fails += 1;
+        }
+        if store_missed {
+            inner.stats.disk_misses += 1;
+        }
+        match remote {
+            Some(RemoteLookup::Hit(artifact)) => {
+                inner.stats.hits += 1;
+                inner.stats.remote_hits += 1;
+                insert_mem(&mut inner, self.capacity, key, artifact.clone());
+                drop(inner);
+                // promote into the local store: the next process on
+                // this machine must not cross the network again
+                if let Some(store) = &self.store {
+                    if let Err(e) = store.save(key, &artifact) {
+                        crate::log_warn!(
+                            "env cache: remote entry {} not saved locally: {e}",
+                            key.hex()
+                        );
+                    }
+                }
+                return Some(artifact);
+            }
+            Some(RemoteLookup::Miss) => inner.stats.remote_misses += 1,
+            Some(RemoteLookup::Error) => inner.stats.remote_errors += 1,
+            Some(RemoteLookup::Off) | None => {}
+        }
+        inner.stats.misses += 1;
+        None
     }
 
     /// Insert a freshly computed artifact, evicting the least-recently
@@ -324,6 +378,10 @@ impl ArtifactCache {
             if let Err(e) = store.save(key, &artifact) {
                 crate::log_warn!("env cache: entry {} not saved: {e}", key.hex());
             }
+        }
+        if let Some(remote) = &self.remote {
+            // best-effort too: degradation is handled inside the tier
+            remote.save(key, &artifact);
         }
         let mut inner = self.inner.lock().unwrap();
         if !inner.map.contains_key(&key.0) {
@@ -438,6 +496,9 @@ impl ArtifactCache {
             ("disk_hits", Json::Num(stats.disk_hits as f64)),
             ("disk_misses", Json::Num(stats.disk_misses as f64)),
             ("verify_fails", Json::Num(stats.verify_fails as f64)),
+            ("remote_hits", Json::Num(stats.remote_hits as f64)),
+            ("remote_misses", Json::Num(stats.remote_misses as f64)),
+            ("remote_errors", Json::Num(stats.remote_errors as f64)),
             ("artifacts", Json::Arr(entries)),
         ]);
         std::fs::write(root.join("index.json"), doc.to_string())?;
@@ -665,6 +726,61 @@ mod tests {
         cache.write_index().unwrap();
         let idx = Json::parse_file(&dir.join("index.json")).unwrap();
         assert_eq!(idx.get("artifacts").unwrap().as_arr().unwrap().len(), 0);
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn remote_tier_fallthrough_counts_remote_hits_and_promotes() {
+        use crate::session::transport::{RemoteConfig, RemoteStore, Server};
+        let dir = std::env::temp_dir().join("mlonmcu_cache_remote_tier");
+        let _ = std::fs::remove_dir_all(&dir);
+        let served =
+            Arc::new(EnvStore::open(&dir.join("served"), u64::MAX).unwrap());
+        let server = Server::spawn(Arc::clone(&served), "127.0.0.1:0").unwrap();
+        let remote = Arc::new(RemoteStore::new(RemoteConfig {
+            addr: server.addr.to_string(),
+            timeout_ms: 2000,
+            retries: 1,
+            backoff_ms: 10,
+            grace_ms: 100,
+        }));
+        let local =
+            Arc::new(EnvStore::open(&dir.join("local"), u64::MAX).unwrap());
+        let key = load_key(21);
+        served
+            .save(key, &Artifact::Graph(Arc::new(tiny_conv())))
+            .unwrap();
+
+        // mem miss -> local store miss -> remote hit, promoted locally
+        let cache = ArtifactCache::new(8, None)
+            .with_store(Some(Arc::clone(&local)))
+            .with_remote(Some(Arc::clone(&remote)));
+        assert!(cache.lookup(key, CachedStage::Load).is_some());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 0));
+        assert_eq!((s.remote_hits, s.remote_misses), (1, 0));
+        assert_eq!((s.disk_hits, s.disk_misses), (0, 1));
+        assert_eq!(local.stats().entries, 1, "remote hit promoted to local");
+
+        // unknown key: counted as both a disk and a remote miss
+        assert!(cache.lookup(load_key(22), CachedStage::Load).is_none());
+        let s = cache.stats();
+        assert_eq!((s.remote_misses, s.misses), (1, 1));
+
+        // inserts replicate to the served store
+        cache.insert(
+            load_key(23),
+            Artifact::Graph(Arc::new(tiny_conv())),
+            "t",
+        );
+        assert_eq!(served.stats().entries, 2);
+
+        // server death: one counted error, then the tier is off
+        server.shutdown();
+        assert!(cache.lookup(load_key(24), CachedStage::Load).is_none());
+        assert!(cache.lookup(load_key(25), CachedStage::Load).is_none());
+        let s = cache.stats();
+        assert_eq!(s.remote_errors, 1, "degrades after the first failure");
         std::fs::remove_dir_all(dir).unwrap();
     }
 

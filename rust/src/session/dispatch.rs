@@ -39,6 +39,7 @@
 //! * A task whose store artifact vanishes before the tail pass is
 //!   recomputed locally by the scheduler's overlay fallthrough.
 
+use std::collections::HashMap;
 use std::fs;
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
@@ -61,6 +62,7 @@ use crate::session::scheduler::{
     WorkerOutcome,
 };
 use crate::session::store::{write_atomic, EnvStore, StoreLookup};
+use crate::session::transport::{Claim, Client, RemoteConfig, RemoteStore};
 use crate::session::Session;
 use crate::util::proc::stale_owner_file;
 use crate::util::Stopwatch;
@@ -116,12 +118,17 @@ struct QueueTask {
     kind: CachedStage,
     key: StageKey,
     spec: RunSpec,
+    /// Fingerprint of the model file contents; remote workers (whose
+    /// homes may not hold the model) fetch the bytes from the server's
+    /// blob pool under this key. 0 = unknown, fall back to local files.
+    model_fp: u64,
     /// (task id, kind, key) of each dependency, id-ascending — the
     /// order the serial scheduler picks failures in.
     deps: Vec<(usize, CachedStage, StageKey)>,
 }
 
 /// Outcome record of one task (the `.done.json` payload).
+#[derive(Clone)]
 struct DoneRecord {
     ok: bool,
     /// Failing stage name ("load"/"tune"/"build"), possibly upstream.
@@ -213,7 +220,7 @@ pub fn execute_sharded(
     let tune = scheduler::tune_params(env);
     let (model_fp, model_bytes) = scheduler::model_fingerprints(session, specs);
     let graph = scheduler::plan(specs, tune, &model_fp, true);
-    let qtasks = queue_tasks_from_graph(&graph, specs);
+    let qtasks = queue_tasks_from_graph(&graph, specs, &model_fp);
 
     let queue = next_queue_dir(&session.dir)?;
     publish(&queue, &qtasks)?;
@@ -257,13 +264,48 @@ pub fn execute_sharded(
     drop(children); // all tasks done: reap (and stop) the fleet
 
     // worker outcomes -> overlay + serial-equivalent counters
+    let (overlay, mut counters) =
+        reconstruct_outcomes(&graph, cache, |id| read_done(&queue, id))?;
+    counters.workers_spawned = spawned;
+
+    // deterministic tail pass: the same scheduler over the *same*
+    // planned graph (no re-read/re-hash of the models), stages served
+    // from the cache tiers with worker attribution
+    let (records, local_execs) = scheduler::execute_planned(
+        session,
+        specs,
+        cache,
+        opts,
+        &graph,
+        &model_bytes,
+        tune,
+        Some(&overlay),
+    )?;
+    // stages the store lost between worker write and tail pass were
+    // recomputed locally: count those executions too
+    counters.execs.loads += local_execs.loads;
+    counters.execs.tunes += local_execs.tunes;
+    counters.execs.builds += local_execs.builds;
+    Ok((records, counters))
+}
+
+/// Fold per-task outcome records (file-queue done markers or served
+/// done docs) back into the scheduler overlay plus the exact counters
+/// an equivalent serial pass would have produced. Shared by the local
+/// sharded path and the remote-fleet path so both reconstruct
+/// byte-identical report notes.
+fn reconstruct_outcomes(
+    graph: &TaskGraph,
+    cache: &ArtifactCache,
+    mut get_done: impl FnMut(usize) -> Option<DoneRecord>,
+) -> Result<(Overlay, DispatchCounters)> {
     let mut overlay = Overlay::new();
-    let mut counters = DispatchCounters { workers_spawned: spawned, ..Default::default() };
+    let mut counters = DispatchCounters::default();
     for (id, task) in graph.tasks.iter().enumerate() {
         if task.kind == StageKind::Tail {
             continue;
         }
-        let done = read_done(&queue, id)
+        let done = get_done(id)
             .with_context(|| format!("queue task {id} finished without an outcome"))?;
         let key = task.key.expect("stage tasks are keyed");
         let shared = task.consumers.len() - 1;
@@ -317,26 +359,7 @@ pub fn execute_sharded(
             },
         );
     }
-
-    // deterministic tail pass: the same scheduler over the *same*
-    // planned graph (no re-read/re-hash of the models), stages served
-    // from the cache tiers with worker attribution
-    let (records, local_execs) = scheduler::execute_planned(
-        session,
-        specs,
-        cache,
-        opts,
-        &graph,
-        &model_bytes,
-        tune,
-        Some(&overlay),
-    )?;
-    // stages the store lost between worker write and tail pass were
-    // recomputed locally: count those executions too
-    counters.execs.loads += local_execs.loads;
-    counters.execs.tunes += local_execs.tunes;
-    counters.execs.builds += local_execs.builds;
-    Ok((records, counters))
+    Ok((overlay, counters))
 }
 
 /// Map a worker-reported stage name back to the interned form used by
@@ -348,6 +371,513 @@ fn intern_stage(name: &str, kind: StageKind) -> &'static str {
         "build" => "build",
         _ => kind.stage_name(),
     }
+}
+
+// ----------------------------------------------------- remote fleet --
+
+/// Everything a remote drain step needs: the wire client plus the
+/// local environment (store, model dirs) behind it.
+struct RemoteCtx<'a> {
+    client: &'a Client,
+    env: &'a Environment,
+    store: Arc<EnvStore>,
+}
+
+/// Outcome of one remote claim attempt.
+enum Step {
+    /// Claimed, executed, and published a task.
+    Worked,
+    /// Nothing claimable right now.
+    Idle,
+    /// The server refused the claim (artifact-format mismatch).
+    Refused,
+}
+
+/// Execute `specs` against a serve daemon: push the planned stage DAG
+/// into the served task queue, let `mlonmcu worker --connect` fleets
+/// (plus this parent, when the queue stalls) drain it, then replay the
+/// tails in-process exactly like `execute_sharded`. Returns `Ok(None)`
+/// when the server cannot be used — the caller falls back to local
+/// execution; remote trouble is never fatal to the matrix.
+pub fn execute_remote(
+    session: &Session,
+    specs: &[RunSpec],
+    cache: &ArtifactCache,
+    opts: RunOptions,
+    remote: &Arc<RemoteStore>,
+) -> Result<Option<(Vec<RunRecord>, DispatchCounters)>> {
+    let env = session.env();
+    let store = cache
+        .env_store()
+        .cloned()
+        .context("remote dispatch requires the environment store")?;
+    let client = remote.client();
+    match client.ping() {
+        Ok(v) if v == persist::FORMAT_VERSION => {}
+        Ok(v) => {
+            crate::log_warn!(
+                "remote dispatch: server {} speaks artifact format {v}, \
+                 this build speaks {}; executing in-process",
+                client.addr(),
+                persist::FORMAT_VERSION
+            );
+            return Ok(None);
+        }
+        Err(e) => {
+            crate::log_warn!(
+                "remote dispatch: server {} unreachable ({e:#}); \
+                 executing in-process",
+                client.addr()
+            );
+            return Ok(None);
+        }
+    }
+
+    let tune = scheduler::tune_params(env);
+    let (model_fp, model_bytes) = scheduler::model_fingerprints(session, specs);
+    let graph = scheduler::plan(specs, tune, &model_fp, true);
+    let qtasks = queue_tasks_from_graph(&graph, specs, &model_fp);
+
+    // ship the model bytes: a remote worker's home need not hold them
+    for (name, bytes) in &model_bytes {
+        let fp = model_fp.get(name).copied().unwrap_or(0);
+        if fp == 0 {
+            continue;
+        }
+        if let Err(e) = client.blob_put(fp, bytes.as_slice()) {
+            crate::log_warn!(
+                "remote dispatch: publishing model {name} failed ({e:#}); \
+                 executing in-process"
+            );
+            return Ok(None);
+        }
+    }
+
+    let lease_ms = env.dispatch_lease_ms();
+    let queue_doc = Json::obj(vec![
+        ("format", Json::Num(persist::FORMAT_VERSION as f64)),
+        ("lease_ms", Json::Num(lease_ms as f64)),
+        (
+            "tune",
+            Json::obj(vec![
+                ("trials", Json::Num(tune.trials as f64)),
+                ("seed", Json::Num(tune.seed as f64)),
+            ]),
+        ),
+        ("tasks", Json::Arr(qtasks.iter().map(task_doc).collect())),
+    ]);
+    let qid = match client.qpush(&queue_doc) {
+        Ok(q) => q,
+        Err(e) => {
+            crate::log_warn!(
+                "remote dispatch: queue push failed ({e:#}); \
+                 executing in-process"
+            );
+            return Ok(None);
+        }
+    };
+    let n_stage = graph.stage_task_count();
+    crate::log_info!(
+        "session {}: dispatching {} stage task(s) to remote queue {} at {}",
+        session.id,
+        n_stage,
+        qid,
+        client.addr()
+    );
+
+    // poll until every task settled; drain one task in-process whenever
+    // no worker is connected or the queue stopped progressing for a
+    // grace period — the matrix completes even with zero workers
+    let ctx = RemoteCtx { client, env, store };
+    let grace_ms = remote.config().grace_ms;
+    let mut done: HashMap<usize, DoneRecord> = HashMap::new();
+    let mut fleet_max = 0usize;
+    loop {
+        let poll = match client.poll(qid) {
+            Ok(p) => p,
+            Err(e) => {
+                crate::log_warn!(
+                    "remote dispatch: server lost mid-run ({e:#}); \
+                     executing in-process"
+                );
+                return Ok(None);
+            }
+        };
+        for rec in poll.get("done").and_then(Json::as_arr).unwrap_or(&[]) {
+            let Some(id) = rec.get("id").and_then(Json::as_i64) else {
+                continue;
+            };
+            if let Some(r) = DoneRecord::from_json(rec) {
+                done.insert(id.max(0) as usize, r);
+            }
+        }
+        let as_count = |k: &str| {
+            poll.get(k).and_then(Json::as_i64).unwrap_or(0).max(0) as usize
+        };
+        let total = as_count("total");
+        let workers = as_count("workers");
+        fleet_max = fleet_max.max(workers);
+        if done.len() >= total {
+            break;
+        }
+        if workers == 0 || as_count("stalled_ms") as u64 > grace_ms {
+            match remote_step(&ctx, qid) {
+                Ok(Step::Worked) => {}
+                Ok(Step::Idle) => {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Ok(Step::Refused) => {
+                    crate::log_warn!(
+                        "remote dispatch: server refused the parent's own \
+                         claim; executing in-process"
+                    );
+                    return Ok(None);
+                }
+                Err(e) => {
+                    crate::log_warn!(
+                        "remote dispatch: server lost mid-drain ({e:#}); \
+                         executing in-process"
+                    );
+                    return Ok(None);
+                }
+            }
+        } else {
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    // served outcomes -> overlay + serial-equivalent counters, then
+    // the identical deterministic tail pass as the local sharded path
+    let (overlay, mut counters) =
+        reconstruct_outcomes(&graph, cache, |id| done.get(&id).cloned())?;
+    counters.workers_spawned = fleet_max;
+    let (records, local_execs) = scheduler::execute_planned(
+        session,
+        specs,
+        cache,
+        opts,
+        &graph,
+        &model_bytes,
+        tune,
+        Some(&overlay),
+    )?;
+    counters.execs.loads += local_execs.loads;
+    counters.execs.tunes += local_execs.tunes;
+    counters.execs.builds += local_execs.builds;
+    Ok(Some((records, counters)))
+}
+
+/// Entry point of `mlonmcu worker --connect`: claim Load/Tune/Build
+/// tasks from the serve daemon at `addr` until the server goes away.
+/// A vanished server ends the shift cleanly (exit 0) — workers are
+/// cattle, the dispatching parent owns completion.
+pub fn worker_main_remote(addr: &str, env: &Environment) -> Result<i32> {
+    let store = Arc::new(EnvStore::open(
+        &env.cache_dir(),
+        env.cache_budget_bytes(),
+    )?);
+    let client = Client::new(RemoteConfig {
+        addr: addr.to_string(),
+        timeout_ms: env.remote_timeout_ms(),
+        retries: env.remote_retries(),
+        backoff_ms: env.remote_backoff_ms(),
+        grace_ms: env.remote_grace_ms(),
+    });
+    let ctx = RemoteCtx { client: &client, env, store };
+    crate::log_info!(
+        "worker: draining queues of {} (home {})",
+        client.addr(),
+        env.root.display()
+    );
+    loop {
+        match remote_step(&ctx, 0) {
+            Ok(Step::Worked) => {}
+            Ok(Step::Idle) => std::thread::sleep(Duration::from_millis(40)),
+            Ok(Step::Refused) => {
+                crate::log_warn!(
+                    "worker: server {} refused the claim (artifact-format \
+                     mismatch?); exiting",
+                    client.addr()
+                );
+                return Ok(0);
+            }
+            Err(e) => {
+                crate::log_info!(
+                    "worker: server {} gone ({e:#}); exiting",
+                    client.addr()
+                );
+                return Ok(0);
+            }
+        }
+    }
+}
+
+/// Claim and execute at most one task from the served queue (`queue`
+/// picks one, 0 = any). Transport failures bubble up; the caller
+/// decides whether that ends a worker's shift or degrades the parent
+/// to in-process execution.
+fn remote_step(ctx: &RemoteCtx, queue: u64) -> Result<Step> {
+    let doc = match ctx.client.claim(queue)? {
+        Claim::Task(doc) => doc,
+        Claim::Empty => return Ok(Step::Idle),
+        Claim::Refused => return Ok(Step::Refused),
+    };
+    let qid =
+        doc.get("queue").and_then(Json::as_i64).unwrap_or(0).max(0) as u64;
+    let lease_ms = doc
+        .get("lease_ms")
+        .and_then(Json::as_i64)
+        .unwrap_or(5000)
+        .clamp(50, 600_000) as u64;
+    // tune params travel with the claim: a worker reproduces the
+    // dispatching parent's schedules, never its own environment's
+    let tune = TuneParams {
+        trials: doc
+            .get("tune")
+            .and_then(|t| t.get("trials"))
+            .and_then(Json::as_i64)
+            .unwrap_or(600)
+            .max(1) as usize,
+        seed: doc
+            .get("tune")
+            .and_then(|t| t.get("seed"))
+            .and_then(Json::as_i64)
+            .unwrap_or(7)
+            .max(0) as u64,
+    };
+    let tdoc = doc.get("task").context("claim without a task")?;
+    let tid = tdoc
+        .get("id")
+        .and_then(Json::as_i64)
+        .context("claimed task without an id")?
+        .max(0) as usize;
+    let task = parse_task(tid, tdoc)?;
+    let mut deps_done: HashMap<usize, DoneRecord> = HashMap::new();
+    for rec in doc.get("deps_done").and_then(Json::as_arr).unwrap_or(&[]) {
+        let Some(id) = rec.get("id").and_then(Json::as_i64) else {
+            continue;
+        };
+        if let Some(r) = DoneRecord::from_json(rec) {
+            deps_done.insert(id.max(0) as usize, r);
+        }
+    }
+
+    // heartbeat the claim while executing, exactly like the local
+    // lease's touch thread — a silent claimant's task is reclaimed by
+    // the server after lease_ms
+    let stop = AtomicBool::new(false);
+    let done = std::thread::scope(|scope| {
+        scope.spawn(|| {
+            let beat = Duration::from_millis((lease_ms / 4).clamp(10, 250));
+            loop {
+                let mut slept = Duration::ZERO;
+                while slept < beat {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    let step = Duration::from_millis(20).min(beat - slept);
+                    std::thread::sleep(step);
+                    slept += step;
+                }
+                if stop.load(Ordering::Relaxed)
+                    || ctx.client.beat(qid, tid as u64).is_err()
+                {
+                    return; // finished, or server gone (DONE reports it)
+                }
+            }
+        });
+        let done = run_remote_task(ctx, &task, &deps_done, tune);
+        stop.store(true, Ordering::Relaxed);
+        done
+        // scope exit joins the heartbeat (wakes within one 20ms slice)
+    });
+    ctx.client.done(qid, tid as u64, &done.to_json(tid))?;
+    Ok(Step::Worked)
+}
+
+/// Execute one claimed remote task; mirrors `run_stage_task` with the
+/// server as the primary artifact tier and the local store behind it.
+fn run_remote_task(
+    ctx: &RemoteCtx,
+    t: &QueueTask,
+    deps_done: &HashMap<usize, DoneRecord>,
+    tune: TuneParams,
+) -> DoneRecord {
+    // propagate upstream failures without executing — deps are
+    // id-ordered, matching the serial scheduler's earliest-dep pick
+    for &(d, _, _) in &t.deps {
+        if let Some(dep) = deps_done.get(&d) {
+            if !dep.ok {
+                return DoneRecord::failed(
+                    &dep.stage,
+                    dep.error.clone(),
+                    Lookup::None,
+                    0.0,
+                );
+            }
+        }
+    }
+    let lookup = remote_primary_lookup(ctx, t);
+    if lookup == Lookup::Hit {
+        return DoneRecord::ok(false, Lookup::Hit, 0.0);
+    }
+    let watch = Stopwatch::start();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        execute_remote_stage(ctx, t, tune)
+    }));
+    let secs = watch.elapsed_s();
+    match result {
+        Ok(Ok(artifact)) => {
+            // server first — it is the fleet's exchange medium and the
+            // parent's tail pass fetches through it
+            let bytes = persist::encode(t.key, &artifact);
+            if let Err(e) = ctx.client.put(t.kind, t.key, &bytes) {
+                crate::log_warn!(
+                    "worker: artifact {} not pushed: {e:#}",
+                    t.key.hex()
+                );
+            }
+            if let Err(e) = ctx.store.save(t.key, &artifact) {
+                crate::log_warn!(
+                    "worker: artifact {} not saved locally: {e}",
+                    t.key.hex()
+                );
+            }
+            DoneRecord::ok(true, lookup, secs)
+        }
+        Ok(Err(e)) => {
+            DoneRecord::failed(t.kind.name(), e.to_string(), lookup, secs)
+        }
+        Err(p) => DoneRecord::failed(
+            t.kind.name(),
+            format!("stage panicked: {}", scheduler::panic_msg(&p)),
+            lookup,
+            secs,
+        ),
+    }
+}
+
+/// Primary lookup for a claimed task: the server (shared across the
+/// fleet) first, the local store second. Hits replicate toward the
+/// other tier — a server hit lands in the local store, a local hit is
+/// pushed back up so the parent's tail pass and the rest of the fleet
+/// can fetch it remotely.
+fn remote_primary_lookup(ctx: &RemoteCtx, t: &QueueTask) -> Lookup {
+    if let Ok(Some(bytes)) = ctx.client.get(t.kind, t.key) {
+        if persist::decode(&bytes, t.key).is_ok() {
+            let _ = ctx.store.save_raw(t.key, t.kind, &bytes);
+            return Lookup::Hit;
+        }
+        // a corrupt served entry is only a miss; fall through
+    }
+    match ctx.store.load(t.key, t.kind) {
+        StoreLookup::Hit(_) => {
+            if let Some(bytes) = ctx.store.load_raw(t.key, t.kind) {
+                if let Err(e) = ctx.client.put(t.kind, t.key, &bytes) {
+                    crate::log_warn!(
+                        "worker: artifact {} not pushed: {e:#}",
+                        t.key.hex()
+                    );
+                }
+            }
+            Lookup::Hit
+        }
+        StoreLookup::Miss => Lookup::Miss,
+        StoreLookup::Corrupt => Lookup::Corrupt,
+    }
+}
+
+fn execute_remote_stage(
+    ctx: &RemoteCtx,
+    t: &QueueTask,
+    tune: TuneParams,
+) -> Result<Artifact> {
+    match t.kind {
+        CachedStage::Load => load_graph_remote(ctx, t).map(Artifact::Graph),
+        CachedStage::Tune => {
+            let graph = fetch_graph_remote(ctx, t)?;
+            run::stage_tune(&t.spec, &graph, tune).map(Artifact::Tune)
+        }
+        CachedStage::Build => {
+            let graph = fetch_graph_remote(ctx, t)?;
+            let tuned = fetch_tune_remote(ctx, t, &graph, tune)?;
+            run::stage_build(&t.spec, &graph, tuned.map(|o| o.schedule))
+                .map(|b| Artifact::Build(Arc::new(b)))
+        }
+    }
+}
+
+/// The model graph: server blob pool first (the dispatching parent
+/// ships every model's bytes), local model dirs as fallback.
+fn load_graph_remote(
+    ctx: &RemoteCtx,
+    t: &QueueTask,
+) -> Result<Arc<crate::graph::Graph>> {
+    if t.model_fp != 0 {
+        if let Ok(Some(bytes)) = ctx.client.blob_get(t.model_fp) {
+            return crate::frontends::load_model_from_bytes(
+                &bytes,
+                &t.spec.model,
+            )
+            .map(Arc::new);
+        }
+    }
+    run::stage_load(ctx.env, &t.spec).map(Arc::new)
+}
+
+/// A dependency artifact: server first, local store second. `None`
+/// means recompute (both tiers lost it — budget eviction).
+fn fetch_dep_remote(
+    ctx: &RemoteCtx,
+    key: StageKey,
+    stage: CachedStage,
+) -> Option<Artifact> {
+    if let Ok(Some(bytes)) = ctx.client.get(stage, key) {
+        if let Ok(a) = persist::decode(&bytes, key) {
+            if a.stage() == stage {
+                let _ = ctx.store.save_raw(key, stage, &bytes);
+                return Some(a);
+            }
+        }
+    }
+    match ctx.store.load(key, stage) {
+        StoreLookup::Hit(a) => Some(a),
+        _ => None,
+    }
+}
+
+fn fetch_graph_remote(
+    ctx: &RemoteCtx,
+    t: &QueueTask,
+) -> Result<Arc<crate::graph::Graph>> {
+    for &(_, kind, key) in &t.deps {
+        if kind == CachedStage::Load {
+            if let Some(Artifact::Graph(g)) =
+                fetch_dep_remote(ctx, key, CachedStage::Load)
+            {
+                return Ok(g);
+            }
+        }
+    }
+    load_graph_remote(ctx, t)
+}
+
+fn fetch_tune_remote(
+    ctx: &RemoteCtx,
+    t: &QueueTask,
+    graph: &crate::graph::Graph,
+    tune: TuneParams,
+) -> Result<Option<TuneOutcome>> {
+    let Some(&(_, _, key)) =
+        t.deps.iter().find(|&&(_, k, _)| k == CachedStage::Tune)
+    else {
+        return Ok(None);
+    };
+    if let Some(Artifact::Tune(o)) = fetch_dep_remote(ctx, key, CachedStage::Tune)
+    {
+        return Ok(Some(o));
+    }
+    run::stage_tune(&t.spec, graph, tune).map(Some)
 }
 
 /// First free `<session>/queue/<n>` (repeated `run_matrix` calls on
@@ -370,7 +900,11 @@ fn next_queue_dir(session_dir: &Path) -> Result<PathBuf> {
 /// the parent) into queue tasks. Ids are graph indices, so
 /// done-markers map straight back onto the planned DAG; deps come out
 /// id-ascending because `plan` sorts them.
-fn queue_tasks_from_graph(graph: &TaskGraph, specs: &[RunSpec]) -> Vec<QueueTask> {
+fn queue_tasks_from_graph(
+    graph: &TaskGraph,
+    specs: &[RunSpec],
+    model_fp: &HashMap<String, u64>,
+) -> Vec<QueueTask> {
     graph
         .tasks
         .iter()
@@ -381,6 +915,10 @@ fn queue_tasks_from_graph(graph: &TaskGraph, specs: &[RunSpec]) -> Vec<QueueTask
             kind: t.kind.cached_stage(),
             key: t.key.expect("stage tasks are keyed"),
             spec: specs[t.spec_idx].clone(),
+            model_fp: model_fp
+                .get(&specs[t.spec_idx].model)
+                .copied()
+                .unwrap_or(0),
             deps: t
                 .deps
                 .iter()
@@ -397,47 +935,54 @@ fn queue_tasks_from_graph(graph: &TaskGraph, specs: &[RunSpec]) -> Vec<QueueTask
         .collect()
 }
 
+/// One task as a wire/queue document — the same layout whether it is
+/// published as a queue file for local workers or pushed to the serve
+/// daemon's task queue for remote ones.
+fn task_doc(t: &QueueTask) -> Json {
+    let deps = t
+        .deps
+        .iter()
+        .map(|&(d, kind, key)| {
+            Json::obj(vec![
+                ("id", Json::Num(d as f64)),
+                ("kind", Json::Str(kind.name().into())),
+                ("key", Json::Str(key.hex())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        // queue records ride the artifact format's version gate: a
+        // worker from another build refuses the queue instead of
+        // misreading it
+        ("format", Json::Num(persist::FORMAT_VERSION as f64)),
+        ("id", Json::Num(t.id as f64)),
+        ("kind", Json::Str(t.kind.name().into())),
+        ("key", Json::Str(t.key.hex())),
+        ("model", Json::Str(t.spec.model.clone())),
+        ("model_fp", Json::Str(format!("{:016x}", t.model_fp))),
+        ("backend", Json::Str(t.spec.backend.clone())),
+        ("target", Json::Str(t.spec.target.clone())),
+        (
+            "schedule",
+            t.spec.schedule.clone().map(Json::Str).unwrap_or(Json::Null),
+        ),
+        ("tuned", Json::Bool(t.spec.tuned)),
+        (
+            "features",
+            Json::Arr(
+                t.spec.features.names().into_iter().map(Json::Str).collect(),
+            ),
+        ),
+        ("deps", Json::Arr(deps)),
+    ])
+}
+
 /// Publish every stage task as a queue file for the worker processes.
 fn publish(queue: &Path, tasks: &[QueueTask]) -> Result<()> {
     for t in tasks {
-        let deps = t
-            .deps
-            .iter()
-            .map(|&(d, kind, key)| {
-                Json::obj(vec![
-                    ("id", Json::Num(d as f64)),
-                    ("kind", Json::Str(kind.name().into())),
-                    ("key", Json::Str(key.hex())),
-                ])
-            })
-            .collect();
-        let doc = Json::obj(vec![
-            // queue records ride the artifact format's version gate: a
-            // worker from another build refuses the queue instead of
-            // misreading it
-            ("format", Json::Num(persist::FORMAT_VERSION as f64)),
-            ("id", Json::Num(t.id as f64)),
-            ("kind", Json::Str(t.kind.name().into())),
-            ("key", Json::Str(t.key.hex())),
-            ("model", Json::Str(t.spec.model.clone())),
-            ("backend", Json::Str(t.spec.backend.clone())),
-            ("target", Json::Str(t.spec.target.clone())),
-            (
-                "schedule",
-                t.spec.schedule.clone().map(Json::Str).unwrap_or(Json::Null),
-            ),
-            ("tuned", Json::Bool(t.spec.tuned)),
-            (
-                "features",
-                Json::Arr(
-                    t.spec.features.names().into_iter().map(Json::Str).collect(),
-                ),
-            ),
-            ("deps", Json::Arr(deps)),
-        ]);
         write_atomic(
             &queue.join(format!("task-{}.json", t.id)),
-            doc.to_string().as_bytes(),
+            task_doc(t).to_string().as_bytes(),
         )?;
     }
     Ok(())
@@ -623,6 +1168,11 @@ fn parse_task(id: usize, j: &Json) -> Result<QueueTask> {
         id,
         kind,
         key,
+        model_fp: j
+            .get("model_fp")
+            .and_then(Json::as_str)
+            .and_then(|h| u64::from_str_radix(h, 16).ok())
+            .unwrap_or(0),
         spec: RunSpec {
             model: str_field("model")?,
             backend: str_field("backend")?,
@@ -1024,6 +1574,34 @@ mod tests {
         assert!(back.executed, "first record wins");
         assert_eq!(back.lookup, Lookup::Miss);
         fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn task_doc_roundtrips_through_parse_task() {
+        let t = QueueTask {
+            id: 4,
+            kind: CachedStage::Build,
+            key: StageKey(0xabcd),
+            spec: RunSpec {
+                model: "m.tmodel".into(),
+                backend: "tflmi".into(),
+                target: "etiss".into(),
+                schedule: None,
+                tuned: true,
+                features: Features::parse(&[]).unwrap(),
+            },
+            model_fp: 0x1234_5678_9abc_def0,
+            deps: vec![
+                (1, CachedStage::Load, StageKey(7)),
+                (2, CachedStage::Tune, StageKey(9)),
+            ],
+        };
+        let back = parse_task(4, &task_doc(&t)).unwrap();
+        assert_eq!(back.model_fp, t.model_fp);
+        assert_eq!(back.key, t.key);
+        assert_eq!(back.deps, t.deps);
+        assert!(back.spec.tuned);
+        assert_eq!(back.spec.model, "m.tmodel");
     }
 
     #[test]

@@ -23,6 +23,7 @@ pub mod persist;
 pub mod run;
 pub mod scheduler;
 pub mod store;
+pub mod transport;
 
 pub use cache::{ArtifactCache, CacheStats};
 pub use dispatch::DispatchCounters;
@@ -89,9 +90,18 @@ pub struct SessionTiming {
     pub verify_fails: usize,
     /// Load/Tune/Build stage executions that actually ran.
     pub stage_execs: StageExecCounts,
+    /// Subset of `cache_hits` served by the remote store tier (a serve
+    /// daemon on another machine held the artifact).
+    pub remote_hits: usize,
+    /// Remote-tier consultations that found nothing.
+    pub remote_misses: usize,
+    /// Remote transport failures (the tier degrades to local-only
+    /// after the first, so at most one per session).
+    pub remote_errors: usize,
     /// Worker child processes the sharded dispatcher actually spawned
     /// (0 = the matrix ran in-process, including `--workers` fallbacks
-    /// when the environment store is unavailable).
+    /// when the environment store is unavailable). On the remote-fleet
+    /// path this is the peak number of connected remote workers.
     pub worker_procs: usize,
 }
 
@@ -146,7 +156,12 @@ impl Session {
             None
         };
         let cache = ArtifactCache::new(capacity, Some(dir.join("cache")));
-        let cache = cache.with_store(store);
+        let cache = cache
+            .with_store(store)
+            // remote tier ([remote] connect / --connect): consulted
+            // after the local store misses; unreachable servers degrade
+            // to local-only, never to an error
+            .with_remote(transport::RemoteStore::from_env(env));
         Ok(Session {
             id,
             dir,
@@ -220,7 +235,10 @@ impl Session {
     /// ...). With `opts.workers > 0` (and the environment store open)
     /// the Load/Tune/Build stages execute in `mlonmcu worker` child
     /// processes (`dispatch`), exchanging artifacts through the store;
-    /// the resulting report is byte-identical to a serial run.
+    /// with a remote tier attached (`--connect`) they are dispatched
+    /// through the serve daemon's task queue to `worker --connect`
+    /// fleets instead. Either way the resulting report is
+    /// byte-identical to a serial run.
     pub fn run_matrix_opts(
         &self,
         matrix: &RunMatrix,
@@ -255,9 +273,25 @@ impl Session {
                 opts.workers
             );
         }
+        // with a remote tier attached, --workers dispatches through
+        // the serve daemon's task queue instead of spawning local
+        // children; a server that cannot be used returns None and the
+        // matrix runs in-process (remote trouble is never fatal)
+        let remote_store =
+            if opts.use_cache { self.cache.remote_store().cloned() } else { None };
+        let dispatched = if sharded {
+            match &remote_store {
+                Some(r) => dispatch::execute_remote(self, &specs, cache, opts, r)?,
+                None => {
+                    Some(dispatch::execute_sharded(self, &specs, cache, opts)?)
+                }
+            }
+        } else {
+            None
+        };
+        let via_dispatch = dispatched.is_some();
         let mut worker_procs = 0usize;
-        let (records, c) = if sharded {
-            let (records, d) = dispatch::execute_sharded(self, &specs, cache, opts)?;
+        let (records, c) = if let Some((records, d)) = dispatched {
             worker_procs = d.workers_spawned;
             let counters = MatrixCounters {
                 hits: d.hits,
@@ -288,6 +322,9 @@ impl Session {
             (records, counters)
         };
         let execs = c.execs;
+        // remote-tier counters are always the live delta: on dispatch
+        // paths the parent's tail pass does the remote fetches
+        let live = self.cache.stats().since(&stats_before);
 
         // session timing aggregate (Table III + cache counters)
         let mut timing = SessionTiming {
@@ -299,6 +336,9 @@ impl Session {
             disk_hits: c.disk_hits,
             disk_misses: c.disk_misses,
             verify_fails: c.verify_fails,
+            remote_hits: live.remote_hits,
+            remote_misses: live.remote_misses,
+            remote_errors: live.remote_errors,
             stage_execs: execs,
             worker_procs,
             ..Default::default()
@@ -324,6 +364,15 @@ impl Session {
             execs.builds,
             total
         );
+        if remote_store.is_some() {
+            crate::log_info!(
+                "session {}: remote store: {} hit(s), {} miss(es), {} error(s)",
+                self.id,
+                live.remote_hits,
+                live.remote_misses,
+                live.remote_errors
+            );
+        }
 
         // build the report + write session artifacts
         let mut report = Report::default();
@@ -344,6 +393,16 @@ impl Session {
                 execs.builds,
                 total
             ));
+            // only the in-process path notes the remote tier: the
+            // dispatch paths reconstruct serial-equivalent notes, so a
+            // remote-fleet report stays byte-identical to a plain
+            // serial run of the same matrix
+            if !via_dispatch && remote_store.is_some() {
+                report.notes.push(format!(
+                    "remote store: {} hit(s), {} miss(es), {} error(s)",
+                    live.remote_hits, live.remote_misses, live.remote_errors
+                ));
+            }
         }
         std::fs::write(self.dir.join("report.csv"), report.to_csv())?;
         std::fs::write(self.dir.join("report.md"), report.to_markdown())?;

@@ -105,6 +105,17 @@ pub fn encode(key: StageKey, artifact: &Artifact) -> Vec<u8> {
     v
 }
 
+/// Read the format version stamped into an encoded entry without
+/// decoding it. `None` when the bytes are too short or not an "MLCA"
+/// entry at all — used by the remote tier to tell "peer runs another
+/// format" apart from "peer sent garbage" when logging a miss.
+pub fn peek_version(bytes: &[u8]) -> Option<u32> {
+    if bytes.len() < 8 || &bytes[..4] != MAGIC {
+        return None;
+    }
+    Some(u32::from_le_bytes(bytes[4..8].try_into().unwrap()))
+}
+
 /// Decode an entry, verifying magic, version, key and payload hash.
 /// Any mismatch is an error — callers treat it as a cache miss.
 pub fn decode(bytes: &[u8], expect: StageKey) -> Result<Artifact> {

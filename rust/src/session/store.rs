@@ -159,10 +159,57 @@ impl EnvStore {
     pub fn save(&self, key: StageKey, artifact: &Artifact) -> Result<()> {
         let stage = artifact.stage();
         let bytes = persist::encode(key, artifact);
+        self.save_bytes(key, stage, &bytes)
+    }
+
+    /// Persist an already-encoded entry received from a remote peer.
+    /// The bytes are decoded first — re-checking magic, version, key
+    /// and payload hash — so a malicious or mismatched peer can never
+    /// poison the local store with bytes `load` would later reject.
+    pub fn save_raw(
+        &self,
+        key: StageKey,
+        stage: CachedStage,
+        bytes: &[u8],
+    ) -> Result<()> {
+        let artifact = persist::decode(bytes, key)?;
+        anyhow::ensure!(
+            artifact.stage() == stage,
+            "entry {} decodes as {} but was sent as {}",
+            key.hex(),
+            artifact.stage().name(),
+            stage.name()
+        );
+        self.save_bytes(key, stage, bytes)
+    }
+
+    /// Read an entry's raw encoded bytes without decoding, for serving
+    /// over the wire (the remote *client* verifies via
+    /// `persist::decode`; the server stays a dumb byte pipe). Bumps
+    /// the LRU clock like `load`. Reads the file directly, not the
+    /// index, so entries written by other processes are served too.
+    pub fn load_raw(&self, key: StageKey, stage: CachedStage) -> Option<Vec<u8>> {
+        let bytes = fs::read(self.entry_path(stage, key)).ok()?;
+        let mut ix = self.inner.lock().unwrap();
+        ix.seq += 1;
+        let seq = ix.seq;
+        ix.entries
+            .entry(key.0)
+            .or_insert(Entry { stage, bytes: bytes.len() as u64, seq })
+            .seq = seq;
+        Some(bytes)
+    }
+
+    fn save_bytes(
+        &self,
+        key: StageKey,
+        stage: CachedStage,
+        bytes: &[u8],
+    ) -> Result<()> {
         let path = self.entry_path(stage, key);
         fs::create_dir_all(path.parent().unwrap())?;
         let _lock = FileLock::acquire(&self.root)?;
-        write_atomic(&path, &bytes)?;
+        write_atomic(&path, bytes)?;
         let mut ix = self.inner.lock().unwrap();
         // merge entries another process added since we last looked
         merge_disk_index(&self.root, &mut ix);

@@ -1,0 +1,1321 @@
+//! Remote artifact-store transport: `mlonmcu serve` exports an
+//! `EnvStore` plus the dispatch work queue over TCP, and `RemoteStore`
+//! is the client-side cache tier that consults it, turning the
+//! single-machine worker fleet of `session/dispatch.rs` into a
+//! multi-machine one.
+//!
+//! ## Wire format
+//!
+//! Length-prefixed binary frames, one request → one response over a
+//! persistent connection:
+//!
+//! ```text
+//! "MLRQ" | version u32 | op u8     | len u32 | payload    (request)
+//! "MLRS" | version u32 | status u8 | len u32 | payload    (response)
+//! ```
+//!
+//! `version` is `persist::FORMAT_VERSION` — the same stamp the on-disk
+//! entries carry. A version mismatch decodes as a **miss**, never a
+//! crash: the server answers mismatched requests with `ST_MISS`
+//! (except `OP_PING`, so incompatibility is diagnosable), and the
+//! client maps mismatched responses to a miss locally. Artifact bytes
+//! themselves travel in the `persist` encoding and are re-verified by
+//! `persist::decode` on the receiving side, so the server stays a dumb
+//! byte pipe and a mismatched or corrupt peer can never poison a
+//! store.
+//!
+//! ## Fault model
+//!
+//! The client retries transport errors a bounded number of times with
+//! exponential backoff plus jitter (entropy-seeded so a fleet doesn't
+//! retry in lockstep), then reports the error. `RemoteStore` wraps
+//! that in a circuit breaker: the first failure degrades the tier to
+//! local-only for the rest of the session — counted and reported,
+//! never fatal.
+//!
+//! Queue leases mirror the pid-probe path of the local queue: a claim
+//! is bound to its TCP connection and released the moment the
+//! connection dies (the wire analogue of "owning pid no longer runs"),
+//! and a connected-but-stuck worker is reclaimed when its heartbeat
+//! goes silent for `lease_ms`.
+
+use std::collections::{HashMap, HashSet};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Environment;
+use crate::data::Json;
+use crate::session::cache::{Artifact, CachedStage, StageKey};
+use crate::session::persist;
+use crate::session::store::EnvStore;
+use crate::util::XorShift64;
+
+/// Request frame magic.
+pub const REQ_MAGIC: &[u8; 4] = b"MLRQ";
+/// Response frame magic.
+pub const RSP_MAGIC: &[u8; 4] = b"MLRS";
+/// Upper bound on a frame payload — a corrupt length prefix must not
+/// drive a giant allocation.
+pub const MAX_FRAME: usize = 64 << 20;
+
+// Request ops.
+pub const OP_PING: u8 = 0;
+pub const OP_GET: u8 = 1;
+pub const OP_PUT: u8 = 2;
+pub const OP_QPUSH: u8 = 3;
+pub const OP_CLAIM: u8 = 4;
+pub const OP_BEAT: u8 = 5;
+pub const OP_DONE: u8 = 6;
+pub const OP_POLL: u8 = 7;
+pub const OP_BLOB_PUT: u8 = 8;
+pub const OP_BLOB_GET: u8 = 9;
+pub const OP_STATS: u8 = 10;
+
+// Response statuses.
+pub const ST_OK: u8 = 0;
+pub const ST_MISS: u8 = 1;
+pub const ST_ERR: u8 = 2;
+pub const ST_EMPTY: u8 = 3;
+
+const HEADER_LEN: usize = 4 + 4 + 1 + 4;
+
+fn write_frame(
+    w: &mut impl Write,
+    magic: &[u8; 4],
+    tag: u8,
+    payload: &[u8],
+) -> Result<()> {
+    let mut head = [0u8; HEADER_LEN];
+    head[..4].copy_from_slice(magic);
+    head[4..8].copy_from_slice(&persist::FORMAT_VERSION.to_le_bytes());
+    head[8] = tag;
+    head[9..13].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame, verifying the magic and bounding the payload
+/// length. Returns `(version, tag, payload)` — the *version is not
+/// checked here*: the caller decides whether a mismatch is a miss
+/// (server, client) or diagnostic output (ping).
+fn read_frame(r: &mut impl Read, magic: &[u8; 4]) -> Result<(u32, u8, Vec<u8>)> {
+    let mut head = [0u8; HEADER_LEN];
+    r.read_exact(&mut head).context("reading frame header")?;
+    if &head[..4] != magic {
+        bail!("bad frame magic {:02x?}", &head[..4]);
+    }
+    let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    let tag = head[8];
+    let len = u32::from_le_bytes(head[9..13].try_into().unwrap()) as usize;
+    if len > MAX_FRAME {
+        bail!("frame length {len} exceeds limit");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    Ok((version, tag, payload))
+}
+
+fn stage_tag(stage: CachedStage) -> u8 {
+    match stage {
+        CachedStage::Load => 0,
+        CachedStage::Tune => 1,
+        CachedStage::Build => 2,
+    }
+}
+
+fn stage_from_u8(tag: u8) -> Option<CachedStage> {
+    Some(match tag {
+        0 => CachedStage::Load,
+        1 => CachedStage::Tune,
+        2 => CachedStage::Build,
+        _ => return None,
+    })
+}
+
+/// `stage u8 | key u64` — the GET payload and the PUT payload prefix.
+fn entry_ref(stage: CachedStage, key: StageKey) -> [u8; 9] {
+    let mut b = [0u8; 9];
+    b[0] = stage_tag(stage);
+    b[1..9].copy_from_slice(&key.0.to_le_bytes());
+    b
+}
+
+// ================================================================ server --
+
+enum TaskState {
+    Open,
+    Claimed { conn: u64, last_beat: Instant },
+    Done(Json),
+}
+
+struct ServedTask {
+    id: u64,
+    doc: Json,
+    deps: Vec<u64>,
+    state: TaskState,
+}
+
+struct ServedQueue {
+    lease_ms: u64,
+    tune: Json,
+    tasks: Vec<ServedTask>,
+    /// Last claim or completion — parents use the stall age to decide
+    /// when to self-drain.
+    last_progress: Instant,
+}
+
+struct Shared {
+    store: Arc<EnvStore>,
+    queues: HashMap<u64, ServedQueue>,
+    next_queue: u64,
+    blobs: HashMap<u64, Arc<Vec<u8>>>,
+    /// Live connections (clones held for shutdown + liveness checks).
+    conns: HashMap<u64, TcpStream>,
+    /// Connections that ever issued a CLAIM — the served fleet size.
+    workers: HashSet<u64>,
+}
+
+/// The `mlonmcu serve` daemon: one `EnvStore` plus the in-memory work
+/// queue, thread-per-connection.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Mutex<Shared>>,
+    stop: Arc<AtomicBool>,
+}
+
+/// Handle to a server running on its own thread (tests, embedding).
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    shared: Arc<Mutex<Shared>>,
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<()>,
+}
+
+impl Server {
+    pub fn bind(store: Arc<EnvStore>, addr: &str) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        Ok(Server {
+            listener,
+            shared: Arc::new(Mutex::new(Shared {
+                store,
+                queues: HashMap::new(),
+                next_queue: 0,
+                blobs: HashMap::new(),
+                conns: HashMap::new(),
+                workers: HashSet::new(),
+            })),
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.local_addr().expect("bound listener has an address")
+    }
+
+    /// Accept loop; blocks until shut down (or an accept error).
+    pub fn run(self) -> Result<()> {
+        let mut next_conn = 0u64;
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = stream else { continue };
+            let _ = stream.set_nodelay(true);
+            next_conn += 1;
+            let conn_id = next_conn;
+            if let Ok(clone) = stream.try_clone() {
+                lock(&self.shared).conns.insert(conn_id, clone);
+            }
+            let shared = Arc::clone(&self.shared);
+            std::thread::spawn(move || serve_conn(shared, conn_id, stream));
+        }
+        Ok(())
+    }
+
+    /// Bind + run on a background thread; the handle shuts it down.
+    pub fn spawn(store: Arc<EnvStore>, addr: &str) -> Result<ServerHandle> {
+        let server = Server::bind(store, addr)?;
+        let addr = server.local_addr();
+        let shared = Arc::clone(&server.shared);
+        let stop = Arc::clone(&server.stop);
+        let thread = std::thread::spawn(move || {
+            let _ = server.run();
+        });
+        Ok(ServerHandle { addr, shared, stop, thread })
+    }
+}
+
+impl ServerHandle {
+    /// Stop accepting, sever every live connection (so clients see the
+    /// death immediately — the "server killed mid-fetch" path), and
+    /// join the accept thread.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock accept(); the loop re-checks the flag first
+        let _ = TcpStream::connect(self.addr);
+        for conn in lock(&self.shared).conns.values() {
+            let _ = conn.shutdown(std::net::Shutdown::Both);
+        }
+        let _ = self.thread.join();
+    }
+}
+
+/// A sibling thread panicking while holding the state lock must not
+/// wedge the whole server — the state stays consistent (mutations are
+/// single-call) so poisoning is recoverable.
+fn lock(shared: &Arc<Mutex<Shared>>) -> MutexGuard<'_, Shared> {
+    shared.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn serve_conn(shared: Arc<Mutex<Shared>>, conn_id: u64, mut stream: TcpStream) {
+    loop {
+        let (version, op, payload) = match read_frame(&mut stream, REQ_MAGIC) {
+            Ok(f) => f,
+            Err(_) => break, // EOF / reset / garbage: connection is over
+        };
+        let (status, body) = handle_request(&shared, conn_id, version, op, &payload);
+        if write_frame(&mut stream, RSP_MAGIC, status, &body).is_err() {
+            break;
+        }
+    }
+    release_conn(&shared, conn_id);
+}
+
+/// Connection death releases everything it held — the wire analogue of
+/// the local queue's dead-pid lease reclamation.
+fn release_conn(shared: &Arc<Mutex<Shared>>, conn_id: u64) {
+    let mut s = lock(shared);
+    for q in s.queues.values_mut() {
+        for t in &mut q.tasks {
+            if matches!(t.state, TaskState::Claimed { conn, .. } if conn == conn_id)
+            {
+                t.state = TaskState::Open;
+            }
+        }
+    }
+    s.workers.remove(&conn_id);
+    s.conns.remove(&conn_id);
+}
+
+fn handle_request(
+    shared: &Arc<Mutex<Shared>>,
+    conn_id: u64,
+    version: u32,
+    op: u8,
+    payload: &[u8],
+) -> (u8, Vec<u8>) {
+    // a peer built from another artifact format gets misses, never
+    // errors or panics — except ping, which reports our version so
+    // the mismatch is diagnosable
+    if version != persist::FORMAT_VERSION && op != OP_PING {
+        return (ST_MISS, Vec::new());
+    }
+    match op {
+        OP_PING => (ST_OK, persist::FORMAT_VERSION.to_le_bytes().to_vec()),
+        OP_GET => op_get(shared, payload),
+        OP_PUT => op_put(shared, payload),
+        OP_QPUSH => op_qpush(shared, payload),
+        OP_CLAIM => op_claim(shared, conn_id, payload),
+        OP_BEAT => op_beat(shared, conn_id, payload),
+        OP_DONE => op_done(shared, payload),
+        OP_POLL => op_poll(shared, conn_id, payload),
+        OP_BLOB_PUT => op_blob_put(shared, payload),
+        OP_BLOB_GET => op_blob_get(shared, payload),
+        OP_STATS => op_stats(shared),
+        _ => (ST_ERR, Vec::new()),
+    }
+}
+
+fn parse_entry_ref(payload: &[u8]) -> Option<(CachedStage, StageKey)> {
+    if payload.len() < 9 {
+        return None;
+    }
+    let stage = stage_from_u8(payload[0])?;
+    let key = u64::from_le_bytes(payload[1..9].try_into().unwrap());
+    Some((stage, StageKey(key)))
+}
+
+fn op_get(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+    let Some((stage, key)) = parse_entry_ref(payload) else {
+        return (ST_ERR, Vec::new());
+    };
+    let store = Arc::clone(&lock(shared).store);
+    match store.load_raw(key, stage) {
+        Some(bytes) => (ST_OK, bytes),
+        None => (ST_MISS, Vec::new()),
+    }
+}
+
+fn op_put(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+    let Some((stage, key)) = parse_entry_ref(payload) else {
+        return (ST_ERR, Vec::new());
+    };
+    let store = Arc::clone(&lock(shared).store);
+    // save_raw re-verifies the encoding: a bad peer cannot poison us
+    match store.save_raw(key, stage, &payload[9..]) {
+        Ok(()) => (ST_OK, Vec::new()),
+        Err(_) => (ST_ERR, Vec::new()),
+    }
+}
+
+fn op_qpush(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+    let Ok(text) = std::str::from_utf8(payload) else {
+        return (ST_ERR, Vec::new());
+    };
+    let Ok(doc) = Json::parse(text) else {
+        return (ST_ERR, Vec::new());
+    };
+    let lease_ms = doc
+        .get("lease_ms")
+        .and_then(Json::as_i64)
+        .unwrap_or(5000)
+        .clamp(50, 600_000) as u64;
+    let tune = doc.get("tune").cloned().unwrap_or(Json::Null);
+    let Some(docs) = doc.get("tasks").and_then(Json::as_arr) else {
+        return (ST_ERR, Vec::new());
+    };
+    let mut tasks = Vec::with_capacity(docs.len());
+    for d in docs {
+        let Some(id) = d.get("id").and_then(Json::as_i64) else {
+            return (ST_ERR, Vec::new());
+        };
+        // deps arrive either as bare ids or as the dispatcher's richer
+        // `{id, kind, key}` records (task_doc) — accept both, readiness
+        // gating only needs the id
+        let deps = d
+            .get("deps")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|el| {
+                el.as_i64().or_else(|| el.get("id").and_then(Json::as_i64))
+            })
+            .map(|x| x.max(0) as u64)
+            .collect();
+        tasks.push(ServedTask {
+            id: id.max(0) as u64,
+            doc: d.clone(),
+            deps,
+            state: TaskState::Open,
+        });
+    }
+    let mut s = lock(shared);
+    s.next_queue += 1;
+    let qid = s.next_queue;
+    s.queues.insert(
+        qid,
+        ServedQueue { lease_ms, tune, tasks, last_progress: Instant::now() },
+    );
+    (ST_OK, qid.to_le_bytes().to_vec())
+}
+
+/// Reopen claims whose heartbeat went silent for a full lease (the
+/// connected-but-stuck case; dead connections are reclaimed eagerly by
+/// `release_conn`).
+fn reclaim_stale(q: &mut ServedQueue) {
+    let lease = Duration::from_millis(q.lease_ms);
+    for t in &mut q.tasks {
+        if matches!(t.state, TaskState::Claimed { last_beat, .. } if last_beat.elapsed() > lease)
+        {
+            t.state = TaskState::Open;
+        }
+    }
+}
+
+fn op_claim(
+    shared: &Arc<Mutex<Shared>>,
+    conn_id: u64,
+    payload: &[u8],
+) -> (u8, Vec<u8>) {
+    if payload.len() < 8 {
+        return (ST_ERR, Vec::new());
+    }
+    let want = u64::from_le_bytes(payload[..8].try_into().unwrap());
+    let mut s = lock(shared);
+    // even an idle claimer is part of the fleet: the parent must see
+    // it in the worker count before deciding to drain the queue itself
+    s.workers.insert(conn_id);
+    let mut qids: Vec<u64> = s.queues.keys().copied().collect();
+    qids.sort_unstable();
+    for qid in qids {
+        if want != 0 && qid != want {
+            continue;
+        }
+        let q = s.queues.get_mut(&qid).expect("queue id from key scan");
+        reclaim_stale(q);
+        // readiness = every dep has a done record (failed deps count:
+        // the claimer propagates the failure); lowest id first, the
+        // same order the local queue drains in
+        let ready = (0..q.tasks.len()).find(|&i| {
+            matches!(q.tasks[i].state, TaskState::Open)
+                && q.tasks[i].deps.iter().all(|d| {
+                    q.tasks
+                        .iter()
+                        .any(|t| t.id == *d && matches!(t.state, TaskState::Done(_)))
+                })
+        });
+        let Some(i) = ready else { continue };
+        q.tasks[i].state =
+            TaskState::Claimed { conn: conn_id, last_beat: Instant::now() };
+        q.last_progress = Instant::now();
+        let task = q.tasks[i].doc.clone();
+        let deps_done: Vec<Json> = q.tasks[i]
+            .deps
+            .iter()
+            .filter_map(|d| {
+                q.tasks.iter().find_map(|t| match (&t.state, t.id == *d) {
+                    (TaskState::Done(rec), true) => Some(rec.clone()),
+                    _ => None,
+                })
+            })
+            .collect();
+        let rsp = Json::obj(vec![
+            ("queue", Json::Num(qid as f64)),
+            ("lease_ms", Json::Num(q.lease_ms as f64)),
+            ("tune", q.tune.clone()),
+            ("task", task),
+            ("deps_done", Json::Arr(deps_done)),
+        ]);
+        return (ST_OK, rsp.to_string().into_bytes());
+    }
+    (ST_EMPTY, Vec::new())
+}
+
+fn parse_two_u64(payload: &[u8]) -> Option<(u64, u64)> {
+    if payload.len() < 16 {
+        return None;
+    }
+    Some((
+        u64::from_le_bytes(payload[..8].try_into().unwrap()),
+        u64::from_le_bytes(payload[8..16].try_into().unwrap()),
+    ))
+}
+
+fn op_beat(
+    shared: &Arc<Mutex<Shared>>,
+    conn_id: u64,
+    payload: &[u8],
+) -> (u8, Vec<u8>) {
+    let Some((qid, tid)) = parse_two_u64(payload) else {
+        return (ST_ERR, Vec::new());
+    };
+    let mut s = lock(shared);
+    if let Some(q) = s.queues.get_mut(&qid) {
+        for t in &mut q.tasks {
+            if t.id == tid {
+                if let TaskState::Claimed { conn, ref mut last_beat } = t.state {
+                    // only the claim owner refreshes: a reclaimed task
+                    // belongs to someone else now
+                    if conn == conn_id {
+                        *last_beat = Instant::now();
+                        return (ST_OK, Vec::new());
+                    }
+                }
+                return (ST_MISS, Vec::new());
+            }
+        }
+    }
+    (ST_MISS, Vec::new())
+}
+
+fn op_done(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+    let Some((qid, tid)) = parse_two_u64(payload) else {
+        return (ST_ERR, Vec::new());
+    };
+    let Ok(text) = std::str::from_utf8(&payload[16..]) else {
+        return (ST_ERR, Vec::new());
+    };
+    let Ok(rec) = Json::parse(text) else {
+        return (ST_ERR, Vec::new());
+    };
+    let mut s = lock(shared);
+    let Some(q) = s.queues.get_mut(&qid) else {
+        return (ST_ERR, Vec::new());
+    };
+    for t in &mut q.tasks {
+        if t.id == tid {
+            // first writer wins, exactly like the local queue's
+            // hard-link done records: a reclaimed-then-finished
+            // duplicate is dropped silently
+            if !matches!(t.state, TaskState::Done(_)) {
+                t.state = TaskState::Done(rec);
+                q.last_progress = Instant::now();
+            }
+            return (ST_OK, Vec::new());
+        }
+    }
+    (ST_ERR, Vec::new())
+}
+
+fn op_poll(
+    shared: &Arc<Mutex<Shared>>,
+    conn_id: u64,
+    payload: &[u8],
+) -> (u8, Vec<u8>) {
+    if payload.len() < 8 {
+        return (ST_ERR, Vec::new());
+    }
+    let qid = u64::from_le_bytes(payload[..8].try_into().unwrap());
+    let mut s = lock(shared);
+    // the poller is the parent: it must not count itself as a worker
+    let workers = s.workers.iter().filter(|&&c| c != conn_id).count();
+    let Some(q) = s.queues.get_mut(&qid) else {
+        return (ST_ERR, Vec::new());
+    };
+    reclaim_stale(q);
+    let done: Vec<Json> = q
+        .tasks
+        .iter()
+        .filter_map(|t| match &t.state {
+            TaskState::Done(rec) => Some(rec.clone()),
+            _ => None,
+        })
+        .collect();
+    let rsp = Json::obj(vec![
+        ("total", Json::Num(q.tasks.len() as f64)),
+        ("workers", Json::Num(workers as f64)),
+        ("stalled_ms", Json::Num(q.last_progress.elapsed().as_millis() as f64)),
+        ("done", Json::Arr(done)),
+    ]);
+    (ST_OK, rsp.to_string().into_bytes())
+}
+
+fn op_blob_put(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+    if payload.len() < 8 {
+        return (ST_ERR, Vec::new());
+    }
+    let fp = u64::from_le_bytes(payload[..8].try_into().unwrap());
+    let bytes = Arc::new(payload[8..].to_vec());
+    lock(shared).blobs.insert(fp, bytes);
+    (ST_OK, Vec::new())
+}
+
+fn op_blob_get(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+    if payload.len() < 8 {
+        return (ST_ERR, Vec::new());
+    }
+    let fp = u64::from_le_bytes(payload[..8].try_into().unwrap());
+    match lock(shared).blobs.get(&fp) {
+        Some(bytes) => (ST_OK, bytes.as_ref().clone()),
+        None => (ST_MISS, Vec::new()),
+    }
+}
+
+fn op_stats(shared: &Arc<Mutex<Shared>>) -> (u8, Vec<u8>) {
+    let (store, blobs, queues, workers) = {
+        let s = lock(shared);
+        (Arc::clone(&s.store), s.blobs.len(), s.queues.len(), s.workers.len())
+    };
+    let st = store.stats();
+    let doc = Json::obj(vec![
+        ("format", Json::Num(persist::FORMAT_VERSION as f64)),
+        ("entries", Json::Num(st.entries as f64)),
+        ("total_bytes", Json::Num(st.total_bytes as f64)),
+        ("loads", Json::Num(st.loads as f64)),
+        ("tunes", Json::Num(st.tunes as f64)),
+        ("builds", Json::Num(st.builds as f64)),
+        ("blobs", Json::Num(blobs as f64)),
+        ("queues", Json::Num(queues as f64)),
+        ("workers", Json::Num(workers as f64)),
+    ]);
+    (ST_OK, doc.to_string().into_bytes())
+}
+
+// ================================================================ client --
+
+/// Client-side knobs, from the `[remote]` config section.
+#[derive(Debug, Clone)]
+pub struct RemoteConfig {
+    pub addr: String,
+    pub timeout_ms: u64,
+    pub retries: u32,
+    pub backoff_ms: u64,
+    /// Queue-stall age after which a dispatching parent drains one
+    /// task itself instead of waiting for workers.
+    pub grace_ms: u64,
+}
+
+impl RemoteConfig {
+    /// `None` when no server is configured (`remote.connect` empty).
+    pub fn from_env(env: &Environment) -> Option<RemoteConfig> {
+        Some(RemoteConfig {
+            addr: env.remote_connect()?,
+            timeout_ms: env.remote_timeout_ms(),
+            retries: env.remote_retries(),
+            backoff_ms: env.remote_backoff_ms(),
+            grace_ms: env.remote_grace_ms(),
+        })
+    }
+}
+
+/// Outcome of a CLAIM: a task, an empty queue, or a server that
+/// refused us outright (version-gated) — a refused worker must exit
+/// rather than poll forever.
+pub enum Claim {
+    Task(Json),
+    Empty,
+    Refused,
+}
+
+struct ClientInner {
+    stream: Option<TcpStream>,
+    rng: XorShift64,
+}
+
+/// One logical connection to a serve daemon: lazy connect, per-request
+/// timeout, bounded retry with exponential backoff + jitter. Shared
+/// between a worker's main loop and its heartbeat thread — requests
+/// are serialized by the inner mutex.
+pub struct Client {
+    cfg: RemoteConfig,
+    inner: Mutex<ClientInner>,
+}
+
+impl Client {
+    pub fn new(cfg: RemoteConfig) -> Client {
+        Client {
+            cfg,
+            inner: Mutex::new(ClientInner {
+                stream: None,
+                rng: XorShift64::from_entropy(),
+            }),
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.cfg.addr
+    }
+
+    fn connect(cfg: &RemoteConfig) -> Result<TcpStream> {
+        let timeout = Duration::from_millis(cfg.timeout_ms);
+        let addrs: Vec<SocketAddr> = cfg
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {}", cfg.addr))?
+            .collect();
+        let mut last: Option<std::io::Error> = None;
+        for addr in addrs {
+            match TcpStream::connect_timeout(&addr, timeout) {
+                Ok(s) => {
+                    let _ = s.set_read_timeout(Some(timeout));
+                    let _ = s.set_write_timeout(Some(timeout));
+                    let _ = s.set_nodelay(true);
+                    return Ok(s);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        match last {
+            Some(e) => Err(e).context(format!("connecting {}", cfg.addr)),
+            None => bail!("{} resolves to no address", cfg.addr),
+        }
+    }
+
+    /// One request → one response, retrying transport errors up to
+    /// `retries` times (backoff doubles each attempt, plus jitter so a
+    /// fleet doesn't hammer in lockstep). A response stamped with a
+    /// different format version maps to `ST_MISS` here — version skew
+    /// is a miss, never a crash and never a retried "error".
+    pub fn request(&self, op: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut last_err = None;
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                let base = self.cfg.backoff_ms.max(1) << (attempt - 1).min(6);
+                let jitter = inner.rng.below(base);
+                std::thread::sleep(Duration::from_millis(base + jitter));
+            }
+            let outcome = (|| -> Result<(u8, Vec<u8>)> {
+                if inner.stream.is_none() {
+                    inner.stream = Some(Self::connect(&self.cfg)?);
+                }
+                let stream = inner.stream.as_mut().expect("stream just connected");
+                write_frame(stream, REQ_MAGIC, op, payload)?;
+                let (version, status, body) = read_frame(stream, RSP_MAGIC)?;
+                if version != persist::FORMAT_VERSION {
+                    return Ok((ST_MISS, Vec::new()));
+                }
+                Ok((status, body))
+            })();
+            match outcome {
+                Ok(r) => return Ok(r),
+                Err(e) => {
+                    // a half-used connection can't be trusted for the
+                    // next frame: reconnect on the retry
+                    inner.stream = None;
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.expect("at least one attempt ran"))
+    }
+
+    /// Reachability probe; returns the server's format version.
+    pub fn ping(&self) -> Result<u32> {
+        let (status, body) = self.request(OP_PING, &[])?;
+        if status != ST_OK || body.len() < 4 {
+            bail!("ping refused (status {status})");
+        }
+        Ok(u32::from_le_bytes(body[..4].try_into().unwrap()))
+    }
+
+    /// Fetch an entry's raw bytes. `Ok(None)` is a miss; the caller
+    /// still has to `persist::decode` (and treat failure as a miss).
+    pub fn get(&self, stage: CachedStage, key: StageKey) -> Result<Option<Vec<u8>>> {
+        let (status, body) = self.request(OP_GET, &entry_ref(stage, key))?;
+        match status {
+            ST_OK => Ok(Some(body)),
+            ST_MISS | ST_EMPTY => Ok(None),
+            _ => bail!("remote get failed (status {status})"),
+        }
+    }
+
+    /// Push an already-encoded entry; the server re-verifies it.
+    pub fn put(&self, stage: CachedStage, key: StageKey, bytes: &[u8]) -> Result<()> {
+        let mut payload = entry_ref(stage, key).to_vec();
+        payload.extend_from_slice(bytes);
+        let (status, _) = self.request(OP_PUT, &payload)?;
+        if status != ST_OK {
+            bail!("remote put refused (status {status})");
+        }
+        Ok(())
+    }
+
+    pub fn blob_put(&self, fp: u64, bytes: &[u8]) -> Result<()> {
+        let mut payload = fp.to_le_bytes().to_vec();
+        payload.extend_from_slice(bytes);
+        let (status, _) = self.request(OP_BLOB_PUT, &payload)?;
+        if status != ST_OK {
+            bail!("blob put refused (status {status})");
+        }
+        Ok(())
+    }
+
+    pub fn blob_get(&self, fp: u64) -> Result<Option<Vec<u8>>> {
+        let (status, body) = self.request(OP_BLOB_GET, &fp.to_le_bytes())?;
+        match status {
+            ST_OK => Ok(Some(body)),
+            ST_MISS | ST_EMPTY => Ok(None),
+            _ => bail!("blob get failed (status {status})"),
+        }
+    }
+
+    /// Publish a queue document; returns the served queue id.
+    pub fn qpush(&self, doc: &Json) -> Result<u64> {
+        let (status, body) = self.request(OP_QPUSH, doc.to_string().as_bytes())?;
+        if status != ST_OK || body.len() < 8 {
+            bail!("queue push refused (status {status})");
+        }
+        Ok(u64::from_le_bytes(body[..8].try_into().unwrap()))
+    }
+
+    /// Claim the next ready task (`queue` 0 = any queue).
+    pub fn claim(&self, queue: u64) -> Result<Claim> {
+        let (status, body) = self.request(OP_CLAIM, &queue.to_le_bytes())?;
+        match status {
+            ST_OK => {
+                let text = std::str::from_utf8(&body)?;
+                Ok(Claim::Task(Json::parse(text)?))
+            }
+            ST_EMPTY => Ok(Claim::Empty),
+            // MISS here means the server version-gated us
+            _ => Ok(Claim::Refused),
+        }
+    }
+
+    pub fn beat(&self, queue: u64, task: u64) -> Result<()> {
+        let mut payload = queue.to_le_bytes().to_vec();
+        payload.extend_from_slice(&task.to_le_bytes());
+        self.request(OP_BEAT, &payload).map(|_| ())
+    }
+
+    pub fn done(&self, queue: u64, task: u64, record: &Json) -> Result<()> {
+        let mut payload = queue.to_le_bytes().to_vec();
+        payload.extend_from_slice(&task.to_le_bytes());
+        payload.extend_from_slice(record.to_string().as_bytes());
+        let (status, _) = self.request(OP_DONE, &payload)?;
+        if status != ST_OK {
+            bail!("done record refused (status {status})");
+        }
+        Ok(())
+    }
+
+    /// Queue progress: `{total, workers, stalled_ms, done: [...]}`.
+    pub fn poll(&self, queue: u64) -> Result<Json> {
+        let (status, body) = self.request(OP_POLL, &queue.to_le_bytes())?;
+        if status != ST_OK {
+            bail!("poll refused (status {status})");
+        }
+        Ok(Json::parse(std::str::from_utf8(&body)?)?)
+    }
+
+    /// Server-side store stats as JSON (`cache stats --connect`).
+    pub fn stats(&self) -> Result<Json> {
+        let (status, body) = self.request(OP_STATS, &[])?;
+        if status != ST_OK {
+            bail!("stats refused (status {status})");
+        }
+        Ok(Json::parse(std::str::from_utf8(&body)?)?)
+    }
+}
+
+// =========================================================== store tier --
+
+/// Outcome of a remote-tier lookup, as the cache's counters see it.
+pub enum RemoteLookup {
+    Hit(Artifact),
+    Miss,
+    /// Transport failure (counted once — the tier then degrades).
+    Error,
+    /// Tier degraded to local-only; nothing was attempted.
+    Off,
+}
+
+/// The remote cache tier: consulted after the local env store misses,
+/// with a circuit breaker that degrades to local-only on the first
+/// transport failure (counted and reported, never fatal).
+pub struct RemoteStore {
+    client: Client,
+    degraded: AtomicBool,
+}
+
+impl RemoteStore {
+    pub fn new(cfg: RemoteConfig) -> RemoteStore {
+        RemoteStore { client: Client::new(cfg), degraded: AtomicBool::new(false) }
+    }
+
+    /// `None` unless `remote.connect` (or `--connect`) names a server.
+    /// Construction never dials out — the first lookup does.
+    pub fn from_env(env: &Environment) -> Option<Arc<RemoteStore>> {
+        RemoteConfig::from_env(env).map(|cfg| Arc::new(RemoteStore::new(cfg)))
+    }
+
+    pub fn client(&self) -> &Client {
+        &self.client
+    }
+
+    pub fn config(&self) -> &RemoteConfig {
+        &self.client.cfg
+    }
+
+    pub fn addr(&self) -> &str {
+        self.client.addr()
+    }
+
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::SeqCst)
+    }
+
+    /// Trip the breaker; true if this call tripped it (first failure).
+    fn mark_degraded(&self) -> bool {
+        !self.degraded.swap(true, Ordering::SeqCst)
+    }
+
+    /// Fetch + verify one entry. Bytes from the wire go through
+    /// `persist::decode` — a truncated frame, corrupt payload or
+    /// foreign format version all decode as a plain miss.
+    pub fn load(&self, key: StageKey, stage: CachedStage) -> RemoteLookup {
+        if self.is_degraded() {
+            return RemoteLookup::Off;
+        }
+        let bytes = match self.client.get(stage, key) {
+            Ok(Some(b)) => b,
+            Ok(None) => return RemoteLookup::Miss,
+            Err(e) => {
+                if self.mark_degraded() {
+                    crate::log_warn!(
+                        "remote store {}: {e:#}; degrading to local-only",
+                        self.addr()
+                    );
+                    return RemoteLookup::Error;
+                }
+                return RemoteLookup::Off;
+            }
+        };
+        match persist::decode(&bytes, key) {
+            Ok(a) if a.stage() == stage => RemoteLookup::Hit(a),
+            Ok(_) | Err(_) => {
+                match persist::peek_version(&bytes) {
+                    Some(v) if v != persist::FORMAT_VERSION => crate::log_warn!(
+                        "remote store {}: entry {} has format v{v} (ours: v{}); \
+                         treating as miss",
+                        self.addr(),
+                        key.hex(),
+                        persist::FORMAT_VERSION
+                    ),
+                    _ => crate::log_warn!(
+                        "remote store {}: entry {} failed verification; \
+                         treating as miss",
+                        self.addr(),
+                        key.hex()
+                    ),
+                }
+                RemoteLookup::Miss
+            }
+        }
+    }
+
+    /// Best-effort push. A degraded tier skips silently; a fresh
+    /// transport failure trips the breaker like a failed load.
+    pub fn save(&self, key: StageKey, artifact: &Artifact) {
+        if self.is_degraded() {
+            return;
+        }
+        let bytes = persist::encode(key, artifact);
+        if let Err(e) = self.client.put(artifact.stage(), key, &bytes) {
+            if self.mark_degraded() {
+                crate::log_warn!(
+                    "remote store {}: push failed ({e:#}); degrading to local-only",
+                    self.addr()
+                );
+            }
+        }
+    }
+}
+
+/// Open the store directory a serve daemon exports — shared by `serve`
+/// and tests.
+pub fn open_served_store(
+    cache_dir: &Path,
+    budget_bytes: u64,
+) -> Result<Arc<EnvStore>> {
+    Ok(Arc::new(EnvStore::open(cache_dir, budget_bytes)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::model::testutil::tiny_conv;
+    use crate::session::cache::load_key;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mlonmcu_transport_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn cfg(addr: &SocketAddr) -> RemoteConfig {
+        RemoteConfig {
+            addr: addr.to_string(),
+            timeout_ms: 2000,
+            retries: 1,
+            backoff_ms: 10,
+            grace_ms: 100,
+        }
+    }
+
+    fn spawn_server(tag: &str) -> (ServerHandle, Arc<EnvStore>, PathBuf) {
+        let dir = tmp(tag);
+        let store = Arc::new(EnvStore::open(&dir, u64::MAX).unwrap());
+        let handle = Server::spawn(Arc::clone(&store), "127.0.0.1:0").unwrap();
+        (handle, store, dir)
+    }
+
+    fn graph_artifact() -> Artifact {
+        Artifact::Graph(std::sync::Arc::new(tiny_conv()))
+    }
+
+    #[test]
+    fn frame_roundtrip_and_bad_magic() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, REQ_MAGIC, OP_GET, b"payload").unwrap();
+        let (version, tag, payload) =
+            read_frame(&mut &buf[..], REQ_MAGIC).unwrap();
+        assert_eq!(version, persist::FORMAT_VERSION);
+        assert_eq!(tag, OP_GET);
+        assert_eq!(payload, b"payload");
+        // wrong magic expectation rejected
+        assert!(read_frame(&mut &buf[..], RSP_MAGIC).is_err());
+        // truncation at every boundary is an error, not a panic
+        for cut in [0, 5, HEADER_LEN, buf.len() - 1] {
+            assert!(read_frame(&mut &buf[..cut], REQ_MAGIC).is_err());
+        }
+        // implausible length prefix rejected before allocation
+        let mut huge = buf.clone();
+        huge[9..13].copy_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_frame(&mut &huge[..], REQ_MAGIC).is_err());
+    }
+
+    #[test]
+    fn ping_get_put_roundtrip() {
+        let (server, store, dir) = spawn_server("roundtrip");
+        let client = Client::new(cfg(&server.addr));
+        assert_eq!(client.ping().unwrap(), persist::FORMAT_VERSION);
+
+        let key = load_key(1);
+        assert!(client.get(CachedStage::Load, key).unwrap().is_none());
+        let bytes = persist::encode(key, &graph_artifact());
+        client.put(CachedStage::Load, key, &bytes).unwrap();
+        let back = client.get(CachedStage::Load, key).unwrap().unwrap();
+        assert!(persist::decode(&back, key).is_ok());
+        assert_eq!(store.stats().loads, 1);
+
+        // corrupt push is refused server-side, store stays clean
+        let mut bad = bytes.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0xFF;
+        assert!(client.put(CachedStage::Load, load_key(2), &bad).is_err());
+        assert_eq!(store.stats().entries, 1);
+
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn remote_store_hit_miss_and_degrade() {
+        let (server, _store, dir) = spawn_server("tier");
+        let remote = RemoteStore::new(cfg(&server.addr));
+        let key = load_key(3);
+        assert!(matches!(
+            remote.load(key, CachedStage::Load),
+            RemoteLookup::Miss
+        ));
+        remote.save(key, &graph_artifact());
+        assert!(matches!(
+            remote.load(key, CachedStage::Load),
+            RemoteLookup::Hit(Artifact::Graph(_))
+        ));
+
+        // server death: exactly one Error, then Off forever
+        server.shutdown();
+        assert!(matches!(
+            remote.load(key, CachedStage::Load),
+            RemoteLookup::Error
+        ));
+        assert!(remote.is_degraded());
+        assert!(matches!(
+            remote.load(key, CachedStage::Load),
+            RemoteLookup::Off
+        ));
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn blob_roundtrip() {
+        let (server, _store, dir) = spawn_server("blob");
+        let client = Client::new(cfg(&server.addr));
+        assert!(client.blob_get(42).unwrap().is_none());
+        client.blob_put(42, b"model bytes").unwrap();
+        assert_eq!(client.blob_get(42).unwrap().unwrap(), b"model bytes");
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    fn queue_doc() -> Json {
+        // 1 -> 2 dependency chain
+        Json::obj(vec![
+            ("lease_ms", Json::Num(400.0)),
+            (
+                "tune",
+                Json::obj(vec![
+                    ("trials", Json::Num(8.0)),
+                    ("seed", Json::Num(7.0)),
+                ]),
+            ),
+            (
+                "tasks",
+                Json::Arr(vec![
+                    Json::obj(vec![
+                        ("id", Json::Num(1.0)),
+                        ("kind", Json::Str("load".into())),
+                        ("deps", Json::Arr(vec![])),
+                    ]),
+                    Json::obj(vec![
+                        ("id", Json::Num(2.0)),
+                        ("kind", Json::Str("build".into())),
+                        ("deps", Json::Arr(vec![Json::Num(1.0)])),
+                    ]),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn queue_claim_respects_deps_and_done_flow() {
+        let (server, _store, dir) = spawn_server("queue");
+        let client = Client::new(cfg(&server.addr));
+        let qid = client.qpush(&queue_doc()).unwrap();
+        assert!(qid > 0);
+
+        // only task 1 is ready; a second claim on the same conn while
+        // it is held sees an empty queue (task 2 is dep-blocked)
+        let Claim::Task(doc) = client.claim(qid).unwrap() else {
+            panic!("expected a task");
+        };
+        assert_eq!(doc.get("task").unwrap().get("id").unwrap().as_i64(), Some(1));
+        assert_eq!(doc.get("lease_ms").unwrap().as_i64(), Some(400));
+        assert_eq!(
+            doc.get("tune").unwrap().get("trials").unwrap().as_i64(),
+            Some(8)
+        );
+        assert!(matches!(client.claim(qid).unwrap(), Claim::Empty));
+
+        client.beat(qid, 1).unwrap();
+        let rec = Json::obj(vec![
+            ("id", Json::Num(1.0)),
+            ("ok", Json::Bool(true)),
+        ]);
+        client.done(qid, 1, &rec).unwrap();
+
+        // task 2 unblocks, and the claim carries dep 1's done record
+        let Claim::Task(doc) = client.claim(qid).unwrap() else {
+            panic!("dep-complete task must be claimable");
+        };
+        assert_eq!(doc.get("task").unwrap().get("id").unwrap().as_i64(), Some(2));
+        let deps = doc.get("deps_done").unwrap().as_arr().unwrap();
+        assert_eq!(deps.len(), 1);
+        assert_eq!(deps[0].get("id").unwrap().as_i64(), Some(1));
+
+        client
+            .done(qid, 2, &Json::obj(vec![("id", Json::Num(2.0))]))
+            .unwrap();
+        let poll = client.poll(qid).unwrap();
+        assert_eq!(poll.get("total").unwrap().as_i64(), Some(2));
+        assert_eq!(poll.get("done").unwrap().as_arr().unwrap().len(), 2);
+        // the polling connection does not count itself as a worker
+        assert_eq!(poll.get("workers").unwrap().as_i64(), Some(0));
+
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn object_form_deps_gate_readiness_like_bare_ids() {
+        // the dispatcher's task_doc emits deps as {id, kind, key}
+        // records, not bare ids — readiness gating must honour them
+        let (server, _store, dir) = spawn_server("objdeps");
+        let client = Client::new(cfg(&server.addr));
+        let doc = Json::obj(vec![
+            ("lease_ms", Json::Num(400.0)),
+            (
+                "tasks",
+                Json::Arr(vec![
+                    Json::obj(vec![
+                        ("id", Json::Num(1.0)),
+                        ("deps", Json::Arr(vec![])),
+                    ]),
+                    Json::obj(vec![
+                        ("id", Json::Num(2.0)),
+                        (
+                            "deps",
+                            Json::Arr(vec![Json::obj(vec![
+                                ("id", Json::Num(1.0)),
+                                ("kind", Json::Str("load".into())),
+                                ("key", Json::Str("00ff".into())),
+                            ])]),
+                        ),
+                    ]),
+                ]),
+            ),
+        ]);
+        let qid = client.qpush(&doc).unwrap();
+        let Claim::Task(c) = client.claim(qid).unwrap() else {
+            panic!("expected task 1");
+        };
+        assert_eq!(c.get("task").unwrap().get("id").unwrap().as_i64(), Some(1));
+        // task 2 must be dep-blocked until 1 is done
+        assert!(matches!(client.claim(qid).unwrap(), Claim::Empty));
+        client
+            .done(qid, 1, &Json::obj(vec![("id", Json::Num(1.0))]))
+            .unwrap();
+        let Claim::Task(c) = client.claim(qid).unwrap() else {
+            panic!("task 2 must unblock");
+        };
+        assert_eq!(c.get("task").unwrap().get("id").unwrap().as_i64(), Some(2));
+        let deps = c.get("deps_done").unwrap().as_arr().unwrap();
+        assert_eq!(deps[0].get("id").unwrap().as_i64(), Some(1));
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn dead_connection_releases_its_claims() {
+        let (server, _store, dir) = spawn_server("deadconn");
+        let parent = Client::new(cfg(&server.addr));
+        let qid = parent.qpush(&queue_doc()).unwrap();
+
+        // a worker claims task 1 and then its connection dies
+        {
+            let doomed = Client::new(cfg(&server.addr));
+            assert!(matches!(doomed.claim(qid).unwrap(), Claim::Task(_)));
+            // poll from the parent: the doomed worker is in the fleet
+            let poll = parent.poll(qid).unwrap();
+            assert_eq!(poll.get("workers").unwrap().as_i64(), Some(1));
+        } // drop severs the TCP connection
+
+        // the reclaim is driven by the server noticing the EOF; give
+        // its connection thread a moment
+        let reclaimed = (0..100).any(|_| {
+            std::thread::sleep(Duration::from_millis(10));
+            matches!(parent.claim(qid), Ok(Claim::Task(_)))
+        });
+        assert!(reclaimed, "dead connection's claim must be reclaimed");
+
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_is_a_miss_never_a_crash() {
+        let (server, store, dir) = spawn_server("badver");
+        let key = load_key(5);
+        store.save(key, &graph_artifact()).unwrap();
+
+        // a raw client stamping a foreign format version: every data
+        // op answers MISS, ping still answers OK
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        let mut head = [0u8; HEADER_LEN];
+        head[..4].copy_from_slice(REQ_MAGIC);
+        head[4..8].copy_from_slice(&(persist::FORMAT_VERSION + 1).to_le_bytes());
+        head[8] = OP_GET;
+        head[9..13].copy_from_slice(&9u32.to_le_bytes());
+        stream.write_all(&head).unwrap();
+        stream.write_all(&entry_ref(CachedStage::Load, key)).unwrap();
+        let (_, status, body) = read_frame(&mut stream, RSP_MAGIC).unwrap();
+        assert_eq!(status, ST_MISS, "foreign version must read as a miss");
+        assert!(body.is_empty());
+
+        head[8] = OP_PING;
+        head[9..13].copy_from_slice(&0u32.to_le_bytes());
+        stream.write_all(&head).unwrap();
+        let (_, status, body) = read_frame(&mut stream, RSP_MAGIC).unwrap();
+        assert_eq!(status, ST_OK, "ping must answer so skew is diagnosable");
+        assert_eq!(
+            u32::from_le_bytes(body[..4].try_into().unwrap()),
+            persist::FORMAT_VERSION
+        );
+
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn retry_is_bounded_and_backs_off() {
+        // nothing listens here: request must fail after exactly
+        // retries+1 attempts, spending at least the base backoff
+        let cfg = RemoteConfig {
+            addr: "127.0.0.1:1".to_string(), // reserved port, refused
+            timeout_ms: 200,
+            retries: 2,
+            backoff_ms: 20,
+            grace_ms: 100,
+        };
+        let client = Client::new(cfg);
+        let watch = crate::util::Stopwatch::start();
+        assert!(client.ping().is_err());
+        let ms = watch.elapsed_ms();
+        // attempts sleep 20..40 then 40..80 ms: bounded both ways
+        assert!(ms >= 55.0, "backoff must actually wait ({ms:.0}ms)");
+        assert!(ms < 5_000.0, "retry must terminate quickly ({ms:.0}ms)");
+    }
+}

@@ -16,6 +16,24 @@ impl XorShift64 {
         XorShift64 { state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1 }
     }
 
+    /// Non-deterministic seed for the few places where determinism is
+    /// the *wrong* property — retry-backoff jitter must differ across
+    /// processes or a fleet of workers retries in lockstep. Mixes wall
+    /// clock, pid, and a process-local counter so two clients created
+    /// in the same nanosecond still diverge.
+    pub fn from_entropy() -> Self {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x5EED);
+        let seed = nanos
+            ^ (std::process::id() as u64).rotate_left(32)
+            ^ COUNTER.fetch_add(1, Ordering::Relaxed).wrapping_mul(0x9E37);
+        XorShift64::new(seed)
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x >> 12;

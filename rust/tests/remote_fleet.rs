@@ -1,0 +1,297 @@
+//! Distributed-fleet conformance harness for the remote transport
+//! (`session/transport.rs` + the `--connect` dispatch path): a matrix
+//! executed by real `mlonmcu worker --connect` child processes — each
+//! with its **own** fresh MLONMCU_HOME, exchanging artifacts and tasks
+//! only through a serve daemon — must produce a report byte-identical
+//! to a plain serial run, failures included. Worker homes never see
+//! the model file (it travels through the server's blob pool), and a
+//! parent with zero connected workers must still complete the matrix
+//! by draining the served queue itself.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+use mlonmcu::config::Environment;
+use mlonmcu::frontends::tmodel;
+use mlonmcu::graph::{Graph, OpNode, TensorInfo};
+use mlonmcu::graph::{OpCode, ACT_RELU, PAD_SAME};
+use mlonmcu::session::transport::Server;
+use mlonmcu::session::{EnvStore, RunMatrix, RunOptions, Session};
+use mlonmcu::tensor::DType;
+
+/// Same tiny conv graph as tests/dispatch_equivalence.rs — small
+/// enough for every hardware target's memory gates.
+fn tiny_conv_graph() -> Graph {
+    let mut attrs = std::collections::BTreeMap::new();
+    attrs.insert("stride_h".to_string(), 1);
+    attrs.insert("stride_w".to_string(), 1);
+    attrs.insert("padding".to_string(), PAD_SAME);
+    attrs.insert("fused_act".to_string(), ACT_RELU);
+    Graph {
+        name: "tinyconv".into(),
+        tensors: vec![
+            TensorInfo {
+                name: "input".into(),
+                shape: vec![1, 4, 4, 2],
+                dtype: DType::I8,
+                scale: 0.5,
+                zero_point: 0,
+                data: None,
+            },
+            TensorInfo {
+                name: "w".into(),
+                shape: vec![3, 3, 3, 2],
+                dtype: DType::I8,
+                scale: 0.01,
+                zero_point: 0,
+                data: Some((0..54).map(|x| (x % 7) as u8).collect()),
+            },
+            TensorInfo {
+                name: "b".into(),
+                shape: vec![3],
+                dtype: DType::I32,
+                scale: 0.005,
+                zero_point: 0,
+                data: Some(vec![0; 12]),
+            },
+            TensorInfo {
+                name: "out".into(),
+                shape: vec![1, 4, 4, 3],
+                dtype: DType::I8,
+                scale: 0.25,
+                zero_point: -128,
+                data: None,
+            },
+        ],
+        ops: vec![OpNode {
+            opcode: OpCode::Conv2D,
+            name: "conv0".into(),
+            inputs: vec![0, 1, 2],
+            outputs: vec![3],
+            attrs,
+        }],
+        inputs: vec![0],
+        outputs: vec![3],
+    }
+}
+
+/// Fresh environment with the generated model in place. `extra`
+/// appends overrides (remote.connect, tuning knobs).
+fn fresh_env(tag: &str, extra: &[String]) -> (Environment, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("mlonmcu_remotefleet_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let env = Environment::init(&dir).unwrap();
+    tmodel::write_file(
+        &tiny_conv_graph(),
+        &dir.join("artifacts/models/tinyconv.tmodel"),
+    )
+    .unwrap();
+    let mut overrides = vec![
+        // identical budget across envs so keys and outcomes agree
+        "tune.trials=8".to_string(),
+        "dispatch.lease_ms=400".to_string(),
+    ];
+    overrides.extend_from_slice(extra);
+    (env.with_overrides(&overrides).unwrap(), dir)
+}
+
+/// A fresh, *model-less* home for one remote worker: workers must get
+/// model bytes from the server's blob pool, never from their own disk.
+fn worker_home(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mlonmcu_remotefleet_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    Environment::init(&dir).unwrap();
+    dir
+}
+
+/// Serve-side store in its own directory (the machine that would run
+/// `mlonmcu serve`).
+fn spawn_server(tag: &str) -> (mlonmcu::session::transport::ServerHandle, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("mlonmcu_remotefleet_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let store = Arc::new(EnvStore::open(&dir, 512 << 20).unwrap());
+    let handle = Server::spawn(store, "127.0.0.1:0").unwrap();
+    (handle, dir)
+}
+
+fn spawn_remote_worker(addr: &str, home: &std::path::Path) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_mlonmcu"))
+        .arg("worker")
+        .arg("--connect")
+        .arg(addr)
+        .arg("--home")
+        .arg(home)
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning remote worker")
+}
+
+/// Kills + reaps the fleet even when an assertion panics.
+struct Fleet(Vec<Child>);
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+fn full_matrix() -> RunMatrix {
+    RunMatrix::new()
+        .models(["tinyconv"])
+        .backends(["tflmi", "tflmc", "tvmaot", "tvmaot+", "tvmrt"])
+        .targets(["etiss", "esp32"])
+        .schedules(["default-nchw", "arm-nhwc"])
+        .with_tuning_sweep()
+}
+
+fn dedup_matrix() -> RunMatrix {
+    RunMatrix::new()
+        .models(["tinyconv"])
+        .backends(["tflmi", "tvmaot"])
+        .targets(["etiss", "esp32c3", "stm32f4", "stm32f7", "esp32"])
+}
+
+fn opts(workers: usize) -> RunOptions {
+    RunOptions { parallel: 2, use_cache: true, workers }
+}
+
+#[test]
+fn remote_fleet_report_is_byte_identical_to_serial() {
+    // serial baseline: no remote anywhere
+    let (env_s, dir_s) = fresh_env("serial", &[]);
+    let serial = Session::new(&env_s).unwrap();
+    let baseline = serial.run_matrix_opts(&full_matrix(), opts(0)).unwrap();
+    let baseline_t = *serial.last_timing.lock().unwrap();
+    assert!(baseline
+        .rows
+        .iter()
+        .any(|r| r["status"].render().starts_with("failed:tune")));
+
+    // the fleet: a serve daemon plus 4 workers, each in its own home
+    let (server, server_dir) = spawn_server("srv");
+    let addr = server.addr.to_string();
+    let homes: Vec<PathBuf> =
+        (0..4).map(|i| worker_home(&format!("wh{i}"))).collect();
+    let fleet =
+        Fleet(homes.iter().map(|h| spawn_remote_worker(&addr, h)).collect());
+
+    // dispatching parent in its own fresh home
+    let (env_p, dir_p) =
+        fresh_env("parent", &[format!("remote.connect={addr}")]);
+    let parent = Session::new(&env_p).unwrap();
+    let report = parent.run_matrix_opts(&full_matrix(), opts(4)).unwrap();
+
+    assert_eq!(
+        baseline.to_csv(),
+        report.to_csv(),
+        "remote-fleet CSV differs from serial"
+    );
+    assert_eq!(
+        baseline.to_markdown(),
+        report.to_markdown(),
+        "remote-fleet markdown (rows + counter note) differs from serial"
+    );
+    let t = *parent.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs, baseline_t.stage_execs);
+    assert_eq!(t.cache_hits, baseline_t.cache_hits);
+    assert_eq!(t.cache_misses, baseline_t.cache_misses);
+    assert_eq!(t.disk_misses, baseline_t.disk_misses);
+
+    // cold dedup run through the fleet seeds the server with the
+    // dedup matrix's load + both builds...
+    let (env_c, dir_c) = fresh_env("cold2", &[format!("remote.connect={addr}")]);
+    let cold2 = Session::new(&env_c).unwrap();
+    cold2.run_matrix_opts(&dedup_matrix(), opts(4)).unwrap();
+
+    // ...so a warm rerun from ANOTHER fresh parent home is served
+    // entirely by the fleet/server — nothing executes anywhere
+    let (env_w, dir_w) = fresh_env("warm", &[format!("remote.connect={addr}")]);
+    let warm = Session::new(&env_w).unwrap();
+    let warm_report = warm.run_matrix_opts(&dedup_matrix(), opts(4)).unwrap();
+    let wt = *warm.last_timing.lock().unwrap();
+    assert_eq!(wt.stage_execs, Default::default(), "0 executed stages");
+    assert_eq!(wt.cache_misses, 0);
+    assert!(
+        wt.remote_hits >= 3,
+        "the parent's tail pass must fetch load+2 builds through the \
+         remote tier (got {})",
+        wt.remote_hits
+    );
+    for row in &warm_report.rows {
+        assert_eq!(row["cached_stages"].render(), "load+build");
+    }
+
+    drop(fleet);
+    server.shutdown();
+    for d in homes {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    for d in [dir_s, dir_p, dir_c, dir_w, server_dir] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn parent_alone_drains_served_queue_without_any_workers() {
+    let (server, server_dir) = spawn_server("alone_srv");
+    let addr = server.addr.to_string();
+    let (env, dir) = fresh_env("alone", &[format!("remote.connect={addr}")]);
+    let session = Session::new(&env).unwrap();
+    // workers requested, none ever connect: the parent must claim and
+    // execute every served task itself
+    let report = session.run_matrix_opts(&dedup_matrix(), opts(4)).unwrap();
+    assert_eq!(report.len(), 10);
+    let t = *session.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs.builds, 2);
+    assert_eq!(t.stage_execs.loads, 1);
+    assert_eq!(t.worker_procs, 0, "no remote worker ever connected");
+    for row in &report.rows {
+        assert_eq!(row["status"].render(), "ok");
+    }
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_dir_all(server_dir);
+}
+
+#[test]
+fn serial_runs_share_artifacts_through_the_remote_tier() {
+    let (server, server_dir) = spawn_server("tier_srv");
+    let addr = server.addr.to_string();
+
+    // first home computes everything and replicates it to the server
+    let (env_a, dir_a) = fresh_env("tier_a", &[format!("remote.connect={addr}")]);
+    let a = Session::new(&env_a).unwrap();
+    a.run_matrix_opts(&dedup_matrix(), opts(0)).unwrap();
+    let at = *a.last_timing.lock().unwrap();
+    assert_eq!(at.stage_execs.builds, 2);
+    assert_eq!(at.remote_misses, 3, "cold lookups fall through to remote");
+
+    // a second, fresh home executes nothing: local store misses, the
+    // remote tier serves load + both builds
+    let (env_b, dir_b) = fresh_env("tier_b", &[format!("remote.connect={addr}")]);
+    let b = Session::new(&env_b).unwrap();
+    let report = b.run_matrix_opts(&dedup_matrix(), opts(0)).unwrap();
+    let bt = *b.last_timing.lock().unwrap();
+    assert_eq!(bt.stage_execs, Default::default());
+    assert_eq!(bt.remote_hits, 3);
+    assert_eq!(bt.cache_misses, 0);
+    assert!(
+        report
+            .notes
+            .iter()
+            .any(|n| n.contains("remote store: 3 hit(s)")),
+        "in-process runs must note the remote tier: {:?}",
+        report.notes
+    );
+    server.shutdown();
+    for d in [dir_a, dir_b, server_dir] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}

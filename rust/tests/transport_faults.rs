@@ -1,0 +1,276 @@
+//! Fault injection for the remote store tier: an unreachable or
+//! mid-session-killed serve daemon must degrade the session to
+//! local-only execution (counted, never fatal), corrupt wire entries
+//! — truncated frames, wrong `FORMAT_VERSION` — must decode as misses
+//! and recompute, and the client's retry/backoff loop must be bounded.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mlonmcu::config::Environment;
+use mlonmcu::frontends::tmodel;
+use mlonmcu::graph::{Graph, OpNode, TensorInfo};
+use mlonmcu::graph::{OpCode, ACT_RELU, PAD_SAME};
+use mlonmcu::session::transport::{Client, RemoteConfig, Server};
+use mlonmcu::session::{EnvStore, RunMatrix, RunOptions, Session};
+use mlonmcu::tensor::DType;
+
+/// Same tiny conv graph as tests/dispatch_equivalence.rs.
+fn tiny_conv_graph() -> Graph {
+    let mut attrs = std::collections::BTreeMap::new();
+    attrs.insert("stride_h".to_string(), 1);
+    attrs.insert("stride_w".to_string(), 1);
+    attrs.insert("padding".to_string(), PAD_SAME);
+    attrs.insert("fused_act".to_string(), ACT_RELU);
+    Graph {
+        name: "tinyconv".into(),
+        tensors: vec![
+            TensorInfo {
+                name: "input".into(),
+                shape: vec![1, 4, 4, 2],
+                dtype: DType::I8,
+                scale: 0.5,
+                zero_point: 0,
+                data: None,
+            },
+            TensorInfo {
+                name: "w".into(),
+                shape: vec![3, 3, 3, 2],
+                dtype: DType::I8,
+                scale: 0.01,
+                zero_point: 0,
+                data: Some((0..54).map(|x| (x % 7) as u8).collect()),
+            },
+            TensorInfo {
+                name: "b".into(),
+                shape: vec![3],
+                dtype: DType::I32,
+                scale: 0.005,
+                zero_point: 0,
+                data: Some(vec![0; 12]),
+            },
+            TensorInfo {
+                name: "out".into(),
+                shape: vec![1, 4, 4, 3],
+                dtype: DType::I8,
+                scale: 0.25,
+                zero_point: -128,
+                data: None,
+            },
+        ],
+        ops: vec![OpNode {
+            opcode: OpCode::Conv2D,
+            name: "conv0".into(),
+            inputs: vec![0, 1, 2],
+            outputs: vec![3],
+            attrs,
+        }],
+        inputs: vec![0],
+        outputs: vec![3],
+    }
+}
+
+fn fresh_env(tag: &str, extra: &[String]) -> (Environment, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("mlonmcu_transportfault_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let env = Environment::init(&dir).unwrap();
+    tmodel::write_file(
+        &tiny_conv_graph(),
+        &dir.join("artifacts/models/tinyconv.tmodel"),
+    )
+    .unwrap();
+    let mut overrides = vec![
+        "tune.trials=8".to_string(),
+        // fail fast: a dead server costs one quick round, not seconds
+        "remote.timeout_ms=200".to_string(),
+        "remote.retries=1".to_string(),
+        "remote.backoff_ms=10".to_string(),
+    ];
+    overrides.extend_from_slice(extra);
+    (env.with_overrides(&overrides).unwrap(), dir)
+}
+
+fn spawn_server(tag: &str) -> (mlonmcu::session::transport::ServerHandle, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("mlonmcu_transportfault_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let store = Arc::new(EnvStore::open(&dir, 512 << 20).unwrap());
+    let handle = Server::spawn(store, "127.0.0.1:0").unwrap();
+    (handle, dir)
+}
+
+fn dedup_matrix() -> RunMatrix {
+    RunMatrix::new()
+        .models(["tinyconv"])
+        .backends(["tflmi", "tvmaot"])
+        .targets(["etiss", "esp32c3", "stm32f4", "stm32f7", "esp32"])
+}
+
+fn opts(workers: usize) -> RunOptions {
+    RunOptions { parallel: 2, use_cache: true, workers }
+}
+
+/// Nothing listens on 127.0.0.1:1 — every connect is refused.
+const DEAD_ADDR: &str = "127.0.0.1:1";
+
+#[test]
+fn unreachable_server_degrades_to_local_execution() {
+    let (env, dir) =
+        fresh_env("dead", &[format!("remote.connect={DEAD_ADDR}")]);
+    let session = Session::new(&env).unwrap();
+    let report = session.run_matrix_opts(&dedup_matrix(), opts(0)).unwrap();
+    for row in &report.rows {
+        assert_eq!(row["status"].render(), "ok");
+    }
+    let t = *session.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs.loads, 1, "everything executed locally");
+    assert_eq!(t.stage_execs.builds, 2);
+    assert_eq!(
+        t.remote_errors, 1,
+        "one counted transport error, then the tier is off"
+    );
+    assert_eq!((t.remote_hits, t.remote_misses), (0, 0));
+    assert!(
+        report
+            .notes
+            .iter()
+            .any(|n| n.contains("remote store: 0 hit(s), 0 miss(es), 1 error(s)")),
+        "degradation must be reported: {:?}",
+        report.notes
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn dispatch_falls_back_in_process_when_server_unreachable() {
+    // --workers N --connect <dead addr>: the remote dispatcher cannot
+    // even ping, so the matrix must fall back to in-process execution
+    // rather than fail or hang
+    let (env, dir) =
+        fresh_env("deadfleet", &[format!("remote.connect={DEAD_ADDR}")]);
+    let session = Session::new(&env).unwrap();
+    let report = session.run_matrix_opts(&dedup_matrix(), opts(2)).unwrap();
+    assert_eq!(report.len(), 10);
+    for row in &report.rows {
+        assert_eq!(row["status"].render(), "ok");
+    }
+    let t = *session.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs.builds, 2);
+    assert_eq!(t.worker_procs, 0, "no fleet, no local shards");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn server_killed_mid_session_degrades_to_local() {
+    let (server, server_dir) = spawn_server("kill_srv");
+    let addr = server.addr.to_string();
+
+    // seed the server through one remote-attached home
+    let (env_a, dir_a) = fresh_env("kill_a", &[format!("remote.connect={addr}")]);
+    let a = Session::new(&env_a).unwrap();
+    a.run_matrix_opts(&dedup_matrix(), opts(0)).unwrap();
+
+    // a fresh home warms itself entirely over the wire...
+    let (env_b, dir_b) = fresh_env("kill_b", &[format!("remote.connect={addr}")]);
+    let b = Session::new(&env_b).unwrap();
+    b.run_matrix_opts(&dedup_matrix(), opts(0)).unwrap();
+    assert_eq!(b.last_timing.lock().unwrap().remote_hits, 3);
+
+    // ...then the server dies mid-session; the next run needs stages
+    // the memory tier has never seen and must execute them locally
+    server.shutdown();
+    let wider = RunMatrix::new()
+        .models(["tinyconv"])
+        .backends(["tflmc", "tvmrt"])
+        .targets(["etiss"]);
+    let report = b.run_matrix_opts(&wider, opts(0)).unwrap();
+    for row in &report.rows {
+        assert_eq!(row["status"].render(), "ok");
+    }
+    let t = *b.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs.builds, 2, "recomputed locally");
+    assert_eq!(t.remote_errors, 1, "dead server counted once, then off");
+    for d in [dir_a, dir_b, server_dir] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn corrupt_served_entries_decode_as_misses_and_recompute() {
+    let (server, server_dir) = spawn_server("corrupt_srv");
+    let addr = server.addr.to_string();
+
+    // populate the served store: load + tflmi build + tvmaot build
+    let (env_a, dir_a) =
+        fresh_env("corrupt_a", &[format!("remote.connect={addr}")]);
+    let a = Session::new(&env_a).unwrap();
+    a.run_matrix_opts(&dedup_matrix(), opts(0)).unwrap();
+
+    // sabotage the server's files in place (the server is a dumb byte
+    // pipe — OP_GET replays file bytes verbatim, the *client* verifies):
+    // the load entry gets a wrong FORMAT_VERSION, one build entry is
+    // truncated mid-frame, the other stays intact
+    let load_files = bin_files(&server_dir.join("load"));
+    assert_eq!(load_files.len(), 1);
+    let mut bytes = std::fs::read(&load_files[0]).unwrap();
+    bytes[4] = bytes[4].wrapping_add(1); // version u32 LE at [4..8]
+    std::fs::write(&load_files[0], &bytes).unwrap();
+
+    let build_files = bin_files(&server_dir.join("build"));
+    assert_eq!(build_files.len(), 2);
+    let bytes = std::fs::read(&build_files[0]).unwrap();
+    std::fs::write(&build_files[0], &bytes[..10.min(bytes.len())]).unwrap();
+
+    // a fresh home: the poisoned entries must read as remote misses
+    // (never a crash, never a bad artifact) and recompute locally; the
+    // intact build is still served
+    let (env_b, dir_b) =
+        fresh_env("corrupt_b", &[format!("remote.connect={addr}")]);
+    let b = Session::new(&env_b).unwrap();
+    let report = b.run_matrix_opts(&dedup_matrix(), opts(0)).unwrap();
+    for row in &report.rows {
+        assert_eq!(row["status"].render(), "ok");
+    }
+    let t = *b.last_timing.lock().unwrap();
+    assert_eq!(t.stage_execs.loads, 1, "version-skewed load recomputed");
+    assert_eq!(t.stage_execs.builds, 1, "truncated build recomputed");
+    assert_eq!(t.remote_misses, 2);
+    assert_eq!(t.remote_hits, 1, "the intact entry still serves");
+    assert_eq!(t.remote_errors, 0, "corruption is a miss, not a fault");
+
+    server.shutdown();
+    for d in [dir_a, dir_b, server_dir] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn retry_backoff_is_bounded_and_fails_fast() {
+    let client = Client::new(RemoteConfig {
+        addr: DEAD_ADDR.to_string(),
+        timeout_ms: 200,
+        retries: 3,
+        backoff_ms: 10,
+        grace_ms: 100,
+    });
+    let start = std::time::Instant::now();
+    assert!(client.ping().is_err(), "nothing listens on port 1");
+    assert!(
+        start.elapsed() < std::time::Duration::from_secs(10),
+        "4 attempts with 10ms base backoff must not spin for {:?}",
+        start.elapsed()
+    );
+}
+
+fn bin_files(dir: &std::path::Path) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.flatten()
+                .map(|e| e.path())
+                .filter(|p| p.extension().is_some_and(|x| x == "bin"))
+                .collect()
+        })
+        .unwrap_or_default();
+    out.sort();
+    out
+}
