@@ -9,6 +9,7 @@
 //!         [-f FEAT..] [--parallel N] [-c k=v..] [--postprocess P..]
 //! mlonmcu cache stats | gc | clear
 //! mlonmcu report [--session N]
+//! mlonmcu trace summary FILE
 //! mlonmcu targets ls | backends ls
 //! ```
 
@@ -19,6 +20,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::Environment;
 use crate::data::Json;
 use crate::postprocess;
+use crate::report::{row, Cell, Report};
 use crate::session::persist;
 use crate::session::transport::{Client, RemoteConfig, Server};
 use crate::session::{EnvStore, RunMatrix, RunOptions, Session};
@@ -46,6 +48,7 @@ USAGE:
           [--cache-dir DIR] [--cache-budget MB] [-c key=val ..]
           [--connect HOST:PORT]
   mlonmcu report [--session N]            reprint a session report
+  mlonmcu trace summary FILE              aggregate an exported trace
   mlonmcu worker (--queue DIR | --connect HOST:PORT) --home DIR
           [-c key=val ..]                 (internal) dispatch worker
 
@@ -68,6 +71,12 @@ FLAGS:
                    `worker --connect` fleets on any machine. An
                    unreachable server degrades to local execution.
   --listen         serve bind address (default 127.0.0.1:4917)
+  --trace          write a Chrome trace_event JSON timeline of every
+                   pipeline stage, cache/store lookup, lease and
+                   transport request — merged across the whole fleet
+                   (local worker processes and remote workers alike);
+                   config key trace.file. Tracing never changes the
+                   report: traced and untraced runs stay byte-identical.
 ";
 
 /// Entry point for the binary.
@@ -87,6 +96,7 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         "serve" => cmd_serve(&rest),
         "cache" => cmd_cache(&rest),
         "report" => cmd_report(&rest),
+        "trace" => cmd_trace(&rest),
         "worker" => cmd_worker(&rest),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -182,6 +192,7 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
             ("--cache-dir", true),
             ("--cache-budget", true),
             ("--connect", true),
+            ("--trace", true),
         ],
     )?;
     let models = p.all(&["-m", "--model"]);
@@ -225,8 +236,19 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
     for (name, text) in &artifacts {
         std::fs::write(session.dir.join(name), text)?;
     }
-    println!("{}", report.to_text());
     let t = *session.last_timing.lock().unwrap();
+    // display-only: the trace note joins the report AFTER the session
+    // files were written, so traced and untraced session artifacts
+    // stay byte-identical (proven by tests/dispatch_equivalence.rs)
+    if let Some(path) = env.trace_file() {
+        report.note(format!(
+            "trace: {} span(s) exported to {} (open in a chrome://tracing \
+             viewer, or run `mlonmcu trace summary`)",
+            t.trace_spans,
+            path.display()
+        ));
+    }
+    println!("{}", report.to_text());
     println!(
         "session {} done: {} runs in {:.1}s wall ({} thread(s){}); \
          simulated device time {:.1}s; artifacts in {}",
@@ -286,6 +308,18 @@ fn env_with_cache_flags(p: &Parsed) -> Result<Environment> {
     }
     if let Some(addr) = p.one("--connect") {
         overrides.push(format!("remote.connect={addr}"));
+    }
+    if let Some(file) = p.one("--trace") {
+        // absolutize against the invocation dir: relative `trace.file`
+        // values resolve against the environment root, which is not
+        // where the user typed the flag
+        let path = std::path::Path::new(file);
+        let abs = if path.is_absolute() {
+            path.to_path_buf()
+        } else {
+            std::env::current_dir()?.join(path)
+        };
+        overrides.push(format!("trace.file={}", abs.display()));
     }
     Environment::discover()?.with_overrides(&overrides)
 }
@@ -484,6 +518,37 @@ fn cmd_report(rest: &[String]) -> Result<i32> {
     Ok(0)
 }
 
+/// `mlonmcu trace summary FILE` — aggregate an exported Chrome
+/// trace_event timeline into a per-stage / per-worker table.
+fn cmd_trace(rest: &[String]) -> Result<i32> {
+    let usage = "usage: mlonmcu trace summary <trace.json>";
+    if rest.first().map(String::as_str) != Some("summary") {
+        bail!("{usage}");
+    }
+    let Some(path) = rest.get(1) else {
+        bail!("{usage}");
+    };
+    let spans = crate::util::trace::read_spans(std::path::Path::new(path))?;
+    let mut report = Report::default();
+    report.columns = ["span", "pid", "count", "total_ms", "mean_ms", "max_ms"]
+        .map(String::from)
+        .to_vec();
+    for a in crate::util::trace::aggregate(&spans) {
+        let ms = a.total_us as f64 / 1000.0;
+        report.push(row(vec![
+            ("span", Cell::Str(a.name)),
+            ("pid", Cell::Int(a.pid as i64)),
+            ("count", Cell::Int(a.count as i64)),
+            ("total_ms", Cell::Float(ms)),
+            ("mean_ms", Cell::Float(ms / a.count.max(1) as f64)),
+            ("max_ms", Cell::Float(a.max_us as f64 / 1000.0)),
+        ]));
+    }
+    report.note(format!("{} span(s) in {path}", spans.len()));
+    println!("{}", report.to_text());
+    Ok(0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -535,6 +600,37 @@ mod tests {
         ])
         .unwrap_err();
         assert!(err.to_string().contains("--home"), "{err}");
+    }
+
+    #[test]
+    fn trace_summary_requires_action_and_file() {
+        assert!(main_with_args(&["trace".into()]).is_err());
+        assert!(main_with_args(&["trace".into(), "summary".into()]).is_err());
+    }
+
+    #[test]
+    fn trace_summary_aggregates_a_span_file() {
+        let dir = std::env::temp_dir().join("mlonmcu_cli_trace_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let file = dir.join("t.json");
+        let span = crate::util::trace::Span {
+            name: "build".into(),
+            cat: "stage".into(),
+            ts_us: 1,
+            dur_us: 2000,
+            pid: 42,
+            tid: 0,
+            args: vec![("outcome".into(), "ok".into())],
+        };
+        crate::util::trace::write_spans(&file, vec![span]).unwrap();
+        let args = vec![
+            "trace".to_string(),
+            "summary".to_string(),
+            file.display().to_string(),
+        ];
+        assert_eq!(main_with_args(&args).unwrap(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -57,6 +57,11 @@ backoff_ms = 100
 # itself instead of waiting for remote workers
 grace_ms = 500
 
+[trace]
+# span-tracer output (`--trace FILE`): Chrome trace_event JSON with
+# per-stage spans from every local/remote worker; empty = tracing off
+file = ""
+
 [tune]
 trials = 600
 
@@ -258,6 +263,15 @@ impl Environment {
         self.get_i64("remote", "grace_ms", 500).clamp(20, 60_000) as u64
     }
 
+    /// Span-tracer output file (`trace.file`, or the `--trace` CLI
+    /// flag via an override). `None` (the default) keeps the tracer
+    /// disabled. Relative paths are rooted at the environment;
+    /// absolute paths win the join.
+    pub fn trace_file(&self) -> Option<PathBuf> {
+        let s = self.get_str("trace", "file", "");
+        (!s.is_empty()).then(|| self.root.join(s))
+    }
+
     /// Size budget of the environment store in bytes
     /// (`cache.budget_mb`, or `--cache-budget` via an override).
     pub fn cache_budget_bytes(&self) -> u64 {
@@ -346,6 +360,25 @@ mod tests {
             .unwrap();
         assert_eq!(env.remote_connect().as_deref(), Some("127.0.0.1:4917"));
         assert_eq!(env.remote_retries(), 10, "retries clamp to a sane bound");
+    }
+
+    #[test]
+    fn trace_file_defaults_off_and_roots_relative_paths() {
+        let env = Environment {
+            root: PathBuf::from("/x"),
+            doc: TomlDoc::parse(DEFAULT_TEMPLATE).unwrap(),
+            overrides: BTreeMap::new(),
+        };
+        // template ships with tracing disabled
+        assert_eq!(env.trace_file(), None);
+        let env = env
+            .with_overrides(&["trace.file=out/trace.json".into()])
+            .unwrap();
+        assert_eq!(env.trace_file(), Some(PathBuf::from("/x/out/trace.json")));
+        let env = env
+            .with_overrides(&["trace.file=/abs/trace.json".into()])
+            .unwrap();
+        assert_eq!(env.trace_file(), Some(PathBuf::from("/abs/trace.json")));
     }
 
     #[test]

@@ -67,6 +67,12 @@ impl Report {
         self.rows.push(row);
     }
 
+    /// Append a footer note (rendered by the markdown/text writers,
+    /// never by CSV).
+    pub fn note(&mut self, note: impl Into<String>) {
+        self.notes.push(note.into());
+    }
+
     pub fn merge(&mut self, other: Report) {
         for row in other.rows {
             self.push(row);

@@ -303,11 +303,15 @@ impl ArtifactCache {
         if !self.enabled {
             return None;
         }
+        let mut span = crate::util::trace::span("cache", "lookup")
+            .arg("stage", stage.name())
+            .arg_with("key", || key.hex());
         {
             let mut inner = self.inner.lock().unwrap();
             if let Some(a) = inner.map.get(&key.0).cloned() {
                 inner.stats.hits += 1;
                 touch(&mut inner.lru, key.0);
+                span.note("outcome", "mem-hit");
                 return Some(a);
             }
         }
@@ -323,6 +327,7 @@ impl ArtifactCache {
                 inner.stats.hits += 1;
                 inner.stats.disk_hits += 1;
                 insert_mem(&mut inner, self.capacity, key, artifact.clone());
+                span.note("outcome", "store-hit");
                 return Some(artifact);
             }
             Some(StoreLookup::Corrupt) => store_corrupt = true,
@@ -355,6 +360,7 @@ impl ArtifactCache {
                         );
                     }
                 }
+                span.note("outcome", "remote-hit");
                 return Some(artifact);
             }
             Some(RemoteLookup::Miss) => inner.stats.remote_misses += 1,
@@ -362,6 +368,7 @@ impl ArtifactCache {
             Some(RemoteLookup::Off) | None => {}
         }
         inner.stats.misses += 1;
+        span.note("outcome", "miss");
         None
     }
 

@@ -381,6 +381,10 @@ struct RemoteCtx<'a> {
     client: &'a Client,
     env: &'a Environment,
     store: Arc<EnvStore>,
+    /// Ship drained trace spans back over the wire after each traced
+    /// task. True only in `mlonmcu worker --connect` processes — the
+    /// dispatching parent keeps its own spans in the local tracer.
+    ship_spans: bool,
 }
 
 /// Outcome of one remote claim attempt.
@@ -457,6 +461,9 @@ pub fn execute_remote(
     let queue_doc = Json::obj(vec![
         ("format", Json::Num(persist::FORMAT_VERSION as f64)),
         ("lease_ms", Json::Num(lease_ms as f64)),
+        // traced queues tell every remote worker to record spans and
+        // ship them back (drained by this parent's poll loop)
+        ("trace", Json::Bool(crate::util::trace::enabled())),
         (
             "tune",
             Json::obj(vec![
@@ -488,7 +495,7 @@ pub fn execute_remote(
     // poll until every task settled; drain one task in-process whenever
     // no worker is connected or the queue stopped progressing for a
     // grace period — the matrix completes even with zero workers
-    let ctx = RemoteCtx { client, env, store };
+    let ctx = RemoteCtx { client, env, store, ship_spans: false };
     let grace_ms = remote.config().grace_ms;
     let mut done: HashMap<usize, DoneRecord> = HashMap::new();
     let mut fleet_max = 0usize;
@@ -510,6 +517,16 @@ pub fn execute_remote(
             if let Some(r) = DoneRecord::from_json(rec) {
                 done.insert(id.max(0) as usize, r);
             }
+        }
+        // remote workers' spans ride the poll responses; merge them
+        // into this parent's tracer (no-op while tracing is off)
+        if let Some(events) = poll.get("spans").and_then(Json::as_arr) {
+            crate::util::trace::record_all(
+                events
+                    .iter()
+                    .filter_map(|e| crate::util::trace::span_from_event(e).ok())
+                    .collect(),
+            );
         }
         let as_count = |k: &str| {
             poll.get(k).and_then(Json::as_i64).unwrap_or(0).max(0) as usize
@@ -583,7 +600,7 @@ pub fn worker_main_remote(addr: &str, env: &Environment) -> Result<i32> {
         backoff_ms: env.remote_backoff_ms(),
         grace_ms: env.remote_grace_ms(),
     });
-    let ctx = RemoteCtx { client: &client, env, store };
+    let ctx = RemoteCtx { client: &client, env, store, ship_spans: true };
     crate::log_info!(
         "worker: draining queues of {} (home {})",
         client.addr(),
@@ -624,6 +641,12 @@ fn remote_step(ctx: &RemoteCtx, queue: u64) -> Result<Step> {
     };
     let qid =
         doc.get("queue").and_then(Json::as_i64).unwrap_or(0).max(0) as u64;
+    // a traced queue turns this worker's tracer on for the rest of the
+    // shift; spans drain back to the dispatching parent per task
+    let traced = matches!(doc.get("trace"), Some(Json::Bool(true)));
+    if traced && ctx.ship_spans {
+        crate::util::trace::enable();
+    }
     let lease_ms = doc
         .get("lease_ms")
         .and_then(Json::as_i64)
@@ -691,6 +714,16 @@ fn remote_step(ctx: &RemoteCtx, queue: u64) -> Result<Step> {
         done
         // scope exit joins the heartbeat (wakes within one 20ms slice)
     });
+    // ship spans BEFORE the done op: both ride this one connection, so
+    // the parent poll that observes the completion also drains them
+    if traced && ctx.ship_spans {
+        let spans = crate::util::trace::drain();
+        if !spans.is_empty() {
+            if let Err(e) = ctx.client.trace_put(qid, spans) {
+                crate::log_warn!("worker: trace spans not shipped ({e:#})");
+            }
+        }
+    }
     ctx.client.done(qid, tid as u64, &done.to_json(tid))?;
     Ok(Step::Worked)
 }
@@ -717,8 +750,15 @@ fn run_remote_task(
             }
         }
     }
+    let mut span = crate::util::trace::span("stage", t.kind.name())
+        .arg_with("task", || t.id.to_string())
+        .arg_with("backend", || t.spec.backend.clone())
+        .arg_with("schedule", || {
+            t.spec.schedule.clone().unwrap_or_else(|| "default".into())
+        });
     let lookup = remote_primary_lookup(ctx, t);
     if lookup == Lookup::Hit {
+        span.note("outcome", "hit");
         return DoneRecord::ok(false, Lookup::Hit, 0.0);
     }
     let watch = Stopwatch::start();
@@ -726,7 +766,7 @@ fn run_remote_task(
         execute_remote_stage(ctx, t, tune)
     }));
     let secs = watch.elapsed_s();
-    match result {
+    let done = match result {
         Ok(Ok(artifact)) => {
             // server first — it is the fleet's exchange medium and the
             // parent's tail pass fetches through it
@@ -754,7 +794,9 @@ fn run_remote_task(
             lookup,
             secs,
         ),
-    }
+    };
+    span.note("outcome", if done.ok { "ok" } else { "failed" });
+    done
 }
 
 /// Primary lookup for a claimed task: the server (shared across the
@@ -1074,6 +1116,14 @@ impl Drop for Reaper {
 /// Entry point of the `mlonmcu worker` subcommand: drain the queue at
 /// `queue_dir`, exchanging artifacts through `env`'s store.
 pub fn worker_main(queue_dir: &Path, env: &Environment) -> Result<i32> {
+    // tracing is session-wide: the parent forwards `trace.file` as a
+    // `-c` override, so a traced session traces its whole fleet. Each
+    // worker writes its spans to `queue/trace-<pid>.json`; the parent
+    // merges those files into the exported timeline.
+    let traced = env.trace_file().is_some();
+    if traced {
+        crate::util::trace::enable();
+    }
     let store = Arc::new(EnvStore::open(
         &env.cache_dir(),
         env.cache_budget_bytes(),
@@ -1087,7 +1137,19 @@ pub fn worker_main(queue_dir: &Path, env: &Environment) -> Result<i32> {
         fault_marker: env.dispatch_fault_marker(),
         tasks: read_queue_tasks(queue_dir)?,
     };
-    drain(&ctx)?;
+    let result = {
+        let _span = crate::util::trace::span("worker", "drain")
+            .arg_with("queue", || queue_dir.display().to_string());
+        drain(&ctx)
+    };
+    if traced {
+        let path = queue_dir.join(crate::util::trace::worker_file_name());
+        let spans = crate::util::trace::drain();
+        if let Err(e) = crate::util::trace::write_spans(&path, spans) {
+            crate::log_warn!("worker: trace spans not written ({e:#})");
+        }
+    }
+    result?;
     Ok(0)
 }
 
@@ -1298,10 +1360,19 @@ fn run_stage_task(ctx: &WorkerCtx, t: &QueueTask) -> DoneRecord {
             }
         }
     }
+    let mut span = crate::util::trace::span("stage", t.kind.name())
+        .arg_with("task", || t.id.to_string())
+        .arg_with("backend", || t.spec.backend.clone())
+        .arg_with("schedule", || {
+            t.spec.schedule.clone().unwrap_or_else(|| "default".into())
+        });
     // primary lookup: another invocation (or worker round) may have
     // produced this artifact already
     let lookup = match ctx.store.load(t.key, t.kind) {
-        StoreLookup::Hit(_) => return DoneRecord::ok(false, Lookup::Hit, 0.0),
+        StoreLookup::Hit(_) => {
+            span.note("outcome", "hit");
+            return DoneRecord::ok(false, Lookup::Hit, 0.0);
+        }
         StoreLookup::Miss => Lookup::Miss,
         StoreLookup::Corrupt => Lookup::Corrupt,
     };
@@ -1310,7 +1381,7 @@ fn run_stage_task(ctx: &WorkerCtx, t: &QueueTask) -> DoneRecord {
         execute_stage(ctx, t)
     }));
     let secs = watch.elapsed_s();
-    match result {
+    let done = match result {
         Ok(Ok(artifact)) => {
             if let Err(e) = ctx.store.save(t.key, &artifact) {
                 crate::log_warn!(
@@ -1332,7 +1403,9 @@ fn run_stage_task(ctx: &WorkerCtx, t: &QueueTask) -> DoneRecord {
             lookup,
             secs,
         ),
-    }
+    };
+    span.note("outcome", if done.ok { "ok" } else { "failed" });
+    done
 }
 
 fn execute_stage(ctx: &WorkerCtx, t: &QueueTask) -> Result<Artifact> {
@@ -1420,6 +1493,9 @@ struct Lease {
     token: String,
     stop: Arc<AtomicBool>,
     heartbeat: Option<std::thread::JoinHandle<()>>,
+    /// Trace span covering the whole hold (claim win → release); lost
+    /// claim attempts record nothing, so contention stays off traces.
+    _span: crate::util::trace::SpanGuard,
 }
 
 impl Lease {
@@ -1433,6 +1509,8 @@ impl Lease {
             .create_new(true)
             .open(&path)
             .ok()?;
+        let span = crate::util::trace::span("lease", "claim")
+            .arg_with("task", || id.to_string());
         let _ = f.write_all(token.as_bytes());
         drop(f);
         let stop = Arc::new(AtomicBool::new(false));
@@ -1451,6 +1529,8 @@ impl Lease {
                     // unlink the new owner's live lease
                     match fs::read_to_string(&path) {
                         Ok(s) if s.trim() == token => {
+                            let _beat =
+                                crate::util::trace::span("lease", "heartbeat");
                             let _ = fs::write(&path, token.as_bytes());
                         }
                         _ => break, // lost ownership: stop touching it
@@ -1458,7 +1538,13 @@ impl Lease {
                 }
             })
         };
-        Some(Lease { path, token, stop, heartbeat: Some(heartbeat) })
+        Some(Lease {
+            path,
+            token,
+            stop,
+            heartbeat: Some(heartbeat),
+            _span: span,
+        })
     }
 }
 

@@ -103,6 +103,10 @@ pub struct SessionTiming {
     /// when the environment store is unavailable). On the remote-fleet
     /// path this is the peak number of connected remote workers.
     pub worker_procs: usize,
+    /// Trace spans exported to `trace.file` by this call (0 with
+    /// tracing off). Display-only: tracing never adds a byte to the
+    /// report files, so traced and untraced runs stay byte-identical.
+    pub trace_spans: usize,
 }
 
 /// Per-invocation counters, normalized across the two execution
@@ -253,6 +257,14 @@ impl Session {
             opts.parallel.max(1),
             if opts.use_cache { "on" } else { "off" }
         );
+        // fleet-wide tracing: `trace.file` turns the tracer on for the
+        // whole call. Local workers inherit the setting through the
+        // forwarded `-c` overrides, remote workers through the served
+        // queue's trace flag; their spans merge back here at export.
+        let trace_file = self.env.trace_file();
+        if trace_file.is_some() {
+            crate::util::trace::enable();
+        }
         let watch = Stopwatch::start();
         let stats_before = self.cache.stats();
         // --no-cache: a throwaway disabled cache keeps the session
@@ -349,6 +361,34 @@ impl Session {
             timing.load_run_s += r.stages.total_host();
             timing.sim_s += r.sim_total_s();
         }
+        if let Some(path) = &trace_file {
+            let mut spans = crate::util::trace::drain();
+            // local worker processes leave their spans behind as
+            // queue/<n>/trace-<pid>.json files; fold every queue of
+            // this session in, then consume the files so a later
+            // run_matrix call does not re-export them
+            if let Ok(queues) = std::fs::read_dir(self.dir.join("queue")) {
+                for sub in queues.flatten() {
+                    let qdir = sub.path();
+                    spans.extend(crate::util::trace::collect_dir(&qdir));
+                    remove_span_files(&qdir);
+                }
+            }
+            timing.trace_spans = spans.len();
+            match crate::util::trace::write_spans(path, spans) {
+                Ok(()) => crate::log_info!(
+                    "session {}: exported {} trace span(s) to {}",
+                    self.id,
+                    timing.trace_spans,
+                    path.display()
+                ),
+                Err(e) => crate::log_warn!(
+                    "trace not written to {} ({e:#})",
+                    path.display()
+                ),
+            }
+            crate::util::trace::disable();
+        }
         *self.last_timing.lock().unwrap() = timing;
         crate::log_info!(
             "session {}: cache {} hit(s) ({} from env store) / {} miss(es), \
@@ -412,6 +452,20 @@ impl Session {
             crate::log_warn!("cache index not written: {e}");
         }
         Ok(report)
+    }
+}
+
+/// Delete collected `trace-<pid>.json` worker span files.
+fn remove_span_files(dir: &std::path::Path) {
+    let Ok(files) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for f in files.flatten() {
+        let name = f.file_name();
+        let n = name.to_string_lossy();
+        if n.starts_with("trace-") && n.ends_with(".json") {
+            let _ = std::fs::remove_file(f.path());
+        }
     }
 }
 

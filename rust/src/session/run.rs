@@ -270,30 +270,45 @@ pub fn stage_tail(
 
     // ------------------------------------------------------- Compile --
     let watch = Stopwatch::start();
+    let mut span = crate::util::trace::span("stage", "compile")
+        .arg_with("run", || idx.to_string())
+        .arg_with("backend", || spec.backend.clone())
+        .arg_with("target", || spec.target.clone());
     let dep = match target.deploy(build, backend.framework()) {
         Ok(d) => d,
         Err(e) => {
             // flash/RAM overflow => "—"
+            span.note("outcome", "failed");
             rec.status = RunStatus::Failed("compile", e.to_string());
             crate::log_debug!("run {}: compile failed: {}", spec.label(), e);
             write_record(&run_dir, rec);
             return;
         }
     };
+    drop(span);
     rec.stages.compile_s = watch.elapsed_s();
 
     // ----------------------------------------------------------- Run --
     let watch = Stopwatch::start();
+    let mut span = crate::util::trace::span("stage", "run")
+        .arg_with("run", || idx.to_string())
+        .arg_with("backend", || spec.backend.clone())
+        .arg_with("target", || spec.target.clone())
+        .arg_with("schedule", || {
+            spec.schedule.clone().unwrap_or_else(|| "default".into())
+        });
     let input = run_input(session, &spec.model, graph.tensor(graph.inputs[0]).numel());
     let outcome = match target.run(build, &dep, &input, true) {
         Ok(o) => o,
         Err(e) => {
+            span.note("outcome", "failed");
             rec.status = RunStatus::Failed("run", e.to_string());
             crate::log_debug!("run {}: run failed: {}", spec.label(), e);
             write_record(&run_dir, rec);
             return;
         }
     };
+    drop(span);
     rec.stages.run_s = watch.elapsed_s();
 
     // -------------------------------------------------- Postprocess --

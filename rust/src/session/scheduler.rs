@@ -544,6 +544,12 @@ fn run_task(
     });
 
     let watch = Stopwatch::start();
+    let mut span = crate::util::trace::span("stage", task.kind.stage_name())
+        .arg_with("run", || task.spec_idx.to_string())
+        .arg_with("backend", || spec.backend.clone())
+        .arg_with("schedule", || {
+            spec.schedule.clone().unwrap_or_else(|| "default".into())
+        });
     let result: Result<Artifact> = match task.kind {
         StageKind::Load => match model_bytes.get(&spec.model) {
             Some(bytes) => {
@@ -564,6 +570,8 @@ fn run_task(
         .map(|b| Artifact::Build(Arc::new(b))),
         StageKind::Tail => unreachable!(),
     };
+    span.note("outcome", if result.is_ok() { "ok" } else { "failed" });
+    drop(span);
     let secs = watch.elapsed_s();
     match result {
         Ok(artifact) => {

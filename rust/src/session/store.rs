@@ -121,10 +121,16 @@ impl EnvStore {
     /// the stored key and payload hash; any failure deletes the entry
     /// and returns `Corrupt` so the caller recomputes.
     pub fn load(&self, key: StageKey, stage: CachedStage) -> StoreLookup {
+        let mut span = crate::util::trace::span("store", "load")
+            .arg("stage", stage.name())
+            .arg_with("key", || key.hex());
         let path = self.entry_path(stage, key);
         let bytes = match fs::read(&path) {
             Ok(b) => b,
-            Err(_) => return StoreLookup::Miss,
+            Err(_) => {
+                span.note("outcome", "miss");
+                return StoreLookup::Miss;
+            }
         };
         match persist::decode(&bytes, key) {
             Ok(artifact) => {
@@ -135,6 +141,7 @@ impl EnvStore {
                     .entry(key.0)
                     .or_insert(Entry { stage, bytes: bytes.len() as u64, seq })
                     .seq = seq;
+                span.note("outcome", "hit");
                 StoreLookup::Hit(artifact)
             }
             Err(e) => {
@@ -149,6 +156,7 @@ impl EnvStore {
                 // which would invert the save() lock order
                 let _ = fs::remove_file(&path);
                 self.inner.lock().unwrap().entries.remove(&key.0);
+                span.note("outcome", "corrupt");
                 StoreLookup::Corrupt
             }
         }
@@ -206,6 +214,9 @@ impl EnvStore {
         stage: CachedStage,
         bytes: &[u8],
     ) -> Result<()> {
+        let _span = crate::util::trace::span("store", "save")
+            .arg("stage", stage.name())
+            .arg_with("key", || key.hex());
         let path = self.entry_path(stage, key);
         fs::create_dir_all(path.parent().unwrap())?;
         let _lock = FileLock::acquire(&self.root)?;

@@ -76,6 +76,9 @@ pub const OP_POLL: u8 = 7;
 pub const OP_BLOB_PUT: u8 = 8;
 pub const OP_BLOB_GET: u8 = 9;
 pub const OP_STATS: u8 = 10;
+/// Ship tracer spans for a served queue (`qid u64 | Chrome trace
+/// JSON`); the parent's next POLL on that queue drains them.
+pub const OP_TRACE_PUT: u8 = 11;
 
 // Response statuses.
 pub const ST_OK: u8 = 0;
@@ -166,7 +169,12 @@ struct ServedTask {
 struct ServedQueue {
     lease_ms: u64,
     tune: Json,
+    /// Parent runs with tracing on: claimers enable their tracer and
+    /// ship spans back (`OP_TRACE_PUT`).
+    trace: bool,
     tasks: Vec<ServedTask>,
+    /// Worker spans pooled until the parent's next POLL drains them.
+    spans: Vec<Json>,
     /// Last claim or completion — parents use the stall age to decide
     /// when to self-drain.
     last_progress: Instant,
@@ -331,6 +339,7 @@ fn handle_request(
         OP_BLOB_PUT => op_blob_put(shared, payload),
         OP_BLOB_GET => op_blob_get(shared, payload),
         OP_STATS => op_stats(shared),
+        OP_TRACE_PUT => op_trace_put(shared, payload),
         _ => (ST_ERR, Vec::new()),
     }
 }
@@ -380,6 +389,7 @@ fn op_qpush(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
         .unwrap_or(5000)
         .clamp(50, 600_000) as u64;
     let tune = doc.get("tune").cloned().unwrap_or(Json::Null);
+    let trace = matches!(doc.get("trace"), Some(Json::Bool(true)));
     let Some(docs) = doc.get("tasks").and_then(Json::as_arr) else {
         return (ST_ERR, Vec::new());
     };
@@ -413,7 +423,14 @@ fn op_qpush(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
     let qid = s.next_queue;
     s.queues.insert(
         qid,
-        ServedQueue { lease_ms, tune, tasks, last_progress: Instant::now() },
+        ServedQueue {
+            lease_ms,
+            tune,
+            trace,
+            tasks,
+            spans: Vec::new(),
+            last_progress: Instant::now(),
+        },
     );
     (ST_OK, qid.to_le_bytes().to_vec())
 }
@@ -482,6 +499,7 @@ fn op_claim(
             ("queue", Json::Num(qid as f64)),
             ("lease_ms", Json::Num(q.lease_ms as f64)),
             ("tune", q.tune.clone()),
+            ("trace", Json::Bool(q.trace)),
             ("task", task),
             ("deps_done", Json::Arr(deps_done)),
         ]);
@@ -580,13 +598,40 @@ fn op_poll(
             _ => None,
         })
         .collect();
+    // worker spans are handed to the poller exactly once
+    let spans = std::mem::take(&mut q.spans);
     let rsp = Json::obj(vec![
         ("total", Json::Num(q.tasks.len() as f64)),
         ("workers", Json::Num(workers as f64)),
         ("stalled_ms", Json::Num(q.last_progress.elapsed().as_millis() as f64)),
         ("done", Json::Arr(done)),
+        ("spans", Json::Arr(spans)),
     ]);
     (ST_OK, rsp.to_string().into_bytes())
+}
+
+/// Pool tracer spans shipped by a queue's workers
+/// (`qid u64 | Chrome trace JSON`) until the parent polls them off.
+fn op_trace_put(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+    if payload.len() < 8 {
+        return (ST_ERR, Vec::new());
+    }
+    let qid = u64::from_le_bytes(payload[..8].try_into().unwrap());
+    let Ok(text) = std::str::from_utf8(&payload[8..]) else {
+        return (ST_ERR, Vec::new());
+    };
+    let Ok(doc) = Json::parse(text) else {
+        return (ST_ERR, Vec::new());
+    };
+    let Some(events) = doc.get("traceEvents").and_then(Json::as_arr) else {
+        return (ST_ERR, Vec::new());
+    };
+    let mut s = lock(shared);
+    let Some(q) = s.queues.get_mut(&qid) else {
+        return (ST_ERR, Vec::new());
+    };
+    q.spans.extend(events.iter().cloned());
+    (ST_OK, Vec::new())
 }
 
 fn op_blob_put(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
@@ -726,6 +771,8 @@ impl Client {
     /// different format version maps to `ST_MISS` here — version skew
     /// is a miss, never a crash and never a retried "error".
     pub fn request(&self, op: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
+        let _span = crate::util::trace::span("transport", op_name(op))
+            .arg("addr", self.cfg.addr.as_str());
         let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         let mut last_err = None;
         for attempt in 0..=self.cfg.retries {
@@ -865,6 +912,44 @@ impl Client {
             bail!("stats refused (status {status})");
         }
         Ok(Json::parse(std::str::from_utf8(&body)?)?)
+    }
+
+    /// Ship drained tracer spans for a served queue. Workers call this
+    /// right before `done` so the poll that observes the completion
+    /// also collects (or has already collected) the spans behind it.
+    pub fn trace_put(
+        &self,
+        queue: u64,
+        spans: Vec<crate::util::trace::Span>,
+    ) -> Result<()> {
+        let mut payload = queue.to_le_bytes().to_vec();
+        payload.extend_from_slice(
+            crate::util::trace::to_chrome_json(spans).as_bytes(),
+        );
+        let (status, _) = self.request(OP_TRACE_PUT, &payload)?;
+        if status != ST_OK {
+            bail!("trace put refused (status {status})");
+        }
+        Ok(())
+    }
+}
+
+/// Human-readable op name for transport spans and diagnostics.
+pub fn op_name(op: u8) -> &'static str {
+    match op {
+        OP_PING => "ping",
+        OP_GET => "get",
+        OP_PUT => "put",
+        OP_QPUSH => "qpush",
+        OP_CLAIM => "claim",
+        OP_BEAT => "beat",
+        OP_DONE => "done",
+        OP_POLL => "poll",
+        OP_BLOB_PUT => "blob-put",
+        OP_BLOB_GET => "blob-get",
+        OP_STATS => "stats",
+        OP_TRACE_PUT => "trace-put",
+        _ => "op?",
     }
 }
 
@@ -1185,6 +1270,62 @@ mod tests {
         // the polling connection does not count itself as a worker
         assert_eq!(poll.get("workers").unwrap().as_i64(), Some(0));
 
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn traced_queue_flags_claims_and_pools_spans_until_polled() {
+        let (server, _store, dir) = spawn_server("tracedq");
+        let client = Client::new(cfg(&server.addr));
+        let doc = Json::obj(vec![
+            ("lease_ms", Json::Num(400.0)),
+            ("trace", Json::Bool(true)),
+            (
+                "tasks",
+                Json::Arr(vec![Json::obj(vec![
+                    ("id", Json::Num(1.0)),
+                    ("deps", Json::Arr(vec![])),
+                ])]),
+            ),
+        ]);
+        let qid = client.qpush(&doc).unwrap();
+        let Claim::Task(c) = client.claim(qid).unwrap() else {
+            panic!("expected a task");
+        };
+        // the claim tells the worker to record spans
+        assert!(matches!(c.get("trace"), Some(Json::Bool(true))));
+
+        let spans = vec![crate::util::trace::Span {
+            name: "load".into(),
+            cat: "stage".into(),
+            ts_us: 10,
+            dur_us: 5,
+            pid: 7,
+            tid: 1,
+            args: vec![("outcome".into(), "ok".into())],
+        }];
+        client.trace_put(qid, spans).unwrap();
+        client
+            .done(qid, 1, &Json::obj(vec![("id", Json::Num(1.0))]))
+            .unwrap();
+
+        // the poll observing completion also drains the span pool…
+        let poll = client.poll(qid).unwrap();
+        let events = poll.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("pid").unwrap().as_i64(), Some(7));
+        assert_eq!(events[0].get("name").unwrap().as_str(), Some("load"));
+        // …exactly once
+        let poll = client.poll(qid).unwrap();
+        assert!(poll.get("spans").unwrap().as_arr().unwrap().is_empty());
+
+        // untraced queues advertise trace: false on every claim
+        let qid2 = client.qpush(&queue_doc()).unwrap();
+        let Claim::Task(c) = client.claim(qid2).unwrap() else {
+            panic!("expected a task");
+        };
+        assert!(matches!(c.get("trace"), Some(Json::Bool(false))));
         server.shutdown();
         std::fs::remove_dir_all(dir).unwrap();
     }

@@ -15,16 +15,45 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
 
+/// Map an `MLONMCU_LOG` value to a level. Unset means the `info`
+/// default silently; an *unrecognized* value also falls back to
+/// `info` but returns a warning so the user learns their setting was
+/// ignored (previously `MLONMCU_LOG=inof` was indistinguishable from
+/// unset).
+fn parse_level(var: Option<&str>) -> (Level, Option<String>) {
+    match var {
+        None => (Level::Info, None),
+        Some("error") => (Level::Error, None),
+        Some("warn") => (Level::Warn, None),
+        Some("info") => (Level::Info, None),
+        Some("debug") => (Level::Debug, None),
+        Some("trace") => (Level::Trace, None),
+        Some(other) => (
+            Level::Info,
+            Some(format!(
+                "unrecognized MLONMCU_LOG value {other:?} (expected \
+                 error|warn|info|debug|trace); using info"
+            )),
+        ),
+    }
+}
+
 fn init_level() -> u8 {
-    let lvl = match std::env::var("MLONMCU_LOG").as_deref() {
-        Ok("error") => Level::Error,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        Ok("trace") => Level::Trace,
-        _ => Level::Info,
-    } as u8;
-    LEVEL.store(lvl, Ordering::Relaxed);
-    lvl
+    let var = std::env::var("MLONMCU_LOG").ok();
+    let (level, warning) = parse_level(var.as_deref());
+    let lvl = level as u8;
+    // compare_exchange so exactly one thread initializes — and warns
+    // about a bad value exactly once per process
+    match LEVEL.compare_exchange(255, lvl, Ordering::Relaxed, Ordering::Relaxed)
+    {
+        Ok(_) => {
+            if let Some(msg) = warning {
+                log(Level::Warn, format_args!("{msg}"));
+            }
+            lvl
+        }
+        Err(current) => current,
+    }
 }
 
 pub fn enabled(level: Level) -> bool {
@@ -60,6 +89,8 @@ macro_rules! log_warn { ($($t:tt)*) => { $crate::util::log::log($crate::util::lo
 macro_rules! log_info { ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, format_args!($($t)*)) } }
 #[macro_export]
 macro_rules! log_debug { ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Trace, format_args!($($t)*)) } }
 
 #[cfg(test)]
 mod tests {
@@ -71,6 +102,32 @@ mod tests {
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn parse_level_distinguishes_unset_info_and_garbage() {
+        assert_eq!(parse_level(None), (Level::Info, None));
+        assert_eq!(parse_level(Some("info")), (Level::Info, None));
+        assert_eq!(parse_level(Some("error")), (Level::Error, None));
+        assert_eq!(parse_level(Some("warn")), (Level::Warn, None));
+        assert_eq!(parse_level(Some("debug")), (Level::Debug, None));
+        assert_eq!(parse_level(Some("trace")), (Level::Trace, None));
+        let (lvl, warning) = parse_level(Some("inof"));
+        assert_eq!(lvl, Level::Info, "bad values still default to info");
+        let msg = warning.expect("bad values must produce a warning");
+        assert!(msg.contains("inof"), "warning names the bad value: {msg}");
+        assert!(msg.contains("error|warn|info|debug|trace"));
+    }
+
+    #[test]
+    fn log_trace_macro_compiles_and_gates_on_level() {
+        set_level(Level::Info);
+        assert!(!enabled(Level::Trace));
+        crate::log_trace!("invisible at info: {}", 42);
+        set_level(Level::Trace);
+        assert!(enabled(Level::Trace));
+        crate::log_trace!("visible at trace");
         set_level(Level::Info); // restore default for other tests
     }
 }

@@ -8,6 +8,7 @@ pub mod log;
 pub mod fmt;
 pub mod hash;
 pub mod proc;
+pub mod trace;
 
 pub use hash::{fnv1a64, StableHasher};
 pub use rng::XorShift64;

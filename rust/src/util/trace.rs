@@ -1,0 +1,507 @@
+//! Fleet-wide span tracer: per-stage profiling with Chrome
+//! `trace_event` export.
+//!
+//! Every pipeline boundary — Load/Tune/Build execution, per-run
+//! Compile/Run tails, cache lookups, store I/O, transport requests,
+//! lease claims and heartbeats — opens a [`SpanGuard`] that records a
+//! wall-clock span into a process-global collector when tracing is
+//! enabled (`trace.file` config / `--trace`). Disabled (the default),
+//! [`span`] is one relaxed atomic load and the guard is inert, so the
+//! hot path pays nothing measurable.
+//!
+//! Spans use **epoch microseconds** (not a process-local monotonic
+//! clock) so spans recorded by `mlonmcu worker` child processes and
+//! `--connect` remote workers merge onto one session timeline: local
+//! workers write `trace-<pid>.json` span files into their queue dir,
+//! remote workers ship drained spans over the transport
+//! (`OP_TRACE_PUT`), and the parent merges everything into a single
+//! Chrome `trace_event` JSON file (load it in `chrome://tracing` or
+//! Perfetto). `mlonmcu trace summary <file>` aggregates the same file
+//! into a per-stage/per-worker table via [`aggregate`].
+//!
+//! Tracing never touches report bytes: the serial-vs-sharded-vs-remote
+//! byte-identical report guarantee holds with tracing on
+//! (`tests/dispatch_equivalence.rs`).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::Json;
+
+/// Process-global on/off switch. Off by default; the only cost of a
+/// disabled tracer is the relaxed load in [`enabled`].
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Spans recorded by this process since the last [`drain`].
+static SPANS: Mutex<Vec<Span>> = Mutex::new(Vec::new());
+
+/// Small dense thread ids for the Chrome `tid` field (thread names
+/// are not stable across runs; indices are good enough to separate
+/// scheduler lanes visually).
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn enable() {
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Take every span recorded so far out of the collector.
+pub fn drain() -> Vec<Span> {
+    std::mem::take(&mut *SPANS.lock().unwrap())
+}
+
+/// Merge externally produced spans (worker span files, spans shipped
+/// over the transport) into this process's collector. No-op while
+/// tracing is disabled, so stray late arrivals cannot leak into an
+/// untraced run.
+pub fn record_all(spans: Vec<Span>) {
+    if enabled() && !spans.is_empty() {
+        SPANS.lock().unwrap().extend(spans);
+    }
+}
+
+fn now_us() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_micros() as u64)
+        .unwrap_or(0)
+}
+
+fn tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// One completed wall-clock span ("X" complete event in Chrome
+/// `trace_event` terms).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    /// Stage or operation name ("load", "build", "run", "claim", …).
+    pub name: String,
+    /// Subsystem category ("stage", "cache", "store", "transport",
+    /// "lease", "worker", "session").
+    pub cat: String,
+    /// Start, epoch microseconds (comparable across processes).
+    pub ts_us: u64,
+    pub dur_us: u64,
+    /// Recording process — worker spans carry the worker's pid.
+    pub pid: u32,
+    pub tid: u64,
+    /// Free-form tags: run index, backend, schedule, worker, outcome.
+    pub args: Vec<(String, String)>,
+}
+
+/// RAII recorder returned by [`span`]: measures from construction to
+/// drop and records the result iff tracing was enabled at open time.
+pub struct SpanGuard {
+    cat: &'static str,
+    name: String,
+    start_us: u64,
+    args: Vec<(String, String)>,
+    active: bool,
+}
+
+/// Open a span. When tracing is disabled this is a single atomic load
+/// and the returned guard does nothing on drop.
+pub fn span(cat: &'static str, name: impl Into<String>) -> SpanGuard {
+    let active = enabled();
+    SpanGuard {
+        cat,
+        name: if active { name.into() } else { String::new() },
+        start_us: if active { now_us() } else { 0 },
+        args: Vec::new(),
+        active,
+    }
+}
+
+impl SpanGuard {
+    /// Attach a tag at open time (builder style).
+    pub fn arg(mut self, key: &str, value: impl Into<String>) -> Self {
+        self.note(key, value);
+        self
+    }
+
+    /// Attach a lazily computed tag: the closure only runs when the
+    /// span is live, so disabled-tracer call sites never pay for
+    /// `format!`/hex allocations.
+    pub fn arg_with(mut self, key: &str, value: impl FnOnce() -> String) -> Self {
+        if self.active {
+            self.args.push((key.to_string(), value()));
+        }
+        self
+    }
+
+    /// Attach a tag after the fact (outcomes known only at the end,
+    /// e.g. cache hit vs miss).
+    pub fn note(&mut self, key: &str, value: impl Into<String>) {
+        if self.active {
+            self.args.push((key.to_string(), value.into()));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let end = now_us();
+        let span = Span {
+            name: std::mem::take(&mut self.name),
+            cat: self.cat.to_string(),
+            ts_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+            pid: std::process::id(),
+            tid: tid(),
+            args: std::mem::take(&mut self.args),
+        };
+        SPANS.lock().unwrap().push(span);
+    }
+}
+
+// ------------------------------------------------------------ export --
+
+/// Render spans as a Chrome `trace_event` JSON document (complete
+/// "X" events). Spans are sorted by start time (then pid/tid/name)
+/// so the output is deterministic for a given span set.
+pub fn to_chrome_json(mut spans: Vec<Span>) -> String {
+    spans.sort_by(|a, b| {
+        (a.ts_us, a.pid, a.tid, &a.name).cmp(&(b.ts_us, b.pid, b.tid, &b.name))
+    });
+    let events: Vec<Json> = spans
+        .iter()
+        .map(|s| {
+            let args = Json::Obj(
+                s.args
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                    .collect(),
+            );
+            Json::obj(vec![
+                ("name", Json::Str(s.name.clone())),
+                ("cat", Json::Str(s.cat.clone())),
+                ("ph", Json::Str("X".into())),
+                ("ts", Json::Num(s.ts_us as f64)),
+                ("dur", Json::Num(s.dur_us as f64)),
+                ("pid", Json::Num(s.pid as f64)),
+                ("tid", Json::Num(s.tid as f64)),
+                ("args", args),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("displayTimeUnit", Json::Str("ms".into())),
+        ("traceEvents", Json::Arr(events)),
+    ])
+    .to_string()
+}
+
+/// Parse a Chrome `trace_event` document produced by
+/// [`to_chrome_json`] (used by `trace summary`, worker span-file
+/// collection and the transport's span shipping).
+pub fn parse_chrome_json(text: &str) -> Result<Vec<Span>> {
+    let doc = Json::parse(text).context("parsing trace JSON")?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("trace JSON lacks a traceEvents array"))?;
+    events.iter().map(span_from_event).collect()
+}
+
+/// Decode one `traceEvents` entry back into a [`Span`].
+pub fn span_from_event(e: &Json) -> Result<Span> {
+    let field = |k: &str| {
+        e.get(k)
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow!("trace event lacks numeric '{k}'"))
+    };
+    let name = e
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("trace event lacks a name"))?;
+    let args = match e.get("args") {
+        Some(Json::Obj(m)) => m
+            .iter()
+            .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+            .collect(),
+        _ => Vec::new(),
+    };
+    Ok(Span {
+        name: name.to_string(),
+        cat: e
+            .get("cat")
+            .and_then(Json::as_str)
+            .unwrap_or_default()
+            .to_string(),
+        ts_us: field("ts")? as u64,
+        dur_us: field("dur")? as u64,
+        pid: field("pid")? as u32,
+        tid: field("tid")? as u64,
+        args,
+    })
+}
+
+/// Write spans to `path` as Chrome trace JSON, creating parent dirs.
+pub fn write_spans(path: &Path, spans: Vec<Span>) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, to_chrome_json(spans))
+        .with_context(|| format!("writing trace to {}", path.display()))
+}
+
+/// Read a span file written by [`write_spans`].
+pub fn read_spans(path: &Path) -> Result<Vec<Span>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    parse_chrome_json(&text)
+}
+
+/// The span-file name a worker process writes into its queue dir.
+pub fn worker_file_name() -> String {
+    format!("trace-{}.json", std::process::id())
+}
+
+/// Collect every `trace-*.json` span file directly under `dir`
+/// (a session queue dir). Unreadable or partially written files are
+/// skipped — trace collection is best-effort by design.
+pub fn collect_dir(dir: &Path) -> Vec<Span> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    let mut files: Vec<_> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("trace-") && n.ends_with(".json"))
+        })
+        .collect();
+    files.sort();
+    for f in files {
+        if let Ok(spans) = read_spans(&f) {
+            out.extend(spans);
+        }
+    }
+    out
+}
+
+// --------------------------------------------------------- aggregate --
+
+/// One `(stage name, pid)` aggregate row of [`aggregate`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageAgg {
+    pub name: String,
+    pub pid: u32,
+    pub count: usize,
+    pub total_us: u64,
+    pub max_us: u64,
+}
+
+/// Aggregate spans into per-stage/per-worker rows, sorted by name
+/// then pid (`mlonmcu trace summary`).
+pub fn aggregate(spans: &[Span]) -> Vec<StageAgg> {
+    let mut by_key: std::collections::BTreeMap<(String, u32), StageAgg> =
+        std::collections::BTreeMap::new();
+    for s in spans {
+        let agg = by_key
+            .entry((s.name.clone(), s.pid))
+            .or_insert_with(|| StageAgg {
+                name: s.name.clone(),
+                pid: s.pid,
+                count: 0,
+                total_us: 0,
+                max_us: 0,
+            });
+        agg.count += 1;
+        agg.total_us += s.dur_us;
+        agg.max_us = agg.max_us.max(s.dur_us);
+    }
+    by_key.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The collector and the ENABLED switch are process-global, and
+    /// cargo runs tests on parallel threads — serialize the tests
+    /// that toggle them.
+    static GATE: Mutex<()> = Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let _g = locked();
+        disable();
+        drain();
+        {
+            let mut s = span("stage", "load");
+            s.note("backend", "tflmi");
+        }
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn spans_roundtrip_through_chrome_json() {
+        let _g = locked();
+        enable();
+        drain();
+        {
+            let _outer = span("stage", "build").arg("backend", "tvmaot");
+            let _inner = span("cache", "lookup").arg("outcome", "miss");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        disable();
+        let spans = drain();
+        assert_eq!(spans.len(), 2);
+        let text = to_chrome_json(spans.clone());
+        // well-formed JSON with the trace_event envelope
+        let doc = Json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), 2);
+        for e in events {
+            assert_eq!(e.get("ph").unwrap().as_str(), Some("X"));
+            assert!(e.get("ts").unwrap().as_i64().unwrap() > 0);
+            assert!(e.get("dur").unwrap().as_i64().unwrap() >= 0);
+            assert_eq!(
+                e.get("pid").unwrap().as_i64().unwrap(),
+                std::process::id() as i64
+            );
+        }
+        let parsed = parse_chrome_json(&text).unwrap();
+        assert_eq!(parsed.len(), 2);
+        let mut expect = spans;
+        expect.sort_by_key(|s| s.ts_us);
+        for (a, b) in parsed.iter().zip(&expect) {
+            assert_eq!((a.ts_us, a.dur_us, &a.name), (b.ts_us, b.dur_us, &b.name));
+        }
+    }
+
+    #[test]
+    fn spans_nest_and_end_after_start() {
+        let _g = locked();
+        enable();
+        drain();
+        {
+            let _outer = span("stage", "outer");
+            std::thread::sleep(std::time::Duration::from_millis(3));
+            {
+                let _inner = span("stage", "inner");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        disable();
+        let spans = drain();
+        let outer = spans.iter().find(|s| s.name == "outer").unwrap();
+        let inner = spans.iter().find(|s| s.name == "inner").unwrap();
+        // inner opened after outer, and closed before outer closed:
+        // proper nesting, no end-before-start
+        assert!(inner.ts_us >= outer.ts_us);
+        assert!(
+            inner.ts_us + inner.dur_us <= outer.ts_us + outer.dur_us,
+            "inner span must end within its enclosing span"
+        );
+        assert!(outer.dur_us >= inner.dur_us);
+    }
+
+    #[test]
+    fn record_all_respects_the_switch_and_merges() {
+        let _g = locked();
+        disable();
+        drain();
+        let foreign = vec![Span {
+            name: "load".into(),
+            cat: "stage".into(),
+            ts_us: 10,
+            dur_us: 5,
+            pid: 4242,
+            tid: 1,
+            args: vec![("worker".into(), "4242".into())],
+        }];
+        record_all(foreign.clone());
+        assert!(drain().is_empty(), "disabled tracer must drop merges");
+        enable();
+        record_all(foreign);
+        disable();
+        let spans = drain();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].pid, 4242, "worker spans keep the worker pid");
+    }
+
+    #[test]
+    fn aggregate_groups_by_stage_and_pid() {
+        let mk = |name: &str, pid: u32, dur: u64| Span {
+            name: name.into(),
+            cat: "stage".into(),
+            ts_us: 0,
+            dur_us: dur,
+            pid,
+            tid: 1,
+            args: Vec::new(),
+        };
+        let rows = aggregate(&[
+            mk("build", 1, 10),
+            mk("build", 1, 30),
+            mk("build", 2, 7),
+            mk("load", 1, 5),
+        ]);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(
+            (rows[0].name.as_str(), rows[0].pid, rows[0].count),
+            ("build", 1, 2)
+        );
+        assert_eq!(rows[0].total_us, 40);
+        assert_eq!(rows[0].max_us, 30);
+        assert_eq!((rows[1].name.as_str(), rows[1].pid), ("build", 2));
+        assert_eq!((rows[2].name.as_str(), rows[2].pid), ("load", 1));
+    }
+
+    #[test]
+    fn span_files_roundtrip_and_collect() {
+        let dir = std::env::temp_dir().join("mlonmcu_trace_collect_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |pid: u32| Span {
+            name: "build".into(),
+            cat: "stage".into(),
+            ts_us: 100,
+            dur_us: 1,
+            pid,
+            tid: 1,
+            args: Vec::new(),
+        };
+        write_spans(&dir.join("trace-11.json"), vec![mk(11)]).unwrap();
+        write_spans(&dir.join("trace-22.json"), vec![mk(22)]).unwrap();
+        std::fs::write(dir.join("trace-bad.json"), b"{half a doc").unwrap();
+        std::fs::write(dir.join("task-0.json"), b"{}").unwrap();
+        let spans = collect_dir(&dir);
+        assert_eq!(spans.len(), 2, "two good span files, bad one skipped");
+        let pids: std::collections::BTreeSet<u32> =
+            spans.iter().map(|s| s.pid).collect();
+        assert_eq!(pids.into_iter().collect::<Vec<_>>(), vec![11, 22]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -259,6 +259,66 @@ fn same_session_sharded_rerun_counts_memory_hits_like_serial() {
 }
 
 #[test]
+fn tracing_on_keeps_reports_byte_identical_and_spans_cover_the_fleet() {
+    // untraced serial baseline
+    let (env_s, dir_s) = fresh_env("traceserial", &[]);
+    let baseline = Session::new(&env_s)
+        .unwrap()
+        .run_matrix_opts(&full_matrix(), opts(0))
+        .unwrap();
+
+    // traced 4-worker run of the same matrix
+    let trace_file = std::env::temp_dir().join("mlonmcu_dispatcheq_trace.json");
+    let _ = std::fs::remove_file(&trace_file);
+    let (env_t, dir_t) = fresh_env(
+        "traced",
+        &[format!("trace.file={}", trace_file.display())],
+    );
+    let session = Session::new(&env_t).unwrap();
+    let report = session.run_matrix_opts(&full_matrix(), opts(4)).unwrap();
+
+    // tracing must not add a single byte to the report
+    assert_eq!(baseline.to_csv(), report.to_csv(), "tracing leaked into CSV");
+    assert_eq!(
+        baseline.to_markdown(),
+        report.to_markdown(),
+        "tracing leaked into the markdown report"
+    );
+
+    let t = *session.last_timing.lock().unwrap();
+    assert_eq!(t.worker_procs, 4);
+    assert!(t.trace_spans > 0, "no spans exported");
+    let spans = mlonmcu::util::trace::read_spans(&trace_file).unwrap();
+    assert_eq!(spans.len(), t.trace_spans);
+
+    // the merged timeline covers the parent and every worker process
+    let parent = std::process::id();
+    let mut pids: std::collections::BTreeSet<u32> =
+        spans.iter().map(|s| s.pid).collect();
+    assert!(pids.remove(&parent), "parent spans missing from the trace");
+    assert!(
+        pids.len() >= 4,
+        "expected spans from 4 worker pids, got {pids:?}"
+    );
+
+    // ≥1 span per executed pipeline stage, plus lease + cache activity
+    let names: std::collections::BTreeSet<&str> =
+        spans.iter().map(|s| s.name.as_str()).collect();
+    for name in ["load", "tune", "build", "compile", "run", "claim", "lookup"] {
+        assert!(names.contains(name), "no '{name}' span in {names:?}");
+    }
+    // every span is a complete interval on the shared epoch clock
+    assert!(spans.iter().all(|s| s.ts_us > 0));
+    // and the summary aggregation has per-stage/per-pid rows to print
+    let aggs = mlonmcu::util::trace::aggregate(&spans);
+    assert!(aggs.iter().any(|a| a.name == "build" && a.count > 0));
+
+    std::fs::remove_dir_all(dir_t).unwrap();
+    std::fs::remove_dir_all(dir_s).unwrap();
+    let _ = std::fs::remove_file(&trace_file);
+}
+
+#[test]
 fn workers_without_store_fall_back_to_in_process() {
     let (env, dir) = fresh_env("nostore", &["cache.persist=false".to_string()]);
     let session = Session::new(&env).unwrap();

@@ -182,9 +182,18 @@ fn remote_fleet_report_is_byte_identical_to_serial() {
     let fleet =
         Fleet(homes.iter().map(|h| spawn_remote_worker(&addr, h)).collect());
 
-    // dispatching parent in its own fresh home
-    let (env_p, dir_p) =
-        fresh_env("parent", &[format!("remote.connect={addr}")]);
+    // dispatching parent in its own fresh home — traced: worker spans
+    // must flow back over the wire without costing report equivalence
+    let trace_file =
+        std::env::temp_dir().join("mlonmcu_remotefleet_trace.json");
+    let _ = std::fs::remove_file(&trace_file);
+    let (env_p, dir_p) = fresh_env(
+        "parent",
+        &[
+            format!("remote.connect={addr}"),
+            format!("trace.file={}", trace_file.display()),
+        ],
+    );
     let parent = Session::new(&env_p).unwrap();
     let report = parent.run_matrix_opts(&full_matrix(), opts(4)).unwrap();
 
@@ -203,6 +212,24 @@ fn remote_fleet_report_is_byte_identical_to_serial() {
     assert_eq!(t.cache_hits, baseline_t.cache_hits);
     assert_eq!(t.cache_misses, baseline_t.cache_misses);
     assert_eq!(t.disk_misses, baseline_t.disk_misses);
+
+    // the remote workers shipped their spans back through the serve
+    // daemon: the exported timeline must carry stage spans from pids
+    // other than the parent's (workers are separate processes)
+    assert!(t.trace_spans > 0, "no spans exported");
+    let spans = mlonmcu::util::trace::read_spans(&trace_file).unwrap();
+    assert_eq!(spans.len(), t.trace_spans);
+    let parent_pid = std::process::id();
+    let worker_pids: std::collections::BTreeSet<u32> = spans
+        .iter()
+        .filter(|s| s.cat == "stage" && s.pid != parent_pid)
+        .map(|s| s.pid)
+        .collect();
+    assert!(
+        !worker_pids.is_empty(),
+        "no remote-worker stage spans made it back over the wire"
+    );
+    let _ = std::fs::remove_file(&trace_file);
 
     // cold dedup run through the fleet seeds the server with the
     // dedup matrix's load + both builds...
