@@ -44,7 +44,7 @@ USAGE:
   mlonmcu serve [--listen HOST:PORT]      export the env store + a task
           [--cache-dir DIR] [--cache-budget MB] [-c key=val ..]
                                           queue to remote workers
-  mlonmcu cache stats|gc|clear            manage the environment cache
+  mlonmcu cache stats|gc|clear|verify     manage the environment cache
           [--cache-dir DIR] [--cache-budget MB] [-c key=val ..]
           [--connect HOST:PORT]
   mlonmcu report [--session N]            reprint a session report
@@ -77,6 +77,14 @@ FLAGS:
                    (local worker processes and remote workers alike);
                    config key trace.file. Tracing never changes the
                    report: traced and untraced runs stay byte-identical.
+  --faults         deterministic fault-injection plan (chaos testing):
+                   comma-separated site:kind:prob[:after_n] rules plus
+                   seed=N / hang_ms=N / delay_ms=N, e.g.
+                   'seed=7,store.save:error:0.2,stage.build:exit:1:2'.
+                   Config key faults.plan, env MLONMCU_FAULTS. The plan
+                   propagates to local and remote worker fleets; every
+                   injection is counted and traced. See
+                   docs/OPERATIONS.md for the site table.
 ";
 
 /// Entry point for the binary.
@@ -193,6 +201,7 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
             ("--cache-budget", true),
             ("--connect", true),
             ("--trace", true),
+            ("--faults", true),
         ],
     )?;
     let models = p.all(&["-m", "--model"]);
@@ -236,16 +245,23 @@ fn cmd_flow(rest: &[String]) -> Result<i32> {
     for (name, text) in &artifacts {
         std::fs::write(session.dir.join(name), text)?;
     }
-    let t = *session.last_timing.lock().unwrap();
-    // display-only: the trace note joins the report AFTER the session
-    // files were written, so traced and untraced session artifacts
-    // stay byte-identical (proven by tests/dispatch_equivalence.rs)
+    let t = *session.last_timing.lock().unwrap_or_else(|e| e.into_inner());
+    // display-only: the trace and fault notes join the report AFTER the
+    // session files were written, so instrumented and plain session
+    // artifacts stay byte-identical (proven by
+    // tests/dispatch_equivalence.rs and tests/chaos_soak.rs)
     if let Some(path) = env.trace_file() {
         report.note(format!(
             "trace: {} span(s) exported to {} (open in a chrome://tracing \
              viewer, or run `mlonmcu trace summary`)",
             t.trace_spans,
             path.display()
+        ));
+    }
+    if let Some(spec) = env.fault_spec() {
+        report.note(format!(
+            "faults_injected={} (plan {spec})",
+            t.faults_injected
         ));
     }
     println!("{}", report.to_text());
@@ -309,6 +325,16 @@ fn env_with_cache_flags(p: &Parsed) -> Result<Environment> {
     if let Some(addr) = p.one("--connect") {
         overrides.push(format!("remote.connect={addr}"));
     }
+    // fault plan: MLONMCU_FAULTS is the lowest-precedence source (the
+    // --faults flag is pushed after it, and later overrides win)
+    if let Ok(spec) = std::env::var("MLONMCU_FAULTS") {
+        if !spec.is_empty() {
+            overrides.push(format!("faults.plan={spec}"));
+        }
+    }
+    if let Some(spec) = p.one("--faults") {
+        overrides.push(format!("faults.plan={spec}"));
+    }
     if let Some(file) = p.one("--trace") {
         // absolutize against the invocation dir: relative `trace.file`
         // values resolve against the environment root, which is not
@@ -352,9 +378,10 @@ fn cmd_serve(rest: &[String]) -> Result<i32> {
     let listen =
         p.one("--listen").map(String::as_str).unwrap_or("127.0.0.1:4917");
     let env = env_with_cache_flags(&p)?;
-    let store = std::sync::Arc::new(EnvStore::open(
+    let store = std::sync::Arc::new(EnvStore::open_with(
         &env.cache_dir(),
         env.cache_budget_bytes(),
+        env.store_lock_stale_ms(),
     )?);
     let server = Server::bind(std::sync::Arc::clone(&store), listen)?;
     println!(
@@ -370,7 +397,7 @@ fn cmd_serve(rest: &[String]) -> Result<i32> {
 /// `mlonmcu cache stats|gc|clear` — manage the environment-level
 /// artifact store without running anything.
 fn cmd_cache(rest: &[String]) -> Result<i32> {
-    let usage = "usage: mlonmcu cache stats|gc|clear \
+    let usage = "usage: mlonmcu cache stats|gc|clear|verify \
                  [--cache-dir DIR] [--cache-budget MB] \
                  [--connect HOST:PORT] [-c key=val ..]";
     let Some(action) = rest.first().map(String::as_str) else {
@@ -387,7 +414,11 @@ fn cmd_cache(rest: &[String]) -> Result<i32> {
         ],
     )?;
     let env = env_with_cache_flags(&p)?;
-    let store = EnvStore::open(&env.cache_dir(), env.cache_budget_bytes())?;
+    let store = EnvStore::open_with(
+        &env.cache_dir(),
+        env.cache_budget_bytes(),
+        env.store_lock_stale_ms(),
+    )?;
     match action {
         "stats" => {
             let s = store.stats();
@@ -450,6 +481,29 @@ fn cmd_cache(rest: &[String]) -> Result<i32> {
                 human_bytes(before.total_bytes),
                 store.root().display()
             );
+        }
+        "verify" => {
+            let rep = store.verify();
+            println!(
+                "verified {} entries in {}: {} ok, {} missing, {} corrupt",
+                rep.ok + rep.missing + rep.corrupt.len(),
+                store.root().display(),
+                rep.ok,
+                rep.missing,
+                rep.corrupt.len()
+            );
+            for line in &rep.corrupt {
+                println!("  corrupt: {line}");
+            }
+            if !rep.clean() {
+                println!(
+                    "store is degraded (harmless: bad entries reload as \
+                     misses and are recomputed); run `cache gc` or \
+                     `cache clear` to drop them"
+                );
+                return Ok(1);
+            }
+            println!("store is clean");
         }
         other => bail!("unknown cache action '{other}'\n{usage}"),
     }
@@ -584,6 +638,7 @@ mod tests {
         assert_eq!(main_with_args(&args("stats")).unwrap(), 0);
         assert_eq!(main_with_args(&args("gc")).unwrap(), 0);
         assert_eq!(main_with_args(&args("clear")).unwrap(), 0);
+        assert_eq!(main_with_args(&args("verify")).unwrap(), 0);
         assert!(main_with_args(&args("frobnicate")).is_err());
         assert!(main_with_args(&["cache".into()]).is_err());
         let _ = std::fs::remove_dir_all(&dir);

@@ -62,6 +62,29 @@ grace_ms = 500
 # per-stage spans from every local/remote worker; empty = tracing off
 file = ""
 
+[store]
+# stale-lock mtime fallback of the env-store lock file: a lock whose
+# owner cannot be probed is broken after this age (dead-pid locks
+# always break immediately)
+lock_stale_ms = 30000
+
+[faults]
+# deterministic fault-injection plan (`--faults` / MLONMCU_FAULTS):
+# comma-separated "site:kind:prob[:after_n]" rules plus optional
+# seed=N / hang_ms=N / delay_ms=N; empty = injection off
+plan = ""
+
+[retry]
+# per-stage execution attempts (1 = no retry) with linear backoff;
+# a task exhausting its attempts becomes a failed report row
+# annotated "[attempts=N]"
+attempts = 1
+backoff_ms = 100
+# stage deadline for the dispatch watchdog: a claimed task whose
+# lease token is unchanged past this age is reclaimed even if its
+# heartbeat is alive (a wedged-but-beating worker); 0 = off
+deadline_ms = 0
+
 [tune]
 trials = 600
 
@@ -223,15 +246,6 @@ impl Environment {
         (!s.is_empty()).then(|| PathBuf::from(s))
     }
 
-    /// Fault-injection hook for the conformance tests
-    /// (`dispatch.fault_marker`): the first worker to win creating
-    /// this marker file dies mid-Build with its lease held, simulating
-    /// a SIGKILLed worker. Unset in normal operation.
-    pub fn dispatch_fault_marker(&self) -> Option<PathBuf> {
-        let s = self.get_str("dispatch", "fault_marker", "");
-        (!s.is_empty()).then(|| PathBuf::from(s))
-    }
-
     /// Remote artifact server address (`remote.connect`, or the
     /// `--connect` CLI flag via an override). `None` when unset: the
     /// cache chain stays local-only.
@@ -270,6 +284,46 @@ impl Environment {
     pub fn trace_file(&self) -> Option<PathBuf> {
         let s = self.get_str("trace", "file", "");
         (!s.is_empty()).then(|| self.root.join(s))
+    }
+
+    /// Fault-injection plan spec (`faults.plan`, or `--faults` /
+    /// `MLONMCU_FAULTS` via an override). `None` (the default) keeps
+    /// the registry disarmed — every fault check is then one relaxed
+    /// atomic load.
+    pub fn fault_spec(&self) -> Option<String> {
+        let s = self.get_str("faults", "plan", "");
+        (!s.is_empty()).then_some(s)
+    }
+
+    /// Per-stage execution attempts (`retry.attempts`, default 1 =
+    /// today's fail-fast behavior).
+    pub fn retry_attempts(&self) -> u32 {
+        self.get_i64("retry", "attempts", 1).clamp(1, 100) as u32
+    }
+
+    /// Linear backoff between stage retries in milliseconds
+    /// (`retry.backoff_ms`; attempt N sleeps N × this).
+    pub fn retry_backoff_ms(&self) -> u64 {
+        self.get_i64("retry", "backoff_ms", 100).clamp(0, 60_000) as u64
+    }
+
+    /// Stage deadline of the dispatch watchdog in milliseconds
+    /// (`retry.deadline_ms`): a claimed task whose lease token is
+    /// unchanged past this age is reclaimed even with a live
+    /// heartbeat. 0 (the default) disables the watchdog.
+    pub fn retry_deadline_ms(&self) -> u64 {
+        self.get_i64("retry", "deadline_ms", 0).clamp(0, 3_600_000) as u64
+    }
+
+    /// Stale-lock mtime fallback of the env store in milliseconds
+    /// (`store.lock_stale_ms`).
+    pub fn store_lock_stale_ms(&self) -> u64 {
+        self.get_i64(
+            "store",
+            "lock_stale_ms",
+            crate::session::store::DEFAULT_LOCK_STALE_MS as i64,
+        )
+        .clamp(100, 3_600_000) as u64
     }
 
     /// Size budget of the environment store in bytes
@@ -379,6 +433,36 @@ mod tests {
             .with_overrides(&["trace.file=/abs/trace.json".into()])
             .unwrap();
         assert_eq!(env.trace_file(), Some(PathBuf::from("/abs/trace.json")));
+    }
+
+    #[test]
+    fn faults_retry_and_lock_staleness_defaults_and_overrides() {
+        let env = Environment {
+            root: PathBuf::from("/x"),
+            doc: TomlDoc::parse(DEFAULT_TEMPLATE).unwrap(),
+            overrides: BTreeMap::new(),
+        };
+        // template ships with injection off, fail-fast, no watchdog
+        assert_eq!(env.fault_spec(), None);
+        assert_eq!(env.retry_attempts(), 1);
+        assert_eq!(env.retry_backoff_ms(), 100);
+        assert_eq!(env.retry_deadline_ms(), 0);
+        assert_eq!(env.store_lock_stale_ms(), 30_000);
+        let env = env
+            .with_overrides(&[
+                "faults.plan=seed=3,store.save:error:0.5".into(),
+                "retry.attempts=0".into(),
+                "retry.deadline_ms=1500".into(),
+                "store.lock_stale_ms=500".into(),
+            ])
+            .unwrap();
+        assert_eq!(
+            env.fault_spec().as_deref(),
+            Some("seed=3,store.save:error:0.5")
+        );
+        assert_eq!(env.retry_attempts(), 1, "attempts clamp to >= 1");
+        assert_eq!(env.retry_deadline_ms(), 1500);
+        assert_eq!(env.store_lock_stale_ms(), 500);
     }
 
     #[test]

@@ -307,7 +307,7 @@ impl ArtifactCache {
             .arg("stage", stage.name())
             .arg_with("key", || key.hex());
         {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
             if let Some(a) = inner.map.get(&key.0).cloned() {
                 inner.stats.hits += 1;
                 touch(&mut inner.lru, key.0);
@@ -323,7 +323,7 @@ impl ArtifactCache {
         let mut store_missed = false;
         match looked_up {
             Some(StoreLookup::Hit(artifact)) => {
-                let mut inner = self.inner.lock().unwrap();
+                let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
                 inner.stats.hits += 1;
                 inner.stats.disk_hits += 1;
                 insert_mem(&mut inner, self.capacity, key, artifact.clone());
@@ -337,7 +337,7 @@ impl ArtifactCache {
         // last tier: the remote store (if attached) — network faults
         // degrade it, they never fail the lookup
         let remote = self.remote.as_ref().map(|r| r.load(key, stage));
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         if store_corrupt {
             inner.stats.verify_fails += 1;
         }
@@ -351,8 +351,12 @@ impl ArtifactCache {
                 insert_mem(&mut inner, self.capacity, key, artifact.clone());
                 drop(inner);
                 // promote into the local store: the next process on
-                // this machine must not cross the network again
-                if let Some(store) = &self.store {
+                // this machine must not cross the network again. An
+                // injected promotion fault skips the save — the
+                // artifact is still served, only locality is lost
+                let promote_fault =
+                    crate::util::faults::fire("cache.promote").is_some();
+                if let Some(store) = self.store.as_ref().filter(|_| !promote_fault) {
                     if let Err(e) = store.save(key, &artifact) {
                         crate::log_warn!(
                             "env cache: remote entry {} not saved locally: {e}",
@@ -390,7 +394,7 @@ impl ArtifactCache {
             // best-effort too: degradation is handled inside the tier
             remote.save(key, &artifact);
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         if !inner.map.contains_key(&key.0) {
             insert_mem(&mut inner, self.capacity, key, artifact);
             inner.stats.inserts += 1;
@@ -404,7 +408,7 @@ impl ArtifactCache {
     /// serial-equivalent counters (a warm same-session rerun is served
     /// from memory in a serial pass, so it must not count disk hits).
     pub fn contains_mem(&self, key: StageKey) -> bool {
-        self.enabled && self.inner.lock().unwrap().map.contains_key(&key.0)
+        self.enabled && self.inner.lock().unwrap_or_else(|e| e.into_inner()).map.contains_key(&key.0)
     }
 
     /// Count `n` extra hits for consumers that shared one deduplicated
@@ -414,11 +418,11 @@ impl ArtifactCache {
         if !self.enabled || n == 0 {
             return;
         }
-        self.inner.lock().unwrap().stats.hits += n;
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).stats.hits += n;
     }
 
     pub fn stats(&self) -> CacheStats {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         inner.stats.entries = inner.map.len();
         inner.stats
     }
@@ -476,7 +480,7 @@ impl ArtifactCache {
             return Ok(());
         };
         let stats = self.stats();
-        let inner = self.inner.lock().unwrap();
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         let mut entries: Vec<Json> = Vec::new();
         for &(k, stage) in &inner.persisted {
             if !inner.map.contains_key(&k) {

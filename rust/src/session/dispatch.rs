@@ -80,6 +80,10 @@ pub struct DispatchCounters {
     pub execs: StageExecCounts,
     /// Worker child processes that actually spawned.
     pub workers_spawned: usize,
+    /// Faults the worker processes injected (reported per done
+    /// record); the parent's own injections are counted separately
+    /// from its process-global registry.
+    pub faults: u64,
 }
 
 /// Store-lookup outcome a worker observed for its own task key.
@@ -137,6 +141,9 @@ struct DoneRecord {
     executed: bool,
     lookup: Lookup,
     secs: f64,
+    /// Faults the executing worker process injected during this task
+    /// (0 from parents — they report through their own registry).
+    faults: u64,
 }
 
 impl DoneRecord {
@@ -148,6 +155,7 @@ impl DoneRecord {
             executed,
             lookup,
             secs,
+            faults: 0,
         }
     }
 
@@ -159,6 +167,7 @@ impl DoneRecord {
             executed: false,
             lookup,
             secs,
+            faults: 0,
         }
     }
 
@@ -171,6 +180,7 @@ impl DoneRecord {
             ("executed", Json::Bool(self.executed)),
             ("lookup", Json::Str(self.lookup.name().into())),
             ("secs", Json::Num(self.secs)),
+            ("faults", Json::Num(self.faults as f64)),
         ])
     }
 
@@ -182,6 +192,12 @@ impl DoneRecord {
             executed: matches!(j.get("executed"), Some(Json::Bool(true))),
             lookup: Lookup::from_name(j.get("lookup")?.as_str()?),
             secs: j.get("secs")?.as_f64()?,
+            // absent in records from older writers: no faults
+            faults: j
+                .get("faults")
+                .and_then(Json::as_i64)
+                .unwrap_or(0)
+                .max(0) as u64,
         })
     }
 }
@@ -194,10 +210,6 @@ struct WorkerCtx<'a> {
     store: Arc<EnvStore>,
     tune: TuneParams,
     lease_ms: u64,
-    /// Fault-injection hook (`dispatch.fault_marker`): die with the
-    /// lease held on the first Build claim that wins the marker file.
-    /// Only armed in worker processes, never in the parent.
-    fault_marker: Option<PathBuf>,
     tasks: Vec<QueueTask>,
 }
 
@@ -255,7 +267,6 @@ pub fn execute_sharded(
         store,
         tune,
         lease_ms: env.dispatch_lease_ms(),
-        fault_marker: None,
         // the parent already holds the graph: no need to round-trip
         // its own queue files (workers parse them via read_queue_tasks)
         tasks: qtasks,
@@ -349,6 +360,7 @@ fn reconstruct_outcomes(
                 _ => {}
             }
         }
+        counters.faults += done.faults;
         overlay.insert(
             key.0,
             WorkerOutcome {
@@ -458,12 +470,20 @@ pub fn execute_remote(
     }
 
     let lease_ms = env.dispatch_lease_ms();
+    // the active fault plan rides the queue doc (like the trace flag)
+    // so every remote worker arms the same deterministic plan; the
+    // canonical spec keeps per-rule seeds stable across the fleet
+    let fault_spec = crate::util::faults::spec_string()
+        .or_else(|| env.fault_spec())
+        .unwrap_or_default();
     let queue_doc = Json::obj(vec![
         ("format", Json::Num(persist::FORMAT_VERSION as f64)),
         ("lease_ms", Json::Num(lease_ms as f64)),
         // traced queues tell every remote worker to record spans and
         // ship them back (drained by this parent's poll loop)
         ("trace", Json::Bool(crate::util::trace::enabled())),
+        ("faults", Json::Str(fault_spec)),
+        ("deadline_ms", Json::Num(env.retry_deadline_ms() as f64)),
         (
             "tune",
             Json::obj(vec![
@@ -589,9 +609,11 @@ pub fn execute_remote(
 /// A vanished server ends the shift cleanly (exit 0) — workers are
 /// cattle, the dispatching parent owns completion.
 pub fn worker_main_remote(addr: &str, env: &Environment) -> Result<i32> {
-    let store = Arc::new(EnvStore::open(
+    crate::util::faults::set_worker_role();
+    let store = Arc::new(EnvStore::open_with(
         &env.cache_dir(),
         env.cache_budget_bytes(),
+        env.store_lock_stale_ms(),
     )?);
     let client = Client::new(RemoteConfig {
         addr: addr.to_string(),
@@ -646,6 +668,25 @@ fn remote_step(ctx: &RemoteCtx, queue: u64) -> Result<Step> {
     let traced = matches!(doc.get("trace"), Some(Json::Bool(true)));
     if traced && ctx.ship_spans {
         crate::util::trace::enable();
+    }
+    // a fault-planned queue arms the same deterministic plan in this
+    // worker. Only workers install from the claim — the dispatching
+    // parent already armed its own registry — and re-installing an
+    // identical spec is skipped so rule counters survive across claims
+    if ctx.ship_spans {
+        if let Some(spec) = doc
+            .get("faults")
+            .and_then(Json::as_str)
+            .filter(|s| !s.is_empty())
+        {
+            if crate::util::faults::spec_string().as_deref() != Some(spec) {
+                if let Err(e) = crate::util::faults::install(spec) {
+                    crate::log_warn!(
+                        "worker: fault plan in claim rejected ({e})"
+                    );
+                }
+            }
+        }
     }
     let lease_ms = doc
         .get("lease_ms")
@@ -702,6 +743,9 @@ fn remote_step(ctx: &RemoteCtx, queue: u64) -> Result<Step> {
                     std::thread::sleep(step);
                     slept += step;
                 }
+                // an injected stall sleeps here, so the served lease
+                // ages out and the server re-opens the task
+                crate::util::faults::fire("queue.lease.heartbeat");
                 if stop.load(Ordering::Relaxed)
                     || ctx.client.beat(qid, tid as u64).is_err()
                 {
@@ -756,18 +800,26 @@ fn run_remote_task(
         .arg_with("schedule", || {
             t.spec.schedule.clone().unwrap_or_else(|| "default".into())
         });
+    let faults_before = crate::util::faults::injected_count();
     let lookup = remote_primary_lookup(ctx, t);
     if lookup == Lookup::Hit {
         span.note("outcome", "hit");
-        return DoneRecord::ok(false, Lookup::Hit, 0.0);
+        let mut done = DoneRecord::ok(false, Lookup::Hit, 0.0);
+        done.faults = task_faults(faults_before);
+        return done;
     }
     let watch = Stopwatch::start();
-    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        execute_remote_stage(ctx, t, tune)
-    }));
+    // bounded retry with backoff; panics are caught per attempt and the
+    // exhausted error carries the quarantine [attempts=N] marker
+    let result = scheduler::with_retry(
+        ctx.env.retry_attempts(),
+        ctx.env.retry_backoff_ms(),
+        t.kind.name(),
+        || execute_remote_stage(ctx, t, tune),
+    );
     let secs = watch.elapsed_s();
-    let done = match result {
-        Ok(Ok(artifact)) => {
+    let mut done = match result {
+        Ok(artifact) => {
             // server first — it is the fleet's exchange medium and the
             // parent's tail pass fetches through it
             let bytes = persist::encode(t.key, &artifact);
@@ -785,18 +837,24 @@ fn run_remote_task(
             }
             DoneRecord::ok(true, lookup, secs)
         }
-        Ok(Err(e)) => {
+        Err(e) => {
             DoneRecord::failed(t.kind.name(), e.to_string(), lookup, secs)
         }
-        Err(p) => DoneRecord::failed(
-            t.kind.name(),
-            format!("stage panicked: {}", scheduler::panic_msg(&p)),
-            lookup,
-            secs,
-        ),
     };
+    done.faults = task_faults(faults_before);
     span.note("outcome", if done.ok { "ok" } else { "failed" });
     done
+}
+
+/// Faults this process injected since `before` — but only reported
+/// from worker processes; a draining parent's injections are already
+/// counted by its own session-global delta and must not be doubled.
+fn task_faults(before: u64) -> u64 {
+    if crate::util::faults::worker_role() {
+        crate::util::faults::injected_count().saturating_sub(before)
+    } else {
+        0
+    }
 }
 
 /// Primary lookup for a claimed task: the server (shared across the
@@ -1075,6 +1133,12 @@ fn spawn_workers(env: &Environment, queue: &Path, n: usize) -> Vec<Child> {
 /// breaks stale leases (a killed worker's task is reclaimed by a live
 /// worker); once the fleet is gone it drains the remainder itself.
 fn supervise(ctx: &WorkerCtx, children: &mut Reaper) -> Result<()> {
+    // deadline watchdog: how long each lease token has held each task.
+    // A hung worker keeps its heartbeat alive — staleness never fires —
+    // so past the deadline the parent force-breaks the lease and a live
+    // worker (or the parent itself) re-runs the task.
+    let deadline_ms = ctx.env.retry_deadline_ms();
+    let mut held: HashMap<(usize, String), Stopwatch> = HashMap::new();
     loop {
         // reap exited children so their pids read as dead everywhere
         children.0.retain_mut(|c| !matches!(c.try_wait(), Ok(Some(_))));
@@ -1085,17 +1149,46 @@ fn supervise(ctx: &WorkerCtx, children: &mut Reaper) -> Result<()> {
             return drain(ctx);
         }
         for t in &ctx.tasks {
-            if !done_exists(ctx.queue, t.id)
-                && reclaim_if_stale(&lease_path(ctx.queue, t.id), ctx.lease_ms)
-            {
+            if done_exists(ctx.queue, t.id) {
+                continue;
+            }
+            let lease = lease_path(ctx.queue, t.id);
+            if reclaim_if_stale(&lease, ctx.lease_ms) {
                 crate::log_warn!(
                     "dispatch: reclaimed stale lease of task {}",
                     t.id
+                );
+            } else if deadline_ms > 0
+                && lease_past_deadline(&mut held, &lease, t.id, deadline_ms)
+                && force_reclaim(&lease)
+            {
+                crate::log_warn!(
+                    "dispatch: task {} exceeded the {}ms stage deadline; \
+                     lease revoked for retry elsewhere",
+                    t.id,
+                    deadline_ms
                 );
             }
         }
         std::thread::sleep(Duration::from_millis(20));
     }
+}
+
+/// Track how long the current token has held a task's lease; true once
+/// the same token stays past `deadline_ms`. A token change (reclaim,
+/// re-lease) restarts the clock.
+fn lease_past_deadline(
+    held: &mut HashMap<(usize, String), Stopwatch>,
+    lease: &Path,
+    id: usize,
+    deadline_ms: u64,
+) -> bool {
+    let Ok(token) = fs::read_to_string(lease) else {
+        return false; // no lease: nothing is hung
+    };
+    let watch =
+        held.entry((id, token.trim().to_string())).or_insert_with(Stopwatch::start);
+    watch.elapsed_s() * 1000.0 > deadline_ms as f64
 }
 
 /// Kills + reaps the worker fleet on drop, so no codepath (including
@@ -1124,9 +1217,18 @@ pub fn worker_main(queue_dir: &Path, env: &Environment) -> Result<i32> {
     if traced {
         crate::util::trace::enable();
     }
-    let store = Arc::new(EnvStore::open(
+    // fault plans travel the same way (`faults.plan` override / config)
+    // and `exit` rules only arm in worker processes
+    crate::util::faults::set_worker_role();
+    if let Some(spec) = env.fault_spec() {
+        if let Err(e) = crate::util::faults::install(&spec) {
+            crate::log_warn!("worker: fault plan rejected ({e})");
+        }
+    }
+    let store = Arc::new(EnvStore::open_with(
         &env.cache_dir(),
         env.cache_budget_bytes(),
+        env.store_lock_stale_ms(),
     )?);
     let ctx = WorkerCtx {
         queue: queue_dir,
@@ -1134,7 +1236,6 @@ pub fn worker_main(queue_dir: &Path, env: &Environment) -> Result<i32> {
         store,
         tune: scheduler::tune_params(env),
         lease_ms: env.dispatch_lease_ms(),
-        fault_marker: env.dispatch_fault_marker(),
         tasks: read_queue_tasks(queue_dir)?,
     };
     let result = {
@@ -1305,20 +1406,6 @@ fn drain(ctx: &WorkerCtx) -> Result<()> {
 /// out (stage panics become failed outcomes, scheduler-style); only
 /// an unpublishable outcome is an error.
 fn execute_task(ctx: &WorkerCtx, t: &QueueTask) -> Result<()> {
-    if t.kind == CachedStage::Build {
-        if let Some(marker) = &ctx.fault_marker {
-            let won = fs::OpenOptions::new()
-                .write(true)
-                .create_new(true)
-                .open(marker)
-                .is_ok();
-            if won {
-                // fault injection (tests): die mid-Build, lease held,
-                // exactly like a SIGKILLed worker
-                std::process::exit(9);
-            }
-        }
-    }
     let done = run_stage_task(ctx, t);
     write_done_once(ctx.queue, t.id, &done)
         .with_context(|| format!("publishing outcome of task {}", t.id))
@@ -1368,21 +1455,29 @@ fn run_stage_task(ctx: &WorkerCtx, t: &QueueTask) -> DoneRecord {
         });
     // primary lookup: another invocation (or worker round) may have
     // produced this artifact already
+    let faults_before = crate::util::faults::injected_count();
     let lookup = match ctx.store.load(t.key, t.kind) {
         StoreLookup::Hit(_) => {
             span.note("outcome", "hit");
-            return DoneRecord::ok(false, Lookup::Hit, 0.0);
+            let mut done = DoneRecord::ok(false, Lookup::Hit, 0.0);
+            done.faults = task_faults(faults_before);
+            return done;
         }
         StoreLookup::Miss => Lookup::Miss,
         StoreLookup::Corrupt => Lookup::Corrupt,
     };
     let watch = Stopwatch::start();
-    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        execute_stage(ctx, t)
-    }));
+    // bounded retry with backoff; panics are caught per attempt and the
+    // exhausted error carries the quarantine [attempts=N] marker
+    let result = scheduler::with_retry(
+        ctx.env.retry_attempts(),
+        ctx.env.retry_backoff_ms(),
+        t.kind.name(),
+        || execute_stage(ctx, t),
+    );
     let secs = watch.elapsed_s();
-    let done = match result {
-        Ok(Ok(artifact)) => {
+    let mut done = match result {
+        Ok(artifact) => {
             if let Err(e) = ctx.store.save(t.key, &artifact) {
                 crate::log_warn!(
                     "dispatch: artifact {} not saved: {e}",
@@ -1391,19 +1486,14 @@ fn run_stage_task(ctx: &WorkerCtx, t: &QueueTask) -> DoneRecord {
             }
             DoneRecord::ok(true, lookup, secs)
         }
-        Ok(Err(e)) => DoneRecord::failed(
+        Err(e) => DoneRecord::failed(
             t.kind.name(),
             e.to_string(),
             lookup,
             secs,
         ),
-        Err(p) => DoneRecord::failed(
-            t.kind.name(),
-            format!("stage panicked: {}", scheduler::panic_msg(&p)),
-            lookup,
-            secs,
-        ),
     };
+    done.faults = task_faults(faults_before);
     span.note("outcome", if done.ok { "ok" } else { "failed" });
     done
 }
@@ -1523,6 +1613,9 @@ impl Lease {
                     if stop.load(Ordering::Relaxed) {
                         break;
                     }
+                    // an injected stall sleeps here, so the lease ages
+                    // out and a peer (or the parent) reclaims the task
+                    crate::util::faults::fire("queue.lease.heartbeat");
                     // touch (rewrite) ONLY a lease that is still ours:
                     // recreating a reclaimed-and-re-claimed lease would
                     // hand our token back to Drop, which would then
@@ -1577,6 +1670,14 @@ fn reclaim_if_stale(path: &Path, lease_ms: u64) -> bool {
     if !lease_is_stale(path, lease_ms) {
         return false;
     }
+    force_reclaim(path)
+}
+
+/// Break a lease unconditionally (staleness already established, or
+/// the deadline watchdog evicting a hung-but-heartbeating owner). The
+/// evicted owner's heartbeat stops at its next token check, and
+/// first-writer-wins done markers absorb any late result it publishes.
+fn force_reclaim(path: &Path) -> bool {
     let grave = path.with_extension(format!(
         "stale.{}-{:x}",
         std::process::id(),

@@ -2,7 +2,7 @@
 //! targets × schedules (× tuned on/off), with component validation up
 //! front so typos fail before any work is scheduled.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::backends;
 use crate::features::Features;
@@ -120,7 +120,7 @@ impl RunMatrix {
         for model in &self.models {
             for backend in &self.backends {
                 let supports = backends::by_name(backend)
-                    .unwrap()
+                    .with_context(|| format!("unknown backend {backend}"))?
                     .supports_schedules();
                 let backend_scheds: &[Option<String>] = if supports {
                     &scheds

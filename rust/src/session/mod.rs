@@ -107,6 +107,10 @@ pub struct SessionTiming {
     /// tracing off). Display-only: tracing never adds a byte to the
     /// report files, so traced and untraced runs stay byte-identical.
     pub trace_spans: usize,
+    /// Faults injected during this call (`faults.plan`), summed across
+    /// this process and every worker's done records. Display-only,
+    /// like `trace_spans`: never a byte in the report files.
+    pub faults_injected: u64,
 }
 
 /// Per-invocation counters, normalized across the two execution
@@ -123,6 +127,8 @@ struct MatrixCounters {
     disk_misses: usize,
     verify_fails: usize,
     execs: StageExecCounts,
+    /// Faults reported by worker processes (dispatch paths only).
+    faults: u64,
 }
 
 impl Session {
@@ -146,7 +152,11 @@ impl Session {
         // as cheap as a second run_matrix call; failing to open it
         // degrades to session-local caching, never to an error
         let store = if env.cache_persist() {
-            match EnvStore::open(&env.cache_dir(), env.cache_budget_bytes()) {
+            match EnvStore::open_with(
+                &env.cache_dir(),
+                env.cache_budget_bytes(),
+                env.store_lock_stale_ms(),
+            ) {
                 Ok(s) => Some(Arc::new(s)),
                 Err(e) => {
                     crate::log_warn!(
@@ -180,7 +190,7 @@ impl Session {
     /// The golden input vector dumped by the python build path for
     /// `model`, if one exists — parsed once per session and cached.
     pub fn golden_input(&self, model: &str) -> Option<Arc<Vec<i8>>> {
-        let mut cache = self.golden_inputs.lock().unwrap();
+        let mut cache = self.golden_inputs.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(hit) = cache.get(model) {
             return hit.clone();
         }
@@ -216,7 +226,7 @@ impl Session {
     /// Lazily create the PJRT golden runtime (only when a run actually
     /// uses the validate feature — PJRT startup is not free).
     pub fn golden(&self) -> Result<Arc<GoldenRuntime>> {
-        let mut slot = self.golden.lock().unwrap();
+        let mut slot = self.golden.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(g) = slot.as_ref() {
             return Ok(g.clone());
         }
@@ -265,6 +275,15 @@ impl Session {
         if trace_file.is_some() {
             crate::util::trace::enable();
         }
+        // fault plans work the same way: installed for the whole call,
+        // forwarded to local workers via `-c` overrides and to remote
+        // workers through the served queue's claim payload
+        let fault_plan = self.env.fault_spec();
+        if let Some(spec) = &fault_plan {
+            crate::util::faults::install(spec)
+                .with_context(|| format!("installing fault plan {spec:?}"))?;
+        }
+        let faults_before = crate::util::faults::injected_count();
         let watch = Stopwatch::start();
         let stats_before = self.cache.stats();
         // --no-cache: a throwaway disabled cache keeps the session
@@ -316,6 +335,7 @@ impl Session {
                 disk_misses: d.disk_misses,
                 verify_fails: d.verify_fails,
                 execs: d.execs,
+                faults: d.faults,
             };
             (records, counters)
         } else {
@@ -330,6 +350,7 @@ impl Session {
                 disk_misses: s.disk_misses,
                 verify_fails: s.verify_fails,
                 execs,
+                faults: 0,
             };
             (records, counters)
         };
@@ -353,6 +374,10 @@ impl Session {
             remote_errors: live.remote_errors,
             stage_execs: execs,
             worker_procs,
+            // this process's own injections plus what workers reported
+            faults_injected: crate::util::faults::injected_count()
+                .saturating_sub(faults_before)
+                + c.faults,
             ..Default::default()
         };
         for r in &records {
@@ -389,7 +414,10 @@ impl Session {
             }
             crate::util::trace::disable();
         }
-        *self.last_timing.lock().unwrap() = timing;
+        if fault_plan.is_some() {
+            crate::util::faults::clear();
+        }
+        *self.last_timing.lock().unwrap_or_else(|e| e.into_inner()) = timing;
         crate::log_info!(
             "session {}: cache {} hit(s) ({} from env store) / {} miss(es), \
              {} verify failure(s); executed {} load, {} tune, {} build \

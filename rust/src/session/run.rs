@@ -126,7 +126,10 @@ impl RunRecord {
                 "status",
                 Cell::Str(match &self.status {
                     RunStatus::Ok => "ok".to_string(),
-                    RunStatus::Failed(stage, _) => format!("failed:{stage}"),
+                    RunStatus::Failed(stage, err) => match split_attempts(err) {
+                        (_, Some(n)) => format!("failed:{stage} [attempts={n}]"),
+                        _ => format!("failed:{stage}"),
+                    },
                 }),
             ),
         ]);
@@ -182,10 +185,42 @@ fn run_input(session: &Session, model: &str, n: usize) -> Vec<i8> {
 
 // ------------------------------------------------------------- stages --
 
+/// Check the fault registry at a stage entry. `hang`/`exit` rules are
+/// fully handled inside `fire`; `error` and `panic` surface here so
+/// the stage fails through its normal error/catch_unwind path.
+fn stage_fault(site: &'static str) -> Result<()> {
+    use crate::util::faults::{self, FaultKind};
+    match faults::fire(site) {
+        Some(FaultKind::Error) => anyhow::bail!("injected fault at {site}"),
+        Some(FaultKind::Panic) => panic!("injected panic at {site}"),
+        _ => Ok(()),
+    }
+}
+
+/// Quarantine marker appended to a stage error once retries are
+/// exhausted. Callers only add it when `retry.attempts > 1`, so
+/// default sessions keep byte-identical reports.
+pub fn annotate_attempts(err: &str, attempts: u32) -> String {
+    format!("{err} [attempts={attempts}]")
+}
+
+/// Split a quarantine marker off a stage error, if present.
+pub fn split_attempts(err: &str) -> (&str, Option<u32>) {
+    if let Some(rest) = err.strip_suffix(']') {
+        if let Some((msg, n)) = rest.rsplit_once(" [attempts=") {
+            if let Ok(a) = n.parse() {
+                return (msg, Some(a));
+            }
+        }
+    }
+    (err, None)
+}
+
 /// Load stage: resolve + parse + validate the model. Takes the
 /// environment (not the session) so dispatch worker processes — which
 /// have no session of their own — run the identical code path.
 pub fn stage_load(env: &crate::config::Environment, spec: &RunSpec) -> Result<Graph> {
+    stage_fault("stage.load")?;
     frontends::load_model(&spec.model, &env.model_dirs())
 }
 
@@ -195,6 +230,7 @@ pub fn stage_tune(
     graph: &Graph,
     tune: TuneParams,
 ) -> Result<TuneOutcome> {
+    stage_fault("stage.tune")?;
     let backend = backends::by_name(&spec.backend).expect("validated by matrix");
     let target = targets::by_name(&spec.target).expect("validated by matrix");
     if !target.supports_tuning() {
@@ -228,6 +264,7 @@ pub fn stage_build(
     graph: &Graph,
     tuned_schedule: Option<Schedule>,
 ) -> Result<BuildResult> {
+    stage_fault("stage.build")?;
     let backend = backends::by_name(&spec.backend).expect("validated by matrix");
     let schedule = tuned_schedule.or_else(|| {
         spec.schedule
@@ -427,6 +464,29 @@ mod tests {
         assert_eq!(row["time_s"], Cell::Missing);
         assert_eq!(row["status"].render(), "failed:compile");
         assert_eq!(row["cached_stages"].render(), "-");
+    }
+
+    #[test]
+    fn attempts_marker_round_trips_and_renders() {
+        let annotated = annotate_attempts("flash overflow", 3);
+        assert_eq!(annotated, "flash overflow [attempts=3]");
+        assert_eq!(split_attempts(&annotated), ("flash overflow", Some(3)));
+        assert_eq!(split_attempts("flash overflow"), ("flash overflow", None));
+        assert_eq!(
+            split_attempts("weird [attempts=x]"),
+            ("weird [attempts=x]", None)
+        );
+
+        let mut rec = blank_record(&RunSpec {
+            model: "vww".into(),
+            backend: "tvmaot".into(),
+            target: "esp32".into(),
+            schedule: None,
+            tuned: true,
+            features: Features::default(),
+        });
+        rec.status = RunStatus::Failed("tune", annotated);
+        assert_eq!(rec.to_row()["status"].render(), "failed:tune [attempts=3]");
     }
 
     #[test]

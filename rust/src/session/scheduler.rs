@@ -453,6 +453,47 @@ pub(crate) fn execute_planned(
     Ok((records, execs.into_inner().unwrap_or_else(|e| e.into_inner())))
 }
 
+/// Execute one stage attempt-by-attempt: up to `attempts` tries with
+/// linear backoff, each attempt catching panics so an injected (or
+/// stray) panic retries exactly like an error. At exhaustion the
+/// error carries the `[attempts=N]` quarantine marker — but only when
+/// more than one attempt was configured, so default sessions keep
+/// byte-identical reports. Shared by the in-process scheduler and the
+/// dispatch worker stage loop.
+pub(crate) fn with_retry<T>(
+    attempts: u32,
+    backoff_ms: u64,
+    stage: &'static str,
+    f: impl Fn() -> Result<T>,
+) -> Result<T> {
+    let attempts = attempts.max(1);
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 1..=attempts {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f())) {
+            Ok(Ok(v)) => return Ok(v),
+            Ok(Err(e)) => last = Some(e),
+            Err(p) => {
+                last = Some(anyhow::anyhow!("stage panicked: {}", panic_msg(&p)))
+            }
+        }
+        if attempt < attempts {
+            crate::log_debug!(
+                "stage {stage} attempt {attempt}/{attempts} failed: {}; retrying",
+                last.as_ref().map(|e| e.to_string()).unwrap_or_default()
+            );
+            std::thread::sleep(std::time::Duration::from_millis(
+                backoff_ms.saturating_mul(attempt as u64),
+            ));
+        }
+    }
+    let e = last.expect("at least one attempt ran");
+    if attempts > 1 {
+        Err(anyhow::anyhow!("{}", run::annotate_attempts(&e.to_string(), attempts)))
+    } else {
+        Err(e)
+    }
+}
+
 pub(crate) fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = p.downcast_ref::<&str>() {
         (*s).to_string()
@@ -550,26 +591,31 @@ fn run_task(
         .arg_with("schedule", || {
             spec.schedule.clone().unwrap_or_else(|| "default".into())
         });
-    let result: Result<Artifact> = match task.kind {
-        StageKind::Load => match model_bytes.get(&spec.model) {
-            Some(bytes) => {
-                crate::frontends::load_model_from_bytes(bytes, &spec.model)
+    let attempts = session.env().retry_attempts();
+    let backoff_ms = session.env().retry_backoff_ms();
+    let result: Result<Artifact> =
+        with_retry(attempts, backoff_ms, task.kind.stage_name(), || {
+            match task.kind {
+                StageKind::Load => match model_bytes.get(&spec.model) {
+                    Some(bytes) => {
+                        crate::frontends::load_model_from_bytes(bytes, &spec.model)
+                    }
+                    None => run::stage_load(session.env(), spec),
+                }
+                .map(|g| Artifact::Graph(Arc::new(g))),
+                StageKind::Tune => {
+                    run::stage_tune(spec, graph.as_ref().expect("load is a dep"), tune)
+                        .map(Artifact::Tune)
+                }
+                StageKind::Build => run::stage_build(
+                    spec,
+                    graph.as_ref().expect("load is a dep"),
+                    tuned.map(|t| t.schedule),
+                )
+                .map(|b| Artifact::Build(Arc::new(b))),
+                StageKind::Tail => unreachable!(),
             }
-            None => run::stage_load(session.env(), spec),
-        }
-        .map(|g| Artifact::Graph(Arc::new(g))),
-        StageKind::Tune => {
-            run::stage_tune(spec, &graph.expect("load is a dep"), tune)
-                .map(Artifact::Tune)
-        }
-        StageKind::Build => run::stage_build(
-            spec,
-            &graph.expect("load is a dep"),
-            tuned.map(|t| t.schedule),
-        )
-        .map(|b| Artifact::Build(Arc::new(b))),
-        StageKind::Tail => unreachable!(),
-    };
+        });
     span.note("outcome", if result.is_ok() { "ok" } else { "failed" });
     drop(span);
     let secs = watch.elapsed_s();

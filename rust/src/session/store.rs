@@ -85,7 +85,31 @@ struct Index {
 pub struct EnvStore {
     root: PathBuf,
     budget_bytes: u64,
+    /// Age after which a lock whose owner cannot be probed is broken
+    /// (`store.lock_stale_ms`; dead-pid locks always break instantly).
+    lock_stale: Duration,
     inner: Mutex<Index>,
+}
+
+/// Default mtime fallback for breaking locks with unprobeable owners.
+pub const DEFAULT_LOCK_STALE_MS: u64 = 30_000;
+
+/// Result of a full store verification pass ([`EnvStore::verify`]).
+#[derive(Debug, Default)]
+pub struct VerifyReport {
+    /// Entries that decoded cleanly (key + payload hash re-checked).
+    pub ok: usize,
+    /// Index rows whose file is gone (self-heal as misses — not
+    /// corruption).
+    pub missing: usize,
+    /// Entries that failed verification: `"<key> (<stage>): <error>"`.
+    pub corrupt: Vec<String>,
+}
+
+impl VerifyReport {
+    pub fn clean(&self) -> bool {
+        self.corrupt.is_empty()
+    }
 }
 
 impl EnvStore {
@@ -94,15 +118,35 @@ impl EnvStore {
     /// or mis-sized are dropped, and files on disk that the index lost
     /// (e.g. a crashed writer) are adopted as oldest.
     pub fn open(root: &Path, budget_bytes: u64) -> Result<EnvStore> {
+        EnvStore::open_with(root, budget_bytes, DEFAULT_LOCK_STALE_MS)
+    }
+
+    /// `open` with an explicit stale-lock mtime fallback
+    /// (`store.lock_stale_ms`) — tests use a few hundred ms so the
+    /// unprobeable-owner path runs without a 30 s sleep.
+    pub fn open_with(
+        root: &Path,
+        budget_bytes: u64,
+        lock_stale_ms: u64,
+    ) -> Result<EnvStore> {
         fs::create_dir_all(root)
             .with_context(|| format!("creating cache dir {}", root.display()))?;
-        let _lock = FileLock::acquire(root)?;
+        let lock_stale = Duration::from_millis(lock_stale_ms.max(1));
+        let _lock = FileLock::acquire(root, lock_stale)?;
         let index = read_index(root, true);
         Ok(EnvStore {
             root: root.to_path_buf(),
             budget_bytes: budget_bytes.max(1),
+            lock_stale,
             inner: Mutex::new(index),
         })
+    }
+
+    /// Poison-tolerant index lock: a thread that panicked mid-update
+    /// (injected fault, backend bug) must degrade to possibly-stale
+    /// bookkeeping, never wedge every later store call.
+    fn lock_index(&self) -> std::sync::MutexGuard<'_, Index> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     pub fn root(&self) -> &Path {
@@ -121,20 +165,30 @@ impl EnvStore {
     /// the stored key and payload hash; any failure deletes the entry
     /// and returns `Corrupt` so the caller recomputes.
     pub fn load(&self, key: StageKey, stage: CachedStage) -> StoreLookup {
+        use crate::util::faults::{self, FaultKind};
         let mut span = crate::util::trace::span("store", "load")
             .arg("stage", stage.name())
             .arg_with("key", || key.hex());
+        let fault = faults::fire("store.load");
+        if fault == Some(FaultKind::Error) {
+            // injected read error: degrade to a plain miss, recompute
+            span.note("outcome", "miss");
+            return StoreLookup::Miss;
+        }
         let path = self.entry_path(stage, key);
-        let bytes = match fs::read(&path) {
+        let mut bytes = match fs::read(&path) {
             Ok(b) => b,
             Err(_) => {
                 span.note("outcome", "miss");
                 return StoreLookup::Miss;
             }
         };
+        if fault == Some(FaultKind::BitFlip) {
+            faults::flip_byte(&mut bytes);
+        }
         match persist::decode(&bytes, key) {
             Ok(artifact) => {
-                let mut ix = self.inner.lock().unwrap();
+                let mut ix = self.lock_index();
                 ix.seq += 1;
                 let seq = ix.seq;
                 ix.entries
@@ -155,7 +209,7 @@ impl EnvStore {
                 // as a plain miss) without taking the file lock here,
                 // which would invert the save() lock order
                 let _ = fs::remove_file(&path);
-                self.inner.lock().unwrap().entries.remove(&key.0);
+                self.lock_index().entries.remove(&key.0);
                 span.note("outcome", "corrupt");
                 StoreLookup::Corrupt
             }
@@ -198,7 +252,7 @@ impl EnvStore {
     /// index, so entries written by other processes are served too.
     pub fn load_raw(&self, key: StageKey, stage: CachedStage) -> Option<Vec<u8>> {
         let bytes = fs::read(self.entry_path(stage, key)).ok()?;
-        let mut ix = self.inner.lock().unwrap();
+        let mut ix = self.lock_index();
         ix.seq += 1;
         let seq = ix.seq;
         ix.entries
@@ -214,14 +268,32 @@ impl EnvStore {
         stage: CachedStage,
         bytes: &[u8],
     ) -> Result<()> {
+        use crate::util::faults::{self, FaultKind};
         let _span = crate::util::trace::span("store", "save")
             .arg("stage", stage.name())
             .arg_with("key", || key.hex());
+        let fault = faults::fire("store.save");
+        if fault == Some(FaultKind::Error) {
+            // ENOSPC-style: callers already treat save errors as
+            // warnings — the memory tier stays authoritative
+            anyhow::bail!("injected fault at store.save for {}", key.hex());
+        }
+        let mut short;
+        let bytes = if fault == Some(FaultKind::Short) {
+            // torn write: the truncated entry fails hash verification
+            // on its next load and is deleted + recomputed
+            short = bytes.to_vec();
+            faults::truncate_half(&mut short);
+            &short[..]
+        } else {
+            bytes
+        };
         let path = self.entry_path(stage, key);
-        fs::create_dir_all(path.parent().unwrap())?;
-        let _lock = FileLock::acquire(&self.root)?;
+        let dir = path.parent().context("entry path has no parent")?;
+        fs::create_dir_all(dir)?;
+        let _lock = FileLock::acquire(&self.root, self.lock_stale)?;
         write_atomic(&path, bytes)?;
-        let mut ix = self.inner.lock().unwrap();
+        let mut ix = self.lock_index();
         // merge entries another process added since we last looked
         merge_disk_index(&self.root, &mut ix);
         ix.seq += 1;
@@ -267,8 +339,8 @@ impl EnvStore {
     /// Run the size budget now (CLI `cache gc`). Returns (entries
     /// evicted, bytes freed).
     pub fn gc(&self) -> Result<(usize, u64)> {
-        let _lock = FileLock::acquire(&self.root)?;
-        let mut ix = self.inner.lock().unwrap();
+        let _lock = FileLock::acquire(&self.root, self.lock_stale)?;
+        let mut ix = self.lock_index();
         merge_disk_index(&self.root, &mut ix);
         // no key to protect: GC may empty the store entirely
         let (evicted, freed) = self.evict_until_within_budget(&mut ix, None);
@@ -278,8 +350,8 @@ impl EnvStore {
 
     /// Delete every entry and the index (CLI `cache clear`).
     pub fn clear(&self) -> Result<()> {
-        let _lock = FileLock::acquire(&self.root)?;
-        let mut ix = self.inner.lock().unwrap();
+        let _lock = FileLock::acquire(&self.root, self.lock_stale)?;
+        let mut ix = self.lock_index();
         for stage in ALL_STAGES {
             let _ = fs::remove_dir_all(self.root.join(stage.name()));
         }
@@ -289,8 +361,38 @@ impl EnvStore {
         Ok(())
     }
 
+    /// Decode every indexed entry (key + payload hash re-checked) and
+    /// report the damage. Read-only: corrupt entries are listed, not
+    /// deleted — the next `load` of that key deletes + recomputes.
+    /// Used by `cache verify` and the chaos-soak harness, which
+    /// asserts `clean()` after every faulted session.
+    pub fn verify(&self) -> VerifyReport {
+        let entries: Vec<(u64, CachedStage)> = self
+            .lock_index()
+            .entries
+            .iter()
+            .map(|(&k, e)| (k, e.stage))
+            .collect();
+        let mut rep = VerifyReport::default();
+        for (k, stage) in entries {
+            let key = StageKey(k);
+            match fs::read(self.entry_path(stage, key)) {
+                Err(_) => rep.missing += 1,
+                Ok(bytes) => match persist::decode(&bytes, key) {
+                    Ok(_) => rep.ok += 1,
+                    Err(e) => rep.corrupt.push(format!(
+                        "{} ({}): {e}",
+                        key.hex(),
+                        stage.name()
+                    )),
+                },
+            }
+        }
+        rep
+    }
+
     pub fn stats(&self) -> StoreStats {
-        let ix = self.inner.lock().unwrap();
+        let ix = self.lock_index();
         let mut s = StoreStats {
             entries: ix.entries.len(),
             total_bytes: ix.entries.values().map(|e| e.bytes).sum(),
@@ -429,8 +531,9 @@ fn merge_disk_index(root: &Path, ix: &mut Index) {
 /// locks are broken (a) immediately when the owning pid recorded in
 /// the lock no longer runs — a lock left by a killed or crashed
 /// process used to block every other process for the full mtime
-/// timeout — or (b) after 30 s without the owner touching the file,
-/// the portable fallback. Breaking renames the lock to a
+/// timeout — or (b) after `store.lock_stale_ms` (default 30 s)
+/// without the owner touching the file, the portable fallback.
+/// Breaking renames the lock to a
 /// breaker-unique name first, so exactly one of several concurrent
 /// breakers wins (the losers' renames fail) and nobody can unlink a
 /// lock another process just created. The lock file records the
@@ -443,15 +546,15 @@ struct FileLock {
 
 /// Is the lock at `path` left over from a process that no longer
 /// exists, or simply ancient? Shared staleness rules (dead-pid =>
-/// break immediately; unparsable token => only age out) live in
-/// `util::proc::stale_owner_file`, which the dispatch queue's leases
-/// use too.
-fn lock_is_stale(path: &Path) -> bool {
-    crate::util::proc::stale_owner_file(path, Duration::from_secs(30))
+/// break immediately; unparsable token => only age out after `stale`)
+/// live in `util::proc::stale_owner_file`, which the dispatch queue's
+/// leases use too. The age fallback is `store.lock_stale_ms`.
+fn lock_is_stale(path: &Path, stale: Duration) -> bool {
+    crate::util::proc::stale_owner_file(path, stale)
 }
 
 impl FileLock {
-    fn acquire(root: &Path) -> Result<FileLock> {
+    fn acquire(root: &Path, stale: Duration) -> Result<FileLock> {
         use std::io::Write as _;
         let path = root.join(".lock");
         // pid alone is not unique enough: two sessions in one process
@@ -466,7 +569,7 @@ impl FileLock {
                     return Ok(FileLock { path, token });
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                    if lock_is_stale(&path) {
+                    if lock_is_stale(&path, stale) {
                         // rename-to-unique: only the winning breaker
                         // proceeds to delete; a fresh lock created in
                         // the meantime is never touched
@@ -666,7 +769,81 @@ mod tests {
         // our own pid: alive by definition, mtime fresh => not stale
         fs::write(dir.join(".lock"), format!("{}-1", std::process::id()))
             .unwrap();
-        assert!(!lock_is_stale(&dir.join(".lock")));
+        assert!(!lock_is_stale(&dir.join(".lock"), Duration::from_secs(30)));
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn configured_staleness_ages_out_unprobeable_locks_fast() {
+        let dir = tmp("cfgstale");
+        fs::create_dir_all(&dir).unwrap();
+        // unparsable token: the pid probe can't decide, so only the
+        // mtime fallback applies — with the default 30 s this path was
+        // untestable without sleeping
+        fs::write(dir.join(".lock"), "garbage").unwrap();
+        std::thread::sleep(Duration::from_millis(600));
+        let watch = crate::util::Stopwatch::start();
+        let store = EnvStore::open_with(&dir, u64::MAX, 500).unwrap();
+        assert!(
+            watch.elapsed_s() < 4.0,
+            "500ms-stale lock must break fast, took {:.1}s",
+            watch.elapsed_s()
+        );
+        store.save(load_key(3), &graph_artifact()).unwrap();
+        assert!(matches!(
+            store.load(load_key(3), CachedStage::Load),
+            StoreLookup::Hit(_)
+        ));
+        fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn injected_store_faults_degrade_never_corrupt() {
+        use crate::util::faults;
+        let _g = faults::test_gate();
+        let dir = tmp("faults");
+        let store = EnvStore::open(&dir, u64::MAX).unwrap();
+        let key = load_key(77);
+
+        // save error: propagated to the caller, nothing persisted
+        faults::install("store.save:error:1").unwrap();
+        assert!(store.save(key, &graph_artifact()).is_err());
+        faults::clear();
+        assert!(matches!(store.load(key, CachedStage::Load), StoreLookup::Miss));
+
+        // short write: truncated entry fails verification on load and
+        // is deleted — recompute, never a bad artifact
+        faults::install("store.save:short:1").unwrap();
+        store.save(key, &graph_artifact()).unwrap();
+        faults::clear();
+        assert!(!store.verify().clean(), "torn write must be detectable");
+        assert!(matches!(
+            store.load(key, CachedStage::Load),
+            StoreLookup::Corrupt
+        ));
+        assert!(matches!(store.load(key, CachedStage::Load), StoreLookup::Miss));
+
+        // bit-flipped read of a good entry: corrupt once, then miss
+        store.save(key, &graph_artifact()).unwrap();
+        faults::install("store.load:bitflip:1").unwrap();
+        assert!(matches!(
+            store.load(key, CachedStage::Load),
+            StoreLookup::Corrupt
+        ));
+        faults::clear();
+        assert!(matches!(store.load(key, CachedStage::Load), StoreLookup::Miss));
+
+        // read error: degrades to a plain miss, entry stays intact
+        store.save(key, &graph_artifact()).unwrap();
+        faults::install("store.load:error:1").unwrap();
+        assert!(matches!(store.load(key, CachedStage::Load), StoreLookup::Miss));
+        faults::clear();
+        assert!(matches!(
+            store.load(key, CachedStage::Load),
+            StoreLookup::Hit(_)
+        ));
+        let rep = store.verify();
+        assert!(rep.clean() && rep.ok == 1, "{rep:?}");
         fs::remove_dir_all(dir).unwrap();
     }
 

@@ -155,7 +155,7 @@ fn entry_ref(stage: CachedStage, key: StageKey) -> [u8; 9] {
 
 enum TaskState {
     Open,
-    Claimed { conn: u64, last_beat: Instant },
+    Claimed { conn: u64, last_beat: Instant, since: Instant },
     Done(Json),
 }
 
@@ -172,6 +172,13 @@ struct ServedQueue {
     /// Parent runs with tracing on: claimers enable their tracer and
     /// ship spans back (`OP_TRACE_PUT`).
     trace: bool,
+    /// Fault plan of the dispatching parent; rides every claim so the
+    /// whole fleet arms the same deterministic plan ("" = none).
+    faults: String,
+    /// Per-claim wall-clock deadline (0 = off): a claim held past this
+    /// is reopened even while its heartbeat stays alive — the served
+    /// analogue of the local parent's deadline watchdog.
+    deadline_ms: u64,
     tasks: Vec<ServedTask>,
     /// Worker spans pooled until the parent's next POLL drains them.
     spans: Vec<Json>,
@@ -390,6 +397,16 @@ fn op_qpush(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
         .clamp(50, 600_000) as u64;
     let tune = doc.get("tune").cloned().unwrap_or(Json::Null);
     let trace = matches!(doc.get("trace"), Some(Json::Bool(true)));
+    let faults = doc
+        .get("faults")
+        .and_then(Json::as_str)
+        .unwrap_or("")
+        .to_string();
+    let deadline_ms = doc
+        .get("deadline_ms")
+        .and_then(Json::as_i64)
+        .unwrap_or(0)
+        .clamp(0, 3_600_000) as u64;
     let Some(docs) = doc.get("tasks").and_then(Json::as_arr) else {
         return (ST_ERR, Vec::new());
     };
@@ -427,6 +444,8 @@ fn op_qpush(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
             lease_ms,
             tune,
             trace,
+            faults,
+            deadline_ms,
             tasks,
             spans: Vec::new(),
             last_progress: Instant::now(),
@@ -437,12 +456,20 @@ fn op_qpush(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
 
 /// Reopen claims whose heartbeat went silent for a full lease (the
 /// connected-but-stuck case; dead connections are reclaimed eagerly by
-/// `release_conn`).
+/// `release_conn`), plus — when the queue carries a deadline — claims
+/// held past it even with a live heartbeat (hung worker: the stage is
+/// wedged but its beat thread still runs).
 fn reclaim_stale(q: &mut ServedQueue) {
     let lease = Duration::from_millis(q.lease_ms);
+    let deadline = Duration::from_millis(q.deadline_ms);
     for t in &mut q.tasks {
-        if matches!(t.state, TaskState::Claimed { last_beat, .. } if last_beat.elapsed() > lease)
-        {
+        let expired = matches!(
+            t.state,
+            TaskState::Claimed { last_beat, since, .. }
+                if last_beat.elapsed() > lease
+                    || (q.deadline_ms > 0 && since.elapsed() > deadline)
+        );
+        if expired {
             t.state = TaskState::Open;
         }
     }
@@ -481,8 +508,11 @@ fn op_claim(
                 })
         });
         let Some(i) = ready else { continue };
-        q.tasks[i].state =
-            TaskState::Claimed { conn: conn_id, last_beat: Instant::now() };
+        q.tasks[i].state = TaskState::Claimed {
+            conn: conn_id,
+            last_beat: Instant::now(),
+            since: Instant::now(),
+        };
         q.last_progress = Instant::now();
         let task = q.tasks[i].doc.clone();
         let deps_done: Vec<Json> = q.tasks[i]
@@ -500,6 +530,8 @@ fn op_claim(
             ("lease_ms", Json::Num(q.lease_ms as f64)),
             ("tune", q.tune.clone()),
             ("trace", Json::Bool(q.trace)),
+            ("faults", Json::Str(q.faults.clone())),
+            ("deadline_ms", Json::Num(q.deadline_ms as f64)),
             ("task", task),
             ("deps_done", Json::Arr(deps_done)),
         ]);
@@ -530,7 +562,9 @@ fn op_beat(
     if let Some(q) = s.queues.get_mut(&qid) {
         for t in &mut q.tasks {
             if t.id == tid {
-                if let TaskState::Claimed { conn, ref mut last_beat } = t.state {
+                if let TaskState::Claimed { conn, ref mut last_beat, .. } =
+                    t.state
+                {
                     // only the claim owner refreshes: a reclaimed task
                     // belongs to someone else now
                     if conn == conn_id {
@@ -786,7 +820,35 @@ impl Client {
                     inner.stream = Some(Self::connect(&self.cfg)?);
                 }
                 let stream = inner.stream.as_mut().expect("stream just connected");
+                // injected send faults feed the real retry/degrade
+                // machinery: a dropped frame is a transport error, a
+                // torn frame actually hits the wire (the server junks
+                // the connection) before erroring out here
+                use crate::util::faults::{self, FaultKind};
+                match faults::fire("transport.send") {
+                    Some(FaultKind::Drop) => {
+                        bail!("injected fault at transport.send: frame dropped")
+                    }
+                    Some(FaultKind::Truncate) => {
+                        let mut buf = Vec::new();
+                        write_frame(&mut buf, REQ_MAGIC, op, payload)?;
+                        buf.truncate(buf.len() / 2);
+                        let _ = stream.write_all(&buf);
+                        let _ = stream.flush();
+                        bail!("injected fault at transport.send: frame torn")
+                    }
+                    _ => {} // Delay already slept inside fire
+                }
                 write_frame(stream, REQ_MAGIC, op, payload)?;
+                match faults::fire("transport.recv") {
+                    Some(FaultKind::Drop) | Some(FaultKind::Truncate) => {
+                        // abandon the in-flight response; the error path
+                        // resets the connection so no desynced frame is
+                        // ever parsed
+                        bail!("injected fault at transport.recv: response lost")
+                    }
+                    _ => {}
+                }
                 let (version, status, body) = read_frame(stream, RSP_MAGIC)?;
                 if version != persist::FORMAT_VERSION {
                     return Ok((ST_MISS, Vec::new()));

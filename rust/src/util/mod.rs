@@ -9,6 +9,7 @@ pub mod fmt;
 pub mod hash;
 pub mod proc;
 pub mod trace;
+pub mod faults;
 
 pub use hash::{fnv1a64, StableHasher};
 pub use rng::XorShift64;

@@ -16,6 +16,14 @@ impl XorShift64 {
         XorShift64 { state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1 }
     }
 
+    /// Derive an independent deterministic stream from a base seed and
+    /// a string tag — used by the fault-injection registry so every
+    /// `site:kind` rule replays its own firing sequence regardless of
+    /// how other rules consume randomness.
+    pub fn stream(seed: u64, tag: &str) -> Self {
+        XorShift64::new(seed ^ crate::util::hash::fnv1a64(tag.as_bytes()))
+    }
+
     /// Non-deterministic seed for the few places where determinism is
     /// the *wrong* property — retry-backoff jitter must differ across
     /// processes or a fleet of workers retries in lockstep. Mixes wall
@@ -115,6 +123,17 @@ mod tests {
             hi |= x > 0.7;
         }
         assert!(lo && hi, "samples should cover the interval");
+    }
+
+    #[test]
+    fn streams_are_deterministic_and_independent() {
+        let mut a = XorShift64::stream(42, "store.save:error:0.5#0");
+        let mut b = XorShift64::stream(42, "store.save:error:0.5#0");
+        let mut c = XorShift64::stream(42, "store.load:error:0.5#1");
+        let mut d = XorShift64::stream(43, "store.save:error:0.5#0");
+        assert_eq!(a.next_u64(), b.next_u64());
+        assert_ne!(a.next_u64(), c.next_u64());
+        assert_ne!(b.next_u64(), d.next_u64());
     }
 
     #[test]

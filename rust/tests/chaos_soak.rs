@@ -1,0 +1,572 @@
+//! Seeded chaos-soak harness for the fault-injection subsystem
+//! (`util/faults.rs`) and the stage retry/quarantine machinery: full
+//! matrices executed serially, with a 4-process local fleet and with a
+//! remote fleet, all under deterministic fault plans. Every session
+//! must terminate, the environment store must verify clean (or
+//! self-heal on the next session), and every report row must either be
+//! byte-identical to the fault-free baseline or be a deterministic
+//! `failed:` row — injected chaos may fail work, it may never corrupt
+//! or wedge it.
+//!
+//! The fault registry is process-global, so every test here holds a
+//! shared gate for its whole baseline + chaos window. Each test prints
+//! a `faults_injected=N` line; CI greps the soak log for a nonzero
+//! count to prove the chaos actually happened.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use mlonmcu::config::Environment;
+use mlonmcu::frontends::tmodel;
+use mlonmcu::graph::{Graph, OpNode, TensorInfo};
+use mlonmcu::graph::{OpCode, ACT_RELU, PAD_SAME};
+use mlonmcu::session::transport::Server;
+use mlonmcu::session::{EnvStore, RunMatrix, RunOptions, Session};
+use mlonmcu::tensor::DType;
+
+/// Serializes chaos tests: fault plans live in a process-global
+/// registry, and cargo runs the tests in this binary on parallel
+/// threads.
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    let g = GATE.lock().unwrap_or_else(|e| e.into_inner());
+    // a previous test that panicked mid-chaos may have left its plan
+    // armed; every test starts from a disarmed registry
+    mlonmcu::util::faults::clear();
+    g
+}
+
+/// Same tiny conv graph as tests/dispatch_equivalence.rs — small
+/// enough for every hardware target's memory gates.
+fn tiny_conv_graph() -> Graph {
+    let mut attrs = std::collections::BTreeMap::new();
+    attrs.insert("stride_h".to_string(), 1);
+    attrs.insert("stride_w".to_string(), 1);
+    attrs.insert("padding".to_string(), PAD_SAME);
+    attrs.insert("fused_act".to_string(), ACT_RELU);
+    Graph {
+        name: "tinyconv".into(),
+        tensors: vec![
+            TensorInfo {
+                name: "input".into(),
+                shape: vec![1, 4, 4, 2],
+                dtype: DType::I8,
+                scale: 0.5,
+                zero_point: 0,
+                data: None,
+            },
+            TensorInfo {
+                name: "w".into(),
+                shape: vec![3, 3, 3, 2],
+                dtype: DType::I8,
+                scale: 0.01,
+                zero_point: 0,
+                data: Some((0..54).map(|x| (x % 7) as u8).collect()),
+            },
+            TensorInfo {
+                name: "b".into(),
+                shape: vec![3],
+                dtype: DType::I32,
+                scale: 0.005,
+                zero_point: 0,
+                data: Some(vec![0; 12]),
+            },
+            TensorInfo {
+                name: "out".into(),
+                shape: vec![1, 4, 4, 3],
+                dtype: DType::I8,
+                scale: 0.25,
+                zero_point: -128,
+                data: None,
+            },
+        ],
+        ops: vec![OpNode {
+            opcode: OpCode::Conv2D,
+            name: "conv0".into(),
+            inputs: vec![0, 1, 2],
+            outputs: vec![3],
+            attrs,
+        }],
+        inputs: vec![0],
+        outputs: vec![3],
+    }
+}
+
+/// Fresh environment with the model in place, dispatch pointed at the
+/// real CLI binary and fast lease/tune knobs. `extra` appends
+/// overrides (fault plans, retry policy, remote.connect).
+fn fresh_env(tag: &str, extra: &[String]) -> (Environment, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("mlonmcu_chaossoak_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    let env = Environment::init(&dir).unwrap();
+    tmodel::write_file(
+        &tiny_conv_graph(),
+        &dir.join("artifacts/models/tinyconv.tmodel"),
+    )
+    .unwrap();
+    let mut overrides = vec![
+        format!("dispatch.worker_bin={}", env!("CARGO_BIN_EXE_mlonmcu")),
+        "tune.trials=8".to_string(),
+        "dispatch.lease_ms=400".to_string(),
+    ];
+    overrides.extend_from_slice(extra);
+    (env.with_overrides(&overrides).unwrap(), dir)
+}
+
+fn full_matrix() -> RunMatrix {
+    RunMatrix::new()
+        .models(["tinyconv"])
+        .backends(["tflmi", "tflmc", "tvmaot", "tvmaot+", "tvmrt"])
+        .targets(["etiss", "esp32"])
+        .schedules(["default-nchw", "arm-nhwc"])
+        .with_tuning_sweep()
+}
+
+fn dedup_matrix() -> RunMatrix {
+    RunMatrix::new()
+        .models(["tinyconv"])
+        .backends(["tflmi", "tvmaot"])
+        .targets(["etiss", "esp32c3", "stm32f4", "stm32f7", "esp32"])
+}
+
+/// parallel=1 keeps serial chaos runs fully deterministic: a single
+/// scheduler thread means one global order of fault-site checks.
+fn serial_opts() -> RunOptions {
+    RunOptions { parallel: 1, use_cache: true, workers: 0 }
+}
+
+fn opts(workers: usize) -> RunOptions {
+    RunOptions { parallel: 2, use_cache: true, workers }
+}
+
+/// A fault-free serial baseline in its own home.
+fn baseline(tag: &str) -> (mlonmcu::report::Report, PathBuf) {
+    let (env, dir) = fresh_env(tag, &[]);
+    let report = Session::new(&env)
+        .unwrap()
+        .run_matrix_opts(&full_matrix(), serial_opts())
+        .unwrap();
+    (report, dir)
+}
+
+/// Chaos may fail rows, never mutate them: every CSV line must be
+/// byte-identical to the baseline's, or be a `failed:` row.
+fn assert_rows_degrade_cleanly(base_csv: &str, chaos_csv: &str, label: &str) {
+    let base: Vec<&str> = base_csv.lines().collect();
+    let chaos: Vec<&str> = chaos_csv.lines().collect();
+    assert_eq!(
+        base.len(),
+        chaos.len(),
+        "{label}: chaos run changed the row count"
+    );
+    for (i, (b, c)) in base.iter().zip(&chaos).enumerate() {
+        assert!(
+            b == c || c.contains("failed:"),
+            "{label}: row {i} was mutated (not failed) by chaos:\n  \
+             baseline: {b}\n  chaos:    {c}"
+        );
+    }
+}
+
+/// Every entry the faulted session left in the home's store must still
+/// decode + hash-verify; injected corruption is only ever allowed to
+/// surface as a miss/recompute, never as a bad persisted artifact.
+fn assert_store_verifies_clean(env: &Environment, label: &str) {
+    let store = EnvStore::open(&env.cache_dir(), u64::MAX).unwrap();
+    let rep = store.verify();
+    assert!(
+        rep.clean(),
+        "{label}: store corrupt after chaos: {:?}",
+        rep.corrupt
+    );
+}
+
+#[test]
+fn serial_chaos_is_deterministic_and_rows_degrade_cleanly() {
+    let _g = gate();
+    let (base, dir_b) = baseline("serial_base");
+
+    for seed in [11u64, 12, 13] {
+        let plan = format!(
+            "seed={seed},store.save:error:0.15,store.load:error:0.2,\
+             store.load:bitflip:0.1,stage.load:error:0.1,\
+             stage.tune:error:0.3,stage.build:error:0.35"
+        );
+        let extra = [
+            format!("faults.plan={plan}"),
+            "retry.attempts=2".to_string(),
+            "retry.backoff_ms=0".to_string(),
+        ];
+        let run = |tag: &str| {
+            let (env, dir) = fresh_env(tag, &extra);
+            let session = Session::new(&env).unwrap();
+            let report =
+                session.run_matrix_opts(&full_matrix(), serial_opts()).unwrap();
+            let t = *session.last_timing.lock().unwrap();
+            assert_store_verifies_clean(&env, tag);
+            let _ = std::fs::remove_dir_all(dir);
+            (report, t)
+        };
+        let (r1, t1) = run(&format!("serial_s{seed}_a"));
+        let (r2, _) = run(&format!("serial_s{seed}_b"));
+
+        // the same plan replays the same fault sequence: two fresh
+        // homes produce byte-identical reports, quarantine markers and
+        // all
+        assert_eq!(
+            r1.to_csv(),
+            r2.to_csv(),
+            "seed {seed}: chaos run is not deterministic"
+        );
+        assert_eq!(r1.to_markdown(), r2.to_markdown(), "seed {seed}");
+        assert_rows_degrade_cleanly(
+            &base.to_csv(),
+            &r1.to_csv(),
+            &format!("seed {seed}"),
+        );
+        println!(
+            "chaos-soak[serial seed={seed}]: faults_injected={}",
+            t1.faults_injected
+        );
+    }
+    let _ = std::fs::remove_dir_all(dir_b);
+}
+
+#[test]
+fn save_errors_are_warnings_report_identical_and_counted() {
+    let _g = gate();
+    let (base, dir_b) = baseline("save_base");
+
+    // every store.save fails: persistence is best-effort, the memory
+    // tier stays authoritative, so the report must not change by a
+    // single byte — while every injected failure is counted
+    let (env, dir) = fresh_env(
+        "save_err",
+        &["faults.plan=seed=11,store.save:error:1".to_string()],
+    );
+    let session = Session::new(&env).unwrap();
+    let report =
+        session.run_matrix_opts(&full_matrix(), serial_opts()).unwrap();
+    assert_eq!(
+        base.to_csv(),
+        report.to_csv(),
+        "failed saves leaked into the report"
+    );
+    let t = *session.last_timing.lock().unwrap();
+    assert!(
+        t.faults_injected >= 3,
+        "a full matrix saves load+tune+build artifacts at least \
+         3 times (injected {})",
+        t.faults_injected
+    );
+    assert_store_verifies_clean(&env, "save_err");
+    println!(
+        "chaos-soak[save-errors]: faults_injected={}",
+        t.faults_injected
+    );
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_dir_all(dir_b);
+}
+
+#[test]
+fn exhausted_retries_quarantine_rows_with_attempt_markers() {
+    let _g = gate();
+    let (base, dir_b) = baseline("quar_base");
+
+    // every tune execution fails: with retry.attempts=3 each tuned row
+    // burns all attempts and is quarantined with the [attempts=3]
+    // marker; untuned rows stay byte-identical
+    let (env, dir) = fresh_env(
+        "quarantine",
+        &[
+            "faults.plan=seed=11,stage.tune:error:1".to_string(),
+            "retry.attempts=3".to_string(),
+            "retry.backoff_ms=0".to_string(),
+        ],
+    );
+    let report = Session::new(&env)
+        .unwrap()
+        .run_matrix_opts(&full_matrix(), serial_opts())
+        .unwrap();
+    let quarantined = report
+        .rows
+        .iter()
+        .filter(|r| {
+            let s = r["status"].render();
+            s.starts_with("failed:tune") && s.contains("[attempts=3]")
+        })
+        .count();
+    assert!(
+        quarantined > 0,
+        "no row carries the quarantine marker:\n{}",
+        report.to_csv()
+    );
+    assert_rows_degrade_cleanly(&base.to_csv(), &report.to_csv(), "quarantine");
+    let _ = std::fs::remove_dir_all(dir);
+
+    // with the default single attempt the marker must not appear —
+    // today's failure rendering is preserved bit-for-bit
+    let (env1, dir1) = fresh_env(
+        "quarantine1",
+        &["faults.plan=seed=11,stage.tune:error:1".to_string()],
+    );
+    let report1 = Session::new(&env1)
+        .unwrap()
+        .run_matrix_opts(&full_matrix(), serial_opts())
+        .unwrap();
+    assert!(
+        !report1.to_csv().contains("[attempts="),
+        "attempts=1 must not annotate failures"
+    );
+    let _ = std::fs::remove_dir_all(dir1);
+    let _ = std::fs::remove_dir_all(dir_b);
+}
+
+#[test]
+fn four_worker_chaos_with_dying_workers_terminates_clean() {
+    let _g = gate();
+    let (base, dir_b) = baseline("fleet_base");
+
+    // workers randomly exit(9) mid-stage with their leases held, on
+    // top of store read errors and stage errors with retries; the
+    // parent (exit rules are inert there) must reclaim, retry and
+    // finish the matrix with every row clean-or-failed
+    let plan = "seed=12,stage.build:exit:0.4:1,stage.tune:exit:0.2:2,\
+                store.load:error:0.2,stage.build:error:0.25";
+    let (env, dir) = fresh_env(
+        "fleet",
+        &[
+            format!("faults.plan={plan}"),
+            "retry.attempts=2".to_string(),
+            "retry.backoff_ms=0".to_string(),
+        ],
+    );
+    let session = Session::new(&env).unwrap();
+    let report = session.run_matrix_opts(&full_matrix(), opts(4)).unwrap();
+    let t = *session.last_timing.lock().unwrap();
+    assert_eq!(t.worker_procs, 4, "the doomed fleet must actually spawn");
+    assert_rows_degrade_cleanly(&base.to_csv(), &report.to_csv(), "fleet");
+    assert_store_verifies_clean(&env, "fleet");
+    println!(
+        "chaos-soak[4-worker]: faults_injected={}",
+        t.faults_injected
+    );
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_dir_all(dir_b);
+}
+
+#[test]
+fn torn_writes_self_heal_across_sessions() {
+    let _g = gate();
+    let (base, dir_b) = baseline("heal_base");
+
+    // session 1: half the artifact saves are torn mid-write. The
+    // session itself is untouched (the memory tier is authoritative) —
+    // the report stays byte-identical — but the store may now hold
+    // entries that fail hash verification
+    let (env, dir) = fresh_env(
+        "heal",
+        &["faults.plan=seed=13,store.save:short:0.5".to_string()],
+    );
+    {
+        let session = Session::new(&env).unwrap();
+        let report =
+            session.run_matrix_opts(&full_matrix(), serial_opts()).unwrap();
+        assert_eq!(
+            base.to_csv(),
+            report.to_csv(),
+            "torn writes leaked into the live session's report"
+        );
+        let t = *session.last_timing.lock().unwrap();
+        println!(
+            "chaos-soak[torn-writes]: faults_injected={}",
+            t.faults_injected
+        );
+    }
+    let torn = EnvStore::open(&env.cache_dir(), u64::MAX).unwrap();
+    let rep1 = torn.verify();
+    drop(torn);
+
+    // session 2, same home, no faults: every torn entry must read as
+    // Corrupt → deleted → recomputed → re-saved, with the report again
+    // byte-identical; afterwards the store verifies clean
+    let (env2, _) = fresh_env_reuse(&dir);
+    let session2 = Session::new(&env2).unwrap();
+    let report2 =
+        session2.run_matrix_opts(&full_matrix(), serial_opts()).unwrap();
+    assert_eq!(
+        base.to_csv(),
+        report2.to_csv(),
+        "self-healing rerun diverged from the baseline"
+    );
+    let healed = EnvStore::open(&env2.cache_dir(), u64::MAX).unwrap();
+    let rep2 = healed.verify();
+    assert!(
+        rep2.clean(),
+        "store still corrupt after the healing session: {:?} \
+         (was: {:?})",
+        rep2.corrupt,
+        rep1.corrupt
+    );
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_dir_all(dir_b);
+}
+
+/// Re-open an existing chaos home *without* wiping it and without any
+/// fault overrides — the fault-free healing session of the torn-write
+/// test.
+fn fresh_env_reuse(dir: &std::path::Path) -> (Environment, PathBuf) {
+    let env = Environment::init(dir).unwrap();
+    let overrides = vec![
+        format!("dispatch.worker_bin={}", env!("CARGO_BIN_EXE_mlonmcu")),
+        "tune.trials=8".to_string(),
+        "dispatch.lease_ms=400".to_string(),
+    ];
+    (env.with_overrides(&overrides).unwrap(), dir.to_path_buf())
+}
+
+#[test]
+fn hung_workers_are_revoked_and_report_stays_byte_identical() {
+    let _g = gate();
+    // fault-free serial baseline of the all-ok dedup matrix
+    let (env_s, dir_s) = fresh_env("hang_base", &[]);
+    let base = Session::new(&env_s)
+        .unwrap()
+        .run_matrix_opts(&dedup_matrix(), serial_opts())
+        .unwrap();
+
+    // every Build wedges for 900ms with its heartbeat alive — lease
+    // staleness never fires, only the 300ms deadline watchdog revokes
+    // the lease for retry elsewhere. First-writer-wins done markers
+    // absorb the duplicate executions: the report must not move by a
+    // byte
+    let (env, dir) = fresh_env(
+        "hang",
+        &[
+            "faults.plan=seed=11,hang_ms=900,stage.build:hang:1".to_string(),
+            "retry.deadline_ms=300".to_string(),
+        ],
+    );
+    let session = Session::new(&env).unwrap();
+    let report = session.run_matrix_opts(&dedup_matrix(), opts(2)).unwrap();
+    let t = *session.last_timing.lock().unwrap();
+    assert_eq!(t.worker_procs, 2);
+    assert_eq!(
+        base.to_csv(),
+        report.to_csv(),
+        "hang + revocation chaos changed the report"
+    );
+    assert_eq!(base.to_markdown(), report.to_markdown());
+    assert!(
+        t.faults_injected >= 2,
+        "both builds must have hung at least once (injected {})",
+        t.faults_injected
+    );
+    assert_store_verifies_clean(&env, "hang");
+    println!(
+        "chaos-soak[hang-watchdog]: faults_injected={}",
+        t.faults_injected
+    );
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_dir_all(dir_s);
+}
+
+// ----------------------------------------------------- remote fleet --
+
+/// A model-less home for one remote worker (artifacts travel through
+/// the server's blob pool). No fault config on disk: the worker can
+/// only arm its plan from the served queue's claim payload.
+fn worker_home(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mlonmcu_chaossoak_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    Environment::init(&dir).unwrap();
+    dir
+}
+
+fn spawn_remote_worker(addr: &str, home: &std::path::Path) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_mlonmcu"))
+        .arg("worker")
+        .arg("--connect")
+        .arg(addr)
+        .arg("--home")
+        .arg(home)
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning remote worker")
+}
+
+/// Kills + reaps the fleet even when an assertion panics.
+struct Fleet(Vec<Child>);
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+#[test]
+fn remote_fleet_chaos_terminates_and_rows_degrade_cleanly() {
+    let _g = gate();
+    let (base, dir_b) = baseline("remote_base");
+
+    let server_dir =
+        std::env::temp_dir().join("mlonmcu_chaossoak_remote_srv");
+    let _ = std::fs::remove_dir_all(&server_dir);
+    std::fs::create_dir_all(&server_dir).unwrap();
+    let store = Arc::new(EnvStore::open(&server_dir, 512 << 20).unwrap());
+    let server = Server::spawn(store, "127.0.0.1:0").unwrap();
+    let addr = server.addr.to_string();
+
+    // two remote workers in bare homes: their only source for the
+    // fault plan is the claim payload; stalled heartbeats age their
+    // served leases out, and the claim's deadline_ms reopens claims
+    // that outstay the stage deadline even while the heartbeat lives.
+    // Rare transport drops ride the client's retry loop — and if they
+    // exhaust it the parent degrades to in-process execution, which
+    // still must finish the matrix
+    let homes: Vec<PathBuf> =
+        (0..2).map(|i| worker_home(&format!("remote_wh{i}"))).collect();
+    let fleet =
+        Fleet(homes.iter().map(|h| spawn_remote_worker(&addr, h)).collect());
+
+    let plan = "seed=12,hang_ms=600,stage.build:error:0.3,\
+                store.load:error:0.2,queue.lease.heartbeat:stall:0.15,\
+                transport.send:drop:0.03:10";
+    let (env, dir) = fresh_env(
+        "remote_parent",
+        &[
+            format!("remote.connect={addr}"),
+            format!("faults.plan={plan}"),
+            "retry.attempts=2".to_string(),
+            "retry.backoff_ms=0".to_string(),
+            "retry.deadline_ms=2000".to_string(),
+            "remote.retries=2".to_string(),
+            "remote.backoff_ms=10".to_string(),
+        ],
+    );
+    let session = Session::new(&env).unwrap();
+    let report = session.run_matrix_opts(&full_matrix(), opts(2)).unwrap();
+    let t = *session.last_timing.lock().unwrap();
+    assert_rows_degrade_cleanly(&base.to_csv(), &report.to_csv(), "remote");
+    assert_store_verifies_clean(&env, "remote");
+    println!(
+        "chaos-soak[remote-fleet]: faults_injected={}",
+        t.faults_injected
+    );
+
+    drop(fleet);
+    server.shutdown();
+    for d in homes {
+        let _ = std::fs::remove_dir_all(d);
+    }
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_dir_all(dir_b);
+    let _ = std::fs::remove_dir_all(server_dir);
+}

@@ -3,6 +3,9 @@
 //! local-only execution (counted, never fatal), corrupt wire entries
 //! — truncated frames, wrong `FORMAT_VERSION` — must decode as misses
 //! and recompute, and the client's retry/backoff loop must be bounded.
+//! A seeded frame fuzzer closes the loop from both sides: mutated
+//! request frames never crash the server, mutated response frames
+//! never panic the client.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -260,6 +263,205 @@ fn retry_backoff_is_bounded_and_fails_fast() {
         "4 attempts with 10ms base backoff must not spin for {:?}",
         start.elapsed()
     );
+}
+
+// ------------------------------------------------- seeded frame fuzzer --
+
+/// Hand-built wire frame: `magic | version u32 LE | tag u8 | len u32 LE
+/// | payload` — the layout `transport::write_frame` produces, built
+/// here by hand because the fuzzer needs to forge *invalid* frames too.
+fn frame(magic: &[u8; 4], version: u32, tag: u8, payload: &[u8]) -> Vec<u8> {
+    let mut v = Vec::with_capacity(13 + payload.len());
+    v.extend_from_slice(magic);
+    v.extend_from_slice(&version.to_le_bytes());
+    v.push(tag);
+    v.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    v.extend_from_slice(payload);
+    v
+}
+
+/// Apply one seeded mutation in place: a bit flip anywhere (magic,
+/// version, tag, length or payload), a truncation at a random point, a
+/// length field that promises far more bytes than follow, or trailing
+/// garbage.
+fn mutate(rng: &mut mlonmcu::util::XorShift64, bytes: &mut Vec<u8>) {
+    match rng.below(4) {
+        0 => {
+            let i = rng.below(bytes.len() as u64) as usize;
+            bytes[i] ^= 1u8 << (rng.below(8) as u8);
+        }
+        1 => {
+            let keep = rng.below(bytes.len() as u64 + 1) as usize;
+            bytes.truncate(keep);
+        }
+        2 => {
+            let lie = (rng.next_u64() % u32::MAX as u64) as u32;
+            bytes[9..13].copy_from_slice(&lie.to_le_bytes());
+        }
+        _ => {
+            for _ in 0..rng.below(32) + 1 {
+                let b = rng.next_u64() as u8;
+                bytes.push(b);
+            }
+        }
+    }
+}
+
+#[test]
+fn fuzzed_request_frames_never_crash_the_server() {
+    use mlonmcu::session::persist::FORMAT_VERSION;
+    use mlonmcu::session::transport;
+    use mlonmcu::util::XorShift64;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    let (server, dir) = spawn_server("fuzz_srv");
+    let addr = server.addr.to_string();
+
+    // seeded mutations of otherwise-plausible request frames — random
+    // ops (including undefined ones), random payloads, then one of the
+    // `mutate` corruptions. The server may answer ERR/MISS or drop the
+    // connection; it must never die.
+    for seed in [101u64, 202, 303] {
+        let mut rng = XorShift64::stream(seed, "req-fuzz");
+        for _ in 0..48 {
+            let op = rng.below(14) as u8; // ops 12/13 are undefined
+            let payload: Vec<u8> =
+                (0..rng.below(64)).map(|_| rng.next_u64() as u8).collect();
+            let mut bytes =
+                frame(transport::REQ_MAGIC, FORMAT_VERSION, op, &payload);
+            mutate(&mut rng, &mut bytes);
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_millis(250))).unwrap();
+            let _ = s.write_all(&bytes);
+            let _ = s.flush();
+            let mut sink = [0u8; 256];
+            let _ = s.read(&mut sink); // answer, error or close: all fine
+        }
+    }
+
+    // a length prefix near u32::MAX must be rejected by the MAX_FRAME
+    // bound up front — connection dropped promptly, no 4 GiB buffer
+    let mut lying =
+        frame(transport::REQ_MAGIC, FORMAT_VERSION, transport::OP_GET, &[]);
+    lying[9..13].copy_from_slice(&u32::MAX.to_le_bytes());
+    let start = std::time::Instant::now();
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+    s.write_all(&lying).unwrap();
+    let mut sink = [0u8; 64];
+    let _ = s.read(&mut sink);
+    assert!(
+        start.elapsed() < Duration::from_secs(5),
+        "huge length prefix stalled the connection for {:?}",
+        start.elapsed()
+    );
+
+    // after the whole barrage the server still answers a clean ping
+    let client = Client::new(RemoteConfig {
+        addr,
+        timeout_ms: 1000,
+        retries: 1,
+        backoff_ms: 10,
+        grace_ms: 100,
+    });
+    assert_eq!(
+        client.ping().unwrap(),
+        FORMAT_VERSION,
+        "server died or desynced under the fuzzed frames"
+    );
+
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn fuzzed_responses_never_panic_the_client() {
+    use mlonmcu::session::persist::FORMAT_VERSION;
+    use mlonmcu::session::transport;
+    use mlonmcu::util::XorShift64;
+    use std::io::{Read, Write};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Duration;
+
+    // a hostile "server": drains each request, answers with a seeded
+    // mutation of a response frame — skewed versions, bogus statuses,
+    // torn bytes, trailing junk
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_srv = stop.clone();
+    let srv = std::thread::spawn(move || {
+        let mut rng = XorShift64::stream(404, "rsp-fuzz");
+        for conn in listener.incoming() {
+            if stop_srv.load(Ordering::Relaxed) {
+                break;
+            }
+            let Ok(mut s) = conn else { continue };
+            let _ = s.set_read_timeout(Some(Duration::from_millis(250)));
+            let mut head = [0u8; 13];
+            if s.read_exact(&mut head).is_err() {
+                continue;
+            }
+            let len =
+                u32::from_le_bytes(head[9..13].try_into().unwrap()) as usize;
+            if len <= 4096 {
+                let mut p = vec![0u8; len];
+                let _ = s.read_exact(&mut p);
+            }
+            let version = if rng.below(3) == 0 {
+                FORMAT_VERSION + 1 + rng.below(9) as u32
+            } else {
+                FORMAT_VERSION
+            };
+            let status = rng.below(6) as u8; // statuses 4/5 are undefined
+            let body: Vec<u8> =
+                (0..rng.below(48)).map(|_| rng.next_u64() as u8).collect();
+            let mut bytes =
+                frame(transport::RSP_MAGIC, version, status, &body);
+            if rng.below(4) != 0 {
+                mutate(&mut rng, &mut bytes);
+            }
+            let _ = s.write_all(&bytes);
+        }
+    });
+
+    let client = Client::new(RemoteConfig {
+        addr: addr.clone(),
+        timeout_ms: 300,
+        retries: 0,
+        backoff_ms: 5,
+        grace_ms: 50,
+    });
+    let mut oks = 0usize;
+    let mut errs = 0usize;
+    for i in 0..96u64 {
+        // a GET-shaped request; every outcome must be a clean Ok/Err —
+        // a skewed version maps to a miss, torn frames to errors, and
+        // nothing may panic or over-allocate
+        let mut payload = vec![2u8]; // build stage tag
+        payload.extend_from_slice(&i.to_le_bytes());
+        match client.request(transport::OP_GET, &payload) {
+            Ok(_) => oks += 1,
+            Err(_) => errs += 1,
+        }
+    }
+    // the typed wrappers survive the same hostility
+    for fp in 0..8u64 {
+        let _ = client.blob_get(fp);
+        let _ = client.ping();
+    }
+    assert_eq!(oks + errs, 96);
+    assert!(
+        oks > 0 && errs > 0,
+        "fuzz plan should produce both clean and torn rounds \
+         (got {oks} ok / {errs} err)"
+    );
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = std::net::TcpStream::connect(&addr); // unblock incoming()
+    srv.join().unwrap();
 }
 
 fn bin_files(dir: &std::path::Path) -> Vec<PathBuf> {
