@@ -22,7 +22,7 @@ use crate::data::Json;
 use crate::postprocess;
 use crate::report::{row, Cell, Report};
 use crate::session::persist;
-use crate::session::transport::{Client, RemoteConfig, Server};
+use crate::session::transport::{Client, RemoteConfig, ServeConfig, Server};
 use crate::session::{EnvStore, RunMatrix, RunOptions, Session};
 use crate::util::fmt::human_bytes;
 
@@ -383,12 +383,24 @@ fn cmd_serve(rest: &[String]) -> Result<i32> {
         env.cache_budget_bytes(),
         env.store_lock_stale_ms(),
     )?);
-    let server = Server::bind(std::sync::Arc::clone(&store), listen)?;
+    let cfg = ServeConfig::from_env(&env);
+    let (mem_bytes, max_conns, idle_ms) = (cfg.mem_bytes, cfg.max_conns, cfg.idle_ms);
+    let server = Server::bind_with(std::sync::Arc::clone(&store), listen, cfg)?;
     println!(
         "serving artifact store {} (format v{}) on {}",
         store.root().display(),
         persist::FORMAT_VERSION,
         server.local_addr()
+    );
+    println!(
+        "  mem cache {} / max {} conn(s) / idle timeout {}",
+        human_bytes(mem_bytes),
+        max_conns,
+        if idle_ms == 0 {
+            "off".to_string()
+        } else {
+            format!("{idle_ms} ms")
+        }
     );
     server.run()?;
     Ok(0)
@@ -455,6 +467,32 @@ fn cmd_cache(rest: &[String]) -> Result<i32> {
                             n(&r, "blobs"),
                             n(&r, "queues"),
                             n(&r, "workers")
+                        );
+                        println!(
+                            "  serve:   {} op(s) ({}/s), {} served, \
+                             {} store read(s)",
+                            n(&r, "ops"),
+                            n(&r, "ops_per_sec"),
+                            human_bytes(n(&r, "bytes_served").max(0) as u64),
+                            n(&r, "store_reads")
+                        );
+                        println!(
+                            "  hot mem: {} hit(s) / {} miss(es); \
+                             {} entr(ies), {} of {} budget, {} evicted",
+                            n(&r, "mem_hits"),
+                            n(&r, "mem_misses"),
+                            n(&r, "mem_entries"),
+                            human_bytes(n(&r, "mem_bytes").max(0) as u64),
+                            human_bytes(n(&r, "mem_budget").max(0) as u64),
+                            n(&r, "mem_evictions")
+                        );
+                        println!(
+                            "  tasks:   {} open / {} claimed / {} done; \
+                             {} queue(s) retired",
+                            n(&r, "tasks_open"),
+                            n(&r, "tasks_claimed"),
+                            n(&r, "tasks_done"),
+                            n(&r, "queues_retired")
                         );
                     }
                     Err(e) => {

@@ -57,6 +57,14 @@ backoff_ms = 100
 # itself instead of waiting for remote workers
 grace_ms = 500
 
+[serve]
+# serve-daemon resource knobs (`mlonmcu serve`): byte budget of the
+# in-memory hot-entry cache fronting the store (0 = off), cap on
+# simultaneous connections, and idle-connection timeout (0 = never)
+mem_mb = 64
+max_conns = 256
+idle_ms = 300000
+
 [trace]
 # span-tracer output (`--trace FILE`): Chrome trace_event JSON with
 # per-stage spans from every local/remote worker; empty = tracing off
@@ -277,6 +285,24 @@ impl Environment {
         self.get_i64("remote", "grace_ms", 500).clamp(20, 60_000) as u64
     }
 
+    /// Byte budget of the serve daemon's in-memory hot-entry cache
+    /// (`serve.mem_mb`; 0 disables the cache entirely).
+    pub fn serve_mem_bytes(&self) -> u64 {
+        (self.get_i64("serve", "mem_mb", 64).clamp(0, 16_384) as u64) << 20
+    }
+
+    /// Cap on simultaneous serve-daemon connections
+    /// (`serve.max_conns`); accepts beyond it are dropped.
+    pub fn serve_max_conns(&self) -> usize {
+        self.get_i64("serve", "max_conns", 256).clamp(1, 65_536) as usize
+    }
+
+    /// Idle-connection timeout of the serve daemon in milliseconds
+    /// (`serve.idle_ms`; 0 = connections never time out).
+    pub fn serve_idle_ms(&self) -> u64 {
+        self.get_i64("serve", "idle_ms", 300_000).clamp(0, 86_400_000) as u64
+    }
+
     /// Span-tracer output file (`trace.file`, or the `--trace` CLI
     /// flag via an override). `None` (the default) keeps the tracer
     /// disabled. Relative paths are rooted at the environment;
@@ -414,6 +440,29 @@ mod tests {
             .unwrap();
         assert_eq!(env.remote_connect().as_deref(), Some("127.0.0.1:4917"));
         assert_eq!(env.remote_retries(), 10, "retries clamp to a sane bound");
+    }
+
+    #[test]
+    fn serve_section_defaults_and_overrides() {
+        let env = Environment {
+            root: PathBuf::from("/x"),
+            doc: TomlDoc::parse(DEFAULT_TEMPLATE).unwrap(),
+            overrides: BTreeMap::new(),
+        };
+        assert_eq!(env.serve_mem_bytes(), 64 << 20);
+        assert_eq!(env.serve_max_conns(), 256);
+        assert_eq!(env.serve_idle_ms(), 300_000);
+        let env = env
+            .with_overrides(&[
+                "serve.mem_mb=0".into(),
+                "serve.max_conns=0".into(),
+                "serve.idle_ms=-5".into(),
+            ])
+            .unwrap();
+        // mem_mb=0 is a legal "cache off"; the others clamp to sane floors
+        assert_eq!(env.serve_mem_bytes(), 0);
+        assert_eq!(env.serve_max_conns(), 1);
+        assert_eq!(env.serve_idle_ms(), 0);
     }
 
     #[test]

@@ -59,7 +59,7 @@ impl StageKey {
 /// Cacheable stages of the run pipeline. Compile/Run/Postprocess stay
 /// per-run: their identity includes the full spec, so two distinct
 /// runs can never share them.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CachedStage {
     Load,
     Tune,
@@ -567,6 +567,122 @@ fn touch(lru: &mut VecDeque<u64>, key: u64) {
     lru.push_back(key);
 }
 
+// ============================================================ hot cache --
+
+/// Counters of a [`HotCache`], all monotonic except `entries`/`bytes`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HotCacheStats {
+    pub entries: usize,
+    pub bytes: u64,
+    pub budget: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+struct HotEntry {
+    bytes: Arc<Vec<u8>>,
+    /// Stamp of this entry's newest position in `order`; older deque
+    /// positions for the same key are skipped at eviction time.
+    stamp: u64,
+}
+
+/// Bounded in-memory cache of raw artifact entries: a bytes budget,
+/// LRU eviction and hit/miss counters, keyed by `(stage, key)`. The
+/// serve daemon mounts one in front of its `EnvStore` so repeated
+/// `OP_GET`s of hot artifacts are answered from memory without
+/// touching disk — entries are content-addressed, so a cached value
+/// can go stale only in the sense of "also evicted from disk", never
+/// in the sense of "wrong bytes".
+///
+/// Recency is tracked with a stamp deque instead of a re-ordered list:
+/// every touch pushes `(key, stamp)` and bumps the entry's stamp;
+/// eviction pops from the front and skips records whose stamp no
+/// longer matches (a later touch superseded them). Touches are O(1),
+/// eviction is amortized O(1).
+pub struct HotCache {
+    budget: u64,
+    used: u64,
+    map: HashMap<(CachedStage, StageKey), HotEntry>,
+    order: VecDeque<((CachedStage, StageKey), u64)>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl HotCache {
+    pub fn new(budget_bytes: u64) -> HotCache {
+        HotCache {
+            budget: budget_bytes,
+            used: 0,
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up an entry, counting a hit or miss and refreshing recency.
+    pub fn get(&mut self, stage: CachedStage, key: StageKey) -> Option<Arc<Vec<u8>>> {
+        let id = (stage, key);
+        match self.map.get_mut(&id) {
+            Some(e) => {
+                self.tick += 1;
+                e.stamp = self.tick;
+                self.order.push_back((id, self.tick));
+                self.hits += 1;
+                Some(Arc::clone(&e.bytes))
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an entry, then evict least-recently-used
+    /// entries until the budget holds. Entries larger than the whole
+    /// budget are not cached at all.
+    pub fn put(&mut self, stage: CachedStage, key: StageKey, bytes: Arc<Vec<u8>>) {
+        let len = bytes.len() as u64;
+        if len > self.budget {
+            return;
+        }
+        let id = (stage, key);
+        self.tick += 1;
+        if let Some(old) = self.map.insert(id, HotEntry { bytes, stamp: self.tick })
+        {
+            self.used -= old.bytes.len() as u64;
+        }
+        self.used += len;
+        self.order.push_back((id, self.tick));
+        while self.used > self.budget {
+            let Some((victim, stamp)) = self.order.pop_front() else {
+                break;
+            };
+            if self.map.get(&victim).is_some_and(|e| e.stamp == stamp) {
+                let e = self.map.remove(&victim).expect("checked just above");
+                self.used -= e.bytes.len() as u64;
+                self.evictions += 1;
+            }
+        }
+    }
+
+    pub fn stats(&self) -> HotCacheStats {
+        HotCacheStats {
+            entries: self.map.len(),
+            bytes: self.used,
+            budget: self.budget,
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -816,5 +932,51 @@ mod tests {
         assert!(b.lookup(key, CachedStage::Load).is_some());
         assert_eq!(b.stats().disk_hits, 1);
         std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn hot_cache_counts_hits_and_misses() {
+        let mut hot = HotCache::new(1024);
+        let (k1, k2) = (StageKey(1), StageKey(2));
+        assert!(hot.get(CachedStage::Load, k1).is_none());
+        hot.put(CachedStage::Load, k1, Arc::new(vec![7u8; 100]));
+        let got = hot.get(CachedStage::Load, k1).unwrap();
+        assert_eq!(got.len(), 100);
+        // same key under a different stage is a distinct entry
+        assert!(hot.get(CachedStage::Build, k1).is_none());
+        assert!(hot.get(CachedStage::Load, k2).is_none());
+        let s = hot.stats();
+        assert_eq!((s.hits, s.misses), (1, 3));
+        assert_eq!((s.entries, s.bytes), (1, 100));
+    }
+
+    #[test]
+    fn hot_cache_evicts_least_recently_used_within_budget() {
+        let mut hot = HotCache::new(250);
+        for i in 0..3u64 {
+            hot.put(CachedStage::Load, StageKey(i), Arc::new(vec![0u8; 100]));
+        }
+        // 300 bytes > 250 budget: key 0 (oldest) is gone, 1 and 2 remain
+        let s = hot.stats();
+        assert_eq!((s.entries, s.bytes, s.evictions), (2, 200, 1));
+        assert!(hot.get(CachedStage::Load, StageKey(0)).is_none());
+        assert!(hot.get(CachedStage::Load, StageKey(1)).is_some());
+        // touch 1 so 2 becomes the LRU victim of the next insert
+        hot.put(CachedStage::Load, StageKey(3), Arc::new(vec![0u8; 100]));
+        assert!(hot.get(CachedStage::Load, StageKey(2)).is_none());
+        assert!(hot.get(CachedStage::Load, StageKey(1)).is_some());
+        assert!(hot.get(CachedStage::Load, StageKey(3)).is_some());
+    }
+
+    #[test]
+    fn hot_cache_refuses_oversized_and_replaces_in_place() {
+        let mut hot = HotCache::new(100);
+        hot.put(CachedStage::Tune, StageKey(9), Arc::new(vec![0u8; 101]));
+        assert_eq!(hot.stats().entries, 0, "over-budget entry not cached");
+        hot.put(CachedStage::Tune, StageKey(9), Arc::new(vec![0u8; 40]));
+        hot.put(CachedStage::Tune, StageKey(9), Arc::new(vec![0u8; 60]));
+        let s = hot.stats();
+        assert_eq!((s.entries, s.bytes, s.evictions), (1, 60, 0));
+        assert_eq!(hot.get(CachedStage::Tune, StageKey(9)).unwrap().len(), 60);
     }
 }

@@ -656,11 +656,17 @@ pub fn worker_main_remote(addr: &str, env: &Environment) -> Result<i32> {
 /// decides whether that ends a worker's shift or degrades the parent
 /// to in-process execution.
 fn remote_step(ctx: &RemoteCtx, queue: u64) -> Result<Step> {
-    let doc = match ctx.client.claim(queue)? {
+    // batched claim: the artifacts this task will fetch (its own
+    // entry, its deps') ride the claim response — each one present in
+    // the map saves a GET round trip during execution
+    let (claim, entries) = ctx.client.claim_deps(queue)?;
+    let doc = match claim {
         Claim::Task(doc) => doc,
         Claim::Empty => return Ok(Step::Idle),
         Claim::Refused => return Ok(Step::Refused),
     };
+    let prefetched: HashMap<(CachedStage, StageKey), Vec<u8>> =
+        entries.into_iter().collect();
     let qid =
         doc.get("queue").and_then(Json::as_i64).unwrap_or(0).max(0) as u64;
     // a traced queue turns this worker's tracer on for the rest of the
@@ -753,7 +759,7 @@ fn remote_step(ctx: &RemoteCtx, queue: u64) -> Result<Step> {
                 }
             }
         });
-        let done = run_remote_task(ctx, &task, &deps_done, tune);
+        let done = run_remote_task(ctx, &task, &deps_done, tune, &prefetched);
         stop.store(true, Ordering::Relaxed);
         done
         // scope exit joins the heartbeat (wakes within one 20ms slice)
@@ -779,6 +785,7 @@ fn run_remote_task(
     t: &QueueTask,
     deps_done: &HashMap<usize, DoneRecord>,
     tune: TuneParams,
+    prefetched: &HashMap<(CachedStage, StageKey), Vec<u8>>,
 ) -> DoneRecord {
     // propagate upstream failures without executing — deps are
     // id-ordered, matching the serial scheduler's earliest-dep pick
@@ -801,7 +808,7 @@ fn run_remote_task(
             t.spec.schedule.clone().unwrap_or_else(|| "default".into())
         });
     let faults_before = crate::util::faults::injected_count();
-    let lookup = remote_primary_lookup(ctx, t);
+    let lookup = remote_primary_lookup(ctx, t, prefetched);
     if lookup == Lookup::Hit {
         span.note("outcome", "hit");
         let mut done = DoneRecord::ok(false, Lookup::Hit, 0.0);
@@ -815,7 +822,7 @@ fn run_remote_task(
         ctx.env.retry_attempts(),
         ctx.env.retry_backoff_ms(),
         t.kind.name(),
-        || execute_remote_stage(ctx, t, tune),
+        || execute_remote_stage(ctx, t, tune, prefetched),
     );
     let secs = watch.elapsed_s();
     let mut done = match result {
@@ -862,7 +869,20 @@ fn task_faults(before: u64) -> u64 {
 /// other tier — a server hit lands in the local store, a local hit is
 /// pushed back up so the parent's tail pass and the rest of the fleet
 /// can fetch it remotely.
-fn remote_primary_lookup(ctx: &RemoteCtx, t: &QueueTask) -> Lookup {
+fn remote_primary_lookup(
+    ctx: &RemoteCtx,
+    t: &QueueTask,
+    prefetched: &HashMap<(CachedStage, StageKey), Vec<u8>>,
+) -> Lookup {
+    // an entry that rode the claim is the server tier answering early
+    // — same verify, same replication, zero extra round trips
+    if let Some(bytes) = prefetched.get(&(t.kind, t.key)) {
+        if persist::decode(bytes, t.key).is_ok() {
+            let _ = ctx.store.save_raw(t.key, t.kind, bytes);
+            return Lookup::Hit;
+        }
+        // corrupt prefetch: fall through to the usual tiers
+    }
     if let Ok(Some(bytes)) = ctx.client.get(t.kind, t.key) {
         if persist::decode(&bytes, t.key).is_ok() {
             let _ = ctx.store.save_raw(t.key, t.kind, &bytes);
@@ -891,16 +911,17 @@ fn execute_remote_stage(
     ctx: &RemoteCtx,
     t: &QueueTask,
     tune: TuneParams,
+    prefetched: &HashMap<(CachedStage, StageKey), Vec<u8>>,
 ) -> Result<Artifact> {
     match t.kind {
         CachedStage::Load => load_graph_remote(ctx, t).map(Artifact::Graph),
         CachedStage::Tune => {
-            let graph = fetch_graph_remote(ctx, t)?;
+            let graph = fetch_graph_remote(ctx, t, prefetched)?;
             run::stage_tune(&t.spec, &graph, tune).map(Artifact::Tune)
         }
         CachedStage::Build => {
-            let graph = fetch_graph_remote(ctx, t)?;
-            let tuned = fetch_tune_remote(ctx, t, &graph, tune)?;
+            let graph = fetch_graph_remote(ctx, t, prefetched)?;
+            let tuned = fetch_tune_remote(ctx, t, &graph, tune, prefetched)?;
             run::stage_build(&t.spec, &graph, tuned.map(|o| o.schedule))
                 .map(|b| Artifact::Build(Arc::new(b)))
         }
@@ -931,7 +952,18 @@ fn fetch_dep_remote(
     ctx: &RemoteCtx,
     key: StageKey,
     stage: CachedStage,
+    prefetched: &HashMap<(CachedStage, StageKey), Vec<u8>>,
 ) -> Option<Artifact> {
+    // entries that rode the claim response skip the GET round trip;
+    // they go through the same decode-verify as wire-fetched bytes
+    if let Some(bytes) = prefetched.get(&(stage, key)) {
+        if let Ok(a) = persist::decode(bytes, key) {
+            if a.stage() == stage {
+                let _ = ctx.store.save_raw(key, stage, bytes);
+                return Some(a);
+            }
+        }
+    }
     if let Ok(Some(bytes)) = ctx.client.get(stage, key) {
         if let Ok(a) = persist::decode(&bytes, key) {
             if a.stage() == stage {
@@ -949,11 +981,12 @@ fn fetch_dep_remote(
 fn fetch_graph_remote(
     ctx: &RemoteCtx,
     t: &QueueTask,
+    prefetched: &HashMap<(CachedStage, StageKey), Vec<u8>>,
 ) -> Result<Arc<crate::graph::Graph>> {
     for &(_, kind, key) in &t.deps {
         if kind == CachedStage::Load {
             if let Some(Artifact::Graph(g)) =
-                fetch_dep_remote(ctx, key, CachedStage::Load)
+                fetch_dep_remote(ctx, key, CachedStage::Load, prefetched)
             {
                 return Ok(g);
             }
@@ -967,13 +1000,15 @@ fn fetch_tune_remote(
     t: &QueueTask,
     graph: &crate::graph::Graph,
     tune: TuneParams,
+    prefetched: &HashMap<(CachedStage, StageKey), Vec<u8>>,
 ) -> Result<Option<TuneOutcome>> {
     let Some(&(_, _, key)) =
         t.deps.iter().find(|&&(_, k, _)| k == CachedStage::Tune)
     else {
         return Ok(None);
     };
-    if let Some(Artifact::Tune(o)) = fetch_dep_remote(ctx, key, CachedStage::Tune)
+    if let Some(Artifact::Tune(o)) =
+        fetch_dep_remote(ctx, key, CachedStage::Tune, prefetched)
     {
         return Ok(Some(o));
     }

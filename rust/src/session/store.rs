@@ -31,6 +31,7 @@
 use std::collections::HashMap;
 use std::fs;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -89,6 +90,10 @@ pub struct EnvStore {
     /// (`store.lock_stale_ms`; dead-pid locks always break instantly).
     lock_stale: Duration,
     inner: Mutex<Index>,
+    /// Read operations (`load` + `load_raw`) served by this handle —
+    /// the serve daemon's proof that its hot-path cache kept a warm
+    /// workload off the disk tier.
+    reads: AtomicU64,
 }
 
 /// Default mtime fallback for breaking locks with unprobeable owners.
@@ -139,6 +144,7 @@ impl EnvStore {
             budget_bytes: budget_bytes.max(1),
             lock_stale,
             inner: Mutex::new(index),
+            reads: AtomicU64::new(0),
         })
     }
 
@@ -166,6 +172,7 @@ impl EnvStore {
     /// and returns `Corrupt` so the caller recomputes.
     pub fn load(&self, key: StageKey, stage: CachedStage) -> StoreLookup {
         use crate::util::faults::{self, FaultKind};
+        self.reads.fetch_add(1, Ordering::Relaxed);
         let mut span = crate::util::trace::span("store", "load")
             .arg("stage", stage.name())
             .arg_with("key", || key.hex());
@@ -251,6 +258,7 @@ impl EnvStore {
     /// the LRU clock like `load`. Reads the file directly, not the
     /// index, so entries written by other processes are served too.
     pub fn load_raw(&self, key: StageKey, stage: CachedStage) -> Option<Vec<u8>> {
+        self.reads.fetch_add(1, Ordering::Relaxed);
         let bytes = fs::read(self.entry_path(stage, key)).ok()?;
         let mut ix = self.lock_index();
         ix.seq += 1;
@@ -389,6 +397,14 @@ impl EnvStore {
             }
         }
         rep
+    }
+
+    /// Total `load`/`load_raw` calls served by this handle (process
+    /// lifetime, not persisted). The serve saturation bench asserts
+    /// this stays flat across a warm phase — hot entries must be
+    /// answered from the in-memory cache, not the disk tier.
+    pub fn read_ops(&self) -> u64 {
+        self.reads.load(Ordering::Relaxed)
     }
 
     pub fn stats(&self) -> StoreStats {
@@ -642,6 +658,9 @@ mod tests {
         let s = store.stats();
         assert_eq!((s.entries, s.loads, s.evictions), (1, 1, 0));
         assert!(s.total_bytes > 0);
+        assert_eq!(store.read_ops(), 2, "one miss + one hit, both counted");
+        assert!(store.load_raw(key, CachedStage::Load).is_some());
+        assert_eq!(store.read_ops(), 3, "raw reads count too");
         fs::remove_dir_all(dir).unwrap();
     }
 

@@ -24,11 +24,33 @@
 //! byte pipe and a mismatched or corrupt peer can never poison a
 //! store.
 //!
+//! ## Serving at fleet scale
+//!
+//! The daemon keeps a bounded in-memory [`HotCache`] in front of its
+//! `EnvStore`: a warm `OP_GET` is answered without touching the disk
+//! tier or its lock-file, so N workers hammering the same hot
+//! artifacts scale with memory bandwidth, not lock contention (the
+//! saturation bench `benches/serve_saturation.rs` proves the warm
+//! path performs zero store reads). Batched ops collapse round
+//! trips: `OP_MGET` fetches many entries in one frame and
+//! `OP_CLAIM_DEPS` rides the artifacts a claimed task will ask for
+//! on the claim response itself. Completed queues are retired as
+//! soon as a poll has drained their results, idle connections time
+//! out, and a connection cap bounds the thread-per-conn fleet.
+//!
+//! The client side keeps queue ops (claim/beat/poll) on one *pinned*
+//! connection — the server binds claims to the connection identity,
+//! its liveness *is* the lease — while stateless ops check streams
+//! out of a small pool, so concurrent callers in one process don't
+//! serialize behind a single stream mutex.
+//!
 //! ## Fault model
 //!
 //! The client retries transport errors a bounded number of times with
 //! exponential backoff plus jitter (entropy-seeded so a fleet doesn't
-//! retry in lockstep), then reports the error. `RemoteStore` wraps
+//! retry in lockstep), then reports the error; the retry backoff
+//! sleeps outside every lock, so one failing request never convoys
+//! the process's other wire traffic. `RemoteStore` wraps
 //! that in a circuit breaker: the first failure degrades the tier to
 //! local-only for the rest of the session — counted and reported,
 //! never fatal.
@@ -43,7 +65,7 @@ use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
@@ -51,7 +73,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::Environment;
 use crate::data::Json;
-use crate::session::cache::{Artifact, CachedStage, StageKey};
+use crate::session::cache::{Artifact, CachedStage, HotCache, StageKey};
 use crate::session::persist;
 use crate::session::store::EnvStore;
 use crate::util::XorShift64;
@@ -79,6 +101,14 @@ pub const OP_STATS: u8 = 10;
 /// Ship tracer spans for a served queue (`qid u64 | Chrome trace
 /// JSON`); the parent's next POLL on that queue drains them.
 pub const OP_TRACE_PUT: u8 = 11;
+/// Batched GET: `count u32 | count × (stage u8 | key u64)` fetches
+/// many entries in one round trip; per-entry statuses in the body.
+pub const OP_MGET: u8 = 12;
+/// CLAIM plus dep prefetch: same request as CLAIM, but the response
+/// carries the artifacts the claimed task will ask for (its own
+/// stage entry and its deps'), collapsing the claim → N×GET chatter
+/// of a stage execution into one frame.
+pub const OP_CLAIM_DEPS: u8 = 13;
 
 // Response statuses.
 pub const ST_OK: u8 = 0;
@@ -188,7 +218,6 @@ struct ServedQueue {
 }
 
 struct Shared {
-    store: Arc<EnvStore>,
     queues: HashMap<u64, ServedQueue>,
     next_queue: u64,
     blobs: HashMap<u64, Arc<Vec<u8>>>,
@@ -198,36 +227,106 @@ struct Shared {
     workers: HashSet<u64>,
 }
 
-/// The `mlonmcu serve` daemon: one `EnvStore` plus the in-memory work
-/// queue, thread-per-connection.
+/// Serve-tier resource knobs, from the `[serve]` config section.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Byte budget of the in-memory hot-entry cache (`serve.mem_mb`;
+    /// 0 disables it).
+    pub mem_bytes: u64,
+    /// Connection cap — accepts beyond it are dropped immediately so
+    /// a runaway fleet cannot exhaust server threads
+    /// (`serve.max_conns`).
+    pub max_conns: usize,
+    /// Idle-connection read timeout in ms (`serve.idle_ms`; 0 = off):
+    /// a connection that sends nothing for this long is closed and
+    /// its claims reclaimed.
+    pub idle_ms: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        // idle_ms defaults off: embedded test servers keep claim
+        // connections silent for long stretches by design
+        ServeConfig { mem_bytes: 64 << 20, max_conns: 256, idle_ms: 0 }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_env(env: &Environment) -> ServeConfig {
+        ServeConfig {
+            mem_bytes: env.serve_mem_bytes(),
+            max_conns: env.serve_max_conns(),
+            idle_ms: env.serve_idle_ms(),
+        }
+    }
+}
+
+/// Everything a connection thread needs. The queue/blob/conn state
+/// lives behind one mutex (`shared`); the hot-entry cache has its
+/// own, so a warm `OP_GET` storm never contends with claim
+/// bookkeeping; the counters are atomics touched without any lock.
+struct ServeState {
+    store: Arc<EnvStore>,
+    shared: Mutex<Shared>,
+    mem: Mutex<HotCache>,
+    cfg: ServeConfig,
+    /// Total requests handled (any op, any status).
+    ops: AtomicU64,
+    /// Response payload bytes written (the serving-bandwidth gauge).
+    bytes_served: AtomicU64,
+    /// Completed queues dropped after their final drain.
+    queues_retired: AtomicU64,
+    started: Instant,
+}
+
+/// The `mlonmcu serve` daemon: one `EnvStore` fronted by a bounded
+/// in-memory hot cache, plus the in-memory work queue,
+/// thread-per-connection.
 pub struct Server {
     listener: TcpListener,
-    shared: Arc<Mutex<Shared>>,
+    state: Arc<ServeState>,
     stop: Arc<AtomicBool>,
 }
 
 /// Handle to a server running on its own thread (tests, embedding).
 pub struct ServerHandle {
     pub addr: SocketAddr,
-    shared: Arc<Mutex<Shared>>,
+    state: Arc<ServeState>,
     stop: Arc<AtomicBool>,
     thread: std::thread::JoinHandle<()>,
 }
 
 impl Server {
     pub fn bind(store: Arc<EnvStore>, addr: &str) -> Result<Server> {
+        Server::bind_with(store, addr, ServeConfig::default())
+    }
+
+    /// `bind` with explicit serve-tier resource knobs.
+    pub fn bind_with(
+        store: Arc<EnvStore>,
+        addr: &str,
+        cfg: ServeConfig,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
         Ok(Server {
             listener,
-            shared: Arc::new(Mutex::new(Shared {
+            state: Arc::new(ServeState {
                 store,
-                queues: HashMap::new(),
-                next_queue: 0,
-                blobs: HashMap::new(),
-                conns: HashMap::new(),
-                workers: HashSet::new(),
-            })),
+                shared: Mutex::new(Shared {
+                    queues: HashMap::new(),
+                    next_queue: 0,
+                    blobs: HashMap::new(),
+                    conns: HashMap::new(),
+                    workers: HashSet::new(),
+                }),
+                mem: Mutex::new(HotCache::new(cfg.mem_bytes)),
+                cfg,
+                ops: AtomicU64::new(0),
+                bytes_served: AtomicU64::new(0),
+                queues_retired: AtomicU64::new(0),
+                started: Instant::now(),
+            }),
             stop: Arc::new(AtomicBool::new(false)),
         })
     }
@@ -247,29 +346,52 @@ impl Server {
             let _ = stream.set_nodelay(true);
             next_conn += 1;
             let conn_id = next_conn;
-            if let Ok(clone) = stream.try_clone() {
-                lock(&self.shared).conns.insert(conn_id, clone);
+            {
+                let mut s = lock(&self.state);
+                if s.conns.len() >= self.state.cfg.max_conns {
+                    // over the cap: drop the stream on the floor; the
+                    // client sees a reset and retries/degrades
+                    continue;
+                }
+                if let Ok(clone) = stream.try_clone() {
+                    s.conns.insert(conn_id, clone);
+                }
             }
-            let shared = Arc::clone(&self.shared);
-            std::thread::spawn(move || serve_conn(shared, conn_id, stream));
+            let state = Arc::clone(&self.state);
+            std::thread::spawn(move || serve_conn(state, conn_id, stream));
         }
         Ok(())
     }
 
     /// Bind + run on a background thread; the handle shuts it down.
     pub fn spawn(store: Arc<EnvStore>, addr: &str) -> Result<ServerHandle> {
-        let server = Server::bind(store, addr)?;
+        Server::spawn_with(store, addr, ServeConfig::default())
+    }
+
+    /// `spawn` with explicit serve-tier resource knobs.
+    pub fn spawn_with(
+        store: Arc<EnvStore>,
+        addr: &str,
+        cfg: ServeConfig,
+    ) -> Result<ServerHandle> {
+        let server = Server::bind_with(store, addr, cfg)?;
         let addr = server.local_addr();
-        let shared = Arc::clone(&server.shared);
+        let state = Arc::clone(&server.state);
         let stop = Arc::clone(&server.stop);
         let thread = std::thread::spawn(move || {
             let _ = server.run();
         });
-        Ok(ServerHandle { addr, shared, stop, thread })
+        Ok(ServerHandle { addr, state, stop, thread })
     }
 }
 
 impl ServerHandle {
+    /// Live served-queue count — tests and the saturation bench use
+    /// it to prove completed queues are retired, not leaked.
+    pub fn queue_count(&self) -> usize {
+        lock(&self.state).queues.len()
+    }
+
     /// Stop accepting, sever every live connection (so clients see the
     /// death immediately — the "server killed mid-fetch" path), and
     /// join the accept thread.
@@ -277,7 +399,7 @@ impl ServerHandle {
         self.stop.store(true, Ordering::SeqCst);
         // unblock accept(); the loop re-checks the flag first
         let _ = TcpStream::connect(self.addr);
-        for conn in lock(&self.shared).conns.values() {
+        for conn in lock(&self.state).conns.values() {
             let _ = conn.shutdown(std::net::Shutdown::Both);
         }
         let _ = self.thread.join();
@@ -287,28 +409,38 @@ impl ServerHandle {
 /// A sibling thread panicking while holding the state lock must not
 /// wedge the whole server — the state stays consistent (mutations are
 /// single-call) so poisoning is recoverable.
-fn lock(shared: &Arc<Mutex<Shared>>) -> MutexGuard<'_, Shared> {
-    shared.lock().unwrap_or_else(|e| e.into_inner())
+fn lock(state: &ServeState) -> MutexGuard<'_, Shared> {
+    state.shared.lock().unwrap_or_else(|e| e.into_inner())
 }
 
-fn serve_conn(shared: Arc<Mutex<Shared>>, conn_id: u64, mut stream: TcpStream) {
+fn serve_conn(state: Arc<ServeState>, conn_id: u64, mut stream: TcpStream) {
+    if state.cfg.idle_ms > 0 {
+        // an idle peer trips the read timeout below and is treated
+        // exactly like a dead one: closed, claims reclaimed
+        let _ = stream
+            .set_read_timeout(Some(Duration::from_millis(state.cfg.idle_ms)));
+    }
     loop {
         let (version, op, payload) = match read_frame(&mut stream, REQ_MAGIC) {
             Ok(f) => f,
-            Err(_) => break, // EOF / reset / garbage: connection is over
+            Err(_) => break, // EOF / reset / idle timeout / garbage
         };
-        let (status, body) = handle_request(&shared, conn_id, version, op, &payload);
+        let (status, body) = handle_request(&state, conn_id, version, op, &payload);
+        state.ops.fetch_add(1, Ordering::Relaxed);
+        state.bytes_served.fetch_add(body.len() as u64, Ordering::Relaxed);
         if write_frame(&mut stream, RSP_MAGIC, status, &body).is_err() {
             break;
         }
     }
-    release_conn(&shared, conn_id);
+    release_conn(&state, conn_id);
 }
 
 /// Connection death releases everything it held — the wire analogue of
-/// the local queue's dead-pid lease reclamation.
-fn release_conn(shared: &Arc<Mutex<Shared>>, conn_id: u64) {
-    let mut s = lock(shared);
+/// the local queue's dead-pid lease reclamation. Done records stay:
+/// completion is owned by the queue, not the connection, so a worker
+/// that reported its result and *then* died re-opens nothing.
+fn release_conn(state: &ServeState, conn_id: u64) {
+    let mut s = lock(state);
     for q in s.queues.values_mut() {
         for t in &mut q.tasks {
             if matches!(t.state, TaskState::Claimed { conn, .. } if conn == conn_id)
@@ -322,7 +454,7 @@ fn release_conn(shared: &Arc<Mutex<Shared>>, conn_id: u64) {
 }
 
 fn handle_request(
-    shared: &Arc<Mutex<Shared>>,
+    state: &ServeState,
     conn_id: u64,
     version: u32,
     op: u8,
@@ -336,17 +468,19 @@ fn handle_request(
     }
     match op {
         OP_PING => (ST_OK, persist::FORMAT_VERSION.to_le_bytes().to_vec()),
-        OP_GET => op_get(shared, payload),
-        OP_PUT => op_put(shared, payload),
-        OP_QPUSH => op_qpush(shared, payload),
-        OP_CLAIM => op_claim(shared, conn_id, payload),
-        OP_BEAT => op_beat(shared, conn_id, payload),
-        OP_DONE => op_done(shared, payload),
-        OP_POLL => op_poll(shared, conn_id, payload),
-        OP_BLOB_PUT => op_blob_put(shared, payload),
-        OP_BLOB_GET => op_blob_get(shared, payload),
-        OP_STATS => op_stats(shared),
-        OP_TRACE_PUT => op_trace_put(shared, payload),
+        OP_GET => op_get(state, payload),
+        OP_PUT => op_put(state, payload),
+        OP_QPUSH => op_qpush(state, payload),
+        OP_CLAIM => op_claim(state, conn_id, payload),
+        OP_BEAT => op_beat(state, conn_id, payload),
+        OP_DONE => op_done(state, payload),
+        OP_POLL => op_poll(state, conn_id, payload),
+        OP_BLOB_PUT => op_blob_put(state, payload),
+        OP_BLOB_GET => op_blob_get(state, payload),
+        OP_STATS => op_stats(state),
+        OP_TRACE_PUT => op_trace_put(state, payload),
+        OP_MGET => op_mget(state, payload),
+        OP_CLAIM_DEPS => op_claim_deps(state, conn_id, payload),
         _ => (ST_ERR, Vec::new()),
     }
 }
@@ -360,30 +494,98 @@ fn parse_entry_ref(payload: &[u8]) -> Option<(CachedStage, StageKey)> {
     Some((stage, StageKey(key)))
 }
 
-fn op_get(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+/// One entry fetch through the hot tier: memory first (hit/miss
+/// counted inside the cache), then the store, promoting disk hits
+/// into memory. Entries are content-addressed — a cached value can
+/// never be *wrong*, so there is no invalidation to get right.
+fn fetch_entry(
+    state: &ServeState,
+    stage: CachedStage,
+    key: StageKey,
+) -> Option<Arc<Vec<u8>>> {
+    if state.cfg.mem_bytes > 0 {
+        let mut mem = state.mem.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(bytes) = mem.get(stage, key) {
+            return Some(bytes);
+        }
+    }
+    let bytes = Arc::new(state.store.load_raw(key, stage)?);
+    if state.cfg.mem_bytes > 0 {
+        let mut mem = state.mem.lock().unwrap_or_else(|e| e.into_inner());
+        mem.put(stage, key, Arc::clone(&bytes));
+    }
+    Some(bytes)
+}
+
+fn op_get(state: &ServeState, payload: &[u8]) -> (u8, Vec<u8>) {
     let Some((stage, key)) = parse_entry_ref(payload) else {
         return (ST_ERR, Vec::new());
     };
-    let store = Arc::clone(&lock(shared).store);
-    match store.load_raw(key, stage) {
-        Some(bytes) => (ST_OK, bytes),
+    match fetch_entry(state, stage, key) {
+        Some(bytes) => (ST_OK, bytes.as_ref().clone()),
         None => (ST_MISS, Vec::new()),
     }
 }
 
-fn op_put(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+fn op_put(state: &ServeState, payload: &[u8]) -> (u8, Vec<u8>) {
     let Some((stage, key)) = parse_entry_ref(payload) else {
         return (ST_ERR, Vec::new());
     };
-    let store = Arc::clone(&lock(shared).store);
     // save_raw re-verifies the encoding: a bad peer cannot poison us
-    match store.save_raw(key, stage, &payload[9..]) {
-        Ok(()) => (ST_OK, Vec::new()),
+    match state.store.save_raw(key, stage, &payload[9..]) {
+        Ok(()) => {
+            if state.cfg.mem_bytes > 0 {
+                // a pushed entry is about to be hot: a fleet uploads
+                // exactly what its siblings are about to fetch
+                let mut mem =
+                    state.mem.lock().unwrap_or_else(|e| e.into_inner());
+                mem.put(stage, key, Arc::new(payload[9..].to_vec()));
+            }
+            (ST_OK, Vec::new())
+        }
         Err(_) => (ST_ERR, Vec::new()),
     }
 }
 
-fn op_qpush(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+/// Soft cap on an MGET response body: entries that would push past it
+/// are reported as misses so the frame always fits `MAX_FRAME`.
+const MGET_BODY_BUDGET: usize = MAX_FRAME - 4096;
+/// Cap on entries per MGET request (forged counts must not allocate).
+const MGET_MAX_ENTRIES: usize = 1024;
+
+fn op_mget(state: &ServeState, payload: &[u8]) -> (u8, Vec<u8>) {
+    if payload.len() < 4 {
+        return (ST_ERR, Vec::new());
+    }
+    let count = u32::from_le_bytes(payload[..4].try_into().unwrap()) as usize;
+    if count > MGET_MAX_ENTRIES || payload.len() < 4 + count * 9 {
+        return (ST_ERR, Vec::new());
+    }
+    let mut body = Vec::new();
+    for i in 0..count {
+        let at = 4 + i * 9;
+        let Some((stage, key)) = parse_entry_ref(&payload[at..at + 9]) else {
+            return (ST_ERR, Vec::new());
+        };
+        let entry = fetch_entry(state, stage, key);
+        match entry {
+            Some(bytes) if body.len() + bytes.len() <= MGET_BODY_BUDGET => {
+                body.push(ST_OK);
+                body.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+                body.extend_from_slice(&bytes);
+            }
+            // absent — or present but over the response budget: a
+            // miss is always safe, the client falls back to GET
+            _ => {
+                body.push(ST_MISS);
+                body.extend_from_slice(&0u32.to_le_bytes());
+            }
+        }
+    }
+    (ST_OK, body)
+}
+
+fn op_qpush(state: &ServeState, payload: &[u8]) -> (u8, Vec<u8>) {
     let Ok(text) = std::str::from_utf8(payload) else {
         return (ST_ERR, Vec::new());
     };
@@ -435,7 +637,7 @@ fn op_qpush(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
             state: TaskState::Open,
         });
     }
-    let mut s = lock(shared);
+    let mut s = lock(state);
     s.next_queue += 1;
     let qid = s.next_queue;
     s.queues.insert(
@@ -475,16 +677,10 @@ fn reclaim_stale(q: &mut ServedQueue) {
     }
 }
 
-fn op_claim(
-    shared: &Arc<Mutex<Shared>>,
-    conn_id: u64,
-    payload: &[u8],
-) -> (u8, Vec<u8>) {
-    if payload.len() < 8 {
-        return (ST_ERR, Vec::new());
-    }
-    let want = u64::from_le_bytes(payload[..8].try_into().unwrap());
-    let mut s = lock(shared);
+/// Claim selection shared by `OP_CLAIM` and `OP_CLAIM_DEPS`: mark the
+/// first ready task of the first eligible queue claimed by `conn_id`
+/// and return the claim doc.
+fn try_claim(s: &mut Shared, conn_id: u64, want: u64) -> Option<Json> {
     // even an idle claimer is part of the fleet: the parent must see
     // it in the worker count before deciding to drain the queue itself
     s.workers.insert(conn_id);
@@ -525,7 +721,7 @@ fn op_claim(
                 })
             })
             .collect();
-        let rsp = Json::obj(vec![
+        return Some(Json::obj(vec![
             ("queue", Json::Num(qid as f64)),
             ("lease_ms", Json::Num(q.lease_ms as f64)),
             ("tune", q.tune.clone()),
@@ -534,10 +730,91 @@ fn op_claim(
             ("deadline_ms", Json::Num(q.deadline_ms as f64)),
             ("task", task),
             ("deps_done", Json::Arr(deps_done)),
-        ]);
-        return (ST_OK, rsp.to_string().into_bytes());
+        ]));
     }
-    (ST_EMPTY, Vec::new())
+    None
+}
+
+fn op_claim(
+    state: &ServeState,
+    conn_id: u64,
+    payload: &[u8],
+) -> (u8, Vec<u8>) {
+    if payload.len() < 8 {
+        return (ST_ERR, Vec::new());
+    }
+    let want = u64::from_le_bytes(payload[..8].try_into().unwrap());
+    match try_claim(&mut lock(state), conn_id, want) {
+        Some(doc) => (ST_OK, doc.to_string().into_bytes()),
+        None => (ST_EMPTY, Vec::new()),
+    }
+}
+
+/// Entry refs a claimed task will fetch before executing: its own
+/// `(kind, key)` — the primary lookup — plus each dep's. The task
+/// docs carry the stage name and hex key (`task_doc` in dispatch.rs);
+/// docs without them (hand-rolled queues) prefetch nothing.
+fn claim_entry_refs(doc: &Json) -> Vec<(CachedStage, StageKey)> {
+    fn one(d: &Json) -> Option<(CachedStage, StageKey)> {
+        let stage = CachedStage::from_name(d.get("kind")?.as_str()?)?;
+        let key = u64::from_str_radix(d.get("key")?.as_str()?, 16).ok()?;
+        Some((stage, StageKey(key)))
+    }
+    let Some(task) = doc.get("task") else { return Vec::new() };
+    let mut refs: Vec<(CachedStage, StageKey)> = one(task).into_iter().collect();
+    for dep in task.get("deps").and_then(Json::as_arr).unwrap_or(&[]) {
+        if let Some(r) = one(dep) {
+            if !refs.contains(&r) {
+                refs.push(r);
+            }
+        }
+    }
+    refs
+}
+
+fn op_claim_deps(
+    state: &ServeState,
+    conn_id: u64,
+    payload: &[u8],
+) -> (u8, Vec<u8>) {
+    if payload.len() < 8 {
+        return (ST_ERR, Vec::new());
+    }
+    let want = u64::from_le_bytes(payload[..8].try_into().unwrap());
+    // collect the refs under the queue lock, fetch the bytes outside
+    // it — artifact I/O must not stall claim bookkeeping
+    let (doc, refs) = {
+        let mut s = lock(state);
+        match try_claim(&mut s, conn_id, want) {
+            Some(doc) => {
+                let refs = claim_entry_refs(&doc);
+                (doc, refs)
+            }
+            None => return (ST_EMPTY, Vec::new()),
+        }
+    };
+    let claim = doc.to_string().into_bytes();
+    let mut body = (claim.len() as u32).to_le_bytes().to_vec();
+    body.extend_from_slice(&claim);
+    let mut entries = Vec::new();
+    let mut count = 0u32;
+    let mut budget = MGET_BODY_BUDGET.saturating_sub(body.len() + 4);
+    for (stage, key) in refs {
+        // only hits ride along — a missing entry is not an error,
+        // the claimer computes it like it always has
+        let Some(bytes) = fetch_entry(state, stage, key) else { continue };
+        if bytes.len() + 13 > budget {
+            continue;
+        }
+        budget -= bytes.len() + 13;
+        entries.extend_from_slice(&entry_ref(stage, key));
+        entries.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        entries.extend_from_slice(&bytes);
+        count += 1;
+    }
+    body.extend_from_slice(&count.to_le_bytes());
+    body.extend_from_slice(&entries);
+    (ST_OK, body)
 }
 
 fn parse_two_u64(payload: &[u8]) -> Option<(u64, u64)> {
@@ -551,14 +828,14 @@ fn parse_two_u64(payload: &[u8]) -> Option<(u64, u64)> {
 }
 
 fn op_beat(
-    shared: &Arc<Mutex<Shared>>,
+    state: &ServeState,
     conn_id: u64,
     payload: &[u8],
 ) -> (u8, Vec<u8>) {
     let Some((qid, tid)) = parse_two_u64(payload) else {
         return (ST_ERR, Vec::new());
     };
-    let mut s = lock(shared);
+    let mut s = lock(state);
     if let Some(q) = s.queues.get_mut(&qid) {
         for t in &mut q.tasks {
             if t.id == tid {
@@ -579,7 +856,7 @@ fn op_beat(
     (ST_MISS, Vec::new())
 }
 
-fn op_done(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+fn op_done(state: &ServeState, payload: &[u8]) -> (u8, Vec<u8>) {
     let Some((qid, tid)) = parse_two_u64(payload) else {
         return (ST_ERR, Vec::new());
     };
@@ -589,9 +866,12 @@ fn op_done(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
     let Ok(rec) = Json::parse(text) else {
         return (ST_ERR, Vec::new());
     };
-    let mut s = lock(shared);
+    let mut s = lock(state);
     let Some(q) = s.queues.get_mut(&qid) else {
-        return (ST_ERR, Vec::new());
+        // a straggler reporting into a retired queue: its result was
+        // already superseded and drained — dropping it is the queue
+        // analogue of first-writer-wins, not an error
+        return (ST_MISS, Vec::new());
     };
     for t in &mut q.tasks {
         if t.id == tid {
@@ -609,7 +889,7 @@ fn op_done(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
 }
 
 fn op_poll(
-    shared: &Arc<Mutex<Shared>>,
+    state: &ServeState,
     conn_id: u64,
     payload: &[u8],
 ) -> (u8, Vec<u8>) {
@@ -617,36 +897,59 @@ fn op_poll(
         return (ST_ERR, Vec::new());
     }
     let qid = u64::from_le_bytes(payload[..8].try_into().unwrap());
-    let mut s = lock(shared);
+    let mut s = lock(state);
     // the poller is the parent: it must not count itself as a worker
     let workers = s.workers.iter().filter(|&&c| c != conn_id).count();
     let Some(q) = s.queues.get_mut(&qid) else {
         return (ST_ERR, Vec::new());
     };
     reclaim_stale(q);
+    let mut open = 0usize;
+    let mut claimed = 0usize;
     let done: Vec<Json> = q
         .tasks
         .iter()
         .filter_map(|t| match &t.state {
             TaskState::Done(rec) => Some(rec.clone()),
-            _ => None,
+            TaskState::Open => {
+                open += 1;
+                None
+            }
+            TaskState::Claimed { .. } => {
+                claimed += 1;
+                None
+            }
         })
         .collect();
+    // a u128 millisecond age converts lossily through `as f64`; clamp
+    // through u64 so an absurd clock can only saturate, never wrap
+    let stalled_ms = u64::try_from(q.last_progress.elapsed().as_millis())
+        .unwrap_or(u64::MAX);
     // worker spans are handed to the poller exactly once
     let spans = std::mem::take(&mut q.spans);
     let rsp = Json::obj(vec![
         ("total", Json::Num(q.tasks.len() as f64)),
+        ("open", Json::Num(open as f64)),
+        ("claimed", Json::Num(claimed as f64)),
         ("workers", Json::Num(workers as f64)),
-        ("stalled_ms", Json::Num(q.last_progress.elapsed().as_millis() as f64)),
+        ("stalled_ms", Json::Num(stalled_ms as f64)),
         ("done", Json::Arr(done)),
         ("spans", Json::Arr(spans)),
     ]);
+    // every task has reported and this poll hands over the full
+    // result set (done records are cumulative, spans just drained):
+    // the queue's life is over — retire it instead of leaking one
+    // ServedQueue per session for the daemon's whole uptime
+    if open == 0 && claimed == 0 {
+        s.queues.remove(&qid);
+        state.queues_retired.fetch_add(1, Ordering::Relaxed);
+    }
     (ST_OK, rsp.to_string().into_bytes())
 }
 
 /// Pool tracer spans shipped by a queue's workers
 /// (`qid u64 | Chrome trace JSON`) until the parent polls them off.
-fn op_trace_put(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+fn op_trace_put(state: &ServeState, payload: &[u8]) -> (u8, Vec<u8>) {
     if payload.len() < 8 {
         return (ST_ERR, Vec::new());
     }
@@ -660,41 +963,69 @@ fn op_trace_put(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
     let Some(events) = doc.get("traceEvents").and_then(Json::as_arr) else {
         return (ST_ERR, Vec::new());
     };
-    let mut s = lock(shared);
+    let mut s = lock(state);
     let Some(q) = s.queues.get_mut(&qid) else {
-        return (ST_ERR, Vec::new());
+        // retired queue: the poller is gone, nobody will drain these
+        // spans — drop them like a straggler's done record
+        return (ST_MISS, Vec::new());
     };
     q.spans.extend(events.iter().cloned());
     (ST_OK, Vec::new())
 }
 
-fn op_blob_put(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+fn op_blob_put(state: &ServeState, payload: &[u8]) -> (u8, Vec<u8>) {
     if payload.len() < 8 {
         return (ST_ERR, Vec::new());
     }
     let fp = u64::from_le_bytes(payload[..8].try_into().unwrap());
     let bytes = Arc::new(payload[8..].to_vec());
-    lock(shared).blobs.insert(fp, bytes);
+    lock(state).blobs.insert(fp, bytes);
     (ST_OK, Vec::new())
 }
 
-fn op_blob_get(shared: &Arc<Mutex<Shared>>, payload: &[u8]) -> (u8, Vec<u8>) {
+fn op_blob_get(state: &ServeState, payload: &[u8]) -> (u8, Vec<u8>) {
     if payload.len() < 8 {
         return (ST_ERR, Vec::new());
     }
     let fp = u64::from_le_bytes(payload[..8].try_into().unwrap());
-    match lock(shared).blobs.get(&fp) {
+    match lock(state).blobs.get(&fp) {
         Some(bytes) => (ST_OK, bytes.as_ref().clone()),
         None => (ST_MISS, Vec::new()),
     }
 }
 
-fn op_stats(shared: &Arc<Mutex<Shared>>) -> (u8, Vec<u8>) {
-    let (store, blobs, queues, workers) = {
-        let s = lock(shared);
-        (Arc::clone(&s.store), s.blobs.len(), s.queues.len(), s.workers.len())
+fn op_stats(state: &ServeState) -> (u8, Vec<u8>) {
+    let (blobs, queues, workers, conns, open, claimed, done) = {
+        let s = lock(state);
+        let (mut open, mut claimed, mut done) = (0usize, 0usize, 0usize);
+        for q in s.queues.values() {
+            for t in &q.tasks {
+                match t.state {
+                    TaskState::Open => open += 1,
+                    TaskState::Claimed { .. } => claimed += 1,
+                    TaskState::Done(_) => done += 1,
+                }
+            }
+        }
+        (
+            s.blobs.len(),
+            s.queues.len(),
+            s.workers.len(),
+            s.conns.len(),
+            open,
+            claimed,
+            done,
+        )
     };
-    let st = store.stats();
+    let st = state.store.stats();
+    let mem = {
+        let m = state.mem.lock().unwrap_or_else(|e| e.into_inner());
+        m.stats()
+    };
+    let ops = state.ops.load(Ordering::Relaxed);
+    let uptime_ms = u64::try_from(state.started.elapsed().as_millis())
+        .unwrap_or(u64::MAX)
+        .max(1);
     let doc = Json::obj(vec![
         ("format", Json::Num(persist::FORMAT_VERSION as f64)),
         ("entries", Json::Num(st.entries as f64)),
@@ -705,6 +1036,29 @@ fn op_stats(shared: &Arc<Mutex<Shared>>) -> (u8, Vec<u8>) {
         ("blobs", Json::Num(blobs as f64)),
         ("queues", Json::Num(queues as f64)),
         ("workers", Json::Num(workers as f64)),
+        // serve-tier throughput + hygiene gauges
+        ("conns", Json::Num(conns as f64)),
+        ("ops", Json::Num(ops as f64)),
+        ("ops_per_sec", Json::Num(ops as f64 * 1000.0 / uptime_ms as f64)),
+        ("uptime_ms", Json::Num(uptime_ms as f64)),
+        (
+            "bytes_served",
+            Json::Num(state.bytes_served.load(Ordering::Relaxed) as f64),
+        ),
+        ("store_reads", Json::Num(state.store.read_ops() as f64)),
+        ("mem_hits", Json::Num(mem.hits as f64)),
+        ("mem_misses", Json::Num(mem.misses as f64)),
+        ("mem_entries", Json::Num(mem.entries as f64)),
+        ("mem_bytes", Json::Num(mem.bytes as f64)),
+        ("mem_budget", Json::Num(mem.budget as f64)),
+        ("mem_evictions", Json::Num(mem.evictions as f64)),
+        (
+            "queues_retired",
+            Json::Num(state.queues_retired.load(Ordering::Relaxed) as f64),
+        ),
+        ("tasks_open", Json::Num(open as f64)),
+        ("tasks_claimed", Json::Num(claimed as f64)),
+        ("tasks_done", Json::Num(done as f64)),
     ]);
     (ST_OK, doc.to_string().into_bytes())
 }
@@ -745,28 +1099,38 @@ pub enum Claim {
     Refused,
 }
 
-struct ClientInner {
-    stream: Option<TcpStream>,
-    rng: XorShift64,
-}
+/// Idle pooled streams kept per client — enough that a worker's main
+/// loop, its heartbeat thread and a couple of prefetches overlap
+/// without reconnecting, small enough that a fleet of clients doesn't
+/// hold thousands of sockets open.
+const POOL_CAP: usize = 4;
 
-/// One logical connection to a serve daemon: lazy connect, per-request
-/// timeout, bounded retry with exponential backoff + jitter. Shared
-/// between a worker's main loop and its heartbeat thread — requests
-/// are serialized by the inner mutex.
+/// One logical link to a serve daemon: lazy connect, per-request
+/// timeout, bounded retry with exponential backoff + jitter.
+///
+/// Concurrent callers do not serialize: stateless ops (get/put/blob/
+/// stats/…) check a stream out of a small pool for exactly the
+/// duration of one exchange, and every backoff sleep runs with no
+/// lock held. Queue ops (claim/beat/poll) instead share one *pinned*
+/// stream — the server binds a claim to the connection that made it
+/// (the connection's liveness is the lease), so they must all present
+/// the same identity.
 pub struct Client {
     cfg: RemoteConfig,
-    inner: Mutex<ClientInner>,
+    pool: Mutex<Vec<TcpStream>>,
+    queue_slot: Mutex<Option<TcpStream>>,
+    /// Jitter source; locked only for the draw, never across I/O or
+    /// sleeps.
+    rng: Mutex<XorShift64>,
 }
 
 impl Client {
     pub fn new(cfg: RemoteConfig) -> Client {
         Client {
             cfg,
-            inner: Mutex::new(ClientInner {
-                stream: None,
-                rng: XorShift64::from_entropy(),
-            }),
+            pool: Mutex::new(Vec::new()),
+            queue_slot: Mutex::new(None),
+            rng: Mutex::new(XorShift64::from_entropy()),
         }
     }
 
@@ -799,68 +1163,126 @@ impl Client {
         }
     }
 
-    /// One request → one response, retrying transport errors up to
-    /// `retries` times (backoff doubles each attempt, plus jitter so a
-    /// fleet doesn't hammer in lockstep). A response stamped with a
-    /// different format version maps to `ST_MISS` here — version skew
-    /// is a miss, never a crash and never a retried "error".
+    /// One exchange over `stream` (connecting it first if `None`). On
+    /// error the caller drops the stream: a half-used connection can't
+    /// be trusted for the next frame.
+    fn attempt(
+        cfg: &RemoteConfig,
+        stream: &mut Option<TcpStream>,
+        op: u8,
+        payload: &[u8],
+    ) -> Result<(u8, Vec<u8>)> {
+        if stream.is_none() {
+            *stream = Some(Self::connect(cfg)?);
+        }
+        let s = stream.as_mut().expect("stream just connected");
+        // injected send faults feed the real retry/degrade
+        // machinery: a dropped frame is a transport error, a
+        // torn frame actually hits the wire (the server junks
+        // the connection) before erroring out here
+        use crate::util::faults::{self, FaultKind};
+        match faults::fire("transport.send") {
+            Some(FaultKind::Drop) => {
+                bail!("injected fault at transport.send: frame dropped")
+            }
+            Some(FaultKind::Truncate) => {
+                let mut buf = Vec::new();
+                write_frame(&mut buf, REQ_MAGIC, op, payload)?;
+                buf.truncate(buf.len() / 2);
+                let _ = s.write_all(&buf);
+                let _ = s.flush();
+                bail!("injected fault at transport.send: frame torn")
+            }
+            _ => {} // Delay already slept inside fire
+        }
+        write_frame(s, REQ_MAGIC, op, payload)?;
+        match faults::fire("transport.recv") {
+            Some(FaultKind::Drop) | Some(FaultKind::Truncate) => {
+                // abandon the in-flight response; the error path
+                // resets the connection so no desynced frame is
+                // ever parsed
+                bail!("injected fault at transport.recv: response lost")
+            }
+            _ => {}
+        }
+        let (version, status, body) = read_frame(s, RSP_MAGIC)?;
+        if version != persist::FORMAT_VERSION {
+            // version skew is a miss, never a crash and never a
+            // retried "error"
+            return Ok((ST_MISS, Vec::new()));
+        }
+        Ok((status, body))
+    }
+
+    /// Exponential backoff (doubling, capped) plus jitter so a fleet
+    /// doesn't hammer in lockstep. Runs with **no lock held** — one
+    /// request riding out its backoff must not convoy the process's
+    /// other wire traffic.
+    fn backoff(&self, attempt: u32) {
+        let base = self.cfg.backoff_ms.max(1) << (attempt - 1).min(6);
+        let jitter = {
+            let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+            rng.below(base)
+        };
+        std::thread::sleep(Duration::from_millis(base + jitter));
+    }
+
+    /// One request → one response over a pooled stream, retrying
+    /// transport errors up to `retries` times. Concurrent callers each
+    /// check out their own stream, so requests — and their backoff
+    /// sleeps — never serialize behind one another.
     pub fn request(&self, op: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
         let _span = crate::util::trace::span("transport", op_name(op))
             .arg("addr", self.cfg.addr.as_str());
-        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         let mut last_err = None;
         for attempt in 0..=self.cfg.retries {
             if attempt > 0 {
-                let base = self.cfg.backoff_ms.max(1) << (attempt - 1).min(6);
-                let jitter = inner.rng.below(base);
-                std::thread::sleep(Duration::from_millis(base + jitter));
+                self.backoff(attempt);
             }
-            let outcome = (|| -> Result<(u8, Vec<u8>)> {
-                if inner.stream.is_none() {
-                    inner.stream = Some(Self::connect(&self.cfg)?);
-                }
-                let stream = inner.stream.as_mut().expect("stream just connected");
-                // injected send faults feed the real retry/degrade
-                // machinery: a dropped frame is a transport error, a
-                // torn frame actually hits the wire (the server junks
-                // the connection) before erroring out here
-                use crate::util::faults::{self, FaultKind};
-                match faults::fire("transport.send") {
-                    Some(FaultKind::Drop) => {
-                        bail!("injected fault at transport.send: frame dropped")
+            let mut stream = {
+                let mut pool =
+                    self.pool.lock().unwrap_or_else(|e| e.into_inner());
+                pool.pop()
+            };
+            match Self::attempt(&self.cfg, &mut stream, op, payload) {
+                Ok(r) => {
+                    if let Some(s) = stream {
+                        let mut pool =
+                            self.pool.lock().unwrap_or_else(|e| e.into_inner());
+                        if pool.len() < POOL_CAP {
+                            pool.push(s);
+                        }
                     }
-                    Some(FaultKind::Truncate) => {
-                        let mut buf = Vec::new();
-                        write_frame(&mut buf, REQ_MAGIC, op, payload)?;
-                        buf.truncate(buf.len() / 2);
-                        let _ = stream.write_all(&buf);
-                        let _ = stream.flush();
-                        bail!("injected fault at transport.send: frame torn")
-                    }
-                    _ => {} // Delay already slept inside fire
+                    return Ok(r);
                 }
-                write_frame(stream, REQ_MAGIC, op, payload)?;
-                match faults::fire("transport.recv") {
-                    Some(FaultKind::Drop) | Some(FaultKind::Truncate) => {
-                        // abandon the in-flight response; the error path
-                        // resets the connection so no desynced frame is
-                        // ever parsed
-                        bail!("injected fault at transport.recv: response lost")
-                    }
-                    _ => {}
-                }
-                let (version, status, body) = read_frame(stream, RSP_MAGIC)?;
-                if version != persist::FORMAT_VERSION {
-                    return Ok((ST_MISS, Vec::new()));
-                }
-                Ok((status, body))
-            })();
-            match outcome {
+                Err(e) => last_err = Some(e), // broken stream dropped
+            }
+        }
+        Err(last_err.expect("at least one attempt ran"))
+    }
+
+    /// `request` over the pinned queue stream. The server binds claims
+    /// to the connection that made them and a beat from any other
+    /// connection is refused, so CLAIM/BEAT/POLL must share one
+    /// stream; the slot lock covers only the exchange itself — backoff
+    /// sleeps happen between lock holds.
+    fn request_pinned(&self, op: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
+        let _span = crate::util::trace::span("transport", op_name(op))
+            .arg("addr", self.cfg.addr.as_str());
+        let mut last_err = None;
+        for attempt in 0..=self.cfg.retries {
+            if attempt > 0 {
+                self.backoff(attempt);
+            }
+            let mut slot =
+                self.queue_slot.lock().unwrap_or_else(|e| e.into_inner());
+            match Self::attempt(&self.cfg, &mut slot, op, payload) {
                 Ok(r) => return Ok(r),
                 Err(e) => {
-                    // a half-used connection can't be trusted for the
-                    // next frame: reconnect on the retry
-                    inner.stream = None;
+                    // reconnecting means a new server-side identity:
+                    // claims held by the dead stream are already being
+                    // released, exactly like a worker that died
+                    *slot = None;
                     last_err = Some(e);
                 }
             }
@@ -886,6 +1308,48 @@ impl Client {
             ST_MISS | ST_EMPTY => Ok(None),
             _ => bail!("remote get failed (status {status})"),
         }
+    }
+
+    /// Fetch many entries in one round trip; `None` per entry means
+    /// miss (or an entry the response budget couldn't fit — re-`get`
+    /// it individually if it matters). A version-gated server answers
+    /// all-`None`, same as per-entry misses.
+    pub fn mget(
+        &self,
+        refs: &[(CachedStage, StageKey)],
+    ) -> Result<Vec<Option<Vec<u8>>>> {
+        if refs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut payload = (refs.len() as u32).to_le_bytes().to_vec();
+        for &(stage, key) in refs {
+            payload.extend_from_slice(&entry_ref(stage, key));
+        }
+        let (status, body) = self.request(OP_MGET, &payload)?;
+        if status != ST_OK {
+            return Ok(vec![None; refs.len()]);
+        }
+        let mut out = Vec::with_capacity(refs.len());
+        let mut at = 0usize;
+        for _ in 0..refs.len() {
+            let Some(head) = body.get(at..at + 5) else {
+                // truncated tail: the entries we did get stand
+                out.push(None);
+                continue;
+            };
+            let st = head[0];
+            let len =
+                u32::from_le_bytes(head[1..5].try_into().unwrap()) as usize;
+            at += 5;
+            match (st, body.get(at..at + len)) {
+                (ST_OK, Some(bytes)) => {
+                    out.push(Some(bytes.to_vec()));
+                    at += len;
+                }
+                _ => out.push(None),
+            }
+        }
+        Ok(out)
     }
 
     /// Push an already-encoded entry; the server re-verifies it.
@@ -929,7 +1393,7 @@ impl Client {
 
     /// Claim the next ready task (`queue` 0 = any queue).
     pub fn claim(&self, queue: u64) -> Result<Claim> {
-        let (status, body) = self.request(OP_CLAIM, &queue.to_le_bytes())?;
+        let (status, body) = self.request_pinned(OP_CLAIM, &queue.to_le_bytes())?;
         match status {
             ST_OK => {
                 let text = std::str::from_utf8(&body)?;
@@ -941,10 +1405,55 @@ impl Client {
         }
     }
 
+    /// Claim the next ready task *and* receive the artifacts it will
+    /// fetch (its own stage entry, if cached, plus its deps') in the
+    /// same round trip. Entries that didn't ride along are simply
+    /// absent — the claimer falls back to `get` per entry.
+    pub fn claim_deps(
+        &self,
+        queue: u64,
+    ) -> Result<(Claim, Vec<((CachedStage, StageKey), Vec<u8>)>)> {
+        let (status, body) =
+            self.request_pinned(OP_CLAIM_DEPS, &queue.to_le_bytes())?;
+        match status {
+            ST_OK => {}
+            ST_EMPTY => return Ok((Claim::Empty, Vec::new())),
+            _ => return Ok((Claim::Refused, Vec::new())),
+        }
+        let too_short = || anyhow::anyhow!("claim-deps response truncated");
+        if body.len() < 4 {
+            return Err(too_short());
+        }
+        let dlen = u32::from_le_bytes(body[..4].try_into().unwrap()) as usize;
+        let mut at = 4usize;
+        let text = std::str::from_utf8(
+            body.get(at..at + dlen).ok_or_else(too_short)?,
+        )?;
+        let doc = Json::parse(text)?;
+        at += dlen;
+        let count = u32::from_le_bytes(
+            body.get(at..at + 4).ok_or_else(too_short)?.try_into().unwrap(),
+        ) as usize;
+        at += 4;
+        let mut entries = Vec::with_capacity(count.min(64));
+        for _ in 0..count {
+            let head = body.get(at..at + 13).ok_or_else(too_short)?;
+            let (stage, key) = parse_entry_ref(&head[..9])
+                .ok_or_else(|| anyhow::anyhow!("claim-deps bad entry ref"))?;
+            let len =
+                u32::from_le_bytes(head[9..13].try_into().unwrap()) as usize;
+            at += 13;
+            let bytes = body.get(at..at + len).ok_or_else(too_short)?;
+            at += len;
+            entries.push(((stage, key), bytes.to_vec()));
+        }
+        Ok((Claim::Task(doc), entries))
+    }
+
     pub fn beat(&self, queue: u64, task: u64) -> Result<()> {
         let mut payload = queue.to_le_bytes().to_vec();
         payload.extend_from_slice(&task.to_le_bytes());
-        self.request(OP_BEAT, &payload).map(|_| ())
+        self.request_pinned(OP_BEAT, &payload).map(|_| ())
     }
 
     pub fn done(&self, queue: u64, task: u64, record: &Json) -> Result<()> {
@@ -952,15 +1461,19 @@ impl Client {
         payload.extend_from_slice(&task.to_le_bytes());
         payload.extend_from_slice(record.to_string().as_bytes());
         let (status, _) = self.request(OP_DONE, &payload)?;
-        if status != ST_OK {
+        // MISS: the queue was already drained and retired — this
+        // straggler's record has nowhere to go, which is fine
+        if status != ST_OK && status != ST_MISS {
             bail!("done record refused (status {status})");
         }
         Ok(())
     }
 
-    /// Queue progress: `{total, workers, stalled_ms, done: [...]}`.
+    /// Queue progress: `{total, open, claimed, workers, stalled_ms,
+    /// done: [...], spans: [...]}`. Pinned: the poller's own claim
+    /// connection must be the one excluded from the worker count.
     pub fn poll(&self, queue: u64) -> Result<Json> {
-        let (status, body) = self.request(OP_POLL, &queue.to_le_bytes())?;
+        let (status, body) = self.request_pinned(OP_POLL, &queue.to_le_bytes())?;
         if status != ST_OK {
             bail!("poll refused (status {status})");
         }
@@ -989,7 +1502,9 @@ impl Client {
             crate::util::trace::to_chrome_json(spans).as_bytes(),
         );
         let (status, _) = self.request(OP_TRACE_PUT, &payload)?;
-        if status != ST_OK {
+        // MISS: queue already drained + retired; dropping a
+        // straggler's spans mirrors dropping its done record
+        if status != ST_OK && status != ST_MISS {
             bail!("trace put refused (status {status})");
         }
         Ok(())
@@ -1011,6 +1526,8 @@ pub fn op_name(op: u8) -> &'static str {
         OP_BLOB_GET => "blob-get",
         OP_STATS => "stats",
         OP_TRACE_PUT => "trace-put",
+        OP_MGET => "mget",
+        OP_CLAIM_DEPS => "claim-deps",
         _ => "op?",
     }
 }
@@ -1378,9 +1895,9 @@ mod tests {
         assert_eq!(events.len(), 1);
         assert_eq!(events[0].get("pid").unwrap().as_i64(), Some(7));
         assert_eq!(events[0].get("name").unwrap().as_str(), Some("load"));
-        // …exactly once
-        let poll = client.poll(qid).unwrap();
-        assert!(poll.get("spans").unwrap().as_arr().unwrap().is_empty());
+        // …exactly once: that drain ended the completed queue's life,
+        // so a straggling poll finds it retired
+        assert!(client.poll(qid).is_err());
 
         // untraced queues advertise trace: false on every claim
         let qid2 = client.qpush(&queue_doc()).unwrap();
@@ -1520,5 +2037,278 @@ mod tests {
         // attempts sleep 20..40 then 40..80 ms: bounded both ways
         assert!(ms >= 55.0, "backoff must actually wait ({ms:.0}ms)");
         assert!(ms < 5_000.0, "retry must terminate quickly ({ms:.0}ms)");
+    }
+
+    #[test]
+    fn concurrent_requests_do_not_convoy_behind_backoff() {
+        // a fake server that swallows pings (the pinger times out and
+        // backs off) but answers everything else instantly
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(mut stream) = stream else { break };
+                std::thread::spawn(move || loop {
+                    let Ok((_, op, _)) = read_frame(&mut stream, REQ_MAGIC)
+                    else {
+                        break;
+                    };
+                    if op == OP_PING {
+                        continue; // never answered
+                    }
+                    if write_frame(&mut stream, RSP_MAGIC, ST_MISS, &[])
+                        .is_err()
+                    {
+                        break;
+                    }
+                });
+            }
+        });
+        let client = Arc::new(Client::new(RemoteConfig {
+            addr: addr.to_string(),
+            timeout_ms: 300,
+            retries: 2,
+            backoff_ms: 300,
+            grace_ms: 100,
+        }));
+        // thread A: a ping doomed to time out and ride its backoff
+        // chain (≥ 900 ms of timeouts + sleeps)
+        let pinger = {
+            let c = Arc::clone(&client);
+            std::thread::spawn(move || {
+                let _ = c.ping();
+            })
+        };
+        std::thread::sleep(Duration::from_millis(50)); // ping in flight
+        // threads B and C share the client and must finish while A is
+        // still timing out / sleeping — the old single-stream mutex
+        // would have convoyed them behind A's whole retry chain
+        let watch = crate::util::Stopwatch::start();
+        let others: Vec<_> = (0..2)
+            .map(|_| {
+                let c = Arc::clone(&client);
+                std::thread::spawn(move || c.blob_get(1))
+            })
+            .collect();
+        for t in others {
+            assert!(t.join().unwrap().unwrap().is_none());
+        }
+        let ms = watch.elapsed_ms();
+        assert!(
+            ms < 800.0,
+            "pooled requests must not convoy behind a backoff ({ms:.0}ms)"
+        );
+        let _ = pinger.join();
+    }
+
+    #[test]
+    fn completed_queue_is_retired_after_final_poll() {
+        let (server, _store, dir) = spawn_server("retire");
+        let client = Client::new(cfg(&server.addr));
+        let qid = client.qpush(&queue_doc()).unwrap();
+        assert_eq!(server.queue_count(), 1);
+
+        assert!(matches!(client.claim(qid).unwrap(), Claim::Task(_)));
+        client
+            .done(qid, 1, &Json::obj(vec![("id", Json::Num(1.0))]))
+            .unwrap();
+        // task 2 still open: polling must NOT retire the queue
+        let poll = client.poll(qid).unwrap();
+        assert_eq!(poll.get("open").unwrap().as_i64(), Some(1));
+        assert_eq!(server.queue_count(), 1);
+
+        assert!(matches!(client.claim(qid).unwrap(), Claim::Task(_)));
+        client
+            .done(qid, 2, &Json::obj(vec![("id", Json::Num(2.0))]))
+            .unwrap();
+        // the poll that hands over the full result set retires the
+        // queue — the map shrinks instead of leaking one per session
+        let poll = client.poll(qid).unwrap();
+        assert_eq!(poll.get("done").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(poll.get("open").unwrap().as_i64(), Some(0));
+        assert_eq!(poll.get("claimed").unwrap().as_i64(), Some(0));
+        assert_eq!(server.queue_count(), 0, "drained queue must be retired");
+
+        // stragglers are dropped silently, not errors…
+        client
+            .done(qid, 2, &Json::obj(vec![("id", Json::Num(2.0))]))
+            .unwrap();
+        // …while a poll of the dead queue is a real error
+        assert!(client.poll(qid).is_err());
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("queues_retired").unwrap().as_i64(), Some(1));
+        assert_eq!(stats.get("queues").unwrap().as_i64(), Some(0));
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn done_then_dead_connection_does_not_reopen_the_task() {
+        let (server, _store, dir) = spawn_server("donedead");
+        let parent = Client::new(cfg(&server.addr));
+        let qid = parent.qpush(&queue_doc()).unwrap();
+
+        // a worker claims task 1, reports it done, and THEN dies —
+        // release_conn runs after the done record landed
+        {
+            let doomed = Client::new(cfg(&server.addr));
+            let Claim::Task(c) = doomed.claim(qid).unwrap() else {
+                panic!("expected task 1");
+            };
+            assert_eq!(
+                c.get("task").unwrap().get("id").unwrap().as_i64(),
+                Some(1)
+            );
+            doomed
+                .done(
+                    qid,
+                    1,
+                    &Json::obj(vec![
+                        ("id", Json::Num(1.0)),
+                        ("ok", Json::Bool(true)),
+                    ]),
+                )
+                .unwrap();
+        } // drop severs the TCP connection
+
+        // wait for the server to process the disconnect
+        let gone = (0..100).any(|_| {
+            std::thread::sleep(Duration::from_millis(10));
+            parent.poll(qid).unwrap().get("workers").unwrap().as_i64()
+                == Some(0)
+        });
+        assert!(gone, "server must notice the dead connection");
+
+        // completion belongs to the queue, not the connection: the
+        // only claimable task is 2, carrying the dead worker's record
+        let Claim::Task(c) = parent.claim(qid).unwrap() else {
+            panic!("task 2 must be claimable");
+        };
+        assert_eq!(c.get("task").unwrap().get("id").unwrap().as_i64(), Some(2));
+        let deps = c.get("deps_done").unwrap().as_arr().unwrap();
+        assert!(matches!(deps[0].get("ok"), Some(Json::Bool(true))));
+        // and task 1 was NOT re-opened by the release
+        assert!(matches!(parent.claim(qid).unwrap(), Claim::Empty));
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn server_mem_cache_answers_warm_gets_without_store_reads() {
+        let (server, store, dir) = spawn_server("hotmem");
+        let client = Client::new(cfg(&server.addr));
+        let key = load_key(7);
+        let bytes = persist::encode(key, &graph_artifact());
+        client.put(CachedStage::Load, key, &bytes).unwrap();
+        let cold_reads = store.read_ops();
+        for _ in 0..3 {
+            let got = client.get(CachedStage::Load, key).unwrap().unwrap();
+            assert_eq!(got, bytes);
+        }
+        assert_eq!(
+            store.read_ops(),
+            cold_reads,
+            "warm GETs must be served from server memory, not the store"
+        );
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.get("mem_hits").unwrap().as_i64(), Some(3));
+        assert!(stats.get("mem_entries").unwrap().as_i64() >= Some(1));
+        assert!(stats.get("ops").unwrap().as_i64().unwrap() >= 4);
+        assert!(
+            stats.get("bytes_served").unwrap().as_i64().unwrap()
+                >= 3 * bytes.len() as i64
+        );
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn mget_batches_hits_and_misses_in_one_frame() {
+        let (server, _store, dir) = spawn_server("mget");
+        let client = Client::new(cfg(&server.addr));
+        let (k1, k2, k3) = (load_key(1), load_key(2), load_key(3));
+        let b1 = persist::encode(k1, &graph_artifact());
+        let b3 = persist::encode(k3, &graph_artifact());
+        client.put(CachedStage::Load, k1, &b1).unwrap();
+        client.put(CachedStage::Load, k3, &b3).unwrap();
+        let got = client
+            .mget(&[
+                (CachedStage::Load, k1),
+                (CachedStage::Load, k2),
+                (CachedStage::Load, k3),
+            ])
+            .unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].as_deref(), Some(&b1[..]));
+        assert!(got[1].is_none(), "absent entry is a per-entry miss");
+        assert_eq!(got[2].as_deref(), Some(&b3[..]));
+        assert!(client.mget(&[]).unwrap().is_empty());
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn claim_deps_rides_cached_artifacts_on_the_claim() {
+        let (server, _store, dir) = spawn_server("claimdeps");
+        let client = Client::new(cfg(&server.addr));
+        let dep_key = load_key(21);
+        let dep_bytes = persist::encode(dep_key, &graph_artifact());
+        client.put(CachedStage::Load, dep_key, &dep_bytes).unwrap();
+        // task docs carry the dispatcher's kind/key fields, so the
+        // server knows which artifacts each claim will fetch
+        let doc = Json::obj(vec![
+            ("lease_ms", Json::Num(400.0)),
+            (
+                "tasks",
+                Json::Arr(vec![
+                    Json::obj(vec![
+                        ("id", Json::Num(1.0)),
+                        ("kind", Json::Str("load".into())),
+                        ("key", Json::Str(dep_key.hex())),
+                        ("deps", Json::Arr(vec![])),
+                    ]),
+                    Json::obj(vec![
+                        ("id", Json::Num(2.0)),
+                        ("kind", Json::Str("build".into())),
+                        ("key", Json::Str("00000000000000ff".into())),
+                        (
+                            "deps",
+                            Json::Arr(vec![Json::obj(vec![
+                                ("id", Json::Num(1.0)),
+                                ("kind", Json::Str("load".into())),
+                                ("key", Json::Str(dep_key.hex())),
+                            ])]),
+                        ),
+                    ]),
+                ]),
+            ),
+        ]);
+        let qid = client.qpush(&doc).unwrap();
+        // task 1's own entry is already cached: it rides the claim
+        let (claim, entries) = client.claim_deps(qid).unwrap();
+        let Claim::Task(c) = claim else { panic!("expected task 1") };
+        assert_eq!(c.get("task").unwrap().get("id").unwrap().as_i64(), Some(1));
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].0, (CachedStage::Load, dep_key));
+        assert_eq!(entries[0].1, dep_bytes);
+        client
+            .done(qid, 1, &Json::obj(vec![("id", Json::Num(1.0))]))
+            .unwrap();
+        // task 2's own build entry is absent; dep 1's entry rides
+        let (claim, entries) = client.claim_deps(qid).unwrap();
+        let Claim::Task(c) = claim else { panic!("expected task 2") };
+        assert_eq!(c.get("task").unwrap().get("id").unwrap().as_i64(), Some(2));
+        assert_eq!(c.get("deps_done").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].0, (CachedStage::Load, dep_key));
+        // an empty queue answers Empty with no entries
+        client
+            .done(qid, 2, &Json::obj(vec![("id", Json::Num(2.0))]))
+            .unwrap();
+        let (claim, entries) = client.claim_deps(qid).unwrap();
+        assert!(matches!(claim, Claim::Empty));
+        assert!(entries.is_empty());
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
     }
 }
