@@ -1,0 +1,155 @@
+//! Metrics-overhead benchmark (observability pass): the cost of the
+//! process-global metrics registry on the runtime's hottest loop.
+//!
+//! Two numbers per model, registry disabled vs enabled, on the same
+//! workload: one tuner-style measure trial — a burst of steady-state
+//! dry-run invokes followed by a single recorded cost sample (that is
+//! the finest granularity at which production code observes metrics;
+//! stage/wire/store sites are all coarser). Plus the raw primitive
+//! cost: ns per `observe` call in both registry states — the disabled
+//! path must stay a single relaxed atomic load.
+//!
+//! Usage:
+//!   cargo bench --bench metrics_overhead                  # paper models
+//!   cargo bench --bench metrics_overhead -- --json m1 ..  # quick mode:
+//!       bench the named models and emit BENCH_metrics.json (the CI
+//!       overhead-trajectory artifact). Named models must resolve.
+
+mod common;
+
+use common::{bench, bench_env, load_or_exit, PAPER_MODELS};
+use mlonmcu::backends::{by_name, BackendConfig};
+use mlonmcu::data::Json;
+use mlonmcu::frontends;
+use mlonmcu::graph::Graph;
+use mlonmcu::targets;
+use mlonmcu::util::metrics;
+
+/// Invokes per measured trial: the shape of one tuner measure step
+/// (repeat the invoke, record one cost sample).
+const INVOKES_PER_TRIAL: usize = 16;
+
+struct ModelRow {
+    name: String,
+    off_us: f64,
+    on_us: f64,
+    overhead_pct: f64,
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json_mode = args.iter().any(|a| a == "--json");
+    let named: Vec<String> =
+        args.iter().filter(|a| !a.starts_with("--")).cloned().collect();
+    let models: Vec<String> = if named.is_empty() {
+        PAPER_MODELS.iter().map(|s| s.to_string()).collect()
+    } else {
+        named.clone()
+    };
+
+    let env = bench_env();
+    let etiss = targets::by_name("etiss").unwrap();
+
+    // primitive cost first: ns per observe() with the registry off/on
+    let per_loop = 10_000u32;
+    metrics::disable();
+    let prim_off = bench(2, 30, || {
+        for i in 0..per_loop {
+            metrics::observe("bench.primitive.us", i as u64);
+        }
+    });
+    metrics::enable();
+    let prim_on = bench(2, 30, || {
+        for i in 0..per_loop {
+            metrics::observe("bench.primitive.us", i as u64);
+        }
+    });
+    metrics::disable();
+    let _ = metrics::drain();
+    let disabled_ns = prim_off.min_s * 1e9 / per_loop as f64;
+    let enabled_ns = prim_on.min_s * 1e9 / per_loop as f64;
+    println!("== metrics_overhead: registry cost ==");
+    println!(
+        "observe(): disabled {disabled_ns:.1} ns/op, \
+         enabled {enabled_ns:.1} ns/op"
+    );
+
+    println!(
+        "{:<10} {:>14} {:>14} {:>10}",
+        "model", "trial off", "trial on", "overhead"
+    );
+    let mut rows: Vec<ModelRow> = Vec::new();
+    for model in &models {
+        let graph: Graph = if named.is_empty() {
+            load_or_exit(&env, model)
+        } else {
+            match frontends::load_model(model, &env.model_dirs()) {
+                Ok(g) => g,
+                Err(e) => {
+                    eprintln!("cannot load requested model '{model}': {e}");
+                    std::process::exit(1);
+                }
+            }
+        };
+        let build = by_name("tvmaot")
+            .unwrap()
+            .build(&graph, &BackendConfig::default())
+            .unwrap();
+        let dep = etiss.deploy(&build, "tvm").unwrap();
+        let input = vec![1i8; graph.tensor(graph.inputs[0]).numel()];
+        let iters = if json_mode { 60 } else { 30 };
+        let trial = || {
+            let clock = metrics::clock();
+            for _ in 0..INVOKES_PER_TRIAL {
+                etiss.run(&build, &dep, &input, false).unwrap();
+            }
+            clock.observe("bench.trial.us");
+        };
+        metrics::disable();
+        let off = bench(5, iters, trial);
+        metrics::enable();
+        let on = bench(5, iters, trial);
+        metrics::disable();
+        let _ = metrics::drain();
+        let row = ModelRow {
+            name: model.clone(),
+            off_us: off.min_s * 1e6,
+            on_us: on.min_s * 1e6,
+            overhead_pct: (on.min_s / off.min_s - 1.0) * 100.0,
+        };
+        println!(
+            "{:<10} {:>12.2}us {:>12.2}us {:>+9.2}%",
+            row.name, row.off_us, row.on_us, row.overhead_pct
+        );
+        rows.push(row);
+    }
+    println!(
+        "\n(trial = {INVOKES_PER_TRIAL} steady-state dry invokes + one \
+         recorded cost sample — the tuner measure-loop shape; overhead \
+         is min-vs-min, acceptance bound <2%)"
+    );
+
+    if json_mode {
+        let entries: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("off_us", Json::Num(r.off_us)),
+                    ("on_us", Json::Num(r.on_us)),
+                    ("overhead_pct", Json::Num(r.overhead_pct)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("metrics_overhead".into())),
+            ("invokes_per_trial", Json::Num(INVOKES_PER_TRIAL as f64)),
+            ("observe_disabled_ns", Json::Num(disabled_ns)),
+            ("observe_enabled_ns", Json::Num(enabled_ns)),
+            ("models", Json::Arr(entries)),
+        ]);
+        std::fs::write("BENCH_metrics.json", doc.to_string())
+            .expect("write BENCH_metrics.json");
+        println!("wrote BENCH_metrics.json ({} model(s))", rows.len());
+    }
+}

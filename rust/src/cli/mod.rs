@@ -10,6 +10,8 @@
 //! mlonmcu cache stats | gc | clear
 //! mlonmcu report [--session N]
 //! mlonmcu trace summary FILE
+//! mlonmcu top --connect HOST:PORT [--once]
+//! mlonmcu metrics export [--format prometheus|json]
 //! mlonmcu targets ls | backends ls
 //! ```
 
@@ -25,6 +27,7 @@ use crate::session::persist;
 use crate::session::transport::{Client, RemoteConfig, ServeConfig, Server};
 use crate::session::{EnvStore, RunMatrix, RunOptions, Session};
 use crate::util::fmt::human_bytes;
+use crate::util::metrics::Snapshot;
 
 use args::Parsed;
 
@@ -49,6 +52,12 @@ USAGE:
           [--connect HOST:PORT]
   mlonmcu report [--session N]            reprint a session report
   mlonmcu trace summary FILE              aggregate an exported trace
+  mlonmcu top --connect HOST:PORT         live fleet dashboard from a
+          [--once] [--interval MS]        serve daemon (ops/s, cache hit
+                                          ratio, stage p50/p95/p99,
+                                          tasks, per-worker liveness)
+  mlonmcu metrics export                  dump recorded metrics
+          [--format prometheus|json] [--session N] [--connect HOST:PORT]
   mlonmcu worker (--queue DIR | --connect HOST:PORT) --home DIR
           [-c key=val ..]                 (internal) dispatch worker
 
@@ -105,6 +114,8 @@ pub fn main_with_args(argv: &[String]) -> Result<i32> {
         "cache" => cmd_cache(&rest),
         "report" => cmd_report(&rest),
         "trace" => cmd_trace(&rest),
+        "top" => cmd_top(&rest),
+        "metrics" => cmd_metrics(&rest),
         "worker" => cmd_worker(&rest),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -384,6 +395,11 @@ fn cmd_serve(rest: &[String]) -> Result<i32> {
         env.store_lock_stale_ms(),
     )?);
     let cfg = ServeConfig::from_env(&env);
+    // the daemon's registry aggregates its own wire series plus every
+    // snapshot the fleet ships via METRICS_PUT; `top` pulls from here
+    if env.metrics_enabled() {
+        crate::util::metrics::enable();
+    }
     let (mem_bytes, max_conns, idle_ms) = (cfg.mem_bytes, cfg.max_conns, cfg.idle_ms);
     let server = Server::bind_with(std::sync::Arc::clone(&store), listen, cfg)?;
     println!(
@@ -494,6 +510,19 @@ fn cmd_cache(rest: &[String]) -> Result<i32> {
                             n(&r, "tasks_done"),
                             n(&r, "queues_retired")
                         );
+                        // percentile lines from the server's metrics
+                        // registry; absent on servers that predate the
+                        // METRICS op — quietly skipped
+                        if let Ok(m) = remote_client(&env, &addr).metrics()
+                        {
+                            let snap = m
+                                .get("registry")
+                                .and_then(|r| Snapshot::from_json(r).ok())
+                                .unwrap_or_default();
+                            for line in percentile_lines(&snap) {
+                                println!("  {line}");
+                            }
+                        }
                     }
                     Err(e) => {
                         println!("remote store at {addr}: unreachable ({e:#})");
@@ -622,22 +651,239 @@ fn cmd_trace(rest: &[String]) -> Result<i32> {
     };
     let spans = crate::util::trace::read_spans(std::path::Path::new(path))?;
     let mut report = Report::default();
-    report.columns = ["span", "pid", "count", "total_ms", "mean_ms", "max_ms"]
-        .map(String::from)
-        .to_vec();
+    report.columns = [
+        "span", "pid", "count", "total_ms", "mean_ms", "p50_ms", "p95_ms",
+        "p99_ms", "max_ms",
+    ]
+    .map(String::from)
+    .to_vec();
     for a in crate::util::trace::aggregate(&spans) {
         let ms = a.total_us as f64 / 1000.0;
         report.push(row(vec![
-            ("span", Cell::Str(a.name)),
+            ("span", Cell::Str(a.name.clone())),
             ("pid", Cell::Int(a.pid as i64)),
             ("count", Cell::Int(a.count as i64)),
             ("total_ms", Cell::Float(ms)),
             ("mean_ms", Cell::Float(ms / a.count.max(1) as f64)),
+            ("p50_ms", Cell::Float(a.p50_us() as f64 / 1000.0)),
+            ("p95_ms", Cell::Float(a.p95_us() as f64 / 1000.0)),
+            ("p99_ms", Cell::Float(a.p99_us() as f64 / 1000.0)),
             ("max_ms", Cell::Float(a.max_us as f64 / 1000.0)),
         ]));
     }
     report.note(format!("{} span(s) in {path}", spans.len()));
     println!("{}", report.to_text());
+    Ok(0)
+}
+
+/// One `name  p50=… p95=… p99=… n=…` line per recorded histogram,
+/// sorted by series name. `.us` series render as milliseconds,
+/// everything else (byte sizes) as raw values.
+fn percentile_lines(snap: &Snapshot) -> Vec<String> {
+    snap.hists
+        .iter()
+        .map(|(name, h)| {
+            let v = |q: f64| {
+                let p = h.percentile(q);
+                if name.ends_with(".us") {
+                    format!("{:.1}ms", p as f64 / 1000.0)
+                } else {
+                    p.to_string()
+                }
+            };
+            format!(
+                "{name}  p50={} p95={} p99={} n={}",
+                v(0.50),
+                v(0.95),
+                v(0.99),
+                h.count
+            )
+        })
+        .collect()
+}
+
+/// `mlonmcu top --connect HOST:PORT` — fleet dashboard rendered from
+/// the serve daemon's METRICS op: throughput, hot-cache hit ratio,
+/// per-stage latency percentiles, task progress and per-worker
+/// liveness. Redraws every `--interval` ms until interrupted; `--once`
+/// prints a single frame and exits (scripts, CI).
+fn cmd_top(rest: &[String]) -> Result<i32> {
+    let p = Parsed::parse(
+        rest,
+        &[
+            ("--connect", true),
+            ("--once", false),
+            ("--interval", true),
+            ("-c", true),
+            ("--config", true),
+        ],
+    )?;
+    let addr = match p.one("--connect") {
+        Some(a) => a.to_string(),
+        None => Environment::discover()
+            .ok()
+            .and_then(|e| e.remote_connect())
+            .context(
+                "top needs --connect HOST:PORT (config key remote.connect)",
+            )?,
+    };
+    let env = env_with_cache_flags(&p)?;
+    let once = p.flag("--once");
+    let interval = p
+        .one("--interval")
+        .map(|s| s.parse::<u64>().context("--interval (ms)"))
+        .transpose()?
+        .unwrap_or_else(|| env.metrics_interval_ms());
+    let client = remote_client(&env, &addr);
+    loop {
+        let m = client.metrics()?;
+        if !once {
+            // ANSI clear + cursor home keeps the dashboard in place
+            print!("\x1b[2J\x1b[H");
+        }
+        render_top(&addr, &m);
+        if once {
+            return Ok(0);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(
+            interval.max(100),
+        ));
+    }
+}
+
+/// One dashboard frame from a METRICS response document.
+fn render_top(addr: &str, m: &Json) {
+    let n = |k: &str| m.get(k).and_then(Json::as_i64).unwrap_or(0);
+    println!(
+        "fleet at {addr} — format v{}, uptime {:.0}s, {} conn(s)",
+        n("format"),
+        n("uptime_ms") as f64 / 1000.0,
+        n("conns")
+    );
+    println!(
+        "  ops:     {} total ({}/s), {} served",
+        n("ops"),
+        n("ops_per_sec"),
+        human_bytes(n("bytes_served").max(0) as u64)
+    );
+    let (hits, misses) = (n("mem_hits"), n("mem_misses"));
+    let ratio = if hits + misses > 0 {
+        100.0 * hits as f64 / (hits + misses) as f64
+    } else {
+        0.0
+    };
+    println!(
+        "  hot mem: {hits} hit(s) / {misses} miss(es) ({ratio:.0}% hit \
+         ratio), {} of {}",
+        human_bytes(n("mem_bytes").max(0) as u64),
+        human_bytes(n("mem_budget").max(0) as u64)
+    );
+    println!(
+        "  tasks:   {} open / {} claimed / {} done; {} queue(s) live, \
+         {} retired",
+        n("tasks_open"),
+        n("tasks_claimed"),
+        n("tasks_done"),
+        n("queues"),
+        n("queues_retired")
+    );
+    let snap = m
+        .get("registry")
+        .and_then(|r| Snapshot::from_json(r).ok())
+        .unwrap_or_default();
+    let (stages, series): (Vec<_>, Vec<_>) = percentile_lines(&snap)
+        .into_iter()
+        .partition(|l| l.starts_with("stage."));
+    if !stages.is_empty() {
+        println!("  stages:");
+        for line in stages {
+            println!("    {line}");
+        }
+    }
+    if !series.is_empty() {
+        println!("  series:");
+        for line in series {
+            println!("    {line}");
+        }
+    }
+    let workers = m.get("workers_live").and_then(Json::as_arr).unwrap_or(&[]);
+    println!("  workers: {} live", workers.len());
+    for w in workers {
+        let wn = |k: &str| w.get(k).and_then(Json::as_i64).unwrap_or(0);
+        println!(
+            "    {:<21} idle {:>6}ms  claims {:>4}  done {:>4}",
+            w.get("addr").and_then(Json::as_str).unwrap_or("?"),
+            wn("idle_ms"),
+            wn("claims"),
+            wn("done")
+        );
+    }
+    let samples = m
+        .get("ring")
+        .and_then(|r| r.get("samples"))
+        .and_then(Json::as_arr)
+        .map(|a| a.len())
+        .unwrap_or(0);
+    println!("  ring:    {samples} snapshot sample(s)");
+}
+
+/// `mlonmcu metrics export` — dump recorded metrics as Prometheus
+/// exposition text or JSON. With `--connect` (or `remote.connect`) the
+/// source is the serve daemon's fleet-wide registry; otherwise a
+/// session's exported `metrics.json` (`--session N`, default latest).
+fn cmd_metrics(rest: &[String]) -> Result<i32> {
+    let usage = "usage: mlonmcu metrics export \
+                 [--format prometheus|json] [--session N] \
+                 [--connect HOST:PORT]";
+    if rest.first().map(String::as_str) != Some("export") {
+        bail!("{usage}");
+    }
+    let p = Parsed::parse(
+        &rest[1..],
+        &[
+            ("--format", true),
+            ("--session", true),
+            ("--connect", true),
+            ("-c", true),
+            ("--config", true),
+        ],
+    )?;
+    let format =
+        p.one("--format").map(String::as_str).unwrap_or("prometheus");
+    let env = env_with_cache_flags(&p)?;
+    let snap = match env.remote_connect() {
+        Some(addr) => {
+            let m = remote_client(&env, &addr).metrics()?;
+            m.get("registry")
+                .and_then(|r| Snapshot::from_json(r).ok())
+                .unwrap_or_default()
+        }
+        None => {
+            let sessions = env.sessions_dir();
+            let id = match p.one("--session") {
+                Some(s) => s.parse::<usize>().context("--session")?,
+                None => {
+                    let mut id = 0usize;
+                    while sessions.join(format!("{}", id + 1)).exists() {
+                        id += 1;
+                    }
+                    id
+                }
+            };
+            let path = sessions.join(format!("{id}")).join("metrics.json");
+            crate::util::metrics::read_snapshot(&path).with_context(|| {
+                format!(
+                    "no metrics at {} (is [metrics] enabled?)",
+                    path.display()
+                )
+            })?
+        }
+    };
+    match format {
+        "prometheus" => print!("{}", snap.to_prometheus()),
+        "json" => println!("{}", snap.to_json().to_string()),
+        other => bail!("unknown metrics format '{other}'\n{usage}"),
+    }
     Ok(0)
 }
 
@@ -724,6 +970,42 @@ mod tests {
         ];
         assert_eq!(main_with_args(&args).unwrap(), 0);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn top_requires_a_server_address() {
+        let err = main_with_args(&["top".into()]).unwrap_err();
+        assert!(err.to_string().contains("--connect"), "{err}");
+    }
+
+    #[test]
+    fn metrics_requires_the_export_action() {
+        assert!(main_with_args(&["metrics".into()]).is_err());
+        assert!(main_with_args(&[
+            "metrics".into(),
+            "frobnicate".into(),
+        ])
+        .is_err());
+    }
+
+    #[test]
+    fn percentile_lines_render_us_series_as_ms() {
+        let mut snap = Snapshot::default();
+        snap.hists.insert(
+            "stage.build.us".into(),
+            crate::util::metrics::Histogram::from_values([1000, 2000]),
+        );
+        snap.hists.insert(
+            "wire.server.req.bytes".into(),
+            crate::util::metrics::Histogram::from_values([64]),
+        );
+        let lines = percentile_lines(&snap);
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].starts_with("stage.build.us"), "{}", lines[0]);
+        assert!(lines[0].contains("p95="), "{}", lines[0]);
+        assert!(lines[0].contains("ms"), "{}", lines[0]);
+        assert!(lines[1].contains("n=1"), "{}", lines[1]);
+        assert!(!lines[1].contains("ms"), "{}", lines[1]);
     }
 
     #[test]

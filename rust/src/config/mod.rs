@@ -70,6 +70,16 @@ idle_ms = 300000
 # per-stage spans from every local/remote worker; empty = tracing off
 file = ""
 
+[metrics]
+# process-global metrics registry (counters/gauges/log2 histograms):
+# sessions write metrics.json next to the report (display-only —
+# report bytes are untouched), workers merge their numbers back, and
+# the serve daemon samples the registry every interval_ms into a
+# bounded ring of `ring` timestamped deltas for `mlonmcu top`
+enabled = true
+interval_ms = 1000
+ring = 128
+
 [store]
 # stale-lock mtime fallback of the env-store lock file: a lock whose
 # owner cannot be probed is broken after this age (dead-pid locks
@@ -312,6 +322,32 @@ impl Environment {
         (!s.is_empty()).then(|| self.root.join(s))
     }
 
+    /// Whether the process-global metrics registry records at all
+    /// (`metrics.enabled`, default true; disabled, every recording
+    /// call is one relaxed atomic load).
+    pub fn metrics_enabled(&self) -> bool {
+        match self.raw("metrics", "enabled") {
+            Some(TomlValue::Bool(b)) => b,
+            Some(TomlValue::Str(s)) => {
+                !matches!(s.as_str(), "false" | "0" | "no")
+            }
+            Some(_) | None => true,
+        }
+    }
+
+    /// Snapshot-ring sampling period of the serve daemon in
+    /// milliseconds (`metrics.interval_ms`).
+    pub fn metrics_interval_ms(&self) -> u64 {
+        self.get_i64("metrics", "interval_ms", 1000).clamp(50, 3_600_000)
+            as u64
+    }
+
+    /// Bounded sample count of the serve daemon's snapshot ring
+    /// (`metrics.ring`).
+    pub fn metrics_ring(&self) -> usize {
+        self.get_i64("metrics", "ring", 128).clamp(1, 100_000) as usize
+    }
+
     /// Fault-injection plan spec (`faults.plan`, or `--faults` /
     /// `MLONMCU_FAULTS` via an override). `None` (the default) keeps
     /// the registry disarmed — every fault check is then one relaxed
@@ -512,6 +548,29 @@ mod tests {
         assert_eq!(env.retry_attempts(), 1, "attempts clamp to >= 1");
         assert_eq!(env.retry_deadline_ms(), 1500);
         assert_eq!(env.store_lock_stale_ms(), 500);
+    }
+
+    #[test]
+    fn metrics_knobs_default_on_and_clamp() {
+        let env = Environment {
+            root: PathBuf::from("/x"),
+            doc: TomlDoc::parse(DEFAULT_TEMPLATE).unwrap(),
+            overrides: BTreeMap::new(),
+        };
+        // template ships with metrics on, 1s sampling, 128-deep ring
+        assert!(env.metrics_enabled());
+        assert_eq!(env.metrics_interval_ms(), 1000);
+        assert_eq!(env.metrics_ring(), 128);
+        let env = env
+            .with_overrides(&[
+                "metrics.enabled=false".into(),
+                "metrics.interval_ms=1".into(),
+                "metrics.ring=0".into(),
+            ])
+            .unwrap();
+        assert!(!env.metrics_enabled());
+        assert_eq!(env.metrics_interval_ms(), 50, "interval clamps up");
+        assert_eq!(env.metrics_ring(), 1, "ring clamps to >= 1");
     }
 
     #[test]

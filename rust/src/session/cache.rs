@@ -303,6 +303,7 @@ impl ArtifactCache {
         if !self.enabled {
             return None;
         }
+        let clock = crate::util::metrics::clock();
         let mut span = crate::util::trace::span("cache", "lookup")
             .arg("stage", stage.name())
             .arg_with("key", || key.hex());
@@ -312,6 +313,7 @@ impl ArtifactCache {
                 inner.stats.hits += 1;
                 touch(&mut inner.lru, key.0);
                 span.note("outcome", "mem-hit");
+                clock.observe("cache.mem_hit.us");
                 return Some(a);
             }
         }
@@ -328,6 +330,7 @@ impl ArtifactCache {
                 inner.stats.disk_hits += 1;
                 insert_mem(&mut inner, self.capacity, key, artifact.clone());
                 span.note("outcome", "store-hit");
+                clock.observe("cache.store_hit.us");
                 return Some(artifact);
             }
             Some(StoreLookup::Corrupt) => store_corrupt = true,
@@ -365,6 +368,7 @@ impl ArtifactCache {
                     }
                 }
                 span.note("outcome", "remote-hit");
+                clock.observe("cache.remote_hit.us");
                 return Some(artifact);
             }
             Some(RemoteLookup::Miss) => inner.stats.remote_misses += 1,
@@ -373,6 +377,7 @@ impl ArtifactCache {
         }
         inner.stats.misses += 1;
         span.note("outcome", "miss");
+        clock.observe("cache.miss.us");
         None
     }
 

@@ -480,8 +480,10 @@ pub fn execute_remote(
         ("format", Json::Num(persist::FORMAT_VERSION as f64)),
         ("lease_ms", Json::Num(lease_ms as f64)),
         // traced queues tell every remote worker to record spans and
-        // ship them back (drained by this parent's poll loop)
+        // ship them back (drained by this parent's poll loop); metric
+        // snapshots ride the same two paths
         ("trace", Json::Bool(crate::util::trace::enabled())),
+        ("metrics", Json::Bool(crate::util::metrics::enabled())),
         ("faults", Json::Str(fault_spec)),
         ("deadline_ms", Json::Num(env.retry_deadline_ms() as f64)),
         (
@@ -547,6 +549,13 @@ pub fn execute_remote(
                     .filter_map(|e| crate::util::trace::span_from_event(e).ok())
                     .collect(),
             );
+        }
+        // remote workers' metric snapshots ride the same responses;
+        // merge into this parent's registry (no-op while metrics off)
+        for doc in poll.get("metrics").and_then(Json::as_arr).unwrap_or(&[]) {
+            if let Ok(snap) = crate::util::metrics::Snapshot::from_json(doc) {
+                crate::util::metrics::record_all(&snap);
+            }
         }
         let as_count = |k: &str| {
             poll.get(k).and_then(Json::as_i64).unwrap_or(0).max(0) as usize
@@ -675,6 +684,12 @@ fn remote_step(ctx: &RemoteCtx, queue: u64) -> Result<Step> {
     if traced && ctx.ship_spans {
         crate::util::trace::enable();
     }
+    // a metered queue does the same for the metrics registry; snapshots
+    // drain back to the dispatching parent per task
+    let metered = matches!(doc.get("metrics"), Some(Json::Bool(true)));
+    if metered && ctx.ship_spans {
+        crate::util::metrics::enable();
+    }
     // a fault-planned queue arms the same deterministic plan in this
     // worker. Only workers install from the claim — the dispatching
     // parent already armed its own registry — and re-installing an
@@ -774,6 +789,15 @@ fn remote_step(ctx: &RemoteCtx, queue: u64) -> Result<Step> {
             }
         }
     }
+    // metric snapshots follow the same ship-before-done discipline
+    if metered && ctx.ship_spans {
+        let snap = crate::util::metrics::drain();
+        if !snap.is_empty() {
+            if let Err(e) = ctx.client.metrics_put(qid, &snap) {
+                crate::log_warn!("worker: metrics not shipped ({e:#})");
+            }
+        }
+    }
     ctx.client.done(qid, tid as u64, &done.to_json(tid))?;
     Ok(Step::Worked)
 }
@@ -825,6 +849,10 @@ fn run_remote_task(
         || execute_remote_stage(ctx, t, tune, prefetched),
     );
     let secs = watch.elapsed_s();
+    crate::util::metrics::observe(
+        crate::util::metrics::stage_metric(t.kind.name()),
+        (secs * 1e6) as u64,
+    );
     let mut done = match result {
         Ok(artifact) => {
             // server first — it is the fleet's exchange medium and the
@@ -1252,6 +1280,12 @@ pub fn worker_main(queue_dir: &Path, env: &Environment) -> Result<i32> {
     if traced {
         crate::util::trace::enable();
     }
+    // metrics follow the same session-wide scheme: workers record into
+    // their own registry and leave `queue/metrics-<pid>.json` behind
+    let metered = env.metrics_enabled();
+    if metered {
+        crate::util::metrics::enable();
+    }
     // fault plans travel the same way (`faults.plan` override / config)
     // and `exit` rules only arm in worker processes
     crate::util::faults::set_worker_role();
@@ -1283,6 +1317,13 @@ pub fn worker_main(queue_dir: &Path, env: &Environment) -> Result<i32> {
         let spans = crate::util::trace::drain();
         if let Err(e) = crate::util::trace::write_spans(&path, spans) {
             crate::log_warn!("worker: trace spans not written ({e:#})");
+        }
+    }
+    if metered {
+        let path = queue_dir.join(crate::util::metrics::worker_file_name());
+        let snap = crate::util::metrics::drain();
+        if let Err(e) = crate::util::metrics::write_snapshot(&path, &snap) {
+            crate::log_warn!("worker: metrics not written ({e:#})");
         }
     }
     result?;
@@ -1511,6 +1552,10 @@ fn run_stage_task(ctx: &WorkerCtx, t: &QueueTask) -> DoneRecord {
         || execute_stage(ctx, t),
     );
     let secs = watch.elapsed_s();
+    crate::util::metrics::observe(
+        crate::util::metrics::stage_metric(t.kind.name()),
+        (secs * 1e6) as u64,
+    );
     let mut done = match result {
         Ok(artifact) => {
             if let Err(e) = ctx.store.save(t.key, &artifact) {
@@ -1621,6 +1666,8 @@ struct Lease {
     /// Trace span covering the whole hold (claim win → release); lost
     /// claim attempts record nothing, so contention stays off traces.
     _span: crate::util::trace::SpanGuard,
+    /// Metered hold duration, observed as `lease.hold.us` on release.
+    hold: crate::util::metrics::Clock,
 }
 
 impl Lease {
@@ -1659,7 +1706,9 @@ impl Lease {
                         Ok(s) if s.trim() == token => {
                             let _beat =
                                 crate::util::trace::span("lease", "heartbeat");
+                            let touch = crate::util::metrics::clock();
                             let _ = fs::write(&path, token.as_bytes());
+                            touch.observe("lease.heartbeat.us");
                         }
                         _ => break, // lost ownership: stop touching it
                     }
@@ -1672,6 +1721,7 @@ impl Lease {
             stop,
             heartbeat: Some(heartbeat),
             _span: span,
+            hold: crate::util::metrics::clock(),
         })
     }
 }
@@ -1687,6 +1737,7 @@ impl Drop for Lease {
         if ours {
             let _ = fs::remove_file(&self.path);
         }
+        self.hold.observe("lease.hold.us");
     }
 }
 

@@ -275,6 +275,14 @@ impl Session {
         if trace_file.is_some() {
             crate::util::trace::enable();
         }
+        // metrics share that lifecycle: on for the whole call, worker
+        // registries merged back at the end, exported as metrics.json
+        // next to the report. Display-only — the report files never
+        // gain or lose a byte from metering.
+        let metered = self.env.metrics_enabled();
+        if metered {
+            crate::util::metrics::enable();
+        }
         // fault plans work the same way: installed for the whole call,
         // forwarded to local workers via `-c` overrides and to remote
         // workers through the served queue's claim payload
@@ -478,6 +486,34 @@ impl Session {
         // authoritative and the runs already succeeded
         if let Err(e) = self.cache.write_index() {
             crate::log_warn!("cache index not written: {e}");
+        }
+        if metered {
+            // local worker processes leave their registries behind as
+            // queue/<n>/metrics-<pid>.json snapshots (remote workers'
+            // snapshots already merged through the poll loop); fold
+            // them in and consume the files, then export
+            let mut snap = crate::util::metrics::drain();
+            if let Ok(queues) = std::fs::read_dir(self.dir.join("queue")) {
+                for sub in queues.flatten() {
+                    let qdir = sub.path();
+                    snap.merge(&crate::util::metrics::collect_dir(&qdir));
+                    crate::util::metrics::remove_snapshot_files(&qdir);
+                }
+            }
+            let path = self.dir.join("metrics.json");
+            match crate::util::metrics::write_snapshot(&path, &snap) {
+                Ok(()) => crate::log_info!(
+                    "session {}: exported {} metric series to {}",
+                    self.id,
+                    snap.counters.len() + snap.gauges.len() + snap.hists.len(),
+                    path.display()
+                ),
+                Err(e) => crate::log_warn!(
+                    "metrics not written to {} ({e:#})",
+                    path.display()
+                ),
+            }
+            crate::util::metrics::disable();
         }
         Ok(report)
     }

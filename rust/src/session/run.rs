@@ -324,6 +324,10 @@ pub fn stage_tail(
     };
     drop(span);
     rec.stages.compile_s = watch.elapsed_s();
+    crate::util::metrics::observe(
+        "stage.compile.us",
+        (rec.stages.compile_s * 1e6) as u64,
+    );
 
     // ----------------------------------------------------------- Run --
     let watch = Stopwatch::start();
@@ -347,6 +351,10 @@ pub fn stage_tail(
     };
     drop(span);
     rec.stages.run_s = watch.elapsed_s();
+    crate::util::metrics::observe(
+        "stage.run.us",
+        (rec.stages.run_s * 1e6) as u64,
+    );
 
     // -------------------------------------------------- Postprocess --
     if spec.features.validate() {

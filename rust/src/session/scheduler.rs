@@ -619,6 +619,10 @@ fn run_task(
     span.note("outcome", if result.is_ok() { "ok" } else { "failed" });
     drop(span);
     let secs = watch.elapsed_s();
+    crate::util::metrics::observe(
+        crate::util::metrics::stage_metric(task.kind.stage_name()),
+        (secs * 1e6) as u64,
+    );
     match result {
         Ok(artifact) => {
             {

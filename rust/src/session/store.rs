@@ -173,6 +173,7 @@ impl EnvStore {
     pub fn load(&self, key: StageKey, stage: CachedStage) -> StoreLookup {
         use crate::util::faults::{self, FaultKind};
         self.reads.fetch_add(1, Ordering::Relaxed);
+        let clock = crate::util::metrics::clock();
         let mut span = crate::util::trace::span("store", "load")
             .arg("stage", stage.name())
             .arg_with("key", || key.hex());
@@ -203,6 +204,11 @@ impl EnvStore {
                     .or_insert(Entry { stage, bytes: bytes.len() as u64, seq })
                     .seq = seq;
                 span.note("outcome", "hit");
+                clock.observe("store.load.us");
+                crate::util::metrics::observe(
+                    "store.load.bytes",
+                    bytes.len() as u64,
+                );
                 StoreLookup::Hit(artifact)
             }
             Err(e) => {
@@ -277,6 +283,7 @@ impl EnvStore {
         bytes: &[u8],
     ) -> Result<()> {
         use crate::util::faults::{self, FaultKind};
+        let clock = crate::util::metrics::clock();
         let _span = crate::util::trace::span("store", "save")
             .arg("stage", stage.name())
             .arg_with("key", || key.hex());
@@ -309,7 +316,15 @@ impl EnvStore {
         let entry = Entry { stage, bytes: bytes.len() as u64, seq };
         ix.entries.insert(key.0, entry);
         self.evict_until_within_budget(&mut ix, Some(key.0));
-        self.write_index_locked(&mut ix)
+        let result = self.write_index_locked(&mut ix);
+        if result.is_ok() {
+            clock.observe("store.save.us");
+            crate::util::metrics::observe(
+                "store.save.bytes",
+                bytes.len() as u64,
+            );
+        }
+        result
     }
 
     /// Evict least-recently-used entries until the budget fits,

@@ -76,6 +76,7 @@ use crate::data::Json;
 use crate::session::cache::{Artifact, CachedStage, HotCache, StageKey};
 use crate::session::persist;
 use crate::session::store::EnvStore;
+use crate::util::metrics;
 use crate::util::XorShift64;
 
 /// Request frame magic.
@@ -109,6 +110,15 @@ pub const OP_MGET: u8 = 12;
 /// stage entry and its deps'), collapsing the claim → N×GET chatter
 /// of a stage execution into one frame.
 pub const OP_CLAIM_DEPS: u8 = 13;
+/// Fleet metrics pull (`mlonmcu top`, `metrics export --connect`):
+/// one JSON doc with the OP_STATS fields plus the daemon's merged
+/// metrics registry, the snapshot ring and per-worker liveness.
+pub const OP_METRICS: u8 = 14;
+/// Ship a worker's drained metrics snapshot for a served queue
+/// (`qid u64 | snapshot JSON`): merged into the daemon's registry so
+/// `top` sees the whole fleet, and pooled until the parent's next
+/// POLL drains it into the session's `metrics.json`.
+pub const OP_METRICS_PUT: u8 = 15;
 
 // Response statuses.
 pub const ST_OK: u8 = 0;
@@ -202,6 +212,9 @@ struct ServedQueue {
     /// Parent runs with tracing on: claimers enable their tracer and
     /// ship spans back (`OP_TRACE_PUT`).
     trace: bool,
+    /// Parent runs with metrics on: claimers enable their registry and
+    /// ship drained snapshots back (`OP_METRICS_PUT`).
+    metrics: bool,
     /// Fault plan of the dispatching parent; rides every claim so the
     /// whole fleet arms the same deterministic plan ("" = none).
     faults: String,
@@ -212,6 +225,8 @@ struct ServedQueue {
     tasks: Vec<ServedTask>,
     /// Worker spans pooled until the parent's next POLL drains them.
     spans: Vec<Json>,
+    /// Worker metrics snapshots pooled the same way.
+    metric_docs: Vec<Json>,
     /// Last claim or completion — parents use the stall age to decide
     /// when to self-drain.
     last_progress: Instant,
@@ -225,6 +240,49 @@ struct Shared {
     conns: HashMap<u64, TcpStream>,
     /// Connections that ever issued a CLAIM — the served fleet size.
     workers: HashSet<u64>,
+    /// Per-worker liveness (`mlonmcu top`): keyed like `workers`,
+    /// dropped with the connection.
+    fleet: HashMap<u64, FleetWorker>,
+}
+
+/// Liveness row of one claiming connection, served by `OP_METRICS`.
+struct FleetWorker {
+    addr: String,
+    last_seen: Instant,
+    claims: u64,
+    done: u64,
+}
+
+impl FleetWorker {
+    fn to_json(&self) -> Json {
+        let idle_ms = u64::try_from(self.last_seen.elapsed().as_millis())
+            .unwrap_or(u64::MAX);
+        Json::obj(vec![
+            ("addr", Json::Str(self.addr.clone())),
+            ("idle_ms", Json::Num(idle_ms as f64)),
+            ("claims", Json::Num(self.claims as f64)),
+            ("done", Json::Num(self.done as f64)),
+        ])
+    }
+}
+
+/// Touch (creating if needed) the liveness row of a claiming
+/// connection. The peer address comes from the live conn map.
+fn touch_fleet(s: &mut Shared, conn_id: u64) -> &mut FleetWorker {
+    let addr = s
+        .conns
+        .get(&conn_id)
+        .and_then(|c| c.peer_addr().ok())
+        .map(|a| a.to_string())
+        .unwrap_or_else(|| format!("conn-{conn_id}"));
+    let w = s.fleet.entry(conn_id).or_insert(FleetWorker {
+        addr,
+        last_seen: Instant::now(),
+        claims: 0,
+        done: 0,
+    });
+    w.last_seen = Instant::now();
+    w
 }
 
 /// Serve-tier resource knobs, from the `[serve]` config section.
@@ -241,13 +299,23 @@ pub struct ServeConfig {
     /// a connection that sends nothing for this long is closed and
     /// its claims reclaimed.
     pub idle_ms: u64,
+    /// Snapshot-ring sampling period (`metrics.interval_ms`).
+    pub metrics_interval_ms: u64,
+    /// Bounded sample count of the snapshot ring (`metrics.ring`).
+    pub metrics_ring: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
         // idle_ms defaults off: embedded test servers keep claim
         // connections silent for long stretches by design
-        ServeConfig { mem_bytes: 64 << 20, max_conns: 256, idle_ms: 0 }
+        ServeConfig {
+            mem_bytes: 64 << 20,
+            max_conns: 256,
+            idle_ms: 0,
+            metrics_interval_ms: 1000,
+            metrics_ring: 128,
+        }
     }
 }
 
@@ -257,6 +325,8 @@ impl ServeConfig {
             mem_bytes: env.serve_mem_bytes(),
             max_conns: env.serve_max_conns(),
             idle_ms: env.serve_idle_ms(),
+            metrics_interval_ms: env.metrics_interval_ms(),
+            metrics_ring: env.metrics_ring(),
         }
     }
 }
@@ -277,6 +347,9 @@ struct ServeState {
     /// Completed queues dropped after their final drain.
     queues_retired: AtomicU64,
     started: Instant,
+    /// Bounded ring of timestamped registry deltas, sampled every
+    /// `metrics_interval_ms` while the daemon runs.
+    ring: Mutex<metrics::SnapshotRing>,
 }
 
 /// The `mlonmcu serve` daemon: one `EnvStore` fronted by a bounded
@@ -319,13 +392,15 @@ impl Server {
                     blobs: HashMap::new(),
                     conns: HashMap::new(),
                     workers: HashSet::new(),
+                    fleet: HashMap::new(),
                 }),
                 mem: Mutex::new(HotCache::new(cfg.mem_bytes)),
-                cfg,
                 ops: AtomicU64::new(0),
                 bytes_served: AtomicU64::new(0),
                 queues_retired: AtomicU64::new(0),
                 started: Instant::now(),
+                ring: Mutex::new(metrics::SnapshotRing::new(cfg.metrics_ring)),
+                cfg,
             }),
             stop: Arc::new(AtomicBool::new(false)),
         })
@@ -337,6 +412,7 @@ impl Server {
 
     /// Accept loop; blocks until shut down (or an accept error).
     pub fn run(self) -> Result<()> {
+        self.spawn_sampler();
         let mut next_conn = 0u64;
         for stream in self.listener.incoming() {
             if self.stop.load(Ordering::SeqCst) {
@@ -361,6 +437,40 @@ impl Server {
             std::thread::spawn(move || serve_conn(state, conn_id, stream));
         }
         Ok(())
+    }
+
+    /// Detached sampler: every `metrics_interval_ms` the registry is
+    /// snapshotted into the bounded delta ring `OP_METRICS` serves.
+    /// Sleeps in short steps so a shutdown is noticed quickly, and
+    /// exits with the stop flag. With metrics disabled the snapshot
+    /// is empty and the samples are inert.
+    fn spawn_sampler(&self) {
+        let state = Arc::clone(&self.state);
+        let stop = Arc::clone(&self.stop);
+        std::thread::spawn(move || {
+            let interval =
+                Duration::from_millis(state.cfg.metrics_interval_ms.max(50));
+            let step = Duration::from_millis(50).min(interval);
+            let mut slept = Duration::ZERO;
+            while !stop.load(Ordering::SeqCst) {
+                std::thread::sleep(step);
+                slept += step;
+                if slept < interval {
+                    continue;
+                }
+                slept = Duration::ZERO;
+                let now_ms = std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .map(|d| d.as_millis() as u64)
+                    .unwrap_or(0);
+                let snap = metrics::snapshot();
+                state
+                    .ring
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .sample(now_ms, snap);
+            }
+        });
     }
 
     /// Bind + run on a background thread; the handle shuts it down.
@@ -425,7 +535,11 @@ fn serve_conn(state: Arc<ServeState>, conn_id: u64, mut stream: TcpStream) {
             Ok(f) => f,
             Err(_) => break, // EOF / reset / idle timeout / garbage
         };
+        let clock = metrics::clock();
         let (status, body) = handle_request(&state, conn_id, version, op, &payload);
+        clock.observe_fn(|| format!("wire.server.{}.us", op_name(op)));
+        metrics::observe("wire.server.req.bytes", payload.len() as u64);
+        metrics::observe("wire.server.rsp.bytes", body.len() as u64);
         state.ops.fetch_add(1, Ordering::Relaxed);
         state.bytes_served.fetch_add(body.len() as u64, Ordering::Relaxed);
         if write_frame(&mut stream, RSP_MAGIC, status, &body).is_err() {
@@ -450,6 +564,7 @@ fn release_conn(state: &ServeState, conn_id: u64) {
         }
     }
     s.workers.remove(&conn_id);
+    s.fleet.remove(&conn_id);
     s.conns.remove(&conn_id);
 }
 
@@ -473,7 +588,7 @@ fn handle_request(
         OP_QPUSH => op_qpush(state, payload),
         OP_CLAIM => op_claim(state, conn_id, payload),
         OP_BEAT => op_beat(state, conn_id, payload),
-        OP_DONE => op_done(state, payload),
+        OP_DONE => op_done(state, conn_id, payload),
         OP_POLL => op_poll(state, conn_id, payload),
         OP_BLOB_PUT => op_blob_put(state, payload),
         OP_BLOB_GET => op_blob_get(state, payload),
@@ -481,6 +596,8 @@ fn handle_request(
         OP_TRACE_PUT => op_trace_put(state, payload),
         OP_MGET => op_mget(state, payload),
         OP_CLAIM_DEPS => op_claim_deps(state, conn_id, payload),
+        OP_METRICS => op_metrics(state),
+        OP_METRICS_PUT => op_metrics_put(state, conn_id, payload),
         _ => (ST_ERR, Vec::new()),
     }
 }
@@ -599,6 +716,7 @@ fn op_qpush(state: &ServeState, payload: &[u8]) -> (u8, Vec<u8>) {
         .clamp(50, 600_000) as u64;
     let tune = doc.get("tune").cloned().unwrap_or(Json::Null);
     let trace = matches!(doc.get("trace"), Some(Json::Bool(true)));
+    let metrics_on = matches!(doc.get("metrics"), Some(Json::Bool(true)));
     let faults = doc
         .get("faults")
         .and_then(Json::as_str)
@@ -646,10 +764,12 @@ fn op_qpush(state: &ServeState, payload: &[u8]) -> (u8, Vec<u8>) {
             lease_ms,
             tune,
             trace,
+            metrics: metrics_on,
             faults,
             deadline_ms,
             tasks,
             spans: Vec::new(),
+            metric_docs: Vec::new(),
             last_progress: Instant::now(),
         },
     );
@@ -684,6 +804,7 @@ fn try_claim(s: &mut Shared, conn_id: u64, want: u64) -> Option<Json> {
     // even an idle claimer is part of the fleet: the parent must see
     // it in the worker count before deciding to drain the queue itself
     s.workers.insert(conn_id);
+    touch_fleet(s, conn_id);
     let mut qids: Vec<u64> = s.queues.keys().copied().collect();
     qids.sort_unstable();
     for qid in qids {
@@ -711,6 +832,7 @@ fn try_claim(s: &mut Shared, conn_id: u64, want: u64) -> Option<Json> {
         };
         q.last_progress = Instant::now();
         let task = q.tasks[i].doc.clone();
+        let metrics_on = q.metrics;
         let deps_done: Vec<Json> = q.tasks[i]
             .deps
             .iter()
@@ -721,16 +843,21 @@ fn try_claim(s: &mut Shared, conn_id: u64, want: u64) -> Option<Json> {
                 })
             })
             .collect();
-        return Some(Json::obj(vec![
+        let claim = Json::obj(vec![
             ("queue", Json::Num(qid as f64)),
             ("lease_ms", Json::Num(q.lease_ms as f64)),
             ("tune", q.tune.clone()),
             ("trace", Json::Bool(q.trace)),
+            ("metrics", Json::Bool(metrics_on)),
             ("faults", Json::Str(q.faults.clone())),
             ("deadline_ms", Json::Num(q.deadline_ms as f64)),
             ("task", task),
             ("deps_done", Json::Arr(deps_done)),
-        ]));
+        ]);
+        if let Some(w) = s.fleet.get_mut(&conn_id) {
+            w.claims += 1;
+        }
+        return Some(claim);
     }
     None
 }
@@ -856,7 +983,11 @@ fn op_beat(
     (ST_MISS, Vec::new())
 }
 
-fn op_done(state: &ServeState, payload: &[u8]) -> (u8, Vec<u8>) {
+fn op_done(
+    state: &ServeState,
+    conn_id: u64,
+    payload: &[u8],
+) -> (u8, Vec<u8>) {
     let Some((qid, tid)) = parse_two_u64(payload) else {
         return (ST_ERR, Vec::new());
     };
@@ -867,6 +998,10 @@ fn op_done(state: &ServeState, payload: &[u8]) -> (u8, Vec<u8>) {
         return (ST_ERR, Vec::new());
     };
     let mut s = lock(state);
+    if let Some(w) = s.fleet.get_mut(&conn_id) {
+        w.last_seen = Instant::now();
+        w.done += 1;
+    }
     let Some(q) = s.queues.get_mut(&qid) else {
         // a straggler reporting into a retired queue: its result was
         // already superseded and drained — dropping it is the queue
@@ -925,8 +1060,10 @@ fn op_poll(
     // through u64 so an absurd clock can only saturate, never wrap
     let stalled_ms = u64::try_from(q.last_progress.elapsed().as_millis())
         .unwrap_or(u64::MAX);
-    // worker spans are handed to the poller exactly once
+    // worker spans and metrics snapshots are handed to the poller
+    // exactly once
     let spans = std::mem::take(&mut q.spans);
+    let metric_docs = std::mem::take(&mut q.metric_docs);
     let rsp = Json::obj(vec![
         ("total", Json::Num(q.tasks.len() as f64)),
         ("open", Json::Num(open as f64)),
@@ -935,6 +1072,7 @@ fn op_poll(
         ("stalled_ms", Json::Num(stalled_ms as f64)),
         ("done", Json::Arr(done)),
         ("spans", Json::Arr(spans)),
+        ("metrics", Json::Arr(metric_docs)),
     ]);
     // every task has reported and this poll hands over the full
     // result set (done records are cumulative, spans just drained):
@@ -995,6 +1133,13 @@ fn op_blob_get(state: &ServeState, payload: &[u8]) -> (u8, Vec<u8>) {
 }
 
 fn op_stats(state: &ServeState) -> (u8, Vec<u8>) {
+    let doc = Json::obj(stats_fields(state));
+    (ST_OK, doc.to_string().into_bytes())
+}
+
+/// The OP_STATS field set, shared with OP_METRICS (which extends it
+/// with the registry, the snapshot ring and per-worker liveness).
+fn stats_fields(state: &ServeState) -> Vec<(&'static str, Json)> {
     let (blobs, queues, workers, conns, open, claimed, done) = {
         let s = lock(state);
         let (mut open, mut claimed, mut done) = (0usize, 0usize, 0usize);
@@ -1026,7 +1171,7 @@ fn op_stats(state: &ServeState) -> (u8, Vec<u8>) {
     let uptime_ms = u64::try_from(state.started.elapsed().as_millis())
         .unwrap_or(u64::MAX)
         .max(1);
-    let doc = Json::obj(vec![
+    vec![
         ("format", Json::Num(persist::FORMAT_VERSION as f64)),
         ("entries", Json::Num(st.entries as f64)),
         ("total_bytes", Json::Num(st.total_bytes as f64)),
@@ -1059,8 +1204,64 @@ fn op_stats(state: &ServeState) -> (u8, Vec<u8>) {
         ("tasks_open", Json::Num(open as f64)),
         ("tasks_claimed", Json::Num(claimed as f64)),
         ("tasks_done", Json::Num(done as f64)),
-    ]);
-    (ST_OK, doc.to_string().into_bytes())
+    ]
+}
+
+/// `OP_METRICS`: the OP_STATS fields plus the daemon's merged metrics
+/// registry (its own wire/store numbers and everything workers
+/// shipped via `OP_METRICS_PUT`), the snapshot ring of timestamped
+/// deltas, and one liveness row per claiming connection.
+fn op_metrics(state: &ServeState) -> (u8, Vec<u8>) {
+    let mut fields = stats_fields(state);
+    fields.push(("registry", metrics::snapshot().to_json()));
+    fields.push((
+        "ring",
+        state.ring.lock().unwrap_or_else(|e| e.into_inner()).to_json(),
+    ));
+    let workers_live = {
+        let s = lock(state);
+        let mut rows: Vec<&FleetWorker> = s.fleet.values().collect();
+        rows.sort_by(|a, b| a.addr.cmp(&b.addr));
+        Json::Arr(rows.iter().map(|w| w.to_json()).collect())
+    };
+    fields.push(("workers_live", workers_live));
+    (ST_OK, Json::obj(fields).to_string().into_bytes())
+}
+
+/// Pool a worker's drained metrics snapshot (`qid u64 | snapshot
+/// JSON`) for the parent's next POLL, and merge it into the daemon's
+/// own registry so `mlonmcu top` sees fleet-wide distributions even
+/// after the queue is gone.
+fn op_metrics_put(
+    state: &ServeState,
+    conn_id: u64,
+    payload: &[u8],
+) -> (u8, Vec<u8>) {
+    if payload.len() < 8 {
+        return (ST_ERR, Vec::new());
+    }
+    let qid = u64::from_le_bytes(payload[..8].try_into().unwrap());
+    let Ok(text) = std::str::from_utf8(&payload[8..]) else {
+        return (ST_ERR, Vec::new());
+    };
+    let Ok(doc) = Json::parse(text) else {
+        return (ST_ERR, Vec::new());
+    };
+    let Ok(snap) = metrics::Snapshot::from_json(&doc) else {
+        return (ST_ERR, Vec::new());
+    };
+    metrics::record_all(&snap);
+    let mut s = lock(state);
+    if let Some(w) = s.fleet.get_mut(&conn_id) {
+        w.last_seen = Instant::now();
+    }
+    let Some(q) = s.queues.get_mut(&qid) else {
+        // retired queue: the poller is gone — the registry merge above
+        // already preserved the numbers for `top`
+        return (ST_MISS, Vec::new());
+    };
+    q.metric_docs.push(doc);
+    (ST_OK, Vec::new())
 }
 
 // ================================================================ client --
@@ -1234,6 +1435,7 @@ impl Client {
     pub fn request(&self, op: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
         let _span = crate::util::trace::span("transport", op_name(op))
             .arg("addr", self.cfg.addr.as_str());
+        let clock = metrics::clock();
         let mut last_err = None;
         for attempt in 0..=self.cfg.retries {
             if attempt > 0 {
@@ -1253,6 +1455,8 @@ impl Client {
                             pool.push(s);
                         }
                     }
+                    clock.observe_fn(|| format!("wire.client.{}.us", op_name(op)));
+                    metrics::observe("wire.client.rsp.bytes", r.1.len() as u64);
                     return Ok(r);
                 }
                 Err(e) => last_err = Some(e), // broken stream dropped
@@ -1269,6 +1473,7 @@ impl Client {
     fn request_pinned(&self, op: u8, payload: &[u8]) -> Result<(u8, Vec<u8>)> {
         let _span = crate::util::trace::span("transport", op_name(op))
             .arg("addr", self.cfg.addr.as_str());
+        let clock = metrics::clock();
         let mut last_err = None;
         for attempt in 0..=self.cfg.retries {
             if attempt > 0 {
@@ -1277,7 +1482,11 @@ impl Client {
             let mut slot =
                 self.queue_slot.lock().unwrap_or_else(|e| e.into_inner());
             match Self::attempt(&self.cfg, &mut slot, op, payload) {
-                Ok(r) => return Ok(r),
+                Ok(r) => {
+                    clock.observe_fn(|| format!("wire.client.{}.us", op_name(op)));
+                    metrics::observe("wire.client.rsp.bytes", r.1.len() as u64);
+                    return Ok(r);
+                }
                 Err(e) => {
                     // reconnecting means a new server-side identity:
                     // claims held by the dead stream are already being
@@ -1509,6 +1718,38 @@ impl Client {
         }
         Ok(())
     }
+
+    /// Fleet metrics pull (`mlonmcu top`, `metrics export --connect`).
+    /// `ST_MISS` means the server version-gated us.
+    pub fn metrics(&self) -> Result<Json> {
+        let (status, body) = self.request(OP_METRICS, &[])?;
+        if status == ST_MISS {
+            bail!("metrics refused: server speaks another format version");
+        }
+        if status != ST_OK {
+            bail!("metrics refused (status {status})");
+        }
+        Ok(Json::parse(std::str::from_utf8(&body)?)?)
+    }
+
+    /// Ship a drained metrics snapshot for a served queue. Workers
+    /// call this right before `done`, mirroring `trace_put`, so the
+    /// poll observing the completion also collects the numbers.
+    pub fn metrics_put(
+        &self,
+        queue: u64,
+        snap: &metrics::Snapshot,
+    ) -> Result<()> {
+        let mut payload = queue.to_le_bytes().to_vec();
+        payload.extend_from_slice(snap.to_json().to_string().as_bytes());
+        let (status, _) = self.request(OP_METRICS_PUT, &payload)?;
+        // MISS: queue already drained + retired (the server still
+        // merged the snapshot into its own registry), or version skew
+        if status != ST_OK && status != ST_MISS {
+            bail!("metrics put refused (status {status})");
+        }
+        Ok(())
+    }
 }
 
 /// Human-readable op name for transport spans and diagnostics.
@@ -1528,6 +1769,8 @@ pub fn op_name(op: u8) -> &'static str {
         OP_TRACE_PUT => "trace-put",
         OP_MGET => "mget",
         OP_CLAIM_DEPS => "claim-deps",
+        OP_METRICS => "metrics",
+        OP_METRICS_PUT => "metrics-put",
         _ => "op?",
     }
 }
@@ -1905,6 +2148,106 @@ mod tests {
             panic!("expected a task");
         };
         assert!(matches!(c.get("trace"), Some(Json::Bool(false))));
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn metrics_pull_merges_fleet_and_poll_drains_snapshots_once() {
+        let _g = metrics::test_gate();
+        metrics::enable();
+        let _ = metrics::drain();
+        let (server, _store, dir) = spawn_server("metricsq");
+        let client = Client::new(cfg(&server.addr));
+
+        // a metrics-flagged queue advertises the flag on its claims
+        let doc = Json::obj(vec![
+            ("lease_ms", Json::Num(400.0)),
+            ("metrics", Json::Bool(true)),
+            (
+                "tasks",
+                Json::Arr(vec![
+                    Json::obj(vec![
+                        ("id", Json::Num(1.0)),
+                        ("deps", Json::Arr(vec![])),
+                    ]),
+                    Json::obj(vec![
+                        ("id", Json::Num(2.0)),
+                        ("deps", Json::Arr(vec![])),
+                    ]),
+                ]),
+            ),
+        ]);
+        let qid = client.qpush(&doc).unwrap();
+        let Claim::Task(c) = client.claim(qid).unwrap() else {
+            panic!("expected a task");
+        };
+        assert!(matches!(c.get("metrics"), Some(Json::Bool(true))));
+
+        // a worker ships its drained snapshot; the server both pools
+        // it for the parent and merges it into its own registry
+        // names nothing else records: concurrent tests in this binary
+        // share the process-global registry while it is enabled here
+        let mut snap = metrics::Snapshot::default();
+        snap.counters.insert("test.fleet.hits".into(), 3);
+        snap.hists.insert(
+            "test.fleet.us".into(),
+            metrics::Histogram::from_values([100, 900]),
+        );
+        client.metrics_put(qid, &snap).unwrap();
+
+        let pulled = client.metrics().unwrap();
+        // OP_STATS fields ride along
+        assert_eq!(
+            pulled.get("format").and_then(Json::as_i64),
+            Some(persist::FORMAT_VERSION as i64)
+        );
+        assert_eq!(pulled.get("tasks_open").and_then(Json::as_i64), Some(1));
+        let reg = pulled.get("registry").expect("registry in metrics doc");
+        let merged = metrics::Snapshot::from_json(reg).unwrap();
+        assert_eq!(merged.counters["test.fleet.hits"], 3);
+        assert_eq!(merged.hists["test.fleet.us"].count, 2);
+        // the claiming connection shows up as a live worker row
+        let live = pulled.get("workers_live").and_then(Json::as_arr).unwrap();
+        assert_eq!(live.len(), 1);
+        assert_eq!(live[0].get("claims").and_then(Json::as_i64), Some(1));
+        assert!(live[0].get("addr").and_then(Json::as_str).is_some());
+        assert!(pulled.get("ring").and_then(|r| r.get("samples")).is_some());
+
+        // the parent's poll drains the pooled snapshot exactly once
+        let poll = client.poll(qid).unwrap();
+        let drained = poll.get("metrics").and_then(Json::as_arr).unwrap();
+        assert_eq!(drained.len(), 1);
+        let back = metrics::Snapshot::from_json(&drained[0]).unwrap();
+        assert_eq!(back.counters["test.fleet.hits"], 3);
+        let poll = client.poll(qid).unwrap();
+        assert!(poll
+            .get("metrics")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .is_empty());
+
+        metrics::disable();
+        let _ = metrics::drain();
+        server.shutdown();
+        std::fs::remove_dir_all(dir).unwrap();
+    }
+
+    #[test]
+    fn metrics_ops_version_skew_is_a_miss() {
+        let (server, _store, dir) = spawn_server("metricskew");
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        let mut head = [0u8; HEADER_LEN];
+        head[..4].copy_from_slice(REQ_MAGIC);
+        head[4..8].copy_from_slice(&(persist::FORMAT_VERSION + 1).to_le_bytes());
+        for op in [OP_METRICS, OP_METRICS_PUT] {
+            head[8] = op;
+            head[9..13].copy_from_slice(&0u32.to_le_bytes());
+            stream.write_all(&head).unwrap();
+            let (_, status, body) = read_frame(&mut stream, RSP_MAGIC).unwrap();
+            assert_eq!(status, ST_MISS, "op {op} must version-gate to a miss");
+            assert!(body.is_empty());
+        }
         server.shutdown();
         std::fs::remove_dir_all(dir).unwrap();
     }

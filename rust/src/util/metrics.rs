@@ -1,0 +1,1022 @@
+//! Process-global metrics registry: counters, gauges and log2-bucket
+//! latency/size histograms behind one relaxed atomic load.
+//!
+//! Every instrumented layer — stage execution
+//! (`scheduler.rs`/`dispatch.rs`/`run.rs`), the tiered artifact cache
+//! (`cache.rs`), environment-store I/O (`store.rs`), wire requests on
+//! both transport sides (`transport.rs`) and queue leases — records
+//! into this registry when metrics are enabled (`[metrics] enabled`,
+//! the default for sessions and the serve daemon). Disabled, every
+//! recording call is a single relaxed atomic load and **performs no
+//! allocation** (asserted by a counting-allocator unit test), the same
+//! contract as [`super::trace`] and [`super::faults`].
+//!
+//! [`Histogram`] keeps 64 fixed log2 buckets (bucket *i* counts values
+//! in `[2^i, 2^(i+1))`; bucket 0 also holds zero) plus **exact**
+//! count/sum/min/max, so percentile estimates interpolate inside one
+//! power-of-two bucket and clamp to the exact observed range.
+//! `trace summary` shares this percentile code: [`super::trace::aggregate`]
+//! feeds span durations through the same type.
+//!
+//! Fleet merging mirrors span merging: local worker processes write
+//! `metrics-<pid>.json` snapshot files into their queue dir
+//! ([`worker_file_name`], collected by [`collect_dir`]), remote
+//! workers ship drained snapshots over the transport
+//! (`OP_METRICS_PUT`), and the serve daemon samples its registry every
+//! `[metrics] interval_ms` into a bounded [`SnapshotRing`] of
+//! timestamped deltas served to `mlonmcu top` via `OP_METRICS`.
+//!
+//! Metrics never touch report bytes: sessions write `metrics.json`
+//! *next to* `report.md`/`report.csv`, whose serial-vs-sharded
+//! byte-identity holds with metrics on
+//! (`tests/dispatch_equivalence.rs`).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::data::Json;
+
+/// Number of log2 buckets; covers the whole `u64` range.
+pub const BUCKETS: usize = 64;
+
+/// Process-global on/off switch. Off by default; the only cost of a
+/// disabled registry is the relaxed load in [`enabled`].
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+static REGISTRY: Mutex<Registry> = Mutex::new(Registry::new());
+
+struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, i64>,
+    hists: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    const fn new() -> Registry {
+        Registry {
+            counters: BTreeMap::new(),
+            gauges: BTreeMap::new(),
+            hists: BTreeMap::new(),
+        }
+    }
+}
+
+/// Poison-tolerant registry lock: a panicking recorder thread must
+/// degrade to possibly-incomplete numbers, never wedge the process.
+fn lock() -> std::sync::MutexGuard<'static, Registry> {
+    REGISTRY.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn enable() {
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Add `delta` to the named counter. No-op (one relaxed load, no
+/// allocation) while disabled.
+pub fn counter(name: &str, delta: u64) {
+    if !enabled() {
+        return;
+    }
+    let mut r = lock();
+    match r.counters.get_mut(name) {
+        Some(v) => *v = v.saturating_add(delta),
+        None => {
+            r.counters.insert(name.to_string(), delta);
+        }
+    }
+}
+
+/// Set the named gauge to `value` (last write wins).
+pub fn gauge(name: &str, value: i64) {
+    if !enabled() {
+        return;
+    }
+    let mut r = lock();
+    match r.gauges.get_mut(name) {
+        Some(v) => *v = value,
+        None => {
+            r.gauges.insert(name.to_string(), value);
+        }
+    }
+}
+
+/// Record one observation into the named histogram.
+pub fn observe(name: &str, value: u64) {
+    if !enabled() {
+        return;
+    }
+    let mut r = lock();
+    match r.hists.get_mut(name) {
+        Some(h) => h.observe(value),
+        None => {
+            let mut h = Histogram::default();
+            h.observe(value);
+            r.hists.insert(name.to_string(), h);
+        }
+    }
+}
+
+/// Record one observation under a lazily built name: the closure only
+/// runs when metrics are enabled, so disabled call sites never pay
+/// for `format!`.
+pub fn observe_with(name: impl FnOnce() -> String, value: u64) {
+    if !enabled() {
+        return;
+    }
+    observe(&name(), value);
+}
+
+/// A started clock, or nothing when metrics are disabled at start
+/// ([`clock`]); the disabled variant never reads the system clock.
+pub struct Clock(Option<Instant>);
+
+pub fn clock() -> Clock {
+    Clock(enabled().then(Instant::now))
+}
+
+impl Clock {
+    pub fn elapsed_us(&self) -> Option<u64> {
+        self.0.map(|t| t.elapsed().as_micros() as u64)
+    }
+
+    /// Record the elapsed µs into `name` (outcome-dependent names are
+    /// only known at the end of the measured section).
+    pub fn observe(&self, name: &str) {
+        if let Some(us) = self.elapsed_us() {
+            observe(name, us);
+        }
+    }
+
+    pub fn observe_fn(&self, name: impl FnOnce() -> String) {
+        if let Some(us) = self.elapsed_us() {
+            observe(&name(), us);
+        }
+    }
+}
+
+/// RAII µs timer: records into the named histogram on drop. Disabled,
+/// construction is one relaxed load and drop does nothing.
+pub struct TimerGuard {
+    name: &'static str,
+    clock: Clock,
+}
+
+pub fn timer(name: &'static str) -> TimerGuard {
+    TimerGuard { name, clock: clock() }
+}
+
+impl Drop for TimerGuard {
+    fn drop(&mut self) {
+        self.clock.observe(self.name);
+    }
+}
+
+/// The per-stage histogram name for a stage span name, without
+/// allocating (the scheduler and dispatch record on every task).
+pub fn stage_metric(stage: &str) -> &'static str {
+    match stage {
+        "load" => "stage.load.us",
+        "tune" => "stage.tune.us",
+        "build" => "stage.build.us",
+        "compile" => "stage.compile.us",
+        "run" => "stage.run.us",
+        _ => "stage.other.us",
+    }
+}
+
+// ---------------------------------------------------------- histogram --
+
+/// Fixed-bucket log2 histogram with exact count/sum/min/max.
+///
+/// Bucket `i` counts values in `[2^i, 2^(i+1))`; bucket 0 also counts
+/// zero. Percentiles interpolate linearly inside the selected bucket
+/// and clamp to the exact `[min, max]` range, so single-observation
+/// and extreme quantiles are exact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    pub buckets: [u64; BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram { buckets: [0; BUCKETS], count: 0, sum: 0, min: 0, max: 0 }
+    }
+}
+
+impl Histogram {
+    /// The bucket index of one value.
+    pub fn bucket_of(value: u64) -> usize {
+        if value <= 1 {
+            0
+        } else {
+            63 - value.leading_zeros() as usize
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i`.
+    pub fn bucket_bound(i: usize) -> u64 {
+        if i >= BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << (i + 1)) - 1
+        }
+    }
+
+    pub fn observe(&mut self, value: u64) {
+        self.buckets[Self::bucket_of(value)] += 1;
+        self.min = if self.count == 0 { value } else { self.min.min(value) };
+        self.max = self.max.max(value);
+        self.count += 1;
+        self.sum = self.sum.saturating_add(value);
+    }
+
+    /// Build a histogram from raw values (`trace summary` feeds span
+    /// durations through this to share the percentile estimator).
+    pub fn from_values(values: impl IntoIterator<Item = u64>) -> Histogram {
+        let mut h = Histogram::default();
+        for v in values {
+            h.observe(v);
+        }
+        h
+    }
+
+    /// Merge another histogram into this one (fleet aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.min =
+            if self.count == 0 { other.min } else { self.min.min(other.min) };
+        self.max = self.max.max(other.max);
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    /// Quantile estimate for `q` in `[0, 1]` (0.5 = p50). Nearest-rank
+    /// bucket walk, linear interpolation inside the bucket, clamped to
+    /// the exact observed `[min, max]`.
+    pub fn percentile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            seen += c;
+            if seen >= rank {
+                let lo = if i == 0 { 0u64 } else { 1u64 << i };
+                let hi = Self::bucket_bound(i);
+                let into = rank - (seen - c); // 1..=c within this bucket
+                let frac = into as f64 / c as f64;
+                let est = lo as f64 + frac * (hi.saturating_sub(lo)) as f64;
+                return (est as u64).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// This histogram minus an earlier sample of the same series
+    /// (snapshot-ring deltas). Buckets/count/sum subtract
+    /// (saturating — a drained registry restarts from zero); min/max
+    /// cannot be windowed and carry the cumulative values.
+    pub fn delta_since(&self, prev: &Histogram) -> Histogram {
+        let mut d = self.clone();
+        for (a, b) in d.buckets.iter_mut().zip(prev.buckets.iter()) {
+            *a = a.saturating_sub(*b);
+        }
+        d.count = self.count.saturating_sub(prev.count);
+        d.sum = self.sum.saturating_sub(prev.sum);
+        d
+    }
+
+    fn to_json(&self) -> Json {
+        let buckets = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                Json::Arr(vec![Json::Num(i as f64), Json::Num(c as f64)])
+            })
+            .collect();
+        Json::obj(vec![
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum as f64)),
+            ("min", Json::Num(self.min as f64)),
+            ("max", Json::Num(self.max as f64)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Histogram> {
+        let num = |k: &str| -> Result<u64> {
+            Ok(j.get(k)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| anyhow!("histogram lacks numeric '{k}'"))?
+                .max(0) as u64)
+        };
+        let mut h = Histogram {
+            buckets: [0; BUCKETS],
+            count: num("count")?,
+            sum: num("sum")?,
+            min: num("min")?,
+            max: num("max")?,
+        };
+        for pair in j.get("buckets").and_then(Json::as_arr).unwrap_or(&[]) {
+            let cells = pair
+                .as_arr()
+                .ok_or_else(|| anyhow!("histogram bucket is not a pair"))?;
+            let idx = cells
+                .first()
+                .and_then(Json::as_i64)
+                .ok_or_else(|| anyhow!("histogram bucket lacks an index"))?;
+            let n = cells
+                .get(1)
+                .and_then(Json::as_i64)
+                .ok_or_else(|| anyhow!("histogram bucket lacks a count"))?;
+            let idx = idx.max(0) as usize;
+            anyhow::ensure!(idx < BUCKETS, "histogram bucket index {idx}");
+            h.buckets[idx] = n.max(0) as u64;
+        }
+        Ok(h)
+    }
+}
+
+// ----------------------------------------------------------- snapshot --
+
+/// A point-in-time copy of the registry — the unit of merging,
+/// shipping and exporting.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, i64>,
+    pub hists: BTreeMap<String, Histogram>,
+}
+
+/// Copy the registry (deterministic: BTreeMap order).
+pub fn snapshot() -> Snapshot {
+    let r = lock();
+    Snapshot {
+        counters: r.counters.clone(),
+        gauges: r.gauges.clone(),
+        hists: r.hists.clone(),
+    }
+}
+
+/// Take the registry contents, leaving it empty (end of a session or
+/// of one remote task — the shipped snapshot is a delta by
+/// construction).
+pub fn drain() -> Snapshot {
+    let mut r = lock();
+    Snapshot {
+        counters: std::mem::take(&mut r.counters),
+        gauges: std::mem::take(&mut r.gauges),
+        hists: std::mem::take(&mut r.hists),
+    }
+}
+
+/// Merge an externally produced snapshot (worker files, wire-shipped
+/// deltas) into the live registry. No-op while disabled, so stray
+/// late arrivals cannot leak into a metrics-off run.
+pub fn record_all(snap: &Snapshot) {
+    if !enabled() || snap.is_empty() {
+        return;
+    }
+    let mut r = lock();
+    for (k, v) in &snap.counters {
+        match r.counters.get_mut(k) {
+            Some(c) => *c = c.saturating_add(*v),
+            None => {
+                r.counters.insert(k.clone(), *v);
+            }
+        }
+    }
+    for (k, v) in &snap.gauges {
+        r.gauges.insert(k.clone(), *v);
+    }
+    for (k, h) in &snap.hists {
+        match r.hists.get_mut(k) {
+            Some(mine) => mine.merge(h),
+            None => {
+                r.hists.insert(k.clone(), h.clone());
+            }
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// Merge another snapshot into this one (counters add, gauges take
+    /// the other's value, histograms merge).
+    pub fn merge(&mut self, other: &Snapshot) {
+        for (k, v) in &other.counters {
+            let c = self.counters.entry(k.clone()).or_insert(0);
+            *c = c.saturating_add(*v);
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, h) in &other.hists {
+            match self.hists.get_mut(k) {
+                Some(mine) => mine.merge(h),
+                None => {
+                    self.hists.insert(k.clone(), h.clone());
+                }
+            }
+        }
+    }
+
+    /// This snapshot minus an earlier one of the same registry
+    /// (snapshot-ring deltas).
+    pub fn delta_since(&self, prev: &Snapshot) -> Snapshot {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| {
+                let before = prev.counters.get(k).copied().unwrap_or(0);
+                (k.clone(), v.saturating_sub(before))
+            })
+            .collect();
+        let hists = self
+            .hists
+            .iter()
+            .map(|(k, h)| {
+                let d = match prev.hists.get(k) {
+                    Some(p) => h.delta_since(p),
+                    None => h.clone(),
+                };
+                (k.clone(), d)
+            })
+            .collect();
+        Snapshot { counters, gauges: self.gauges.clone(), hists }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+            .collect();
+        let gauges = self
+            .gauges
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+            .collect();
+        let hists = self
+            .hists
+            .iter()
+            .map(|(k, h)| (k.clone(), h.to_json()))
+            .collect();
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("hists", Json::Obj(hists)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Snapshot> {
+        let mut snap = Snapshot::default();
+        if let Some(Json::Obj(m)) = j.get("counters") {
+            for (k, v) in m {
+                let v = v
+                    .as_i64()
+                    .ok_or_else(|| anyhow!("counter '{k}' is not numeric"))?;
+                snap.counters.insert(k.clone(), v.max(0) as u64);
+            }
+        }
+        if let Some(Json::Obj(m)) = j.get("gauges") {
+            for (k, v) in m {
+                let v = v
+                    .as_i64()
+                    .ok_or_else(|| anyhow!("gauge '{k}' is not numeric"))?;
+                snap.gauges.insert(k.clone(), v);
+            }
+        }
+        if let Some(Json::Obj(m)) = j.get("hists") {
+            for (k, v) in m {
+                let h = Histogram::from_json(v)
+                    .with_context(|| format!("histogram '{k}'"))?;
+                snap.hists.insert(k.clone(), h);
+            }
+        }
+        Ok(snap)
+    }
+
+    /// Prometheus text exposition (version 0.0.4). Names are
+    /// `mlonmcu_<name>` with non-alphanumerics folded to `_`;
+    /// histograms emit cumulative `_bucket{le="2^(i+1)-1"}` rows plus
+    /// `_sum`/`_count`, and the exact extremes as `_min`/`_max`
+    /// gauges.
+    pub fn to_prometheus(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            let n = prom_name(k);
+            s.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            let n = prom_name(k);
+            s.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+        }
+        for (k, h) in &self.hists {
+            let n = prom_name(k);
+            s.push_str(&format!("# TYPE {n} histogram\n"));
+            let mut cum = 0u64;
+            let top = h
+                .buckets
+                .iter()
+                .rposition(|&c| c > 0)
+                .unwrap_or(0)
+                .min(BUCKETS - 2);
+            for (i, &c) in h.buckets.iter().enumerate().take(top + 1) {
+                cum += c;
+                s.push_str(&format!(
+                    "{n}_bucket{{le=\"{}\"}} {cum}\n",
+                    Histogram::bucket_bound(i)
+                ));
+            }
+            s.push_str(&format!("{n}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            s.push_str(&format!("{n}_sum {}\n", h.sum));
+            s.push_str(&format!("{n}_count {}\n", h.count));
+            s.push_str(&format!("# TYPE {n}_min gauge\n{n}_min {}\n", h.min));
+            s.push_str(&format!("# TYPE {n}_max gauge\n{n}_max {}\n", h.max));
+        }
+        s
+    }
+}
+
+fn prom_name(name: &str) -> String {
+    let folded: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+        .collect();
+    format!("mlonmcu_{folded}")
+}
+
+// ------------------------------------------------------ snapshot ring --
+
+/// One ring sample: the registry delta accumulated since the previous
+/// sample, stamped with the sampling wall clock.
+#[derive(Debug, Clone)]
+pub struct RingEntry {
+    pub ts_ms: u64,
+    pub delta: Snapshot,
+}
+
+/// Bounded ring of timestamped registry deltas — the serve daemon
+/// samples its registry every `[metrics] interval_ms` so `mlonmcu
+/// top` can show recent rates, not just process-lifetime totals.
+#[derive(Debug)]
+pub struct SnapshotRing {
+    cap: usize,
+    last: Snapshot,
+    entries: VecDeque<RingEntry>,
+}
+
+impl SnapshotRing {
+    pub fn new(cap: usize) -> SnapshotRing {
+        SnapshotRing {
+            cap: cap.max(1),
+            last: Snapshot::default(),
+            entries: VecDeque::new(),
+        }
+    }
+
+    /// Record the delta between `current` and the previous sample;
+    /// the oldest entry falls off once the ring is full.
+    pub fn sample(&mut self, ts_ms: u64, current: Snapshot) {
+        let delta = current.delta_since(&self.last);
+        self.last = current;
+        self.entries.push_back(RingEntry { ts_ms, delta });
+        while self.entries.len() > self.cap {
+            self.entries.pop_front();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &RingEntry> {
+        self.entries.iter()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let samples = self
+            .entries
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("ts_ms", Json::Num(e.ts_ms as f64)),
+                    ("delta", e.delta.to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("cap", Json::Num(self.cap as f64)),
+            ("samples", Json::Arr(samples)),
+        ])
+    }
+}
+
+// -------------------------------------------------------- fleet files --
+
+/// The snapshot-file name a worker process writes into its queue dir
+/// (the metrics analogue of `trace-<pid>.json`).
+pub fn worker_file_name() -> String {
+    format!("metrics-{}.json", std::process::id())
+}
+
+/// Write a snapshot file ([`worker_file_name`] / session
+/// `metrics.json`), creating parent dirs.
+pub fn write_snapshot(path: &Path, snap: &Snapshot) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, snap.to_json().to_string())
+        .with_context(|| format!("writing metrics to {}", path.display()))
+}
+
+pub fn read_snapshot(path: &Path) -> Result<Snapshot> {
+    let doc = Json::parse_file(path)
+        .with_context(|| format!("reading metrics {}", path.display()))?;
+    Snapshot::from_json(&doc)
+        .with_context(|| format!("decoding metrics {}", path.display()))
+}
+
+/// Merge every `metrics-*.json` snapshot file directly under `dir` (a
+/// session queue dir). A malformed file — a worker killed mid-write —
+/// is skipped with a warning naming the file, never silently.
+pub fn collect_dir(dir: &Path) -> Snapshot {
+    let mut merged = Snapshot::default();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return merged;
+    };
+    let mut files: Vec<_> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name().and_then(|n| n.to_str()).is_some_and(|n| {
+                n.starts_with("metrics-") && n.ends_with(".json")
+            })
+        })
+        .collect();
+    files.sort();
+    for f in files {
+        match read_snapshot(&f) {
+            Ok(snap) => merged.merge(&snap),
+            Err(e) => {
+                crate::log_warn!(
+                    "metrics: skipping malformed snapshot file {} ({e:#})",
+                    f.display()
+                );
+            }
+        }
+    }
+    merged
+}
+
+/// Delete worker snapshot files under `dir` after collection.
+pub fn remove_snapshot_files(dir: &Path) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for p in entries.filter_map(|e| e.ok().map(|e| e.path())) {
+        let named = p.file_name().and_then(|n| n.to_str()).is_some_and(|n| {
+            n.starts_with("metrics-") && n.ends_with(".json")
+        });
+        if named {
+            let _ = std::fs::remove_file(&p);
+        }
+    }
+}
+
+/// Serialize unit tests that toggle the process-global switch or
+/// registry — shared with the transport tests, exactly like
+/// `faults::test_gate`.
+#[cfg(test)]
+pub(crate) fn test_gate() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Counting allocator: delegates to the system allocator and
+    /// counts allocations per thread, so the zero-allocation claim of
+    /// the disabled path is asserted, not assumed. Thread-local
+    /// (const-init `Cell`, no destructor, no lazy allocation) so
+    /// parallel test threads don't pollute each other's counts.
+    struct CountingAlloc;
+
+    thread_local! {
+        static ALLOCS: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+    }
+
+    unsafe impl std::alloc::GlobalAlloc for CountingAlloc {
+        unsafe fn alloc(&self, layout: std::alloc::Layout) -> *mut u8 {
+            let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+            std::alloc::System.alloc(layout)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: std::alloc::Layout) {
+            std::alloc::System.dealloc(ptr, layout)
+        }
+    }
+
+    #[global_allocator]
+    static COUNTING: CountingAlloc = CountingAlloc;
+
+    fn thread_allocs() -> u64 {
+        ALLOCS.with(|c| c.get())
+    }
+
+    #[test]
+    fn disabled_path_performs_no_allocation() {
+        let _g = test_gate();
+        disable();
+        drain();
+        let before = thread_allocs();
+        for i in 0..10_000u64 {
+            counter("cache.hit", 1);
+            gauge("tasks.open", 3);
+            observe("stage.build.us", i);
+            observe_with(|| format!("wire.client.{}.us", "get"), i);
+            let c = clock();
+            c.observe("stage.load.us");
+            let _t = timer("stage.run.us");
+        }
+        assert_eq!(
+            thread_allocs() - before,
+            0,
+            "disabled metrics must not allocate"
+        );
+        assert!(snapshot().is_empty(), "disabled metrics must record nothing");
+    }
+
+    #[test]
+    fn histogram_percentiles_are_exact_at_extremes() {
+        let h = Histogram::from_values([7u64]);
+        assert_eq!((h.count, h.min, h.max, h.sum), (1, 7, 7, 7));
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.percentile(q), 7, "single value is exact at q={q}");
+        }
+
+        let h = Histogram::from_values([0, 1, 2, 3, 1000]);
+        assert_eq!(h.min, 0);
+        assert_eq!(h.max, 1000);
+        assert_eq!(h.percentile(1.0), 1000, "p100 clamps to the exact max");
+        assert_eq!(h.percentile(0.0), 0, "p0 clamps to the exact min");
+        assert!(h.percentile(0.5) <= 3, "p50 stays in the low buckets");
+
+        assert_eq!(Histogram::default().percentile(0.5), 0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_merge() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(4), 2);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 63);
+        assert_eq!(Histogram::bucket_bound(0), 1);
+        assert_eq!(Histogram::bucket_bound(1), 3);
+        assert_eq!(Histogram::bucket_bound(63), u64::MAX);
+
+        let mut a = Histogram::from_values([1, 10, 100]);
+        let b = Histogram::from_values([0, 1000]);
+        a.merge(&b);
+        assert_eq!((a.count, a.min, a.max), (5, 0, 1000));
+        assert_eq!(a.sum, 1111);
+        let empty = Histogram::default();
+        a.merge(&empty);
+        assert_eq!(a.count, 5, "merging an empty histogram changes nothing");
+    }
+
+    #[test]
+    fn snapshots_are_deterministic_under_concurrent_recorders() {
+        let _g = test_gate();
+        enable();
+        drain();
+        std::thread::scope(|scope| {
+            for t in 0..8u64 {
+                scope.spawn(move || {
+                    for i in 1..=100u64 {
+                        observe("stage.build.us", i);
+                        counter("cache.hit", 1);
+                        gauge("tasks.open", 3);
+                        observe_with(|| format!("wire.client.t{}.us", t % 2), i);
+                    }
+                });
+            }
+        });
+        let a = snapshot();
+        let b = snapshot();
+        disable();
+        assert_eq!(a, b, "snapshot must be a stable copy");
+        assert_eq!(a.counters["cache.hit"], 800);
+        assert_eq!(a.gauges["tasks.open"], 3);
+        let h = &a.hists["stage.build.us"];
+        assert_eq!((h.count, h.min, h.max), (800, 1, 100));
+        assert_eq!(h.sum, 8 * 5050);
+        assert_eq!(a.hists["wire.client.t0.us"].count, 400);
+        assert_eq!(a.hists["wire.client.t1.us"].count, 400);
+        // the interleaving cannot change the final state: rebuild the
+        // same observations serially and compare
+        drain();
+        enable();
+        for _ in 0..8u64 {
+            for i in 1..=100u64 {
+                observe("stage.build.us", i);
+                counter("cache.hit", 1);
+            }
+        }
+        let serial = snapshot();
+        disable();
+        drain();
+        assert_eq!(serial.hists["stage.build.us"], a.hists["stage.build.us"]);
+        assert_eq!(serial.counters["cache.hit"], a.counters["cache.hit"]);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip_and_merge() {
+        let _g = test_gate();
+        enable();
+        drain();
+        counter("ops", 41);
+        gauge("open", -2);
+        observe("stage.load.us", 12);
+        observe("stage.load.us", 900);
+        let snap = drain();
+        disable();
+
+        let back = Snapshot::from_json(
+            &Json::parse(&snap.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, snap);
+
+        let mut merged = back.clone();
+        merged.merge(&snap);
+        assert_eq!(merged.counters["ops"], 82);
+        assert_eq!(merged.hists["stage.load.us"].count, 4);
+        assert_eq!(merged.gauges["open"], -2);
+
+        assert!(Snapshot::from_json(&Json::parse("{}").unwrap())
+            .unwrap()
+            .is_empty());
+        assert!(
+            Snapshot::from_json(
+                &Json::parse(r#"{"counters": {"x": "nan"}}"#).unwrap()
+            )
+            .is_err(),
+            "malformed snapshots reject with context"
+        );
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let mut snap = Snapshot::default();
+        snap.counters.insert("wire.server.ops".into(), 7);
+        snap.gauges.insert("tasks.open".into(), 3);
+        snap.hists
+            .insert("stage.build.us".into(), Histogram::from_values([2, 5, 80]));
+        let text = snap.to_prometheus();
+        assert!(text.contains("# TYPE mlonmcu_wire_server_ops counter"));
+        assert!(text.contains("mlonmcu_wire_server_ops 7"));
+        assert!(text.contains("# TYPE mlonmcu_tasks_open gauge"));
+        assert!(text.contains("# TYPE mlonmcu_stage_build_us histogram"));
+        assert!(text.contains("mlonmcu_stage_build_us_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("mlonmcu_stage_build_us_sum 87"));
+        assert!(text.contains("mlonmcu_stage_build_us_count 3"));
+        assert!(text.contains("mlonmcu_stage_build_us_min 2"));
+        assert!(text.contains("mlonmcu_stage_build_us_max 80"));
+        // cumulative bucket rows are monotone
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{le=")) {
+            let n: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(n >= last, "non-monotone bucket row: {line}");
+            last = n;
+        }
+    }
+
+    #[test]
+    fn snapshot_ring_keeps_bounded_deltas() {
+        let mut ring = SnapshotRing::new(3);
+        let mut cum = Snapshot::default();
+        for i in 1..=5u64 {
+            cum.counters.insert("ops".into(), i * 10);
+            let mut h = Histogram::default();
+            for v in 0..i {
+                h.observe(v);
+            }
+            cum.hists.insert("stage.run.us".into(), h);
+            ring.sample(1000 * i, cum.clone());
+        }
+        assert_eq!(ring.len(), 3, "ring is bounded");
+        let entries: Vec<&RingEntry> = ring.entries().collect();
+        assert_eq!(entries[0].ts_ms, 3000, "oldest entries fell off");
+        for e in &entries {
+            assert_eq!(
+                e.delta.counters["ops"], 10,
+                "each sample carries the delta, not the total"
+            );
+            assert_eq!(e.delta.hists["stage.run.us"].count, 1);
+        }
+        let doc = Json::parse(&ring.to_json().to_string()).unwrap();
+        let samples = doc.get("samples").and_then(Json::as_arr).unwrap();
+        assert_eq!(samples.len(), 3);
+        assert!(samples[0].get("ts_ms").is_some());
+    }
+
+    #[test]
+    fn worker_snapshot_files_collect_and_warn_on_garbage() {
+        let dir = std::env::temp_dir().join("mlonmcu_metrics_collect_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut a = Snapshot::default();
+        a.counters.insert("cache.hit".into(), 2);
+        a.hists
+            .insert("stage.build.us".into(), Histogram::from_values([5, 9]));
+        let mut b = Snapshot::default();
+        b.counters.insert("cache.hit".into(), 3);
+        write_snapshot(&dir.join("metrics-11.json"), &a).unwrap();
+        write_snapshot(&dir.join("metrics-22.json"), &b).unwrap();
+        std::fs::write(dir.join("metrics-bad.json"), b"{torn").unwrap();
+        std::fs::write(dir.join("task-0.json"), b"{}").unwrap();
+        let merged = collect_dir(&dir);
+        assert_eq!(merged.counters["cache.hit"], 5);
+        assert_eq!(merged.hists["stage.build.us"].count, 2);
+        remove_snapshot_files(&dir);
+        assert!(collect_dir(&dir).is_empty(), "files removed after collect");
+        assert!(
+            dir.join("task-0.json").exists(),
+            "queue task files must survive the sweep"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn record_all_respects_the_switch() {
+        let _g = test_gate();
+        disable();
+        drain();
+        let mut snap = Snapshot::default();
+        snap.counters.insert("cache.hit".into(), 9);
+        record_all(&snap);
+        enable();
+        assert!(snapshot().is_empty(), "disabled registry must drop merges");
+        record_all(&snap);
+        let got = drain();
+        disable();
+        assert_eq!(got.counters["cache.hit"], 9);
+    }
+
+    #[test]
+    fn stage_metric_names_are_static() {
+        assert_eq!(stage_metric("load"), "stage.load.us");
+        assert_eq!(stage_metric("run"), "stage.run.us");
+        assert_eq!(stage_metric("weird"), "stage.other.us");
+    }
+}

@@ -10,6 +10,7 @@ pub mod hash;
 pub mod proc;
 pub mod trace;
 pub mod faults;
+pub mod metrics;
 
 pub use hash::{fnv1a64, StableHasher};
 pub use rng::XorShift64;

@@ -30,6 +30,7 @@ use std::time::{SystemTime, UNIX_EPOCH};
 
 use anyhow::{anyhow, Context, Result};
 
+use super::metrics;
 use crate::data::Json;
 
 /// Process-global on/off switch. Off by default; the only cost of a
@@ -219,7 +220,14 @@ pub fn parse_chrome_json(text: &str) -> Result<Vec<Span>> {
         .get("traceEvents")
         .and_then(Json::as_arr)
         .ok_or_else(|| anyhow!("trace JSON lacks a traceEvents array"))?;
-    events.iter().map(span_from_event).collect()
+    events
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            span_from_event(e)
+                .with_context(|| format!("trace event #{i} is malformed"))
+        })
+        .collect()
 }
 
 /// Decode one `traceEvents` entry back into a [`Span`].
@@ -280,8 +288,10 @@ pub fn worker_file_name() -> String {
 }
 
 /// Collect every `trace-*.json` span file directly under `dir`
-/// (a session queue dir). Unreadable or partially written files are
-/// skipped — trace collection is best-effort by design.
+/// (a session queue dir). Unreadable or partially written files —
+/// e.g. left by a worker killed mid-write — are skipped with a
+/// warning naming the offending file; collection stays best-effort
+/// but never discards silently.
 pub fn collect_dir(dir: &Path) -> Vec<Span> {
     let mut out = Vec::new();
     let Ok(entries) = std::fs::read_dir(dir) else {
@@ -297,8 +307,12 @@ pub fn collect_dir(dir: &Path) -> Vec<Span> {
         .collect();
     files.sort();
     for f in files {
-        if let Ok(spans) = read_spans(&f) {
-            out.extend(spans);
+        match read_spans(&f) {
+            Ok(spans) => out.extend(spans),
+            Err(e) => crate::log_warn!(
+                "trace: skipping malformed span file {} ({e:#})",
+                f.display()
+            ),
         }
     }
     out
@@ -307,6 +321,10 @@ pub fn collect_dir(dir: &Path) -> Vec<Span> {
 // --------------------------------------------------------- aggregate --
 
 /// One `(stage name, pid)` aggregate row of [`aggregate`].
+///
+/// Durations also feed a [`metrics::Histogram`] so `trace summary`
+/// shares its percentile estimator (p50/p95/p99) with the metrics
+/// registry instead of growing a second implementation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StageAgg {
     pub name: String,
@@ -314,6 +332,21 @@ pub struct StageAgg {
     pub count: usize,
     pub total_us: u64,
     pub max_us: u64,
+    pub hist: metrics::Histogram,
+}
+
+impl StageAgg {
+    pub fn p50_us(&self) -> u64 {
+        self.hist.percentile(0.50)
+    }
+
+    pub fn p95_us(&self) -> u64 {
+        self.hist.percentile(0.95)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.hist.percentile(0.99)
+    }
 }
 
 /// Aggregate spans into per-stage/per-worker rows, sorted by name
@@ -330,10 +363,12 @@ pub fn aggregate(spans: &[Span]) -> Vec<StageAgg> {
                 count: 0,
                 total_us: 0,
                 max_us: 0,
+                hist: metrics::Histogram::default(),
             });
         agg.count += 1;
         agg.total_us += s.dur_us;
         agg.max_us = agg.max_us.max(s.dur_us);
+        agg.hist.observe(s.dur_us);
     }
     by_key.into_values().collect()
 }
@@ -475,6 +510,11 @@ mod tests {
         );
         assert_eq!(rows[0].total_us, 40);
         assert_eq!(rows[0].max_us, 30);
+        assert_eq!(rows[0].hist.count, 2);
+        assert_eq!(rows[0].p99_us(), 30, "p99 clamps to the exact max");
+        assert!(rows[0].p50_us() >= 10 && rows[0].p50_us() <= 30);
+        assert_eq!(rows[2].p50_us(), 5, "single span is exact");
+        assert_eq!(rows[2].p95_us(), 5);
         assert_eq!((rows[1].name.as_str(), rows[1].pid), ("build", 2));
         assert_eq!((rows[2].name.as_str(), rows[2].pid), ("load", 1));
     }

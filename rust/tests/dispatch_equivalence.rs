@@ -317,6 +317,73 @@ fn tracing_on_keeps_reports_byte_identical_and_spans_cover_the_fleet() {
 }
 
 #[test]
+fn metrics_on_keeps_reports_byte_identical_and_cover_the_fleet() {
+    // unmetered serial baseline: [metrics] off must export nothing
+    let (env_s, dir_s) = fresh_env(
+        "metricserial",
+        &["metrics.enabled=false".to_string()],
+    );
+    let session_s = Session::new(&env_s).unwrap();
+    let baseline = session_s.run_matrix_opts(&full_matrix(), opts(0)).unwrap();
+    assert!(
+        !session_s.dir.join("metrics.json").exists(),
+        "metrics.json written with [metrics] disabled"
+    );
+
+    // metered 4-worker run of the same matrix ([metrics] default: on)
+    let (env_m, dir_m) = fresh_env("metered", &[]);
+    let session = Session::new(&env_m).unwrap();
+    let report = session.run_matrix_opts(&full_matrix(), opts(4)).unwrap();
+
+    // metering must not add a single byte to the report
+    assert_eq!(baseline.to_csv(), report.to_csv(), "metrics leaked into CSV");
+    assert_eq!(
+        baseline.to_markdown(),
+        report.to_markdown(),
+        "metrics leaked into the markdown report"
+    );
+
+    // the exported snapshot merges every worker's queue-dir registry
+    // file: fleet-wide stage latencies and lease timings are present
+    let snap = mlonmcu::util::metrics::read_snapshot(
+        &session.dir.join("metrics.json"),
+    )
+    .expect("metered session must export metrics.json");
+    for name in ["stage.tune.us", "stage.build.us"] {
+        let h = snap
+            .hists
+            .get(name)
+            .unwrap_or_else(|| panic!("no '{name}' series in metrics.json"));
+        assert!(h.count > 0, "'{name}' recorded no observations");
+        assert!(h.max >= h.min, "'{name}' has inconsistent bounds");
+    }
+    assert!(
+        snap.hists.keys().any(|k| k.starts_with("lease.")),
+        "no lease series in {:?}",
+        snap.hists.keys().collect::<Vec<_>>()
+    );
+    // consumed after collection: a second run must not re-merge them
+    let queues = session.dir.join("queue");
+    if let Ok(subs) = std::fs::read_dir(&queues) {
+        for sub in subs.flatten() {
+            if let Ok(files) = std::fs::read_dir(sub.path()) {
+                for f in files.flatten() {
+                    let n = f.file_name();
+                    let n = n.to_string_lossy();
+                    assert!(
+                        !(n.starts_with("metrics-") && n.ends_with(".json")),
+                        "leftover worker snapshot {n}"
+                    );
+                }
+            }
+        }
+    }
+
+    std::fs::remove_dir_all(dir_m).unwrap();
+    std::fs::remove_dir_all(dir_s).unwrap();
+}
+
+#[test]
 fn workers_without_store_fall_back_to_in_process() {
     let (env, dir) = fresh_env("nostore", &["cache.persist=false".to_string()]);
     let session = Session::new(&env).unwrap();

@@ -326,7 +326,7 @@ fn fuzzed_request_frames_never_crash_the_server() {
     for seed in [101u64, 202, 303] {
         let mut rng = XorShift64::stream(seed, "req-fuzz");
         for _ in 0..48 {
-            let op = rng.below(16) as u8; // ops 14/15 are undefined
+            let op = rng.below(18) as u8; // ops 16/17 are undefined
             let payload: Vec<u8> =
                 (0..rng.below(64)).map(|_| rng.next_u64() as u8).collect();
             let mut bytes =
